@@ -1,0 +1,148 @@
+//! MDNN for multi-modal retrieval (paper §4.2.1, Figs 7 & 15).
+//!
+//! Two parallel paths — a small CNN for images, an MLP for text — trained
+//! with (1) per-modality softmax label losses and (2) a euclidean loss
+//! pulling the two embeddings of the same object together. The paths are
+//! placed on different workers via location ids (the paper's example of
+//! explicit placement). After training we run image→text retrieval and
+//! report precision@k.
+//!
+//! ```sh
+//! cargo run --release --example mdnn_retrieval
+//! ```
+
+use singa::data::{DataSource, MultiModalPairs};
+use singa::model::layer::{Activation, LayerConf, LayerKind};
+use singa::model::{NetBuilder, Phase};
+use singa::tensor::Blob;
+use singa::train::{bp::Bp, TrainOneBatch};
+use singa::updater::{Updater, UpdaterConf};
+use singa::utils::rng::Rng;
+
+fn main() {
+    let batch = 16;
+    let embed = 32;
+    let data = MultiModalPairs::nuswide_like(13);
+    let classes = data.classes;
+
+    // Image path at worker 0, text path at worker 1 (paper §5.3).
+    let net = NetBuilder::new()
+        .add(LayerConf::new("image", LayerKind::Input { shape: vec![batch, 3, 16, 16] }, &[]))
+        .add(LayerConf::new("text", LayerKind::Input { shape: vec![batch, 64] }, &[]))
+        .add(LayerConf::new("label", LayerKind::Input { shape: vec![batch] }, &[]))
+        // image path (DCNN-ish)
+        .add(
+            LayerConf::new(
+                "conv1",
+                LayerKind::Convolution { out_channels: 8, kernel: 3, stride: 1, pad: 1, init_std: 0.1 },
+                &["image"],
+            )
+            .at(0),
+        )
+        .add(LayerConf::new("pool1", LayerKind::MaxPool { kernel: 2, stride: 2 }, &["conv1"]).at(0))
+        .add(LayerConf::new("relu1", LayerKind::Activation { act: Activation::Relu }, &["pool1"]).at(0))
+        .add(
+            LayerConf::new(
+                "img_embed",
+                LayerKind::InnerProduct { out: embed, act: Activation::Tanh, init_std: 0.05 },
+                &["relu1"],
+            )
+            .at(0),
+        )
+        .add(
+            LayerConf::new(
+                "img_logits",
+                LayerKind::InnerProduct { out: classes, act: Activation::Identity, init_std: 0.05 },
+                &["img_embed"],
+            )
+            .at(0),
+        )
+        .add(LayerConf::new("img_loss", LayerKind::SoftmaxLoss, &["img_logits", "label"]).at(0))
+        // text path (MLP)
+        .add(
+            LayerConf::new(
+                "txt_h",
+                LayerKind::InnerProduct { out: 64, act: Activation::Sigmoid, init_std: 0.1 },
+                &["text"],
+            )
+            .at(1),
+        )
+        .add(
+            LayerConf::new(
+                "txt_embed",
+                LayerKind::InnerProduct { out: embed, act: Activation::Tanh, init_std: 0.05 },
+                &["txt_h"],
+            )
+            .at(1),
+        )
+        .add(
+            LayerConf::new(
+                "txt_logits",
+                LayerKind::InnerProduct { out: classes, act: Activation::Identity, init_std: 0.05 },
+                &["txt_embed"],
+            )
+            .at(1),
+        )
+        .add(LayerConf::new("txt_loss", LayerKind::SoftmaxLoss, &["txt_logits", "label"]).at(1))
+        // cross-modal objective
+        .add(LayerConf::new("dist", LayerKind::EuclideanLoss { weight: 0.05 }, &["img_embed", "txt_embed"]));
+
+    // Partitioning pass inserts bridges on the cross-path edges.
+    let (pnet, _plan) = singa::model::partition::partition_net(&net, 2);
+    let mut net = pnet.build(&mut Rng::new(3));
+    let mut alg = Bp::new();
+    let mut upd = Updater::new(UpdaterConf::adagrad(0.08));
+
+    for it in 0..700u64 {
+        let inputs = data.batch(it, batch);
+        net.zero_grads();
+        let stats = alg.train_one_batch(&mut net, &inputs);
+        for p in net.params_mut() {
+            let g = p.grad.clone();
+            upd.update(&p.name, &mut p.data, &g, p.lr_mult, p.wd_mult, it);
+        }
+        if it % 100 == 0 {
+            let l: Vec<String> =
+                stats.losses.iter().map(|(n, l, m)| format!("{n}={l:.3}/{m:.2}")).collect();
+            println!("iter {it}: {}", l.join("  "));
+        }
+    }
+
+    // Retrieval: embed a held-out batch, query images against texts.
+    let test = data.batch(99_991, 64);
+    net.set_input("image", test["image"].clone());
+    net.set_input("text", test["text"].clone());
+    net.set_input("label", test["label"].clone());
+    net.forward(Phase::Test);
+    let img = net.feature("img_embed").clone();
+    let txt = net.feature("txt_embed").clone();
+    let labels: Vec<usize> = test["label"].data().iter().map(|&v| v as usize).collect();
+
+    let p_at_5 = precision_at_k(&img, &txt, &labels, 5);
+    println!("image→text precision@5 = {p_at_5:.3} (chance = {:.3})", 1.0 / classes as f32);
+    assert!(
+        p_at_5 > 2.0 / classes as f32,
+        "retrieval should beat chance: {p_at_5}"
+    );
+}
+
+/// Fraction of top-k retrieved texts sharing the query image's class.
+fn precision_at_k(queries: &Blob, corpus: &Blob, labels: &[usize], k: usize) -> f32 {
+    let n = queries.rows();
+    let d = queries.cols();
+    let mut hit = 0.0;
+    for q in 0..n {
+        let qv = &queries.data()[q * d..(q + 1) * d];
+        let mut dists: Vec<(f32, usize)> = (0..corpus.rows())
+            .map(|c| {
+                let cv = &corpus.data()[c * d..(c + 1) * d];
+                let dist: f32 = qv.iter().zip(cv).map(|(a, b)| (a - b) * (a - b)).sum();
+                (dist, c)
+            })
+            .collect();
+        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let hits = dists.iter().take(k).filter(|(_, c)| labels[*c] == labels[q]).count();
+        hit += hits as f32 / k as f32;
+    }
+    hit / n as f32
+}

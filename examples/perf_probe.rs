@@ -1,0 +1,14 @@
+// perf probe: naive vs blocked gemm + convnet timing
+use singa::tensor::gemm::{gemm, gemm_ref, Transpose};
+use singa::utils::timer::time_iters;
+fn main() {
+    let n = 256;
+    let mut rng = singa::utils::rng::Rng::new(1);
+    let a = rng.uniform_vec(n*n, -1.0, 1.0);
+    let b = rng.uniform_vec(n*n, -1.0, 1.0);
+    let mut c = vec![0.0f32; n*n];
+    let st = time_iters(1, 3, || gemm_ref(Transpose::No, Transpose::No, n,n,n, 1.0, &a,&b, 0.0, &mut c));
+    println!("naive {n}: {:.2} ms ({:.2} GFLOP/s)", st.mean(), 2.0*(n as f64).powi(3)/(st.mean()/1e3)/1e9);
+    let st = time_iters(1, 5, || gemm(Transpose::No, Transpose::No, n,n,n, 1.0, &a,&b, 0.0, &mut c));
+    println!("blocked {n}: {:.2} ms ({:.2} GFLOP/s)", st.mean(), 2.0*(n as f64).powi(3)/(st.mean()/1e3)/1e9);
+}

@@ -1,0 +1,59 @@
+//! Quickstart: the SINGA programming model in ~40 lines.
+//!
+//! Define a NeuralNet from layer configs, pick the BP TrainOneBatch
+//! algorithm and an updater, choose a cluster topology (single worker
+//! group = synchronous), and run.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use singa::cluster::ClusterTopology;
+use singa::coordinator::{run_job, Algorithm, JobConf};
+use singa::data::SyntheticDigits;
+use singa::model::layer::{Activation, LayerConf, LayerKind};
+use singa::model::NetBuilder;
+use singa::updater::UpdaterConf;
+use std::sync::Arc;
+
+fn main() {
+    let batch = 32;
+    // 1. NeuralNet: layers + connections (paper §4.1.1).
+    let net = NetBuilder::new()
+        .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, 784] }, &[]))
+        .add(LayerConf::new("label", LayerKind::Input { shape: vec![batch] }, &[]))
+        .add(LayerConf::new(
+            "hidden",
+            LayerKind::InnerProduct { out: 128, act: Activation::Relu, init_std: 0.05 },
+            &["data"],
+        ))
+        .add(LayerConf::new(
+            "logits",
+            LayerKind::InnerProduct { out: 10, act: Activation::Identity, init_std: 0.05 },
+            &["hidden"],
+        ))
+        .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]));
+
+    // 2-4. TrainOneBatch + Updater + ClusterTopology (paper §3).
+    let mut conf = JobConf::new("quickstart", net);
+    conf.algorithm = Algorithm::Bp;
+    conf.updater = UpdaterConf::sgd_momentum(0.1, 0.9);
+    conf.topology = ClusterTopology::sandblaster(1, 1);
+    conf.batch_size = batch;
+    conf.iters = 150;
+    conf.log_every = 10;
+
+    let data = Arc::new(SyntheticDigits::mnist_like(7));
+    let report = run_job(&conf, data);
+    print!("{}", report.log.to_tsv());
+    let recs = report.log.snapshot();
+    let last = recs.last().unwrap();
+    println!(
+        "final: loss {:.4}, accuracy {:.3} ({} param bytes moved, wall {:.0} ms)",
+        last.loss,
+        last.metric,
+        report.ledger.param_bytes(),
+        report.wall_ms
+    );
+    assert!(last.metric > 0.9, "quickstart should reach >0.9 train accuracy");
+}

@@ -1,0 +1,179 @@
+//! RBM pre-training + deep auto-encoder fine-tuning for dimensionality
+//! reduction (paper §4.2.2, Figs 8 & 16).
+//!
+//! Stage 1: greedy CD-1 pre-training of a stack of RBMs (784→256→64→8→2).
+//! Stage 2: unfold into an auto-encoder initialized from the RBM weights
+//! and fine-tune with BP to minimize reconstruction error.
+//! Reports reconstruction error and the 2-d code class separation (the
+//! quantitative counterpart of the paper's Fig 16b scatter plot).
+//!
+//! ```sh
+//! cargo run --release --example rbm_autoencoder
+//! ```
+
+use singa::data::{DataSource, SyntheticDigits};
+use singa::model::layer::{Activation, LayerConf, LayerKind};
+use singa::model::rbm::RbmLayer;
+use singa::model::{NetBuilder, Phase};
+use singa::tensor::{ops, Blob};
+use singa::train::{bp::Bp, cd::Cd, TrainOneBatch};
+use singa::updater::{Updater, UpdaterConf};
+use singa::utils::rng::Rng;
+
+const DIMS: [usize; 5] = [784, 256, 64, 8, 2];
+
+fn main() {
+    let batch = 32;
+    let data = SyntheticDigits::mnist_like(5);
+
+    // ---- Stage 1: stacked RBMs, greedy CD-1 (paper Fig 8 steps 1-2) ----
+    let mut b = NetBuilder::new()
+        .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, DIMS[0]] }, &[]));
+    for i in 1..DIMS.len() {
+        let src = if i == 1 { "data".to_string() } else { format!("rbm{}", i - 1) };
+        b = b.add(LayerConf::new(
+            &format!("rbm{i}"),
+            LayerKind::Rbm { hidden: DIMS[i], init_std: 0.05 },
+            &[&src],
+        ));
+    }
+    let mut net = b.build(&mut Rng::new(8));
+    for stage in 1..DIMS.len() {
+        let mut alg = Cd::stage(1, &format!("rbm{stage}"));
+        let mut last = 0.0;
+        for it in 0..250u64 {
+            let inputs = data.batch(it, batch);
+            net.zero_grads();
+            let stats = alg.train_one_batch(&mut net, &inputs);
+            for p in net.params_mut() {
+                let g = p.grad.clone();
+                p.data.axpy(-0.05, &g);
+            }
+            last = stats.total_loss();
+        }
+        println!("pre-train rbm{stage}: final reconstruction error {last:.4}");
+    }
+
+    // Export the learned weights (checkpoint, as in the paper's Fig 8).
+    let mut weights: Vec<(Blob, Blob, Blob)> = Vec::new(); // (W, hbias, vbias)
+    for i in 1..DIMS.len() {
+        let idx = net.index_of(&format!("rbm{i}")).unwrap();
+        let rbm = net.nodes_mut()[idx].layer.as_any().downcast_mut::<RbmLayer>().unwrap();
+        weights.push((rbm.weight.data.clone(), rbm.hbias.data.clone(), rbm.vbias.data.clone()));
+    }
+
+    // ---- Stage 2: unfold into an auto-encoder and fine-tune with BP ----
+    // Encoder layers use W, decoder layers use W^T (tied init, untied train).
+    let mut b = NetBuilder::new()
+        .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, DIMS[0]] }, &[]));
+    let mut prev = "data".to_string();
+    for i in 1..DIMS.len() {
+        let name = format!("enc{i}");
+        b = b.add(LayerConf::new(
+            &name,
+            LayerKind::InnerProduct { out: DIMS[i], act: Activation::Sigmoid, init_std: 0.01 },
+            &[&prev],
+        ));
+        prev = name;
+    }
+    for i in (1..DIMS.len()).rev() {
+        let name = format!("dec{i}");
+        b = b.add(LayerConf::new(
+            &name,
+            LayerKind::InnerProduct { out: DIMS[i - 1], act: Activation::Sigmoid, init_std: 0.01 },
+            &[&prev],
+        ));
+        prev = name;
+    }
+    b = b.add(LayerConf::new("recon", LayerKind::EuclideanLoss { weight: 1.0 }, &[&prev, "data"]));
+    let mut ae = b.build(&mut Rng::new(9));
+
+    // Port the checkpointed RBM weights into the encoder/decoder.
+    for (i, (w, hb, vb)) in weights.iter().enumerate() {
+        let layer = i + 1;
+        for p in ae.params_mut() {
+            if p.name == format!("enc{layer}/weight") {
+                p.data = w.clone();
+            } else if p.name == format!("enc{layer}/bias") {
+                p.data = hb.clone();
+            } else if p.name == format!("dec{layer}/weight") {
+                p.data = transpose(w);
+            } else if p.name == format!("dec{layer}/bias") {
+                p.data = vb.clone();
+            }
+        }
+    }
+
+    let mut alg = Bp::new();
+    let mut upd = Updater::new(UpdaterConf::sgd(0.02));
+    let mut first = None;
+    let mut last = 0.0;
+    for it in 0..300u64 {
+        let inputs = data.batch(10_000 + it, batch);
+        ae.zero_grads();
+        let stats = alg.train_one_batch(&mut ae, &inputs);
+        for p in ae.params_mut() {
+            let g = p.grad.clone();
+            upd.update(&p.name, &mut p.data, &g, p.lr_mult, p.wd_mult, it);
+        }
+        last = stats.total_loss();
+        if first.is_none() {
+            first = Some(last);
+        }
+        if it % 50 == 0 {
+            println!("fine-tune iter {it}: reconstruction loss {last:.4}");
+        }
+    }
+    println!(
+        "fine-tuning: {:.4} -> {last:.4} (lower is better)",
+        first.unwrap()
+    );
+
+    // 2-d codes: class separation ratio (paper Fig 16b shows clusters).
+    let test = data.batch(77_000, 128);
+    ae.set_input("data", test["data"].clone());
+    ae.forward(Phase::Test);
+    let codes = ae.feature(&format!("enc{}", DIMS.len() - 1)).clone();
+    let labels: Vec<usize> = test["label"].data().iter().map(|&v| v as usize).collect();
+    let sep = separation(&codes, &labels);
+    println!("2-d code class-separation ratio: {sep:.3} (>1 = clustered by class)");
+    assert!(last < first.unwrap(), "fine-tuning must reduce reconstruction error");
+}
+
+fn transpose(w: &Blob) -> Blob {
+    let (r, c) = (w.rows(), w.cols());
+    let mut out = Blob::zeros(&[c, r]);
+    for i in 0..r {
+        for j in 0..c {
+            out.data_mut()[j * r + i] = w.data()[i * c + j];
+        }
+    }
+    out
+}
+
+fn separation(codes: &Blob, labels: &[usize]) -> f32 {
+    let d = codes.cols();
+    let dist = |a: usize, b: usize| -> f32 {
+        ops::zip(
+            &Blob::from_vec(&[d], codes.data()[a * d..(a + 1) * d].to_vec()),
+            &Blob::from_vec(&[d], codes.data()[b * d..(b + 1) * d].to_vec()),
+            |x, y| (x - y) * (x - y),
+        )
+        .sum()
+        .sqrt()
+    };
+    let n = labels.len();
+    let (mut within, mut wn, mut between, mut bn) = (0.0f32, 0u32, 0.0f32, 0u32);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if labels[i] == labels[j] {
+                within += dist(i, j);
+                wn += 1;
+            } else {
+                between += dist(i, j);
+                bn += 1;
+            }
+        }
+    }
+    (between / bn.max(1) as f32) / (within / wn.max(1) as f32).max(1e-9)
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path (L2 models + L1 Pallas kernels + AOT lowering).
+
+Never imported at runtime: `make artifacts` runs `python -m compile.aot`
+once, and the rust binary is self-contained afterwards.
+"""

@@ -1,0 +1,151 @@
+"""AOT lowering: jit the L2 step functions, lower to HLO *text* (NOT
+serialized proto — jax>=0.5 emits 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly, see /opt/xla-example/README.md), and write a ``manifest.json`` the
+rust runtime uses to wire inputs/outputs.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (see the Makefile).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(arr):
+    a = np.asarray(arr)
+    return jax.ShapeDtypeStruct(a.shape, a.dtype)
+
+
+def catalogue():
+    """Every artifact: name -> (fn, example inputs, input names, output names).
+
+    Input names mark parameters with a ``param:`` prefix so the rust worker
+    knows which inputs come from the parameter server.
+    """
+    cat = {}
+
+    # MLP
+    params = model.init_mlp()
+    x = np.zeros((model.MLP_BATCH, model.MLP_DIMS[0]), np.float32)
+    y = np.zeros((model.MLP_BATCH, model.MLP_DIMS[-1]), np.float32)
+    pnames = []
+    for i in range(len(params) // 2):
+        pnames += [f"param:mlp/w{i}", f"param:mlp/b{i}"]
+    cat["mlp_step"] = (
+        model.mlp_step,
+        [*params, x, y],
+        [*pnames, "data", "label_onehot"],
+        ["loss", "logits"] + [n.replace("param:", "grad:") for n in pnames],
+    )
+
+    # CNN
+    cparams = model.init_cnn()
+    cx = np.zeros((model.CNN_BATCH, *model.CNN_SHAPE), np.float32)
+    cy = np.zeros((model.CNN_BATCH, model.CNN_CLASSES), np.float32)
+    cnames = [
+        "param:cnn/conv1_w", "param:cnn/conv1_b",
+        "param:cnn/conv2_w", "param:cnn/conv2_b",
+        "param:cnn/fc_w", "param:cnn/fc_b",
+    ]
+    cat["cnn_step"] = (
+        model.cnn_step,
+        [*cparams, cx, cy],
+        [*cnames, "data", "label_onehot"],
+        ["loss", "logits"] + [n.replace("param:", "grad:") for n in cnames],
+    )
+
+    # Char-RNN
+    rparams = model.init_charrnn()
+    ids = np.zeros((model.RNN_BATCH, model.RNN_STEPS), np.int32)
+    labels = np.zeros(
+        (model.RNN_BATCH, model.RNN_STEPS, model.RNN_VOCAB), np.float32
+    )
+    rnames = [
+        "param:rnn/w", "param:rnn/u", "param:rnn/b",
+        "param:rnn/proj_w", "param:rnn/proj_b",
+    ]
+    cat["charrnn_step"] = (
+        model.charrnn_step,
+        [*rparams, ids, labels],
+        [*rnames, "chars", "labels_onehot"],
+        ["loss", "logits"] + [n.replace("param:", "grad:") for n in rnames],
+    )
+
+    return cat
+
+
+def source_fingerprint():
+    """Hash of the compile-path sources for incremental `make artifacts`."""
+    here = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    fp = source_fingerprint()
+    stamp = os.path.join(args.out, "fingerprint.txt")
+    if os.path.exists(stamp) and open(stamp).read().strip() == fp and not args.only:
+        print("artifacts up to date")
+        return
+
+    manifest = {"artifacts": {}}
+    only = set(args.only.split(",")) if args.only else None
+    for name, (fn, examples, in_names, out_names) in catalogue().items():
+        if only and name not in only:
+            continue
+        specs = [_spec(a) for a in examples]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [
+                {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+                for n, s in zip(in_names, specs)
+            ],
+            "outputs": [
+                {"name": n, "shape": list(np.shape(o)), "dtype": str(o.dtype)}
+                for n, o in zip(out_names, outs)
+            ],
+        }
+        print(f"lowered {name}: {len(text)} chars, {len(specs)} inputs")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    with open(stamp, "w") as f:
+        f.write(fp)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO artifacts).
+
+`matmul` is the workhorse tiled GEMM; `linear` fuses bias+activation into
+its epilogue. Both carry custom VJPs so the L2 models are end-to-end
+differentiable while every FLOP-heavy op stays inside a Pallas kernel.
+`ref` is the pure-jnp oracle used by the pytest/hypothesis suite.
+"""

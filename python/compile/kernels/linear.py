@@ -1,0 +1,102 @@
+"""Fused affine + activation Pallas kernel: ``act(x @ w + b)``.
+
+This is the inner-product layer of the paper's running example (Fig 4c:
+"rotate (multiply W), shift (plus b), apply non-linear transformation") as
+one kernel — bias add and activation are fused into the GEMM epilogue so
+the pre-activation never round-trips through HBM.
+
+Differentiable via custom_vjp; the backward pass reuses the Pallas GEMM
+kernel for both operand gradients and computes the activation chain rule
+from the saved output.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as mm
+
+_ACTS = ("identity", "sigmoid", "tanh", "relu")
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, n_k, act):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...]
+        if act == "sigmoid":
+            y = 1.0 / (1.0 + jnp.exp(-y))
+        elif act == "tanh":
+            y = jnp.tanh(y)
+        elif act == "relu":
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bn", "bk"))
+def linear_raw(x, w, b, act="identity", bm=mm.BM, bn=mm.BN, bk=mm.BK):
+    assert act in _ACTS, f"unknown activation {act!r}"
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm, bn, bk = mm._shrink(bm, m), mm._shrink(bn, n), mm._shrink(bk, k)
+    xp = mm._pad_to(x.astype(jnp.float32), bm, bk)
+    wp = mm._pad_to(w.astype(jnp.float32), bk, bn)
+    bp = jnp.pad(b.astype(jnp.float32), (0, wp.shape[1] - n))[None, :]
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    n_k = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_linear_kernel, n_k=n_k, act=act),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear(x, w, b, act="identity"):
+    """Differentiable fused affine+activation."""
+    return linear_raw(x, w, b, act)
+
+
+def _linear_fwd(x, w, b, act):
+    y = linear_raw(x, w, b, act)
+    return y, (x, w, y)
+
+
+def _linear_bwd(act, res, g):
+    x, w, y = res
+    if act == "identity":
+        dz = g
+    elif act == "sigmoid":
+        dz = g * y * (1.0 - y)
+    elif act == "tanh":
+        dz = g * (1.0 - y * y)
+    elif act == "relu":
+        dz = jnp.where(y > 0.0, g, 0.0)
+    else:  # pragma: no cover
+        raise ValueError(act)
+    dx = mm.matmul_raw(dz, w.T)
+    dw = mm.matmul_raw(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)

@@ -1,0 +1,124 @@
+"""Pallas tiled GEMM — the L1 compute hot-spot.
+
+The paper's hot loops (inner-product layers, im2col convolution, GRU cell
+projections) are all GEMMs, so one well-tiled matmul kernel carries the
+whole stack. TPU-shaped rather than CUDA-ported (DESIGN.md
+§Hardware-Adaptation): blocks default to MXU-friendly 128x128 tiles held in
+VMEM, with the K-loop expressed through the grid so pipelining overlaps the
+HBM->VMEM streams with MXU compute. `interpret=True` everywhere — the CPU
+PJRT plugin cannot execute Mosaic custom-calls; real-TPU efficiency is
+estimated in EXPERIMENTS.md §Perf from the VMEM footprint and MXU
+utilization of these BlockSpecs.
+
+The kernel is wrapped in `jax.custom_vjp` so L2 models differentiate
+through it; both VJP operands are themselves computed by the same kernel
+(dx = dy @ w^T, dw = x^T @ dy).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tiles; shrunk automatically for small operands.
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k):
+    """Grid = (M/bm, N/bn, K/bk); K is the innermost (minor) grid dim, and
+    the output block index does not depend on k, so the o_ref window stays
+    resident in VMEM across the K steps and serves as the accumulator."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+    del n_k
+
+
+def _ceil_div(a, b):
+    return (a + b - 1) // b
+
+
+def _pad_to(x, m, n):
+    pm = _ceil_div(x.shape[0], m) * m - x.shape[0]
+    pn = _ceil_div(x.shape[1], n) * n - x.shape[1]
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def _shrink(block, dim):
+    """Clamp a block edge to the (next pow2 of the) actual dim."""
+    if dim == 0:
+        return block
+    p = 1 << (dim - 1).bit_length()
+    return max(8, min(block, p))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_raw(x, y, bm=BM, bn=BN, bk=BK):
+    """`x [m,k] @ y [k,n]` via the Pallas kernel (no VJP)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul inner dim {k} vs {k2}"
+    bm, bn, bk = _shrink(bm, m), _shrink(bn, n), _shrink(bk, k)
+    xp = _pad_to(x.astype(jnp.float32), bm, bk)
+    yp = _pad_to(y.astype(jnp.float32), bk, bn)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    n_k = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """Differentiable Pallas GEMM."""
+    return matmul_raw(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_raw(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    dx = matmul_raw(g, y.T)
+    dy = matmul_raw(x.T, g)
+    return dx, dy
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_footprint_bytes(bm=BM, bn=BN, bk=BK):
+    """Estimated VMEM working set of one grid step: x-tile + y-tile + the
+    resident output/accumulator tile, f32, double-buffered inputs (Pallas
+    pipelines the next tiles while computing). Used by §Perf."""
+    return 4 * (2 * bm * bk + 2 * bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(m, k, n, bm=BM, bn=BN, bk=BK):
+    """Fraction of MXU issue slots doing useful work: real FLOPs over FLOPs
+    including tile-padding waste."""
+    bm, bn, bk = _shrink(bm, m), _shrink(bn, n), _shrink(bk, k)
+    mp = _ceil_div(m, bm) * bm
+    kp = _ceil_div(k, bk) * bk
+    np_ = _ceil_div(n, bn) * bn
+    return (m * k * n) / float(mp * kp * np_)

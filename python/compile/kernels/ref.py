@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the Pallas kernels (L1 correctness reference).
+
+Every Pallas kernel in this package is checked against these functions by
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes); the kernels are
+only trusted inside the L2 models once these tests pass.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """Plain f32 GEMM."""
+    return jnp.matmul(a, b)
+
+
+def linear(x, w, b, act="identity"):
+    """Fused affine + activation: act(x @ w + b)."""
+    y = jnp.matmul(x, w) + b
+    return apply_act(y, act)
+
+
+def apply_act(y, act):
+    if act == "identity":
+        return y
+    if act == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-y))
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def softmax_xent(logits, y_onehot):
+    """Mean cross-entropy of row softmax vs one-hot labels; also gradient."""
+    m = jnp.max(logits, axis=1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / jnp.sum(e, axis=1, keepdims=True)
+    n = logits.shape[0]
+    loss = -jnp.mean(jnp.sum(y_onehot * jnp.log(jnp.clip(p, 1e-12)), axis=1))
+    grad = (p - y_onehot) / n
+    return loss, grad
+
+
+def gru_cell(xw, hu_rz, h_prev, u_c, b):
+    """One GRU step from pre-projected inputs.
+
+    xw     [batch, 3h] : x @ W + b (gates r|z|c, input part)
+    hu_rz  [batch, 2h] : h_prev @ U[:, :2h] (recurrent part of r and z)
+    h_prev [batch, h]
+    u_c    [h, h]      : recurrent weights of the candidate
+    b is already folded into xw.
+    """
+    h = h_prev.shape[1]
+    r = sigmoid(xw[:, :h] + hu_rz[:, :h])
+    z = sigmoid(xw[:, h : 2 * h] + hu_rz[:, h : 2 * h])
+    c = jnp.tanh(xw[:, 2 * h :] + (r * h_prev) @ u_c)
+    return z * h_prev + (1.0 - z) * c
+
+
+def sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))

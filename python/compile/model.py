@@ -1,0 +1,190 @@
+"""L2: JAX model step functions (forward + backward + loss), built on the
+L1 Pallas kernels, AOT-lowered once by ``aot.py`` into HLO-text artifacts
+the rust runtime executes. Python never runs on the training path.
+
+Each ``*_step`` takes ``(params..., batch inputs...)`` and returns
+``(loss, logits, *grads)`` with grads in the same order as params, so the
+rust worker can ship them straight to the parameter server.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import linear as lin
+from .kernels import matmul as mm
+from .kernels import ref
+
+
+# --------------------------- MLP ---------------------------
+
+MLP_DIMS = (784, 256, 10)
+MLP_BATCH = 32
+
+
+def init_mlp(seed=0, dims=MLP_DIMS):
+    rng = np.random.RandomState(seed)
+    params = []
+    for i in range(len(dims) - 1):
+        params.append(
+            (0.05 * rng.randn(dims[i], dims[i + 1])).astype(np.float32)
+        )
+        params.append(np.zeros(dims[i + 1], dtype=np.float32))
+    return params
+
+
+def mlp_logits(params, x):
+    h = x
+    n_layers = len(params) // 2
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        act = "relu" if i + 1 < n_layers else "identity"
+        h = lin.linear(h, w, b, act)
+    return h
+
+
+def mlp_loss(params, x, y1hot):
+    logits = mlp_logits(params, x)
+    loss, _ = ref.softmax_xent(logits, y1hot)
+    return loss, logits
+
+
+def mlp_step(*args):
+    """(w1,b1,...,x,y1hot) -> (loss, logits, dw1,db1,...)."""
+    *params, x, y = args
+    (loss, logits), grads = jax.value_and_grad(mlp_loss, has_aux=True)(
+        list(params), x, y
+    )
+    return (loss, logits, *grads)
+
+
+# --------------------------- CNN (CIFAR convnet) ---------------------------
+
+CNN_BATCH = 8
+CNN_SHAPE = (3, 32, 32)
+CNN_CLASSES = 10
+
+
+def init_cnn(seed=0):
+    rng = np.random.RandomState(seed)
+    p = []
+    # conv1: 16 filters 5x5 over 3 ch
+    p.append((0.1 * rng.randn(16, 3 * 5 * 5)).astype(np.float32))
+    p.append(np.zeros(16, dtype=np.float32))
+    # conv2: 32 filters 5x5 over 16 ch
+    p.append((0.1 * rng.randn(32, 16 * 5 * 5)).astype(np.float32))
+    p.append(np.zeros(32, dtype=np.float32))
+    # fc: 32*8*8 -> 10
+    p.append((0.05 * rng.randn(32 * 8 * 8, CNN_CLASSES)).astype(np.float32))
+    p.append(np.zeros(CNN_CLASSES, dtype=np.float32))
+    return p
+
+
+def conv2d(x, w, b, kernel=5, pad=2):
+    """NCHW conv via extracted patches + the Pallas GEMM (im2col form —
+    the decomposition the paper adopts from Caffe)."""
+    bsz, c, h, wd = x.shape
+    out_c = w.shape[0]
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kernel, kernel),
+        window_strides=(1, 1),
+        padding=((pad, pad), (pad, pad)),
+    )  # [B, C*k*k, OH, OW]
+    oh, ow = patches.shape[2], patches.shape[3]
+    cols = patches.reshape(bsz, c * kernel * kernel, oh * ow)
+    # one big GEMM: [B*OHOW, Ckk] @ [Ckk, out_c]
+    flat = cols.transpose(0, 2, 1).reshape(bsz * oh * ow, c * kernel * kernel)
+    y = mm.matmul(flat, w.T) + b
+    return y.reshape(bsz, oh, ow, out_c).transpose(0, 3, 1, 2)
+
+
+def maxpool2(x):
+    b, c, h, w = x.shape
+    return jnp.max(x.reshape(b, c, h // 2, 2, w // 2, 2), axis=(3, 5))
+
+
+def cnn_logits(params, x):
+    w1, b1, w2, b2, w3, b3 = params
+    h = jnp.maximum(conv2d(x, w1, b1), 0.0)
+    h = maxpool2(h)  # 16x16
+    h = jnp.maximum(conv2d(h, w2, b2), 0.0)
+    h = maxpool2(h)  # 8x8
+    h = h.reshape(x.shape[0], -1)
+    return lin.linear(h, w3, b3, "identity")
+
+
+def cnn_loss(params, x, y1hot):
+    logits = cnn_logits(params, x)
+    loss, _ = ref.softmax_xent(logits, y1hot)
+    return loss, logits
+
+
+def cnn_step(*args):
+    *params, x, y = args
+    (loss, logits), grads = jax.value_and_grad(cnn_loss, has_aux=True)(
+        list(params), x, y
+    )
+    return (loss, logits, *grads)
+
+
+# --------------------------- Char-RNN (GRU) ---------------------------
+
+RNN_BATCH = 16
+RNN_STEPS = 20
+RNN_VOCAB = 64
+RNN_HIDDEN = 64
+
+
+def init_charrnn(seed=0, vocab=RNN_VOCAB, hidden=RNN_HIDDEN):
+    rng = np.random.RandomState(seed)
+    return [
+        (0.08 * rng.randn(vocab, 3 * hidden)).astype(np.float32),  # W
+        (0.08 * rng.randn(hidden, 3 * hidden)).astype(np.float32),  # U
+        np.zeros(3 * hidden, dtype=np.float32),  # b
+        (0.08 * rng.randn(hidden, vocab)).astype(np.float32),  # proj W
+        np.zeros(vocab, dtype=np.float32),  # proj b
+    ]
+
+
+def charrnn_logits(params, ids):
+    """ids [B, T] int32 -> logits [B, T, V]."""
+    w, u, b, pw, pb = params
+    hidden = u.shape[0]
+    vocab = w.shape[0]
+    x1h = jax.nn.one_hot(ids, vocab, dtype=jnp.float32)  # [B,T,V]
+
+    def step(h, x_t):
+        xw = lin.linear(x_t, w, b, "identity")  # [B, 3h]
+        hu = mm.matmul(h, u)  # [B, 3h]
+        r = ref.sigmoid(xw[:, :hidden] + hu[:, :hidden])
+        z = ref.sigmoid(xw[:, hidden : 2 * hidden] + hu[:, hidden : 2 * hidden])
+        c = jnp.tanh(
+            xw[:, 2 * hidden :] + mm.matmul(r * h, u[:, 2 * hidden :])
+        )
+        h_new = z * h + (1.0 - z) * c
+        return h_new, h_new
+
+    bsz = ids.shape[0]
+    h0 = jnp.zeros((bsz, hidden), dtype=jnp.float32)
+    _, hs = jax.lax.scan(step, h0, x1h.transpose(1, 0, 2))  # [T,B,h]
+    logits = lin.linear(
+        hs.reshape(-1, hidden), pw, pb, "identity"
+    ).reshape(ids.shape[1], bsz, vocab)
+    return logits.transpose(1, 0, 2)
+
+
+def charrnn_loss(params, ids, labels1h):
+    """labels1h [B, T, V] one-hot next-char targets."""
+    logits = charrnn_logits(params, ids)
+    b, t, v = logits.shape
+    loss, _ = ref.softmax_xent(logits.reshape(b * t, v), labels1h.reshape(b * t, v))
+    return loss, logits
+
+
+def charrnn_step(*args):
+    *params, ids, labels = args
+    (loss, logits), grads = jax.value_and_grad(charrnn_loss, has_aux=True)(
+        list(params), ids, labels
+    )
+    return (loss, logits, *grads)

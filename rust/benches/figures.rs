@@ -1,0 +1,60 @@
+//! `cargo bench` target: regenerates every paper table/figure series in
+//! quick mode (criterion is not in the offline vendor set; this is a plain
+//! `harness = false` benchmark binary that prints the TSV series plus
+//! microbenchmark timings for the L3 hot paths).
+
+use singa::utils::timer::time_iters;
+
+fn main() {
+    println!("==== paper figures (quick mode) ====");
+    let out = singa::bench::run_all(true);
+    println!("{out}");
+
+    println!("==== L3 microbenchmarks ====");
+    // GEMM throughput (native backend hot path)
+    for &n in &[64usize, 128, 256] {
+        let mut rng = singa::utils::rng::Rng::new(1);
+        let a = rng.uniform_vec(n * n, -1.0, 1.0);
+        let b = rng.uniform_vec(n * n, -1.0, 1.0);
+        let mut c = vec![0.0f32; n * n];
+        let st = time_iters(2, 5, || {
+            singa::tensor::gemm(
+                singa::tensor::Transpose::No,
+                singa::tensor::Transpose::No,
+                n,
+                n,
+                n,
+                1.0,
+                &a,
+                &b,
+                0.0,
+                &mut c,
+            );
+        });
+        let gflops = 2.0 * (n as f64).powi(3) / (st.mean() / 1e3) / 1e9;
+        println!("gemm {n}x{n}x{n}: {:.3} ms  ({gflops:.2} GFLOP/s)", st.mean());
+    }
+    // convnet iteration (the fig18 workload)
+    let ms = singa::bench::measure_convnet_iter_ms(32, 1, 3);
+    println!("cifar convnet batch=32 iteration: {ms:.1} ms");
+
+    // XLA step execution if artifacts are present
+    let dir = singa::runtime::XlaRuntime::default_dir();
+    if dir.join("manifest.json").exists() {
+        let mut rt = singa::runtime::XlaRuntime::open(&dir).unwrap();
+        let spec = rt.manifest.artifacts.get("mlp_step").unwrap().clone();
+        let inputs: Vec<singa::tensor::Blob> = spec
+            .inputs
+            .iter()
+            .map(|io| singa::tensor::Blob::full(&io.shape, 0.01))
+            .collect();
+        let refs: Vec<&singa::tensor::Blob> = inputs.iter().collect();
+        rt.execute("mlp_step", &refs).unwrap(); // compile + warm
+        let st = time_iters(1, 5, || {
+            rt.execute("mlp_step", &refs).unwrap();
+        });
+        println!("xla mlp_step (batch 32, PJRT CPU): {:.2} ms", st.mean());
+    } else {
+        println!("(artifacts missing; run `make artifacts` for the XLA microbench)");
+    }
+}

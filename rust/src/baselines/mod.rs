@@ -1,0 +1,353 @@
+//! Comparator-system policies (DESIGN.md §Substitutions).
+//!
+//! The paper benchmarks SINGA against Caffe, CXXNET, Petuum, Torch,
+//! TensorFlow and MxNet. Those binaries are not available offline; the
+//! paper itself attributes each system's behaviour to an identifiable
+//! *policy* (op-level BLAS threading, tree reduction, sync copies, central
+//! parameter server...), so each baseline here is that policy implemented
+//! against the same measured workload profiles our own engine uses. The
+//! figure shapes — who wins, where curves bend — follow from the policies.
+
+use crate::comm::LinkModel;
+use crate::coordinator::copyqueue::{
+    iteration_time_us, CopyMode, LayerProfile, UpdateRates,
+};
+
+// ---------------------------------------------------------------------------
+// Fig 18(a): single NUMA node, op-level vs worker-level parallelism
+// ---------------------------------------------------------------------------
+
+/// Multi-threaded-BLAS efficiency model: only a fraction of an iteration is
+/// inside parallelizable kernels (Amdahl), thread efficiency decays with
+/// contention, and crossing the 8-core socket boundary adds a cross-NUMA
+/// memory penalty (the paper's observed >8-thread degradation, Fig 18a).
+#[derive(Debug, Clone, Copy)]
+pub struct OpParallelModel {
+    /// Fraction of iteration time inside ops BLAS can parallelize.
+    pub parallel_frac: f64,
+    /// Per-extra-thread efficiency decay (contention).
+    pub thread_eff: f64,
+    /// Multiplier on the parallel part per thread beyond one socket.
+    pub numa_penalty: f64,
+    /// Cores per socket.
+    pub socket: usize,
+}
+
+impl OpParallelModel {
+    /// Caffe: O2 build, im2col+BLAS, moderate op coverage.
+    pub fn caffe() -> OpParallelModel {
+        OpParallelModel { parallel_frac: 0.70, thread_eff: 0.92, numa_penalty: 0.06, socket: 8 }
+    }
+
+    /// CXXNET: O3 + expression templates, slightly better coverage.
+    pub fn cxxnet() -> OpParallelModel {
+        OpParallelModel { parallel_frac: 0.74, thread_eff: 0.92, numa_penalty: 0.06, socket: 8 }
+    }
+
+    /// SINGA single worker with multi-threaded BLAS (the paper's "SINGA"
+    /// curve in Fig 18a).
+    pub fn singa_single() -> OpParallelModel {
+        OpParallelModel { parallel_frac: 0.72, thread_eff: 0.93, numa_penalty: 0.06, socket: 8 }
+    }
+
+    /// Iteration time with `threads` BLAS threads, given the measured
+    /// single-thread time.
+    pub fn time_ms(&self, single_thread_ms: f64, threads: usize) -> f64 {
+        let t = threads.max(1) as f64;
+        // effective speedup of the parallel part
+        let eff = self.thread_eff.powf(t - 1.0);
+        let mut par = self.parallel_frac / (t * eff);
+        if threads > self.socket {
+            par *= 1.0 + self.numa_penalty * (threads - self.socket) as f64;
+        }
+        single_thread_ms * ((1.0 - self.parallel_frac) + par)
+    }
+}
+
+/// SINGA-dist worker-level parallelism (Fig 18a): the mini-batch is
+/// partitioned across workers, so the *whole* iteration parallelizes;
+/// overheads are per-worker gradient aggregation plus scheduler cost, and
+/// the same cross-socket penalty applies past 8 workers.
+pub fn singa_dist_time_ms(single_thread_ms: f64, workers: usize, agg_ms_per_worker: f64) -> f64 {
+    let w = workers.max(1) as f64;
+    let mut t = single_thread_ms / w + agg_ms_per_worker * (w - 1.0).max(0.0);
+    if workers > 8 {
+        t *= 1.0 + 0.03 * (workers - 8) as f64;
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 18(b): cluster synchronous scaling — AllReduce vs central PS (Petuum)
+// ---------------------------------------------------------------------------
+
+/// Synchronous cluster iteration time (ms) for SINGA's AllReduce layout:
+/// compute splits across workers; each node-local server handles 1/nodes of
+/// the parameters, so parameter traffic per node stays ~constant.
+pub fn allreduce_cluster_time_ms(
+    single_thread_ms: f64,
+    workers: usize,
+    nodes: usize,
+    param_bytes: usize,
+    net: &LinkModel,
+) -> f64 {
+    let compute = single_thread_ms / workers as f64;
+    // each node sends/receives its shard to/from every other node once
+    let shard = param_bytes / nodes.max(1);
+    let comm_us = net.transfer_us(2 * shard) + 2.0 * net.latency_us * (nodes as f64).log2().max(1.0);
+    compute + comm_us / 1e3
+}
+
+/// Petuum-style central parameter server: all workers' gradients funnel
+/// through one server's ingress link; beyond the knee the server saturates
+/// and time grows with worker count (the paper's observed degradation at
+/// 128 workers).
+pub fn central_ps_cluster_time_ms(
+    single_thread_ms: f64,
+    workers: usize,
+    param_bytes: usize,
+    net: &LinkModel,
+) -> f64 {
+    let compute = single_thread_ms / workers as f64;
+    // server ingress serializes all gradient streams + sync barrier delay
+    let ingress_us = net.transfer_us(param_bytes) * workers as f64 / 2.0; // 2 ingress lanes
+    let barrier_us = net.latency_us * (workers as f64).sqrt();
+    compute + (ingress_us + barrier_us) / 1e3
+}
+
+// ---------------------------------------------------------------------------
+// Fig 21: multi-GPU throughput — per-system policies on the same profiles
+// ---------------------------------------------------------------------------
+
+/// A comparator system's multi-device policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemPolicy {
+    /// SINGA: async copy queue + hybrid partitioning (fc traffic scales
+    /// with batch, not params).
+    Singa,
+    /// Caffe: tree reduction; without peer-to-peer access all reductions
+    /// stage through host memory (paper's explanation of the 3-GPU drop).
+    CaffeTree,
+    /// Torch: synchronous allreduce on device, no comm/compute overlap.
+    TorchSync,
+    /// TensorFlow: parameter server on host, synchronous copies.
+    TfSyncPs,
+    /// MxNet with AllreduceCPU: gradients aggregated on host, partial
+    /// overlap (its dependency engine overlaps some transfers).
+    MxnetCpuAllreduce,
+}
+
+impl SystemPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemPolicy::Singa => "SINGA",
+            SystemPolicy::CaffeTree => "Caffe",
+            SystemPolicy::TorchSync => "Torch",
+            SystemPolicy::TfSyncPs => "TensorFlow",
+            SystemPolicy::MxnetCpuAllreduce => "MxNet",
+        }
+    }
+
+    pub fn all() -> [SystemPolicy; 5] {
+        [
+            SystemPolicy::Singa,
+            SystemPolicy::CaffeTree,
+            SystemPolicy::TorchSync,
+            SystemPolicy::TfSyncPs,
+            SystemPolicy::MxnetCpuAllreduce,
+        ]
+    }
+
+    /// Time of one synchronized multi-device iteration (µs) with
+    /// `per_worker_batch` images per device.
+    pub fn iteration_us(
+        &self,
+        profiles: &[LayerProfile],
+        workers: usize,
+        link: &LinkModel,
+        rates: &UpdateRates,
+    ) -> f64 {
+        let param_bytes: usize = profiles.iter().map(|l| l.param_bytes).sum();
+        let w = workers.max(1) as f64;
+        if workers <= 1 {
+            // Single device: every system keeps the whole SGD step on the
+            // device (no cross-device traffic); only framework overhead
+            // differs (paper: "on a single GPU the difference ... is not
+            // significant" since all use cuDNN underneath).
+            let base = iteration_time_us(profiles, CopyMode::NoCopy, link, rates);
+            let overhead = match self {
+                SystemPolicy::Singa => 1.00,
+                SystemPolicy::TorchSync => 1.02,
+                SystemPolicy::MxnetCpuAllreduce => 1.03,
+                SystemPolicy::CaffeTree => 1.08,
+                SystemPolicy::TfSyncPs => 1.12,
+            };
+            return base * overhead;
+        }
+        match self {
+            SystemPolicy::Singa => {
+                // async copy pipeline; aggregation bandwidth shared by w
+                // devices but overlapped with compute.
+                let base = iteration_time_us(profiles, CopyMode::AsyncCopy, link, rates);
+                let extra_agg = if workers > 1 {
+                    // hybrid partitioning: fc layers exchange features, not
+                    // params — traffic much smaller than param_bytes.
+                    let feature_bytes: usize = profiles
+                        .iter()
+                        .map(|l| (l.fwd_us as usize) * 512) // ∝ activations
+                        .sum();
+                    link.transfer_us(feature_bytes * (workers - 1) / workers) * 0.3
+                } else {
+                    0.0
+                };
+                base + extra_agg
+            }
+            SystemPolicy::CaffeTree => {
+                let base = iteration_time_us(profiles, CopyMode::SyncCopy, link, rates);
+                // Tree reduction without peer-to-peer access: every edge of
+                // the reduction tree stages through host memory (down+up),
+                // the stages serialize on the single host link, and with >2
+                // devices the host path contends hard — the 3-GPU
+                // regression of Fig 21 ("the data has to go through the CPU
+                // memory which incurs extra overhead when there are more
+                // than 2 workers").
+                let edges = (w - 1.0).max(1.0);
+                let hop = link.transfer_us(param_bytes) * 2.0;
+                let contention = if workers > 2 { 3.0 } else { 1.0 };
+                base + edges * hop * contention
+            }
+            SystemPolicy::TorchSync => {
+                let base = iteration_time_us(profiles, CopyMode::NoCopy, link, rates);
+                if workers <= 1 {
+                    base
+                } else {
+                    base + link.transfer_us(2 * param_bytes) * (w - 1.0) / w
+                        + link.transfer_us(param_bytes)
+                }
+            }
+            SystemPolicy::TfSyncPs => {
+                let base = iteration_time_us(profiles, CopyMode::SyncCopy, link, rates);
+                // PS ingress serializes the w gradient streams
+                base + link.transfer_us(param_bytes) * (w - 1.0)
+            }
+            SystemPolicy::MxnetCpuAllreduce => {
+                let base = iteration_time_us(profiles, CopyMode::SyncCopy, link, rates);
+                // dependency engine overlaps ~60% of the aggregation
+                base + link.transfer_us(param_bytes) * (w - 1.0) / w * 0.4
+                    + (crate::coordinator::copyqueue::UpdateRates::default().host_us_per_mb
+                        * (param_bytes as f64 / 1e6))
+                        * 0.2
+            }
+        }
+    }
+
+    /// Throughput in images/second for per-device batch `batch`.
+    pub fn throughput(
+        &self,
+        profiles: &[LayerProfile],
+        workers: usize,
+        batch_per_worker: usize,
+        link: &LinkModel,
+        rates: &UpdateRates,
+    ) -> f64 {
+        let t_us = self.iteration_us(profiles, workers, link, rates);
+        (batch_per_worker * workers) as f64 / (t_us / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::copyqueue::alexnet_like_profiles;
+
+    #[test]
+    fn op_parallel_has_diminishing_returns_and_numa_knee() {
+        let m = OpParallelModel::caffe();
+        let t1 = m.time_ms(100.0, 1);
+        let t4 = m.time_ms(100.0, 4);
+        let t8 = m.time_ms(100.0, 8);
+        let t16 = m.time_ms(100.0, 16);
+        assert!(t4 < t1);
+        assert!(t8 < t4);
+        // Amdahl floor: never below serial fraction
+        assert!(t8 > 100.0 * (1.0 - m.parallel_frac));
+        // NUMA knee: 16 threads worse than 8 (paper Fig 18a)
+        assert!(t16 > t8, "t16 {t16} vs t8 {t8}");
+    }
+
+    #[test]
+    fn singa_dist_scales_better_than_op_parallel() {
+        let m = OpParallelModel::caffe();
+        for threads in [2usize, 4, 8] {
+            let blas = m.time_ms(100.0, threads);
+            let dist = singa_dist_time_ms(100.0, threads, 0.4);
+            assert!(dist < blas, "{threads} workers: dist {dist} vs blas {blas}");
+        }
+    }
+
+    #[test]
+    fn allreduce_scales_central_ps_saturates() {
+        let net = LinkModel::ethernet_1g();
+        let pb = 4 * 1_000_000; // 1M params
+        // SINGA allreduce: monotone improvement through 128 workers
+        let mut last = f64::INFINITY;
+        for &w in &[4usize, 8, 16, 32, 64, 128] {
+            let t = allreduce_cluster_time_ms(2000.0, w, w / 4, pb, &net);
+            assert!(t < last, "allreduce not improving at {w}: {t} vs {last}");
+            last = t;
+        }
+        // Petuum-style: slower at 128 than at 64 (the paper's regression)
+        let t64 = central_ps_cluster_time_ms(2000.0, 64, pb, &net);
+        let t128 = central_ps_cluster_time_ms(2000.0, 128, pb, &net);
+        assert!(t128 > t64, "central PS should saturate: {t64} -> {t128}");
+    }
+
+    #[test]
+    fn singa_fastest_across_worker_counts() {
+        let p = alexnet_like_profiles(96);
+        let link = LinkModel::pcie3();
+        let rates = UpdateRates::default();
+        for workers in 1..=3 {
+            let singa = SystemPolicy::Singa.throughput(&p, workers, 96, &link, &rates);
+            for other in [
+                SystemPolicy::CaffeTree,
+                SystemPolicy::TfSyncPs,
+                SystemPolicy::MxnetCpuAllreduce,
+            ] {
+                let t = other.throughput(&p, workers, 96, &link, &rates);
+                assert!(
+                    singa >= t * 0.98,
+                    "{} beats SINGA at {workers} workers: {t} vs {singa}",
+                    other.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn caffe_drops_at_three_workers() {
+        // Paper Fig 21a: Caffe throughput decreases from 2 to 3 GPUs.
+        let p = alexnet_like_profiles(96);
+        let link = LinkModel::pcie3();
+        let rates = UpdateRates::default();
+        let t2 = SystemPolicy::CaffeTree.throughput(&p, 2, 96, &link, &rates);
+        let t3 = SystemPolicy::CaffeTree.throughput(&p, 3, 96, &link, &rates);
+        assert!(t3 < t2, "caffe 3-gpu {t3} should drop below 2-gpu {t2}");
+    }
+
+    #[test]
+    fn every_policy_single_device_close_to_compute_bound() {
+        // On one device the systems mostly tie (paper: "on a single GPU the
+        // difference ... is not significant").
+        let p = alexnet_like_profiles(96);
+        let link = LinkModel::pcie3();
+        let rates = UpdateRates::default();
+        let ts: Vec<f64> = SystemPolicy::all()
+            .iter()
+            .map(|s| s.throughput(&p, 1, 96, &link, &rates))
+            .collect();
+        let max = ts.iter().cloned().fold(0.0, f64::max);
+        let min = ts.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min < 1.6, "single-device spread too wide: {ts:?}");
+    }
+}

@@ -1,0 +1,153 @@
+//! Cluster topology (paper §5.2): the number and size of worker and server
+//! groups determines the training framework. Worker groups run
+//! asynchronously against their server group; workers inside a group run
+//! synchronously.
+//!
+//! | Framework            | worker groups | group size | server groups |
+//! |----------------------|---------------|------------|---------------|
+//! | Sandblaster (Fig 11a)| 1             | W          | 1 (global)    |
+//! | AllReduce  (Fig 11b) | 1             | W          | 1, server/node|
+//! | Downpour   (Fig 11c) | G > 1         | W/G        | 1 (global)    |
+//! | Hogwild    (Fig 11d) | G > 1         | W/G        | G (local)     |
+
+/// The four classic frameworks as presets; `Custom` covers the full design
+/// space (the paper's hybrid framework search).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Framework {
+    Sandblaster,
+    AllReduce,
+    Downpour,
+    DistributedHogwild,
+}
+
+/// Cluster topology configuration — the fourth component of a SINGA job
+/// (paper §3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterTopology {
+    /// Number of worker groups (model replicas). >1 → asynchronous.
+    pub nworker_groups: usize,
+    /// Workers per group (synchronous parallelism inside a group).
+    pub nworkers_per_group: usize,
+    /// Number of server groups.
+    pub nserver_groups: usize,
+    /// Servers (shards) per server group.
+    pub nservers_per_group: usize,
+    /// Steps between neighbouring server-group synchronizations
+    /// (distributed Hogwild); 0 disables.
+    pub group_sync_interval: u64,
+}
+
+impl ClusterTopology {
+    /// Sandblaster (Fig 11a): one worker group, one global server group.
+    pub fn sandblaster(workers: usize, servers: usize) -> ClusterTopology {
+        ClusterTopology {
+            nworker_groups: 1,
+            nworkers_per_group: workers,
+            nserver_groups: 1,
+            nservers_per_group: servers,
+            group_sync_interval: 0,
+        }
+    }
+
+    /// AllReduce (Fig 11b): one worker group spanning `nodes`, one server
+    /// bound per node (server group size = node count).
+    pub fn allreduce(nodes: usize, workers_per_node: usize) -> ClusterTopology {
+        ClusterTopology {
+            nworker_groups: 1,
+            nworkers_per_group: nodes * workers_per_node,
+            nserver_groups: 1,
+            nservers_per_group: nodes,
+            group_sync_interval: 0,
+        }
+    }
+
+    /// Downpour (Fig 11c): several asynchronous groups sharing one global
+    /// server group.
+    pub fn downpour(groups: usize, workers_per_group: usize, servers: usize) -> ClusterTopology {
+        ClusterTopology {
+            nworker_groups: groups,
+            nworkers_per_group: workers_per_group,
+            nserver_groups: 1,
+            nservers_per_group: servers,
+            group_sync_interval: 0,
+        }
+    }
+
+    /// Distributed Hogwild (Fig 11d): one worker group + one server group
+    /// per node; neighbours sync every `sync_interval` steps.
+    pub fn hogwild(nodes: usize, workers_per_node: usize, sync_interval: u64) -> ClusterTopology {
+        ClusterTopology {
+            nworker_groups: nodes,
+            nworkers_per_group: workers_per_node,
+            nserver_groups: nodes,
+            nservers_per_group: 1,
+            group_sync_interval: sync_interval,
+        }
+    }
+
+    /// Which preset this topology realizes (None for custom hybrids).
+    pub fn framework(&self) -> Option<Framework> {
+        match (self.nworker_groups, self.nserver_groups) {
+            (1, 1) if self.nservers_per_group == 1 => Some(Framework::Sandblaster),
+            (1, 1) => Some(Framework::AllReduce),
+            (g, 1) if g > 1 => Some(Framework::Downpour),
+            (g, s) if g > 1 && g == s => Some(Framework::DistributedHogwild),
+            _ => None,
+        }
+    }
+
+    /// Synchronous ⇔ a single worker group (identical convergence to
+    /// sequential SGD, §5.2.1).
+    pub fn is_synchronous(&self) -> bool {
+        self.nworker_groups == 1
+    }
+
+    /// Total worker count.
+    pub fn total_workers(&self) -> usize {
+        self.nworker_groups * self.nworkers_per_group
+    }
+
+    /// Server group index serving worker group `g` (round-robin).
+    pub fn server_group_of(&self, worker_group: usize) -> usize {
+        worker_group % self.nserver_groups
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_classify() {
+        assert_eq!(
+            ClusterTopology::sandblaster(4, 1).framework(),
+            Some(Framework::Sandblaster)
+        );
+        assert_eq!(ClusterTopology::allreduce(8, 4).framework(), Some(Framework::AllReduce));
+        assert_eq!(
+            ClusterTopology::downpour(4, 2, 8).framework(),
+            Some(Framework::Downpour)
+        );
+        assert_eq!(
+            ClusterTopology::hogwild(4, 2, 100).framework(),
+            Some(Framework::DistributedHogwild)
+        );
+    }
+
+    #[test]
+    fn sync_vs_async() {
+        assert!(ClusterTopology::sandblaster(16, 4).is_synchronous());
+        assert!(ClusterTopology::allreduce(32, 4).is_synchronous());
+        assert!(!ClusterTopology::downpour(2, 1, 1).is_synchronous());
+    }
+
+    #[test]
+    fn worker_counts_and_routing() {
+        let t = ClusterTopology::hogwild(4, 3, 10);
+        assert_eq!(t.total_workers(), 12);
+        assert_eq!(t.server_group_of(0), 0);
+        assert_eq!(t.server_group_of(3), 3);
+        let d = ClusterTopology::downpour(4, 1, 2);
+        assert_eq!(d.server_group_of(3), 0); // single global group
+    }
+}

@@ -1,0 +1,15 @@
+//! Communication substrate (paper §5.1): message types exchanged between
+//! workers and servers, byte accounting, and the simulated-network cost
+//! model used to evaluate cluster-scale configurations on this single-node
+//! testbed (see DESIGN.md §Hardware-Adaptation).
+//!
+//! Workers and servers in this reproduction share an address space (SINGA's
+//! in-memory message passing between threads); *remote* links are modeled:
+//! every transfer is charged to a [`ByteLedger`] and, in virtual-time mode,
+//! advances a [`VirtualClock`] by the [`LinkModel`] cost.
+
+pub mod msg;
+pub mod simnet;
+
+pub use msg::Msg;
+pub use simnet::{ByteLedger, CostModel, LinkModel, VirtualClock};

@@ -1,0 +1,55 @@
+//! Worker ↔ server message types (paper §5.1: "workers and servers
+//! communicate through message passing"; the stub thread aggregates local
+//! messages and forwards them to remote receivers).
+
+use crate::tensor::Blob;
+
+/// A parameter-plane message.
+#[derive(Debug, Clone)]
+pub enum Msg {
+    /// Register a parameter at the server (initial value + metadata).
+    Put { param: String, value: Blob, lr_mult: f32, wd_mult: f32 },
+    /// Gradient contribution from a worker group.
+    Update { param: String, grad: Blob, step: u64 },
+    /// Fetch the current value.
+    Get { param: String },
+    /// Server response to `Get` (or pushed fresh value after `Update`).
+    Response { param: String, value: Blob, version: u64 },
+}
+
+impl Msg {
+    /// Wire size in bytes: payload + a fixed 64-byte header (metadata,
+    /// routing ids). Drives the communication cost model.
+    pub fn byte_size(&self) -> usize {
+        const HEADER: usize = 64;
+        match self {
+            Msg::Put { param, value, .. } => HEADER + param.len() + value.byte_size(),
+            Msg::Update { param, grad, .. } => HEADER + param.len() + grad.byte_size(),
+            Msg::Get { param } => HEADER + param.len(),
+            Msg::Response { param, value, .. } => HEADER + param.len() + value.byte_size(),
+        }
+    }
+
+    pub fn param(&self) -> &str {
+        match self {
+            Msg::Put { param, .. }
+            | Msg::Update { param, .. }
+            | Msg::Get { param }
+            | Msg::Response { param, .. } => param,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_sizes() {
+        let g = Msg::Get { param: "w".into() };
+        assert_eq!(g.byte_size(), 65);
+        let u = Msg::Update { param: "w".into(), grad: Blob::zeros(&[10]), step: 0 };
+        assert_eq!(u.byte_size(), 64 + 1 + 40);
+        assert_eq!(u.param(), "w");
+    }
+}

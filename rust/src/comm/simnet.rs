@@ -1,0 +1,218 @@
+//! Simulated-network cost model and byte accounting.
+//!
+//! The paper evaluates on (a) a 24-core NUMA node, (b) a 32-node cluster on
+//! 1 Gbps ethernet, and (c) a 3-GPU workstation on PCIe. None of those are
+//! available here, so cluster/GPU experiments charge communication to a
+//! latency+bandwidth link model and advance a per-entity virtual clock;
+//! compute time is measured for real and fed into the same clock. Figure
+//! *shapes* then follow from the compute/communication ratio exactly as in
+//! the paper's analysis (§5.4.1).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A point-to-point link: `time(bytes) = latency + bytes / bandwidth`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    pub latency_us: f64,
+    /// Bandwidth in gigabits per second.
+    pub gbps: f64,
+}
+
+impl LinkModel {
+    /// 1 Gbps datacenter ethernet (paper's cluster switch), ~50 µs RTT/2.
+    pub fn ethernet_1g() -> LinkModel {
+        LinkModel { latency_us: 50.0, gbps: 1.0 }
+    }
+
+    /// PCIe 3.0 x16 host↔device (paper's GPU workstation): ~8 µs, ~12 GB/s
+    /// effective ≈ 96 Gbps.
+    pub fn pcie3() -> LinkModel {
+        LinkModel { latency_us: 8.0, gbps: 96.0 }
+    }
+
+    /// Same-socket shared memory: near-zero latency, memcpy-bound.
+    pub fn shared_memory() -> LinkModel {
+        LinkModel { latency_us: 0.5, gbps: 400.0 }
+    }
+
+    /// Cross-NUMA-socket memory path (the >8-thread degradation in the
+    /// paper's Fig 18a is attributed to cross-CPU memory access).
+    pub fn cross_numa() -> LinkModel {
+        LinkModel { latency_us: 1.5, gbps: 80.0 }
+    }
+
+    /// Transfer time in microseconds.
+    pub fn transfer_us(&self, bytes: usize) -> f64 {
+        self.latency_us + (bytes as f64 * 8.0) / (self.gbps * 1e3)
+    }
+}
+
+/// Which links connect the tiers of the simulated deployment.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Worker ↔ worker / worker ↔ server on the same node.
+    pub intra_node: LinkModel,
+    /// Host ↔ accelerator device.
+    pub host_device: LinkModel,
+    /// Node ↔ node across the cluster network.
+    pub network: LinkModel,
+}
+
+impl CostModel {
+    /// The paper's cluster testbed (quad-core nodes, 1 Gbps switch).
+    pub fn cluster() -> CostModel {
+        CostModel {
+            intra_node: LinkModel::shared_memory(),
+            host_device: LinkModel::pcie3(),
+            network: LinkModel::ethernet_1g(),
+        }
+    }
+
+    /// The paper's single-node GPU workstation (3× GTX 970 on PCIe).
+    pub fn gpu_workstation() -> CostModel {
+        CostModel {
+            intra_node: LinkModel::shared_memory(),
+            host_device: LinkModel::pcie3(),
+            network: LinkModel::pcie3(), // device↔device via host
+        }
+    }
+
+    /// The paper's 24-core NUMA server.
+    pub fn numa_server() -> CostModel {
+        CostModel {
+            intra_node: LinkModel::shared_memory(),
+            host_device: LinkModel::shared_memory(),
+            network: LinkModel::cross_numa(),
+        }
+    }
+}
+
+/// Thread-safe byte counters, split by plane (parameter traffic vs layer
+/// feature/gradient traffic — the two overheads of §5.4.1).
+#[derive(Debug, Default)]
+pub struct ByteLedger {
+    param_bytes: AtomicU64,
+    feature_bytes: AtomicU64,
+    messages: AtomicU64,
+}
+
+impl ByteLedger {
+    pub fn new() -> ByteLedger {
+        ByteLedger::default()
+    }
+
+    pub fn add_param(&self, bytes: usize) {
+        self.param_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_feature(&self, bytes: usize) {
+        self.feature_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn param_bytes(&self) -> u64 {
+        self.param_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn feature_bytes(&self) -> u64 {
+        self.feature_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.param_bytes() + self.feature_bytes()
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.param_bytes.store(0, Ordering::Relaxed);
+        self.feature_bytes.store(0, Ordering::Relaxed);
+        self.messages.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Per-entity virtual clock (microseconds). Workers/servers advance their
+/// own clocks; synchronization points merge them with `max`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, PartialOrd)]
+pub struct VirtualClock {
+    pub us: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { us: 0.0 }
+    }
+
+    pub fn advance(&mut self, us: f64) {
+        debug_assert!(us >= 0.0);
+        self.us += us;
+    }
+
+    /// Charge a transfer on `link`.
+    pub fn transfer(&mut self, link: &LinkModel, bytes: usize) {
+        self.us += link.transfer_us(bytes);
+    }
+
+    /// Synchronization barrier: everyone waits for the slowest.
+    pub fn barrier(clocks: &mut [VirtualClock]) {
+        let max = clocks.iter().map(|c| c.us).fold(0.0, f64::max);
+        for c in clocks {
+            c.us = max;
+        }
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.us / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_costs() {
+        let eth = LinkModel::ethernet_1g();
+        // 1 MB over 1 Gbps = 8e6 bits / 1e9 bps = 8 ms + 50us
+        let t = eth.transfer_us(1_000_000);
+        assert!((t - 8050.0).abs() < 1.0, "{t}");
+        // zero bytes = latency only
+        assert_eq!(eth.transfer_us(0), 50.0);
+        // pcie much faster than ethernet
+        assert!(LinkModel::pcie3().transfer_us(1_000_000) < t / 50.0);
+    }
+
+    #[test]
+    fn ledger_accounting() {
+        let l = ByteLedger::new();
+        l.add_param(100);
+        l.add_feature(50);
+        l.add_param(1);
+        assert_eq!(l.param_bytes(), 101);
+        assert_eq!(l.feature_bytes(), 50);
+        assert_eq!(l.total_bytes(), 151);
+        assert_eq!(l.messages(), 3);
+        l.reset();
+        assert_eq!(l.total_bytes(), 0);
+    }
+
+    #[test]
+    fn clock_barrier() {
+        let mut clocks = vec![VirtualClock { us: 10.0 }, VirtualClock { us: 30.0 }, VirtualClock { us: 20.0 }];
+        VirtualClock::barrier(&mut clocks);
+        assert!(clocks.iter().all(|c| c.us == 30.0));
+    }
+
+    #[test]
+    fn clock_transfer() {
+        let mut c = VirtualClock::new();
+        c.transfer(&LinkModel::ethernet_1g(), 0);
+        assert_eq!(c.us, 50.0);
+        c.advance(25.0);
+        assert_eq!(c.us, 75.0);
+        assert_eq!(c.ms(), 0.075);
+    }
+}

@@ -1,0 +1,154 @@
+//! Job configuration files: the JSON front-end to [`crate::coordinator::JobConf`]
+//! (the paper's "job configuration" a user submits, §3). Model presets keep
+//! the file small; layer-level nets can be listed explicitly.
+//!
+//! ```json
+//! {
+//!   "name": "cifar-sync",
+//!   "model": "cifar_convnet",
+//!   "batch": 64,
+//!   "iters": 200,
+//!   "updater": {"algo": "sgd", "lr": 0.05, "momentum": 0.9},
+//!   "cluster": {"worker_groups": 1, "workers_per_group": 4,
+//!                "server_groups": 1, "servers_per_group": 1}
+//! }
+//! ```
+
+use crate::cluster::ClusterTopology;
+use crate::coordinator::JobConf;
+use crate::updater::{Algo, LrSchedule, UpdaterConf};
+use crate::utils::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Parse a job configuration document.
+pub fn parse_job(text: &str) -> Result<JobConf> {
+    let doc = Json::parse(text).map_err(|e| anyhow!("config: {e}"))?;
+    let name = doc.get("name").and_then(Json::as_str).unwrap_or("job").to_string();
+    let batch = doc.get("batch").and_then(Json::as_usize).unwrap_or(16);
+    let model = doc.get("model").and_then(Json::as_str).unwrap_or("mlp");
+    let net = model_preset(model, batch)?;
+
+    let mut conf = JobConf::new(&name, net);
+    conf.batch_size = batch;
+    conf.iters = doc.get("iters").and_then(Json::as_usize).unwrap_or(100) as u64;
+    if let Some(seed) = doc.get("seed").and_then(Json::as_usize) {
+        conf.seed = seed as u64;
+    }
+    if let Some(u) = doc.get("updater") {
+        conf.updater = parse_updater(u)?;
+    }
+    if let Some(c) = doc.get("cluster") {
+        conf.topology = parse_cluster(c);
+    }
+    if let Some(p) = doc.get("partition_within_group").and_then(Json::as_bool) {
+        conf.partition_within_group = p;
+    }
+    Ok(conf)
+}
+
+/// Built-in model presets.
+pub fn model_preset(name: &str, batch: usize) -> Result<crate::model::NetBuilder> {
+    use crate::model::layer::{Activation, LayerConf, LayerKind};
+    use crate::model::NetBuilder;
+    match name {
+        "mlp" => Ok(NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, 784] }, &[]))
+            .add(LayerConf::new("label", LayerKind::Input { shape: vec![batch] }, &[]))
+            .add(LayerConf::new(
+                "h1",
+                LayerKind::InnerProduct { out: 128, act: Activation::Relu, init_std: 0.05 },
+                &["data"],
+            ))
+            .add(LayerConf::new(
+                "logits",
+                LayerKind::InnerProduct { out: 10, act: Activation::Identity, init_std: 0.05 },
+                &["h1"],
+            ))
+            .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]))),
+        "cifar_convnet" => Ok(crate::bench::cifar_convnet(batch)),
+        other => Err(anyhow!("unknown model preset '{other}' (mlp | cifar_convnet)")),
+    }
+}
+
+fn parse_updater(u: &Json) -> Result<UpdaterConf> {
+    let lr = u.get("lr").and_then(Json::as_f64).unwrap_or(0.1) as f32;
+    let algo = match u.get("algo").and_then(Json::as_str).unwrap_or("sgd") {
+        "sgd" => Algo::Sgd {
+            momentum: u.get("momentum").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+        },
+        "adagrad" => Algo::AdaGrad { eps: 1e-8 },
+        "nesterov" => Algo::Nesterov {
+            momentum: u.get("momentum").and_then(Json::as_f64).unwrap_or(0.9) as f32,
+        },
+        "rmsprop" => Algo::RmsProp {
+            decay: u.get("decay").and_then(Json::as_f64).unwrap_or(0.9) as f32,
+            eps: 1e-8,
+        },
+        other => return Err(anyhow!("unknown updater '{other}'")),
+    };
+    let schedule = match u.get("schedule").and_then(Json::as_str) {
+        Some("step") => LrSchedule::Step {
+            gamma: u.get("gamma").and_then(Json::as_f64).unwrap_or(0.1) as f32,
+            stride: u.get("stride").and_then(Json::as_usize).unwrap_or(100) as u64,
+        },
+        Some("exp") => LrSchedule::Exp {
+            gamma: u.get("gamma").and_then(Json::as_f64).unwrap_or(0.999) as f32,
+        },
+        _ => LrSchedule::Fixed,
+    };
+    Ok(UpdaterConf {
+        algo,
+        lr,
+        schedule,
+        weight_decay: u.get("weight_decay").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+    })
+}
+
+fn parse_cluster(c: &Json) -> ClusterTopology {
+    ClusterTopology {
+        nworker_groups: c.get("worker_groups").and_then(Json::as_usize).unwrap_or(1),
+        nworkers_per_group: c.get("workers_per_group").and_then(Json::as_usize).unwrap_or(1),
+        nserver_groups: c.get("server_groups").and_then(Json::as_usize).unwrap_or(1),
+        nservers_per_group: c.get("servers_per_group").and_then(Json::as_usize).unwrap_or(1),
+        group_sync_interval: c.get("sync_interval").and_then(Json::as_usize).unwrap_or(0) as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Framework;
+
+    #[test]
+    fn parse_full_job() {
+        let conf = parse_job(
+            r#"{
+              "name": "t", "model": "mlp", "batch": 8, "iters": 5,
+              "updater": {"algo": "sgd", "lr": 0.2, "momentum": 0.9,
+                           "schedule": "step", "gamma": 0.5, "stride": 10},
+              "cluster": {"worker_groups": 2, "workers_per_group": 1,
+                           "server_groups": 1, "servers_per_group": 2}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(conf.batch_size, 8);
+        assert_eq!(conf.iters, 5);
+        assert_eq!(conf.topology.framework(), Some(Framework::Downpour));
+        assert_eq!(conf.updater.lr, 0.2);
+        assert!(matches!(conf.updater.algo, Algo::Sgd { momentum } if momentum == 0.9));
+        assert!(matches!(conf.updater.schedule, LrSchedule::Step { .. }));
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let conf = parse_job(r#"{"model": "mlp"}"#).unwrap();
+        assert_eq!(conf.batch_size, 16);
+        assert!(conf.topology.is_synchronous());
+    }
+
+    #[test]
+    fn rejects_unknown_preset_and_updater() {
+        assert!(parse_job(r#"{"model": "ghost"}"#).is_err());
+        assert!(parse_job(r#"{"model": "mlp", "updater": {"algo": "warp"}}"#).is_err());
+    }
+}

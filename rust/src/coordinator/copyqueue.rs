@@ -1,0 +1,281 @@
+//! The GPU worker's data-copy queue (paper Fig 14, §5.4.2 / §6.3.2): a
+//! discrete-event model of one training iteration under the three
+//! host↔device communication regimes the paper compares in Fig 20(a).
+//!
+//! * **NoCopy** — everything (BP + parameter update) on the device; no
+//!   host↔device traffic, but the update is serialized after BP.
+//! * **SyncCopy** — BP on device, update on host; gradients copied after the
+//!   whole backward pass, fresh values copied back before the next
+//!   iteration. Copies block the worker.
+//! * **AsyncCopy** — each layer's gradient copy is *initiated* the moment
+//!   its `ComputeGradient` finishes (BridgeSrc semantics) and overlaps the
+//!   remaining backward compute; the host updates as gradients arrive and
+//!   enqueues fresh-value copy events, prioritized bottom-layer-first so
+//!   the next iteration's forward pass is not blocked.
+//!
+//! The event simulation runs two iterations and reports the steady-state
+//! (second) iteration time.
+
+use crate::comm::LinkModel;
+
+/// Static per-layer profile measured from real executions.
+#[derive(Debug, Clone)]
+pub struct LayerProfile {
+    pub name: String,
+    /// Forward compute time on the device, µs.
+    pub fwd_us: f64,
+    /// Backward compute time on the device, µs.
+    pub bwd_us: f64,
+    /// Bytes of parameters (== bytes of gradients) this layer owns.
+    pub param_bytes: usize,
+}
+
+/// Host/device copy regime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CopyMode {
+    NoCopy,
+    SyncCopy,
+    AsyncCopy,
+}
+
+/// Update-throughput assumptions (µs per megabyte of parameters).
+#[derive(Debug, Clone, Copy)]
+pub struct UpdateRates {
+    /// Device-side SGD update rate (NoCopy mode).
+    pub device_us_per_mb: f64,
+    /// Host-side update rate (server thread).
+    pub host_us_per_mb: f64,
+}
+
+impl Default for UpdateRates {
+    fn default() -> UpdateRates {
+        // Device updates are memory-bandwidth-bound and fast; host update
+        // runs on a CPU core in parallel with BP.
+        UpdateRates { device_us_per_mb: 60.0, host_us_per_mb: 250.0 }
+    }
+}
+
+fn mb(bytes: usize) -> f64 {
+    bytes as f64 / 1e6
+}
+
+/// Steady-state time of one training iteration (µs).
+pub fn iteration_time_us(
+    layers: &[LayerProfile],
+    mode: CopyMode,
+    link: &LinkModel,
+    rates: &UpdateRates,
+) -> f64 {
+    let fwd_total: f64 = layers.iter().map(|l| l.fwd_us).sum();
+    let bwd_total: f64 = layers.iter().map(|l| l.bwd_us).sum();
+    let param_total: usize = layers.iter().map(|l| l.param_bytes).sum();
+
+    match mode {
+        CopyMode::NoCopy => {
+            // BP then device-side update, strictly sequential on the device
+            // (paper: "No Copy has to do BP and parameter updating in
+            // sequential").
+            fwd_total + bwd_total + mb(param_total) * rates.device_us_per_mb
+        }
+        CopyMode::SyncCopy => {
+            // BP, then grads down, host update, values up — all blocking.
+            fwd_total
+                + bwd_total
+                + link.transfer_us(param_total)
+                + mb(param_total) * rates.host_us_per_mb
+                + link.transfer_us(param_total)
+        }
+        CopyMode::AsyncCopy => async_iteration_us(layers, link, rates, true),
+    }
+}
+
+/// AsyncCopy with an explicit up-link priority policy — the Fig 14 design
+/// choice. `bottom_first = false` reverses the copy order (top layers
+/// first), the ablation in `bench::ablation_priority`.
+pub fn async_iteration_us_with_priority(
+    layers: &[LayerProfile],
+    link: &LinkModel,
+    rates: &UpdateRates,
+    bottom_first: bool,
+) -> f64 {
+    async_iteration_us(layers, link, rates, bottom_first)
+}
+
+/// Event-driven simulation of the AsyncCopy pipeline across two iterations;
+/// returns the second (steady-state) iteration's span.
+fn async_iteration_us(
+    layers: &[LayerProfile],
+    link: &LinkModel,
+    rates: &UpdateRates,
+    bottom_first: bool,
+) -> f64 {
+    let n = layers.len();
+    // --- Iteration 1: forward then backward, launching grad copies. ---
+    let mut t = 0.0f64; // device clock
+    for l in layers {
+        t += l.fwd_us;
+    }
+    // Backward visits layers in reverse; record when each layer's gradient
+    // is ready on the device.
+    let mut grad_ready = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        t += layers[i].bwd_us;
+        grad_ready[i] = t;
+    }
+    let bp_end = t;
+
+    // Down-link (device→host): FIFO in grad-ready order (top layer first).
+    let mut down_free = 0.0f64;
+    let mut grad_arrive = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        if layers[i].param_bytes == 0 {
+            grad_arrive[i] = grad_ready[i];
+            continue;
+        }
+        let start = grad_ready[i].max(down_free);
+        down_free = start + link.transfer_us(layers[i].param_bytes);
+        grad_arrive[i] = down_free;
+    }
+
+    // Host server updates as gradients arrive (single server thread).
+    let mut host_free = 0.0f64;
+    let mut upd_done = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        if layers[i].param_bytes == 0 {
+            upd_done[i] = grad_arrive[i];
+            continue;
+        }
+        let start = grad_arrive[i].max(host_free);
+        host_free = start + mb(layers[i].param_bytes) * rates.host_us_per_mb;
+        upd_done[i] = host_free;
+    }
+
+    // Up-link (host→device): a priority queue over the copy events. When
+    // the link frees, the highest-priority *available* event is sent —
+    // bottom-first priority (paper: "fresh parameters of the bottom layers
+    // have higher priority because the bottom layers will be visited
+    // earlier in the next iteration") vs the top-first ablation. The link
+    // never idles while any copy is available.
+    let mut up_free = 0.0f64;
+    let mut param_ready = vec![0.0f64; n];
+    let mut pending: Vec<usize> = (0..n).filter(|&i| layers[i].param_bytes > 0).collect();
+    while !pending.is_empty() {
+        // Advance to the next availability if nothing is ready.
+        let earliest = pending.iter().map(|&i| upd_done[i]).fold(f64::INFINITY, f64::min);
+        if up_free < earliest {
+            up_free = earliest;
+        }
+        // Highest-priority available event.
+        let pick_pos = pending
+            .iter()
+            .enumerate()
+            .filter(|(_, &i)| upd_done[i] <= up_free)
+            .min_by_key(|(_, &i)| if bottom_first { i as isize } else { -(i as isize) })
+            .map(|(pos, _)| pos)
+            .expect("some event is available after advancing");
+        let i = pending.swap_remove(pick_pos);
+        up_free += link.transfer_us(layers[i].param_bytes);
+        param_ready[i] = up_free;
+    }
+
+    // --- Iteration 2: forward blocked per-layer on fresh params. ---
+    let mut dev = bp_end; // device continues immediately (data loading etc.)
+    for (i, l) in layers.iter().enumerate() {
+        dev = dev.max(param_ready[i]);
+        dev += l.fwd_us;
+    }
+    for i in (0..n).rev() {
+        dev += layers[i].bwd_us;
+    }
+    dev - bp_end
+}
+
+/// Build layer profiles for an AlexNet-like net scaled by mini-batch size:
+/// compute scales with batch; parameter bytes do not (paper Fig 20's x-axis
+/// behaviour). `conv_heavy` matches Krizhevsky's 90/5 compute/param split.
+pub fn alexnet_like_profiles(batch: usize) -> Vec<LayerProfile> {
+    let b = batch as f64;
+    vec![
+        LayerProfile { name: "conv1".into(), fwd_us: 90.0 * b, bwd_us: 180.0 * b, param_bytes: 140_000 },
+        LayerProfile { name: "pool1".into(), fwd_us: 8.0 * b, bwd_us: 10.0 * b, param_bytes: 0 },
+        LayerProfile { name: "conv2".into(), fwd_us: 130.0 * b, bwd_us: 260.0 * b, param_bytes: 1_200_000 },
+        LayerProfile { name: "pool2".into(), fwd_us: 6.0 * b, bwd_us: 8.0 * b, param_bytes: 0 },
+        LayerProfile { name: "conv3".into(), fwd_us: 75.0 * b, bwd_us: 150.0 * b, param_bytes: 3_500_000 },
+        LayerProfile { name: "fc1".into(), fwd_us: 18.0 * b, bwd_us: 36.0 * b, param_bytes: 150_000_000 },
+        LayerProfile { name: "fc2".into(), fwd_us: 7.0 * b, bwd_us: 14.0 * b, param_bytes: 64_000_000 },
+        LayerProfile { name: "softmax".into(), fwd_us: 2.0 * b, bwd_us: 2.0 * b, param_bytes: 16_000_000 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profiles(batch: usize) -> Vec<LayerProfile> {
+        alexnet_like_profiles(batch)
+    }
+
+    #[test]
+    fn async_never_slower_than_sync() {
+        let link = LinkModel::pcie3();
+        let rates = UpdateRates::default();
+        for batch in [16, 32, 64, 128, 256] {
+            let p = profiles(batch);
+            let sync = iteration_time_us(&p, CopyMode::SyncCopy, &link, &rates);
+            let async_ = iteration_time_us(&p, CopyMode::AsyncCopy, &link, &rates);
+            assert!(
+                async_ <= sync + 1.0,
+                "batch {batch}: async {async_} vs sync {sync}"
+            );
+        }
+    }
+
+    #[test]
+    fn gap_shrinks_with_batch_size() {
+        // Paper Fig 20a: larger batches → more compute to overlap with →
+        // smaller relative Sync-vs-Async gap.
+        let link = LinkModel::pcie3();
+        let rates = UpdateRates::default();
+        let rel_gap = |batch: usize| {
+            let p = profiles(batch);
+            let sync = iteration_time_us(&p, CopyMode::SyncCopy, &link, &rates);
+            let async_ = iteration_time_us(&p, CopyMode::AsyncCopy, &link, &rates);
+            (sync - async_) / sync
+        };
+        assert!(rel_gap(16) > rel_gap(256), "{} vs {}", rel_gap(16), rel_gap(256));
+    }
+
+    #[test]
+    fn async_beats_nocopy_at_large_batch() {
+        // Paper: at batch 256 AsyncCopy is faster than NoCopy because the
+        // server updates in parallel with BP while NoCopy serializes them.
+        let link = LinkModel::pcie3();
+        let rates = UpdateRates::default();
+        let p = profiles(256);
+        let nocopy = iteration_time_us(&p, CopyMode::NoCopy, &link, &rates);
+        let async_ = iteration_time_us(&p, CopyMode::AsyncCopy, &link, &rates);
+        assert!(async_ < nocopy, "async {async_} vs nocopy {nocopy}");
+    }
+
+    #[test]
+    fn nocopy_fastest_at_small_batch() {
+        let link = LinkModel::pcie3();
+        let rates = UpdateRates::default();
+        let p = profiles(16);
+        let nocopy = iteration_time_us(&p, CopyMode::NoCopy, &link, &rates);
+        let sync = iteration_time_us(&p, CopyMode::SyncCopy, &link, &rates);
+        assert!(nocopy < sync);
+    }
+
+    #[test]
+    fn zero_param_layers_add_no_traffic() {
+        let link = LinkModel::pcie3();
+        let rates = UpdateRates::default();
+        let p = vec![LayerProfile { name: "relu".into(), fwd_us: 10.0, bwd_us: 10.0, param_bytes: 0 }];
+        let sync = iteration_time_us(&p, CopyMode::SyncCopy, &link, &rates);
+        // only the two zero-byte "transfers" (latency) separate from compute
+        assert!((sync - (20.0 + 2.0 * link.latency_us)).abs() < 1e-6);
+        let async_ = iteration_time_us(&p, CopyMode::AsyncCopy, &link, &rates);
+        assert!((async_ - 20.0).abs() < 1e-6);
+    }
+}

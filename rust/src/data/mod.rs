@@ -1,0 +1,422 @@
+//! Synthetic dataset generators standing in for the paper's corpora
+//! (DESIGN.md §Substitutions): CIFAR-10 / MNIST / NUS-WIDE / the Linux
+//! kernel source are not available offline, so each generator produces
+//! deterministic data with the same shapes and a learnable class structure
+//! (class prototypes + noise), which is what the training-dynamics
+//! experiments actually exercise.
+//!
+//! Batches are addressed by index, so every worker group shards the stream
+//! deterministically (data parallelism: "each worker group trains against a
+//! partition of the training dataset", §5.1).
+
+use crate::tensor::Blob;
+use crate::utils::rng::Rng;
+use std::collections::HashMap;
+
+/// A deterministic, indexable mini-batch source.
+pub trait DataSource: Send + Sync {
+    /// Names of the input layers this source feeds.
+    fn input_names(&self) -> Vec<String>;
+
+    /// The `index`-th mini-batch of `batch` examples. Deterministic:
+    /// `(index, batch)` fully determines the content.
+    fn batch(&self, index: u64, batch: usize) -> HashMap<String, Blob>;
+}
+
+/// CIFAR-like image classification: `[b, 3, h, w]` images in 10 classes.
+/// Each class has a per-channel spatial prototype; samples add Gaussian
+/// noise, so accuracy saturates with training like the paper's CIFAR runs.
+pub struct SyntheticImages {
+    pub classes: usize,
+    pub channels: usize,
+    pub h: usize,
+    pub w: usize,
+    pub noise: f32,
+    prototypes: Vec<Vec<f32>>,
+    seed: u64,
+}
+
+impl SyntheticImages {
+    pub fn cifar_like(seed: u64) -> SyntheticImages {
+        SyntheticImages::new(10, 3, 32, 32, 0.35, seed)
+    }
+
+    pub fn new(
+        classes: usize,
+        channels: usize,
+        h: usize,
+        w: usize,
+        noise: f32,
+        seed: u64,
+    ) -> SyntheticImages {
+        let mut rng = Rng::with_stream(seed, 0x1337);
+        let dim = channels * h * w;
+        let prototypes = (0..classes)
+            .map(|_| {
+                // Smooth prototypes: random low-frequency pattern.
+                let fx = rng.uniform_range(0.5, 3.0);
+                let fy = rng.uniform_range(0.5, 3.0);
+                let phase = rng.uniform_range(0.0, 6.28);
+                let mut p = Vec::with_capacity(dim);
+                for c in 0..channels {
+                    for y in 0..h {
+                        for x in 0..w {
+                            let v = ((x as f32 / w as f32) * fx * 6.28
+                                + (y as f32 / h as f32) * fy * 6.28
+                                + phase
+                                + c as f32)
+                                .sin();
+                            p.push(0.5 * v);
+                        }
+                    }
+                }
+                p
+            })
+            .collect();
+        SyntheticImages { classes, channels, h, w, noise, prototypes, seed }
+    }
+
+    pub fn image_dim(&self) -> usize {
+        self.channels * self.h * self.w
+    }
+}
+
+impl DataSource for SyntheticImages {
+    fn input_names(&self) -> Vec<String> {
+        vec!["data".to_string(), "label".to_string()]
+    }
+
+    fn batch(&self, index: u64, batch: usize) -> HashMap<String, Blob> {
+        let mut rng = Rng::with_stream(self.seed ^ index.wrapping_mul(0x9e3779b9), 7);
+        let dim = self.image_dim();
+        let mut xs = Vec::with_capacity(batch * dim);
+        let mut ys = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let c = rng.below(self.classes);
+            ys.push(c as f32);
+            for &p in &self.prototypes[c] {
+                xs.push(p + self.noise * rng.gaussian());
+            }
+        }
+        let mut m = HashMap::new();
+        m.insert(
+            "data".to_string(),
+            Blob::from_vec(&[batch, self.channels, self.h, self.w], xs),
+        );
+        m.insert("label".to_string(), Blob::from_vec(&[batch], ys));
+        m
+    }
+}
+
+/// MNIST-like flat binary-ish vectors in `[0,1]`, 10 classes — used by the
+/// RBM / deep auto-encoder application (§4.2.2).
+pub struct SyntheticDigits {
+    pub dim: usize,
+    pub classes: usize,
+    prototypes: Vec<Vec<f32>>,
+    seed: u64,
+}
+
+impl SyntheticDigits {
+    pub fn mnist_like(seed: u64) -> SyntheticDigits {
+        SyntheticDigits::new(784, 10, seed)
+    }
+
+    pub fn new(dim: usize, classes: usize, seed: u64) -> SyntheticDigits {
+        let mut rng = Rng::with_stream(seed, 0xd161);
+        let prototypes = (0..classes)
+            .map(|_| (0..dim).map(|_| if rng.uniform() < 0.25 { 1.0 } else { 0.0 }).collect())
+            .collect();
+        SyntheticDigits { dim, classes, prototypes, seed }
+    }
+}
+
+impl DataSource for SyntheticDigits {
+    fn input_names(&self) -> Vec<String> {
+        vec!["data".to_string(), "label".to_string()]
+    }
+
+    fn batch(&self, index: u64, batch: usize) -> HashMap<String, Blob> {
+        let mut rng = Rng::with_stream(self.seed ^ index.wrapping_mul(0x51ed), 11);
+        let mut xs = Vec::with_capacity(batch * self.dim);
+        let mut ys = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let c = rng.below(self.classes);
+            ys.push(c as f32);
+            for &p in &self.prototypes[c] {
+                // flip 3% of pixels
+                let v = if rng.uniform() < 0.03 { 1.0 - p } else { p };
+                xs.push(v);
+            }
+        }
+        let mut m = HashMap::new();
+        m.insert("data".to_string(), Blob::from_vec(&[batch, self.dim], xs));
+        m.insert("label".to_string(), Blob::from_vec(&[batch], ys));
+        m
+    }
+}
+
+/// Pseudo-C source corpus for Char-RNN (§4.2.3): the Linux kernel source is
+/// replaced by a generated corpus with C-like token statistics (keywords,
+/// braces, identifiers), giving the model real sequential structure.
+pub struct CharCorpus {
+    pub text: Vec<u8>,
+    pub vocab: Vec<u8>,
+    index_of: [usize; 256],
+    pub steps: usize,
+}
+
+impl CharCorpus {
+    /// Generate ~`size` bytes of pseudo-C.
+    pub fn pseudo_c(size: usize, steps: usize, seed: u64) -> CharCorpus {
+        let mut rng = Rng::with_stream(seed, 0xc0de);
+        let keywords = [
+            "int ", "if (", "for (", "while (", "return ", "void ", "static ", "struct ",
+            "char ", "unsigned ", "const ", "case ", "break;\n", "else {\n", "#define ",
+        ];
+        let idents = ["i", "j", "n", "ptr", "buf", "len", "ret", "dev", "flags", "size"];
+        let mut text = Vec::with_capacity(size + 64);
+        let mut depth: usize = 0;
+        while text.len() < size {
+            match rng.below(10) {
+                0..=3 => text.extend_from_slice(keywords[rng.below(keywords.len())].as_bytes()),
+                4..=6 => {
+                    let id = idents[rng.below(idents.len())];
+                    text.extend_from_slice(id.as_bytes());
+                    match rng.below(4) {
+                        0 => text.extend_from_slice(b" = "),
+                        1 => text.extend_from_slice(b"++;\n"),
+                        2 => text.extend_from_slice(b" < "),
+                        _ => text.extend_from_slice(b"; "),
+                    }
+                }
+                7 => {
+                    text.extend_from_slice(b"{\n");
+                    depth += 1;
+                }
+                8 if depth > 0 => {
+                    text.extend_from_slice(b"}\n");
+                    depth -= 1;
+                }
+                _ => {
+                    let num = rng.below(100);
+                    text.extend_from_slice(format!("{num}").as_bytes());
+                }
+            }
+        }
+        text.truncate(size);
+        // Vocabulary = distinct bytes, in sorted order.
+        let mut seen = [false; 256];
+        for &b in &text {
+            seen[b as usize] = true;
+        }
+        let vocab: Vec<u8> = (0..=255u8).filter(|&b| seen[b as usize]).collect();
+        let mut index_of = [0usize; 256];
+        for (i, &b) in vocab.iter().enumerate() {
+            index_of[b as usize] = i;
+        }
+        CharCorpus { text, vocab, index_of, steps }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    pub fn decode(&self, id: usize) -> char {
+        self.vocab[id] as char
+    }
+}
+
+impl DataSource for CharCorpus {
+    fn input_names(&self) -> Vec<String> {
+        vec!["chars".to_string(), "labels".to_string()]
+    }
+
+    /// Reads `steps + 1` successive characters per example (paper §4.2.3):
+    /// the first `steps` are inputs, the last `steps` are next-char labels.
+    fn batch(&self, index: u64, batch: usize) -> HashMap<String, Blob> {
+        let mut rng = Rng::with_stream(0xc4a2 ^ index.wrapping_mul(31), 3);
+        let span = self.steps + 1;
+        let mut chars = Vec::with_capacity(batch * self.steps);
+        let mut labels = Vec::with_capacity(batch * self.steps);
+        for _ in 0..batch {
+            let start = rng.below(self.text.len() - span);
+            for t in 0..self.steps {
+                chars.push(self.index_of[self.text[start + t] as usize] as f32);
+                labels.push(self.index_of[self.text[start + t + 1] as usize] as f32);
+            }
+        }
+        let mut m = HashMap::new();
+        m.insert("chars".to_string(), Blob::from_vec(&[batch, self.steps], chars));
+        m.insert("labels".to_string(), Blob::from_vec(&[batch, self.steps], labels));
+        m
+    }
+}
+
+/// NUS-WIDE-like multimodal pairs (§4.2.1): an image and a bag-of-tags text
+/// vector that share a latent class, plus the class label. Feeds the MDNN.
+pub struct MultiModalPairs {
+    pub classes: usize,
+    pub channels: usize,
+    pub h: usize,
+    pub w: usize,
+    pub text_dim: usize,
+    images: SyntheticImages,
+    text_protos: Vec<Vec<f32>>,
+    seed: u64,
+}
+
+impl MultiModalPairs {
+    pub fn nuswide_like(seed: u64) -> MultiModalPairs {
+        MultiModalPairs::new(8, 3, 16, 16, 64, seed)
+    }
+
+    pub fn new(
+        classes: usize,
+        channels: usize,
+        h: usize,
+        w: usize,
+        text_dim: usize,
+        seed: u64,
+    ) -> MultiModalPairs {
+        let images = SyntheticImages::new(classes, channels, h, w, 0.3, seed);
+        let mut rng = Rng::with_stream(seed, 0x7e57);
+        let text_protos = (0..classes)
+            .map(|_| {
+                (0..text_dim)
+                    .map(|_| if rng.uniform() < 0.15 { rng.uniform_range(0.5, 1.0) } else { 0.0 })
+                    .collect()
+            })
+            .collect();
+        MultiModalPairs { classes, channels, h, w, text_dim, images, text_protos, seed }
+    }
+}
+
+impl DataSource for MultiModalPairs {
+    fn input_names(&self) -> Vec<String> {
+        vec!["image".to_string(), "text".to_string(), "label".to_string()]
+    }
+
+    fn batch(&self, index: u64, batch: usize) -> HashMap<String, Blob> {
+        let mut rng = Rng::with_stream(self.seed ^ index.wrapping_mul(0xabcd), 13);
+        let img_dim = self.channels * self.h * self.w;
+        let mut imgs = Vec::with_capacity(batch * img_dim);
+        let mut texts = Vec::with_capacity(batch * self.text_dim);
+        let mut ys = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let c = rng.below(self.classes);
+            ys.push(c as f32);
+            for &p in &self.images.prototypes[c] {
+                imgs.push(p + 0.3 * rng.gaussian());
+            }
+            for &p in &self.text_protos[c] {
+                texts.push((p + 0.1 * rng.gaussian()).max(0.0));
+            }
+        }
+        let mut m = HashMap::new();
+        m.insert(
+            "image".to_string(),
+            Blob::from_vec(&[batch, self.channels, self.h, self.w], imgs),
+        );
+        m.insert("text".to_string(), Blob::from_vec(&[batch, self.text_dim], texts));
+        m.insert("label".to_string(), Blob::from_vec(&[batch], ys));
+        m
+    }
+}
+
+/// Shard a global batch stream across `k` worker groups: group `g` reads
+/// batch indices `g, g+k, g+2k, ...` (disjoint partitions of the dataset).
+pub fn shard_index(global_step: u64, group: usize, groups: usize) -> u64 {
+    global_step * groups as u64 + group as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_shapes_and_determinism() {
+        let d = SyntheticImages::new(4, 3, 8, 8, 0.2, 42);
+        let b1 = d.batch(5, 6);
+        let b2 = d.batch(5, 6);
+        assert_eq!(b1["data"].shape(), &[6, 3, 8, 8]);
+        assert_eq!(b1["label"].shape(), &[6]);
+        assert_eq!(b1["data"], b2["data"]);
+        // different indices differ
+        let b3 = d.batch(6, 6);
+        assert_ne!(b1["data"], b3["data"]);
+        // labels in range
+        assert!(b1["label"].data().iter().all(|&l| (l as usize) < 4));
+    }
+
+    #[test]
+    fn images_are_classifiable_by_nearest_prototype() {
+        let d = SyntheticImages::new(4, 1, 8, 8, 0.2, 7);
+        let b = d.batch(0, 32);
+        let dim = d.image_dim();
+        let mut correct = 0;
+        for i in 0..32 {
+            let x = &b["data"].data()[i * dim..(i + 1) * dim];
+            let mut best = (f32::INFINITY, 0);
+            for (c, p) in d.prototypes.iter().enumerate() {
+                let dist: f32 = x.iter().zip(p).map(|(a, b)| (a - b) * (a - b)).sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 == b["label"].data()[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 30, "nearest-prototype should classify: {correct}/32");
+    }
+
+    #[test]
+    fn digits_are_binaryish() {
+        let d = SyntheticDigits::new(100, 5, 3);
+        let b = d.batch(1, 10);
+        assert!(b["data"].data().iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    #[test]
+    fn char_corpus_structure() {
+        let c = CharCorpus::pseudo_c(4096, 10, 1);
+        assert_eq!(c.text.len(), 4096);
+        assert!(c.vocab_size() > 10 && c.vocab_size() < 100, "vocab {}", c.vocab_size());
+        let b = c.batch(0, 4);
+        assert_eq!(b["chars"].shape(), &[4, 10]);
+        assert_eq!(b["labels"].shape(), &[4, 10]);
+        // labels are inputs shifted by one: label[t] matches char[t+1]
+        for bi in 0..4 {
+            for t in 0..9 {
+                assert_eq!(
+                    b["labels"].data()[bi * 10 + t],
+                    b["chars"].data()[bi * 10 + t + 1]
+                );
+            }
+        }
+        // all ids within vocab
+        assert!(b["chars"].data().iter().all(|&v| (v as usize) < c.vocab_size()));
+    }
+
+    #[test]
+    fn multimodal_pairs_share_class() {
+        let d = MultiModalPairs::new(4, 1, 4, 4, 16, 9);
+        let b = d.batch(2, 8);
+        assert_eq!(b["image"].shape(), &[8, 1, 4, 4]);
+        assert_eq!(b["text"].shape(), &[8, 16]);
+        assert_eq!(b["label"].shape(), &[8]);
+        assert!(b["text"].data().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn shard_indices_disjoint() {
+        use std::collections::HashSet;
+        let mut seen = HashSet::new();
+        for g in 0..4 {
+            for s in 0..10 {
+                assert!(seen.insert(shard_index(s, g, 4)));
+            }
+        }
+    }
+}

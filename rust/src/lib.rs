@@ -1,0 +1,36 @@
+//! # singa-rs — "Deep Learning At Scale and At Ease" (SINGA, 2016) in Rust + JAX + Pallas
+//!
+//! A reproduction of the SINGA distributed deep-learning platform as a
+//! three-layer stack:
+//!
+//! * **L3 (this crate)** — the coordinator: layer-abstraction programming
+//!   model, worker/server groups, cluster topologies (Sandblaster, AllReduce,
+//!   Downpour, Hogwild), neural-net partitioning (data / model / hybrid
+//!   parallelism) with auto-inserted connection layers, and the paper's
+//!   communication optimizations (reduced transfer + computation/
+//!   communication overlap via async copy queues).
+//! * **L2 (python/compile/model.py)** — JAX model step functions, AOT-lowered
+//!   to HLO text artifacts loaded by [`runtime`].
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots, lowered inside the L2 functions.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod utils;
+pub mod tensor;
+pub mod model;
+pub mod train;
+pub mod updater;
+pub mod comm;
+pub mod server;
+pub mod cluster;
+pub mod coordinator;
+pub mod runtime;
+pub mod data;
+pub mod baselines;
+pub mod metrics;
+pub mod config;
+pub mod bench;
+
+/// Crate version string reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,72 @@
+//! `singa` CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! singa train <job.json>       run a training job from a config file
+//! singa repro <figure|all>     regenerate a paper table/figure series
+//! singa summary <model>        print a model preset's layer summary
+//! singa version
+//! ```
+
+use singa::utils::log::{set_level, Level};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if args.iter().any(|a| a == "-v" || a == "--verbose") {
+        set_level(Level::Debug);
+    }
+    let cmd = args.get(1).map(String::as_str).unwrap_or("help");
+    match cmd {
+        "version" => println!("singa-rs {}", singa::VERSION),
+        "train" => {
+            let path = args.get(2).expect("usage: singa train <job.json>");
+            let text = std::fs::read_to_string(path).expect("reading config");
+            let conf = singa::config::parse_job(&text).expect("parsing config");
+            let data: std::sync::Arc<dyn singa::data::DataSource> =
+                std::sync::Arc::new(singa::data::SyntheticDigits::mnist_like(conf.seed));
+            let report = singa::coordinator::run_job(&conf, data);
+            print!("{}", report.log.to_tsv());
+            eprintln!(
+                "done: wall {:.1} ms, {} param bytes moved",
+                report.wall_ms,
+                report.ledger.param_bytes()
+            );
+        }
+        "repro" => {
+            let fig = args.get(2).map(String::as_str).unwrap_or("all");
+            let out = match fig {
+                "all" => singa::bench::run_all(false),
+                "quick" => singa::bench::run_all(true),
+                "table1" => singa::bench::table1(),
+                "fig16" => singa::bench::fig16(300),
+                "fig17" => singa::bench::fig17(300),
+                "fig18a" => singa::bench::fig18a(None),
+                "fig18b" => singa::bench::fig18b(None),
+                "fig19ab" => singa::bench::fig19ab(16, 150),
+                "fig19c" => singa::bench::fig19c(4, 150),
+                "fig20a" => singa::bench::fig20a(),
+                "fig20b" => singa::bench::fig20b(),
+                "fig21a" => singa::bench::fig21a(),
+                "fig21b" => singa::bench::fig21b(),
+                "ablation_priority" => singa::bench::ablation_priority(),
+                "ablation_partition_rule" => singa::bench::ablation_partition_rule(),
+                other => {
+                    eprintln!("unknown figure '{other}'");
+                    std::process::exit(2);
+                }
+            };
+            print!("{out}");
+        }
+        "summary" => {
+            let model = args.get(2).map(String::as_str).unwrap_or("cifar_convnet");
+            let net = singa::config::model_preset(model, 32)
+                .expect("unknown model")
+                .build(&mut singa::utils::rng::Rng::new(1));
+            print!("{}", net.summary());
+            println!("total params: {}", net.param_count());
+        }
+        _ => {
+            println!("singa-rs {} — SINGA reproduction (rust + JAX + Pallas)", singa::VERSION);
+            println!("usage: singa <train|repro|summary|version> [args]");
+        }
+    }
+}

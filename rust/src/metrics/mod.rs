@@ -1,0 +1,130 @@
+//! Training metrics: per-iteration records collected from all worker
+//! groups, with both wall-clock and virtual-clock timestamps (the latter
+//! models the simulated deployment — see [`crate::comm::simnet`]).
+
+use std::sync::Mutex;
+
+/// One logged training step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub group: usize,
+    pub step: u64,
+    /// Wall-clock milliseconds since job start.
+    pub wall_ms: f64,
+    /// Virtual milliseconds on the group's simulated clock.
+    pub virt_ms: f64,
+    pub loss: f32,
+    pub metric: f32,
+}
+
+/// Thread-safe append-only training log.
+#[derive(Debug, Default)]
+pub struct TrainingLog {
+    records: Mutex<Vec<Record>>,
+}
+
+impl TrainingLog {
+    pub fn new() -> TrainingLog {
+        TrainingLog::default()
+    }
+
+    pub fn push(&self, r: Record) {
+        self.records.lock().unwrap().push(r);
+    }
+
+    pub fn snapshot(&self) -> Vec<Record> {
+        self.records.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Final loss averaged across groups (mean of each group's last record).
+    pub fn final_loss(&self) -> f32 {
+        let recs = self.snapshot();
+        let mut last: std::collections::HashMap<usize, &Record> = Default::default();
+        for r in &recs {
+            let e = last.entry(r.group).or_insert(r);
+            if r.step >= e.step {
+                *e = r;
+            }
+        }
+        if last.is_empty() {
+            return 0.0;
+        }
+        last.values().map(|r| r.loss).sum::<f32>() / last.len() as f32
+    }
+
+    /// Earliest virtual time (ms) at which any group's running-average
+    /// metric reached `target` (the paper's "time to accuracy" measure,
+    /// Fig 19); `None` if never reached.
+    pub fn time_to_metric(&self, target: f32, window: usize) -> Option<f64> {
+        let mut recs = self.snapshot();
+        recs.sort_by(|a, b| a.virt_ms.partial_cmp(&b.virt_ms).unwrap());
+        let mut hist: Vec<f32> = Vec::new();
+        for r in &recs {
+            hist.push(r.metric);
+            let n = hist.len().min(window);
+            let avg: f32 = hist[hist.len() - n..].iter().sum::<f32>() / n as f32;
+            if avg >= target {
+                return Some(r.virt_ms);
+            }
+        }
+        None
+    }
+
+    /// Dump as TSV (step, group, wall_ms, virt_ms, loss, metric).
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::from("step\tgroup\twall_ms\tvirt_ms\tloss\tmetric\n");
+        for r in self.snapshot() {
+            out.push_str(&format!(
+                "{}\t{}\t{:.3}\t{:.3}\t{:.5}\t{:.4}\n",
+                r.step, r.group, r.wall_ms, r.virt_ms, r.loss, r.metric
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(group: usize, step: u64, virt_ms: f64, loss: f32, metric: f32) -> Record {
+        Record { group, step, wall_ms: virt_ms, virt_ms, loss, metric }
+    }
+
+    #[test]
+    fn final_loss_per_group() {
+        let log = TrainingLog::new();
+        log.push(rec(0, 0, 1.0, 2.0, 0.1));
+        log.push(rec(0, 1, 2.0, 1.0, 0.2));
+        log.push(rec(1, 0, 1.5, 3.0, 0.1));
+        assert_eq!(log.final_loss(), 2.0); // mean of 1.0 and 3.0
+        assert_eq!(log.len(), 3);
+    }
+
+    #[test]
+    fn time_to_metric_finds_first_crossing() {
+        let log = TrainingLog::new();
+        log.push(rec(0, 0, 10.0, 1.0, 0.2));
+        log.push(rec(0, 1, 20.0, 0.8, 0.6));
+        log.push(rec(0, 2, 30.0, 0.5, 0.9));
+        assert_eq!(log.time_to_metric(0.55, 1), Some(20.0));
+        assert_eq!(log.time_to_metric(0.95, 1), None);
+    }
+
+    #[test]
+    fn tsv_roundtrip_lines() {
+        let log = TrainingLog::new();
+        log.push(rec(0, 0, 1.0, 0.5, 0.25));
+        let tsv = log.to_tsv();
+        assert!(tsv.starts_with("step\t"));
+        assert_eq!(tsv.lines().count(), 2);
+    }
+}

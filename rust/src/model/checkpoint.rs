@@ -1,0 +1,252 @@
+//! Model checkpointing: serialize parameter tensors to a versioned binary
+//! file and restore them into (possibly different) nets by name — the
+//! mechanism the paper's deep auto-encoder uses to port RBM weights between
+//! training stages ("the parameters trained from the first RBM are ported,
+//! through checkpoint, into step 2", §4.2.2), and what a production job
+//! needs for fault tolerance and warm starts.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "SNGA" | u32 version | u32 count |
+//!   per param: u32 name_len | name bytes | u32 ndims | u64 dims... | f32 data...
+//! ```
+
+use crate::tensor::Blob;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SNGA";
+const VERSION: u32 = 1;
+
+/// A named set of tensors (what gets saved/restored).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Checkpoint {
+    pub tensors: HashMap<String, Blob>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Checkpoint {
+        Checkpoint::default()
+    }
+
+    /// Capture all parameters of a net (by `Param::name`).
+    pub fn from_net(net: &crate::model::NeuralNet) -> Checkpoint {
+        let mut c = Checkpoint::new();
+        for p in net.params() {
+            c.tensors.insert(p.name.clone(), p.data.clone());
+        }
+        c
+    }
+
+    /// Restore into a net: every param whose name matches (and whose shape
+    /// agrees) is overwritten. Returns the number restored.
+    pub fn restore(&self, net: &mut crate::model::NeuralNet) -> usize {
+        let mut n = 0;
+        for p in net.params_mut() {
+            if let Some(v) = self.tensors.get(&p.name) {
+                assert_eq!(
+                    v.shape(),
+                    p.data.shape(),
+                    "checkpoint shape mismatch for {}",
+                    p.name
+                );
+                p.data = v.clone();
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Serialize to a writer.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        // Sort for determinism.
+        let mut names: Vec<&String> = self.tensors.keys().collect();
+        names.sort();
+        for name in names {
+            let blob = &self.tensors[name];
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&(blob.shape().len() as u32).to_le_bytes())?;
+            for &d in blob.shape() {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &v in blob.data() {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Deserialize from a reader.
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Checkpoint> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(anyhow!("not a singa checkpoint (bad magic)"));
+        }
+        let version = read_u32(r)?;
+        if version != VERSION {
+            return Err(anyhow!("unsupported checkpoint version {version}"));
+        }
+        let count = read_u32(r)? as usize;
+        let mut tensors = HashMap::with_capacity(count);
+        for _ in 0..count {
+            let name_len = read_u32(r)? as usize;
+            if name_len > 4096 {
+                return Err(anyhow!("implausible name length {name_len}"));
+            }
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name).map_err(|_| anyhow!("non-utf8 param name"))?;
+            let ndims = read_u32(r)? as usize;
+            if ndims > 16 {
+                return Err(anyhow!("implausible rank {ndims}"));
+            }
+            let mut shape = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                let mut b = [0u8; 8];
+                r.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let n: usize = shape.iter().product();
+            if n > 1 << 30 {
+                return Err(anyhow!("implausible tensor size {n}"));
+            }
+            let mut data = Vec::with_capacity(n);
+            let mut buf = [0u8; 4];
+            for _ in 0..n {
+                r.read_exact(&mut buf)?;
+                data.push(f32::from_le_bytes(buf));
+            }
+            tensors.insert(name, Blob::from_vec(&shape, data));
+        }
+        Ok(Checkpoint { tensors })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_to(&mut f)
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        Checkpoint::read_from(&mut f)
+    }
+
+    /// Total bytes of tensor payload.
+    pub fn byte_size(&self) -> usize {
+        self.tensors.values().map(|b| b.byte_size()).sum()
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::{Activation, LayerConf, LayerKind};
+    use crate::model::NetBuilder;
+    use crate::utils::quickcheck::{forall, prop_assert};
+    use crate::utils::rng::Rng;
+
+    fn small_net() -> crate::model::NeuralNet {
+        NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![2, 4] }, &[]))
+            .add(LayerConf::new(
+                "fc",
+                LayerKind::InnerProduct { out: 3, act: Activation::Tanh, init_std: 0.2 },
+                &["data"],
+            ))
+            .build(&mut Rng::new(5))
+    }
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let net = small_net();
+        let c = Checkpoint::from_net(&net);
+        let mut buf = Vec::new();
+        c.write_to(&mut buf).unwrap();
+        let c2 = Checkpoint::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(c, c2);
+        assert_eq!(c.byte_size(), (4 * 3 + 3) * 4);
+    }
+
+    #[test]
+    fn restore_into_fresh_net() {
+        let net = small_net();
+        let c = Checkpoint::from_net(&net);
+        let mut fresh = NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![2, 4] }, &[]))
+            .add(LayerConf::new(
+                "fc",
+                LayerKind::InnerProduct { out: 3, act: Activation::Tanh, init_std: 0.2 },
+                &["data"],
+            ))
+            .build(&mut Rng::new(99)); // different init
+        let restored = c.restore(&mut fresh);
+        assert_eq!(restored, 2);
+        for (a, b) in net.params().iter().zip(fresh.params()) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn partial_restore_by_name() {
+        let net = small_net();
+        let mut c = Checkpoint::from_net(&net);
+        c.tensors.remove("fc/bias");
+        let mut fresh = small_net();
+        assert_eq!(c.restore(&mut fresh), 1);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let net = small_net();
+        let c = Checkpoint::from_net(&net);
+        let path = std::env::temp_dir().join("singa_ckpt_test.bin");
+        c.save(&path).unwrap();
+        let c2 = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, c2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_input() {
+        assert!(Checkpoint::read_from(&mut &b"JUNK"[..]).is_err());
+        assert!(Checkpoint::read_from(&mut &b"SNGA\x63\x00\x00\x00"[..]).is_err());
+        // truncated payload
+        let net = small_net();
+        let c = Checkpoint::from_net(&net);
+        let mut buf = Vec::new();
+        c.write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() - 7);
+        assert!(Checkpoint::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn roundtrip_property_random_tensors() {
+        forall(25, |g| {
+            let mut c = Checkpoint::new();
+            let count = g.usize(0, 5);
+            for i in 0..count {
+                let r = g.usize(1, 3);
+                let shape: Vec<usize> = (0..r).map(|_| g.usize(1, 6)).collect();
+                let n: usize = shape.iter().product();
+                c.tensors.insert(format!("p{i}"), Blob::from_vec(&shape, g.f32_vec(n, -5.0, 5.0)));
+            }
+            let mut buf = Vec::new();
+            c.write_to(&mut buf).unwrap();
+            let c2 = Checkpoint::read_from(&mut buf.as_slice()).unwrap();
+            prop_assert(c == c2, "roundtrip")
+        });
+    }
+}

@@ -1,0 +1,470 @@
+//! GRU sequence layer and one-hot encoding — the Char-RNN stack (paper
+//! §4.2.3, Fig 9).
+//!
+//! The paper unrolls a recurrent layer into `unroll_len` directed
+//! sub-layers (Fig 5b). Here a `GruLayer` processes the whole sequence:
+//! `compute_feature` runs the unrolled forward loop, `compute_gradient`
+//! runs back-propagation-through-time, so the BP `TrainOneBatch` algorithm
+//! drives BPTT exactly as the paper describes ("for feed-forward and
+//! recurrent models, the BP algorithm is provided"). Stacked GRU layers are
+//! separate `GruLayer` instances, which is the unit of placement used by the
+//! partitioning example (different stacks → different workers).
+//!
+//! Sequence blobs are `[batch, steps*dim]` row-major with step-major inner
+//! layout (step t occupies columns `[t*dim, (t+1)*dim)`).
+
+use super::layer::{Layer, Phase};
+use crate::tensor::blob::Param;
+use crate::tensor::{ops, Blob};
+use crate::utils::rng::Rng;
+use std::any::Any;
+
+/// Gated recurrent unit over full sequences.
+///
+/// Gates (per step): `r = σ(x Wr + h Ur + br)`, `z = σ(x Wz + h Uz + bz)`,
+/// candidate `c = tanh(x Wc + (r⊙h) Uc + bc)`, `h' = z⊙h + (1-z)⊙c`.
+pub struct GruLayer {
+    name: String,
+    hidden: usize,
+    steps: usize,
+    init_std: f32,
+    in_dim: usize,
+    // Parameters: the three input projections stacked [in_dim, 3*hidden]
+    // (r|z|c), the three recurrent projections [hidden, 3*hidden], bias
+    // [3*hidden]. Stacking keeps the param-server shard count small.
+    w: Param,
+    u: Param,
+    b: Param,
+    // Per-step caches from the last forward pass (batch-major blobs).
+    cache: Vec<StepCache>,
+    h0: Blob,
+}
+
+struct StepCache {
+    x: Blob,
+    h_prev: Blob,
+    r: Blob,
+    z: Blob,
+    c: Blob,
+    h: Blob,
+}
+
+impl GruLayer {
+    pub fn new(name: &str, hidden: usize, steps: usize, init_std: f32) -> GruLayer {
+        GruLayer {
+            name: name.to_string(),
+            hidden,
+            steps,
+            init_std,
+            in_dim: 0,
+            w: Param::new(&format!("{name}/w"), Blob::zeros(&[0])),
+            u: Param::new(&format!("{name}/u"), Blob::zeros(&[0])),
+            b: Param::new(&format!("{name}/b"), Blob::zeros(&[0])),
+            cache: Vec::new(),
+            h0: Blob::zeros(&[0]),
+        }
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    fn gates(&self, x: &Blob, h: &Blob) -> (Blob, Blob, Blob) {
+        // pre = x W + h U + b (candidate's recurrent term handled separately)
+        let hd = self.hidden;
+        let mut pre = ops::matmul(x, &self.w.data);
+        ops::add_row_vec(&mut pre, &self.b.data);
+        let pre_rec = ops::matmul(h, &self.u.data);
+        let batch = x.rows();
+        let mut r = Blob::zeros(&[batch, hd]);
+        let mut z = Blob::zeros(&[batch, hd]);
+        let mut cpre = Blob::zeros(&[batch, hd]);
+        for bi in 0..batch {
+            for j in 0..hd {
+                let base = bi * 3 * hd;
+                r.data_mut()[bi * hd + j] = pre.data()[base + j] + pre_rec.data()[base + j];
+                z.data_mut()[bi * hd + j] =
+                    pre.data()[base + hd + j] + pre_rec.data()[base + hd + j];
+                // candidate input projection only; recurrent part needs r⊙h
+                cpre.data_mut()[bi * hd + j] = pre.data()[base + 2 * hd + j];
+            }
+        }
+        (ops::sigmoid(&r), ops::sigmoid(&z), cpre)
+    }
+}
+
+impl Layer for GruLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "Gru"
+    }
+
+    fn setup(&mut self, src_shapes: &[&[usize]], rng: &mut Rng) -> Vec<usize> {
+        let s = src_shapes[0];
+        assert_eq!(s.len(), 2, "{}: Gru wants [batch, steps*dim]", self.name);
+        assert_eq!(s[1] % self.steps, 0, "{}: cols not divisible by steps", self.name);
+        self.in_dim = s[1] / self.steps;
+        let hd = self.hidden;
+        self.w = Param::new(
+            &format!("{}/w", self.name),
+            Blob::gaussian(&[self.in_dim, 3 * hd], self.init_std, rng),
+        );
+        self.u = Param::new(
+            &format!("{}/u", self.name),
+            Blob::gaussian(&[hd, 3 * hd], self.init_std, rng),
+        );
+        self.b = Param::new(&format!("{}/b", self.name), Blob::zeros(&[3 * hd])).with_wd_mult(0.0);
+        vec![s[0], self.steps * hd]
+    }
+
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+        let xseq = srcs[0];
+        let batch = xseq.rows();
+        let hd = self.hidden;
+        let mut h = Blob::zeros(&[batch, hd]);
+        self.h0 = h.clone();
+        self.cache.clear();
+        let mut out = Blob::zeros(&[batch, self.steps * hd]);
+        for t in 0..self.steps {
+            let x = step_slice(xseq, t, self.in_dim, self.steps);
+            let (r, z, cpre_in) = self.gates(&x, &h);
+            // candidate: tanh(cpre_in + (r ⊙ h) Uc)
+            let rh = ops::zip(&r, &h, |a, b| a * b);
+            let rec = ops::matmul(&rh, &slice_u_c(&self.u.data, hd));
+            let cpre = ops::zip(&cpre_in, &rec, |a, b| a + b);
+            let c = ops::tanh(&cpre);
+            let h_new = {
+                let zh = ops::zip(&z, &h, |a, b| a * b);
+                let zc = ops::zip(&z, &c, |zv, cv| (1.0 - zv) * cv);
+                ops::zip(&zh, &zc, |a, b| a + b)
+            };
+            write_step(&mut out, &h_new, t, hd, self.steps);
+            self.cache.push(StepCache {
+                x,
+                h_prev: h.clone(),
+                r,
+                z,
+                c,
+                h: h_new.clone(),
+            });
+            h = h_new;
+        }
+        out
+    }
+
+    fn compute_gradient(
+        &mut self,
+        srcs: &[&Blob],
+        _own: &Blob,
+        grad_out: Option<&Blob>,
+    ) -> Vec<Option<Blob>> {
+        let dy_seq = grad_out.expect("Gru needs grad");
+        let xseq = srcs[0];
+        let batch = xseq.rows();
+        let hd = self.hidden;
+        let mut dx_seq = Blob::zeros(xseq.shape());
+        let mut dh_next = Blob::zeros(&[batch, hd]);
+
+        // dW/dU accumulate over steps; build locally then add to params.
+        let mut dw = Blob::zeros(self.w.data.shape());
+        let mut du = Blob::zeros(self.u.data.shape());
+        let mut db = Blob::zeros(self.b.data.shape());
+
+        for t in (0..self.steps).rev() {
+            let sc = &self.cache[t];
+            // Total gradient into h_t: from output at step t + from step t+1.
+            let mut dh = step_slice(dy_seq, t, hd, self.steps);
+            dh.add_assign(&dh_next);
+
+            // h = z⊙h_prev + (1-z)⊙c
+            let dz = ops::zip(
+                &dh,
+                &ops::zip(&sc.h_prev, &sc.c, |hp, cv| hp - cv),
+                |d, diff| d * diff,
+            );
+            let dc = ops::zip(&dh, &sc.z, |d, zv| d * (1.0 - zv));
+            let mut dh_prev = ops::zip(&dh, &sc.z, |d, zv| d * zv);
+
+            // c = tanh(cpre); dcpre = dc * (1 - c^2)
+            let dcpre = ops::zip(&dc, &sc.c, |d, cv| d * (1.0 - cv * cv));
+            // cpre = x Wc + (r⊙h_prev) Uc + bc
+            let rh = ops::zip(&sc.r, &sc.h_prev, |a, b| a * b);
+            let uc = slice_u_c(&self.u.data, hd);
+            let drh = ops::matmul_nt(&dcpre, &uc);
+            // dUc += rh^T dcpre
+            add_u_c(&mut du, &ops::matmul_tn(&rh, &dcpre), hd);
+            let dr = ops::zip(&drh, &sc.h_prev, |d, hp| d * hp);
+            dh_prev.add_assign(&ops::zip(&drh, &sc.r, |d, rv| d * rv));
+
+            // gate pre-activations
+            let drpre = ops::zip(&dr, &sc.r, |d, rv| d * rv * (1.0 - rv));
+            let dzpre = ops::zip(&dz, &sc.z, |d, zv| d * zv * (1.0 - zv));
+
+            // Assemble the stacked [batch, 3h] pre-activation gradient
+            // (r|z|c): W and U(r,z) see the same layout; Uc was handled above.
+            let mut dpre = Blob::zeros(&[batch, 3 * hd]);
+            for bi in 0..batch {
+                for j in 0..hd {
+                    dpre.data_mut()[bi * 3 * hd + j] = drpre.data()[bi * hd + j];
+                    dpre.data_mut()[bi * 3 * hd + hd + j] = dzpre.data()[bi * hd + j];
+                    dpre.data_mut()[bi * 3 * hd + 2 * hd + j] = dcpre.data()[bi * hd + j];
+                }
+            }
+            // dW += x^T dpre ; db += colsum(dpre)
+            dw.add_assign(&ops::matmul_tn(&sc.x, &dpre));
+            db.add_assign(&ops::sum_rows(&dpre));
+            // dx = dpre W^T
+            let dx = ops::matmul_nt(&dpre, &self.w.data);
+            write_step(&mut dx_seq, &dx, t, self.in_dim, self.steps);
+
+            // dU(r,z) from recurrent terms: pre_rec = h_prev U.
+            // Only r,z columns: zero the c block of dpre first.
+            let mut dpre_rz = dpre.clone();
+            for bi in 0..batch {
+                for j in 0..hd {
+                    dpre_rz.data_mut()[bi * 3 * hd + 2 * hd + j] = 0.0;
+                }
+            }
+            du.add_assign(&ops::matmul_tn(&sc.h_prev, &dpre_rz));
+            dh_prev.add_assign(&{
+                let full = ops::matmul_nt(&dpre_rz, &self.u.data);
+                full
+            });
+
+            dh_next = dh_prev;
+        }
+        self.w.grad.add_assign(&dw);
+        self.u.grad.add_assign(&du);
+        self.b.grad.add_assign(&db);
+        vec![Some(dx_seq)]
+    }
+
+    fn params(&self) -> Vec<&Param> {
+        vec![&self.w, &self.u, &self.b]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.w, &mut self.u, &mut self.b]
+    }
+
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// Extract step `t` of a `[batch, steps*dim]` sequence blob → `[batch, dim]`.
+fn step_slice(seq: &Blob, t: usize, dim: usize, steps: usize) -> Blob {
+    let batch = seq.rows();
+    let mut out = Blob::zeros(&[batch, dim]);
+    for b in 0..batch {
+        let src = &seq.data()[b * steps * dim + t * dim..][..dim];
+        out.data_mut()[b * dim..(b + 1) * dim].copy_from_slice(src);
+    }
+    out
+}
+
+/// Write step `t` of a sequence blob (accumulating assignment).
+fn write_step(seq: &mut Blob, step: &Blob, t: usize, dim: usize, steps: usize) {
+    let batch = step.rows();
+    for b in 0..batch {
+        let dst = &mut seq.data_mut()[b * steps * dim + t * dim..][..dim];
+        for (d, s) in dst.iter_mut().zip(&step.data()[b * dim..(b + 1) * dim]) {
+            *d += s;
+        }
+    }
+}
+
+/// View of the candidate block Uc = U[:, 2h..3h] as an owned [h, h] blob.
+fn slice_u_c(u: &Blob, hd: usize) -> Blob {
+    u.slice_cols(2 * hd, hd)
+}
+
+/// Accumulate dUc into the candidate block of dU.
+fn add_u_c(du: &mut Blob, duc: &Blob, hd: usize) {
+    let cols = 3 * hd;
+    for r in 0..hd {
+        for c in 0..hd {
+            du.data_mut()[r * cols + 2 * hd + c] += duc.data()[r * hd + c];
+        }
+    }
+}
+
+/// One-hot layer: char ids `[batch, steps]` → `[batch, steps*vocab]`.
+pub struct OneHotLayer {
+    name: String,
+    vocab: usize,
+    steps: usize,
+}
+
+impl OneHotLayer {
+    pub fn new(name: &str, vocab: usize) -> OneHotLayer {
+        OneHotLayer { name: name.to_string(), vocab, steps: 0 }
+    }
+}
+
+impl Layer for OneHotLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "OneHot"
+    }
+
+    fn setup(&mut self, src_shapes: &[&[usize]], _rng: &mut Rng) -> Vec<usize> {
+        let s = src_shapes[0];
+        assert_eq!(s.len(), 2, "{}: OneHot wants [batch, steps]", self.name);
+        self.steps = s[1];
+        vec![s[0], self.steps * self.vocab]
+    }
+
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+        let ids = srcs[0];
+        let batch = ids.rows();
+        let mut out = Blob::zeros(&[batch, self.steps * self.vocab]);
+        for b in 0..batch {
+            for t in 0..self.steps {
+                let id = ids.data()[b * self.steps + t] as usize;
+                assert!(id < self.vocab, "{}: char id {id} >= vocab {}", self.name, self.vocab);
+                out.data_mut()[b * self.steps * self.vocab + t * self.vocab + id] = 1.0;
+            }
+        }
+        out
+    }
+
+    fn compute_gradient(
+        &mut self,
+        _srcs: &[&Blob],
+        _own: &Blob,
+        _grad: Option<&Blob>,
+    ) -> Vec<Option<Blob>> {
+        vec![None]
+    }
+
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn onehot_encodes() {
+        let mut l = OneHotLayer::new("oh", 4);
+        let out_shape = l.setup(&[&[2, 3]], &mut Rng::new(1));
+        assert_eq!(out_shape, vec![2, 12]);
+        let ids = Blob::from_vec(&[2, 3], vec![0., 1., 2., 3., 0., 1.]);
+        let y = l.compute_feature(Phase::Train, &[&ids]);
+        assert_eq!(y.sum(), 6.0);
+        assert_eq!(y.data()[0], 1.0); // b0 t0 id0
+        assert_eq!(y.data()[4 + 1], 1.0); // b0 t1 id1
+        assert_eq!(y.data()[12 + 3], 1.0); // b1 t0 id3
+    }
+
+    #[test]
+    fn gru_shapes() {
+        let mut l = GruLayer::new("gru", 8, 5, 0.1);
+        let out = l.setup(&[&[3, 5 * 4]], &mut Rng::new(2));
+        assert_eq!(out, vec![3, 40]);
+        assert_eq!(l.params().len(), 3);
+        assert_eq!(l.w.data.shape(), &[4, 24]);
+        assert_eq!(l.u.data.shape(), &[8, 24]);
+    }
+
+    #[test]
+    fn gru_forward_bounded() {
+        let mut l = GruLayer::new("gru", 6, 4, 0.5);
+        l.setup(&[&[2, 4 * 3]], &mut Rng::new(3));
+        let mut r = Rng::new(5);
+        let x = Blob::from_vec(&[2, 12], r.uniform_vec(24, -1.0, 1.0));
+        let y = l.compute_feature(Phase::Train, &[&x]);
+        // GRU hidden state is a convex combination of tanh outputs → (-1, 1)
+        assert!(y.data().iter().all(|&v| v.abs() < 1.0));
+    }
+
+    /// Full BPTT gradient check: dL/dx and dL/dW numerically.
+    #[test]
+    fn gru_bptt_gradcheck() {
+        let steps = 3;
+        let in_dim = 2;
+        let hd = 4;
+        let batch = 2;
+        let mut l = GruLayer::new("gru", hd, steps, 0.4);
+        l.setup(&[&[batch, steps * in_dim]], &mut Rng::new(7));
+        let mut r = Rng::new(11);
+        let x = Blob::from_vec(&[batch, steps * in_dim], r.uniform_vec(batch * steps * in_dim, -1.0, 1.0));
+
+        let y = l.compute_feature(Phase::Train, &[&x]);
+        let dy = Blob::full(y.shape(), 1.0);
+        let gs = l.compute_gradient(&[&x], &y, Some(&dy));
+        let dx = gs[0].clone().unwrap();
+        let dw = l.w.grad.clone();
+        let du = l.u.grad.clone();
+        let db = l.b.grad.clone();
+
+        let eps = 1e-2;
+        let f_x = |l: &mut GruLayer, x: &Blob| l.compute_feature(Phase::Train, &[x]).sum();
+        for i in 0..x.len() {
+            let mut p = x.clone();
+            p.data_mut()[i] += eps;
+            let mut m = x.clone();
+            m.data_mut()[i] -= eps;
+            let num = (f_x(&mut l, &p) - f_x(&mut l, &m)) / (2.0 * eps);
+            assert!(
+                (num - dx.data()[i]).abs() < 3e-2,
+                "dx[{i}] numeric {num} vs {}",
+                dx.data()[i]
+            );
+        }
+        // dW
+        for i in (0..l.w.data.len()).step_by((l.w.data.len() / 10).max(1)) {
+            let orig = l.w.data.data()[i];
+            l.w.data.data_mut()[i] = orig + eps;
+            let fp = f_x(&mut l, &x);
+            l.w.data.data_mut()[i] = orig - eps;
+            let fm = f_x(&mut l, &x);
+            l.w.data.data_mut()[i] = orig;
+            let num = (fp - fm) / (2.0 * eps);
+            assert!((num - dw.data()[i]).abs() < 3e-2, "dW[{i}] {num} vs {}", dw.data()[i]);
+        }
+        // dU
+        for i in (0..l.u.data.len()).step_by((l.u.data.len() / 10).max(1)) {
+            let orig = l.u.data.data()[i];
+            l.u.data.data_mut()[i] = orig + eps;
+            let fp = f_x(&mut l, &x);
+            l.u.data.data_mut()[i] = orig - eps;
+            let fm = f_x(&mut l, &x);
+            l.u.data.data_mut()[i] = orig;
+            let num = (fp - fm) / (2.0 * eps);
+            assert!((num - du.data()[i]).abs() < 3e-2, "dU[{i}] {num} vs {}", du.data()[i]);
+        }
+        // db
+        for i in 0..db.len() {
+            let orig = l.b.data.data()[i];
+            l.b.data.data_mut()[i] = orig + eps;
+            let fp = f_x(&mut l, &x);
+            l.b.data.data_mut()[i] = orig - eps;
+            let fm = f_x(&mut l, &x);
+            l.b.data.data_mut()[i] = orig;
+            let num = (fp - fm) / (2.0 * eps);
+            assert!((num - db.data()[i]).abs() < 3e-2, "db[{i}] {num} vs {}", db.data()[i]);
+        }
+    }
+
+    #[test]
+    fn step_slice_write_roundtrip() {
+        let mut r = Rng::new(1);
+        let seq = Blob::from_vec(&[2, 6], r.uniform_vec(12, -1.0, 1.0));
+        let mut rebuilt = Blob::zeros(&[2, 6]);
+        for t in 0..3 {
+            let s = step_slice(&seq, t, 2, 3);
+            write_step(&mut rebuilt, &s, t, 2, 3);
+        }
+        assert_eq!(seq.data(), rebuilt.data());
+    }
+}

@@ -1,0 +1,274 @@
+//! The `Layer` abstraction (paper Fig 6) and the declarative layer
+//! configuration from which nets are built.
+//!
+//! A layer owns its `Param`s and implements two functions invoked by the
+//! `TrainOneBatch` algorithms:
+//!
+//! * `compute_feature` — transform source features into this layer's feature
+//!   blob (forward propagation);
+//! * `compute_gradient` — given the gradient w.r.t. its own feature,
+//!   accumulate parameter gradients and produce gradients w.r.t. each source
+//!   feature (backward propagation).
+
+use crate::tensor::{Blob, blob::Param};
+use crate::utils::rng::Rng;
+use std::any::Any;
+
+/// Training vs evaluation phase (`flag` argument in the paper's Fig 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Train,
+    Test,
+}
+
+/// Behaviour shared by every layer. Object-safe so user-defined layers can
+/// be registered alongside the built-ins.
+pub trait Layer: Send {
+    /// Unique name within the net (e.g. `"conv1"` or, after partitioning,
+    /// `"conv1@0of2"`).
+    fn name(&self) -> &str;
+
+    /// Static type tag (e.g. `"InnerProduct"`).
+    fn type_name(&self) -> &'static str;
+
+    /// Shape inference + parameter allocation. Called once while the
+    /// `NeuralNet` is constructed, in topological order; receives the output
+    /// shapes of the source layers and returns this layer's output shape.
+    fn setup(&mut self, src_shapes: &[&[usize]], rng: &mut Rng) -> Vec<usize>;
+
+    /// Forward propagation: compute this layer's feature blob from the
+    /// source feature blobs.
+    fn compute_feature(&mut self, phase: Phase, srcs: &[&Blob]) -> Blob;
+
+    /// Backward propagation: given source features, this layer's own
+    /// feature, and the gradient w.r.t. that feature, accumulate parameter
+    /// gradients (into `Param::grad`) and return the gradient w.r.t. each
+    /// source (or `None` for sources that need no gradient, e.g. labels).
+    ///
+    /// Loss layers are invoked with `grad_out == None` and derive the
+    /// gradient from their stored loss state.
+    fn compute_gradient(
+        &mut self,
+        srcs: &[&Blob],
+        own_feature: &Blob,
+        grad_out: Option<&Blob>,
+    ) -> Vec<Option<Blob>>;
+
+    /// Learnable parameters (empty for most layers).
+    fn params(&self) -> Vec<&Param> {
+        Vec::new()
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Param> {
+        Vec::new()
+    }
+
+    /// Loss layers report `(loss, metric)` accumulated by the most recent
+    /// forward pass; `metric` is task-specific (accuracy for softmax).
+    fn loss(&self) -> Option<(f32, f32)> {
+        None
+    }
+
+    /// Whether this layer is a connection layer inserted by the partitioner
+    /// (bridge / slice / concat / split) — excluded from user-visible stats.
+    fn is_connection(&self) -> bool {
+        false
+    }
+
+    /// Loss layers derive their own gradient (invoked with
+    /// `grad_out == None` during backward); every other layer is skipped
+    /// when no gradient reaches it (e.g. the label path).
+    fn is_loss(&self) -> bool {
+        false
+    }
+
+    /// Downcast support (used by the CD algorithm to reach RBM internals).
+    fn as_any(&mut self) -> &mut dyn Any;
+}
+
+/// Declarative configuration of a single layer — what the user writes in the
+/// job configuration (paper §3). `NetBuilder` assembles these into a
+/// `NeuralNet`; the partitioner rewrites them into sub-layer configs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerConf {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Names of source layers (paper: "each layer records its own source
+    /// layers").
+    pub srcs: Vec<String>,
+    /// Partitioning dimension for this layer: `None` (replicate whole layer /
+    /// no split), `Some(0)` batch dimension → data parallelism, `Some(1)`
+    /// feature dimension → model parallelism (paper §5.3).
+    pub partition_dim: Option<usize>,
+    /// Explicit placement: worker slot this layer (or all its sub-layers if
+    /// partitioned) runs on. Advanced users set this to control placement
+    /// (paper §5.3: MDNN image path on worker 0, text path on worker 1).
+    pub location: Option<usize>,
+}
+
+impl LayerConf {
+    pub fn new(name: &str, kind: LayerKind, srcs: &[&str]) -> LayerConf {
+        LayerConf {
+            name: name.to_string(),
+            kind,
+            srcs: srcs.iter().map(|s| s.to_string()).collect(),
+            partition_dim: None,
+            location: None,
+        }
+    }
+
+    pub fn partition(mut self, dim: usize) -> LayerConf {
+        self.partition_dim = Some(dim);
+        self
+    }
+
+    pub fn at(mut self, location: usize) -> LayerConf {
+        self.location = Some(location);
+        self
+    }
+}
+
+/// Built-in layer types (paper Table II). Each variant carries its static
+/// hyper-parameters; runtime state lives in the constructed layer object.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// Input fed externally each iteration with a mini-batch blob.
+    Input { shape: Vec<usize> },
+    /// Fully-connected: `y = act(x W + b)`.
+    InnerProduct { out: usize, act: Activation, init_std: f32 },
+    /// Standalone activation.
+    Activation { act: Activation },
+    /// Dropout with keep probability.
+    Dropout { keep: f32 },
+    /// 2-d convolution over NCHW blobs.
+    Convolution { out_channels: usize, kernel: usize, stride: usize, pad: usize, init_std: f32 },
+    /// Max pooling.
+    MaxPool { kernel: usize, stride: usize },
+    /// Average pooling.
+    AvgPool { kernel: usize, stride: usize },
+    /// Local response normalization across channels.
+    Lrn { size: usize, alpha: f32, beta: f32, k: f32 },
+    /// Softmax + cross entropy against integer labels (srcs: logits, labels).
+    SoftmaxLoss,
+    /// `weight` * 0.5 * mean squared distance between two source features
+    /// (MDNN's cross-modal objective is a *weighted* sum with the label
+    /// losses, paper §4.2.1).
+    EuclideanLoss { weight: f32 },
+    /// Restricted Boltzmann machine (visible src); trained by CD.
+    Rbm { hidden: usize, init_std: f32 },
+    /// Full-sequence GRU over `[batch, steps*in_dim]` input; BPTT inside.
+    Gru { hidden: usize, steps: usize, init_std: f32 },
+    /// Char ids `[batch, steps]` → one-hot `[batch, steps*vocab]`.
+    OneHot { vocab: usize },
+    /// Sequence softmax loss: logits `[batch, steps*vocab]` vs labels
+    /// `[batch, steps]`.
+    SeqSoftmaxLoss { steps: usize },
+    // ---- Connection layers (Table II), normally inserted by the partitioner ----
+    /// Slice the single source along `dim` into `parts`; this layer emits
+    /// part `index`.
+    Slice { dim: usize, parts: usize, index: usize },
+    /// Concatenate all sources along `dim`.
+    Concat { dim: usize },
+    /// Replicate the source feature to multiple consumers (gradients sum).
+    Split,
+    /// Sending half of a cross-worker bridge.
+    BridgeSrc,
+    /// Receiving half of a cross-worker bridge.
+    BridgeDst,
+}
+
+/// Nonlinearity selector for layers with fused activations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Identity,
+    Sigmoid,
+    Tanh,
+    Relu,
+}
+
+/// Instantiate a layer object from its configuration (factory used by
+/// `NetBuilder`). User-defined layers can bypass this by adding
+/// `Box<dyn Layer>` values directly.
+pub fn create_layer(conf: &LayerConf) -> Box<dyn Layer> {
+    use super::{layers_basic as lb, layers_conv as lc, layers_loss as ll};
+    match &conf.kind {
+        LayerKind::Input { shape } => Box::new(lb::InputLayer::new(&conf.name, shape.clone())),
+        LayerKind::InnerProduct { out, act, init_std } => {
+            Box::new(lb::InnerProductLayer::new(&conf.name, *out, *act, *init_std))
+        }
+        LayerKind::Activation { act } => Box::new(lb::ActivationLayer::new(&conf.name, *act)),
+        LayerKind::Dropout { keep } => Box::new(lb::DropoutLayer::new(&conf.name, *keep)),
+        LayerKind::Convolution { out_channels, kernel, stride, pad, init_std } => Box::new(
+            lc::ConvolutionLayer::new(&conf.name, *out_channels, *kernel, *stride, *pad, *init_std),
+        ),
+        LayerKind::MaxPool { kernel, stride } => {
+            Box::new(lc::PoolingLayer::new_max(&conf.name, *kernel, *stride))
+        }
+        LayerKind::AvgPool { kernel, stride } => {
+            Box::new(lc::PoolingLayer::new_avg(&conf.name, *kernel, *stride))
+        }
+        LayerKind::Lrn { size, alpha, beta, k } => {
+            Box::new(lc::LrnLayer::new(&conf.name, *size, *alpha, *beta, *k))
+        }
+        LayerKind::SoftmaxLoss => Box::new(ll::SoftmaxLossLayer::new(&conf.name)),
+        LayerKind::EuclideanLoss { weight } => {
+            Box::new(ll::EuclideanLossLayer::new(&conf.name, *weight))
+        }
+        LayerKind::Rbm { hidden, init_std } => {
+            Box::new(super::rbm::RbmLayer::new(&conf.name, *hidden, *init_std))
+        }
+        LayerKind::Gru { hidden, steps, init_std } => {
+            Box::new(super::gru::GruLayer::new(&conf.name, *hidden, *steps, *init_std))
+        }
+        LayerKind::OneHot { vocab } => Box::new(super::gru::OneHotLayer::new(&conf.name, *vocab)),
+        LayerKind::SeqSoftmaxLoss { steps } => {
+            Box::new(ll::SeqSoftmaxLossLayer::new(&conf.name, *steps))
+        }
+        LayerKind::Slice { dim, parts, index } => {
+            Box::new(lb::SliceLayer::new(&conf.name, *dim, *parts, *index))
+        }
+        LayerKind::Concat { dim } => Box::new(lb::ConcatLayer::new(&conf.name, *dim)),
+        LayerKind::Split => Box::new(lb::SplitLayer::new(&conf.name)),
+        LayerKind::BridgeSrc => Box::new(lb::BridgeLayer::new_src(&conf.name)),
+        LayerKind::BridgeDst => Box::new(lb::BridgeLayer::new_dst(&conf.name)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conf_builders() {
+        let c = LayerConf::new("fc1", LayerKind::InnerProduct {
+            out: 10,
+            act: Activation::Relu,
+            init_std: 0.01,
+        }, &["data"])
+        .partition(1)
+        .at(2);
+        assert_eq!(c.partition_dim, Some(1));
+        assert_eq!(c.location, Some(2));
+        assert_eq!(c.srcs, vec!["data"]);
+    }
+
+    #[test]
+    fn factory_produces_right_types() {
+        let cases: Vec<(LayerKind, &str)> = vec![
+            (LayerKind::Input { shape: vec![4, 2] }, "Input"),
+            (
+                LayerKind::InnerProduct { out: 3, act: Activation::Identity, init_std: 0.1 },
+                "InnerProduct",
+            ),
+            (LayerKind::Dropout { keep: 0.5 }, "Dropout"),
+            (LayerKind::SoftmaxLoss, "SoftmaxLoss"),
+            (LayerKind::Concat { dim: 0 }, "Concat"),
+            (LayerKind::Split, "Split"),
+            (LayerKind::BridgeSrc, "BridgeSrc"),
+        ];
+        for (kind, expect) in cases {
+            let l = create_layer(&LayerConf::new("x", kind, &[]));
+            assert_eq!(l.type_name(), expect);
+        }
+    }
+}

@@ -1,0 +1,421 @@
+//! Convolution, pooling and LRN layers (the vision stack used by the CIFAR
+//! convnet and the AlexNet-like benchmark model).
+
+use super::layer::{Layer, Phase};
+use crate::tensor::blob::Param;
+use crate::tensor::conv::{
+    avgpool_forward, conv2d_backward, conv2d_forward, lrn_forward, maxpool_backward,
+    maxpool_forward, Conv2dGeom,
+};
+use crate::tensor::Blob;
+use crate::utils::rng::Rng;
+use std::any::Any;
+
+/// 2-d convolution layer over NCHW blobs via im2col + GEMM.
+pub struct ConvolutionLayer {
+    name: String,
+    out_channels: usize,
+    kernel: usize,
+    stride: usize,
+    pad: usize,
+    init_std: f32,
+    geom: Option<Conv2dGeom>,
+    weight: Param,
+    bias: Param,
+    /// im2col buffers of the last forward (reused in backward).
+    cols: Vec<Vec<f32>>,
+    input_cache: Blob,
+}
+
+impl ConvolutionLayer {
+    pub fn new(
+        name: &str,
+        out_channels: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+        init_std: f32,
+    ) -> ConvolutionLayer {
+        ConvolutionLayer {
+            name: name.to_string(),
+            out_channels,
+            kernel,
+            stride,
+            pad,
+            init_std,
+            geom: None,
+            weight: Param::new(&format!("{name}/weight"), Blob::zeros(&[0])),
+            bias: Param::new(&format!("{name}/bias"), Blob::zeros(&[0])),
+            cols: Vec::new(),
+            input_cache: Blob::zeros(&[0]),
+        }
+    }
+
+    /// Parameter count (used by the partition cost model: conv layers hold
+    /// ~5% of AlexNet parameters but 90-95% of compute).
+    pub fn param_count(&self) -> usize {
+        self.weight.data.len() + self.bias.data.len()
+    }
+}
+
+impl Layer for ConvolutionLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "Convolution"
+    }
+
+    fn setup(&mut self, src_shapes: &[&[usize]], rng: &mut Rng) -> Vec<usize> {
+        let s = src_shapes[0];
+        assert_eq!(s.len(), 4, "{}: Convolution wants NCHW input, got {s:?}", self.name);
+        let g = Conv2dGeom {
+            in_c: s[1],
+            in_h: s[2],
+            in_w: s[3],
+            kernel: self.kernel,
+            stride: self.stride,
+            pad: self.pad,
+        };
+        self.weight = Param::new(
+            &format!("{}/weight", self.name),
+            Blob::gaussian(&[self.out_channels, g.col_rows()], self.init_std, rng),
+        );
+        self.bias = Param::new(&format!("{}/bias", self.name), Blob::zeros(&[self.out_channels]))
+            .with_lr_mult(2.0)
+            .with_wd_mult(0.0);
+        let out = vec![s[0], self.out_channels, g.out_h(), g.out_w()];
+        self.geom = Some(g);
+        out
+    }
+
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+        let g = self.geom.expect("setup not called");
+        let (out, cols) = conv2d_forward(srcs[0], &self.weight.data, &self.bias.data, &g);
+        self.cols = cols;
+        self.input_cache = srcs[0].clone();
+        out
+    }
+
+    fn compute_gradient(
+        &mut self,
+        srcs: &[&Blob],
+        _own: &Blob,
+        grad_out: Option<&Blob>,
+    ) -> Vec<Option<Blob>> {
+        let g = self.geom.expect("setup not called");
+        let dy = grad_out.expect("Convolution needs grad");
+        let (dx, dw, db) = conv2d_backward(srcs[0], &self.weight.data, dy, &self.cols, &g);
+        self.weight.grad.add_assign(&dw);
+        self.bias.grad.add_assign(&db);
+        vec![Some(dx)]
+    }
+
+    fn params(&self) -> Vec<&Param> {
+        vec![&self.weight, &self.bias]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.weight, &mut self.bias]
+    }
+
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// Max or average pooling.
+pub struct PoolingLayer {
+    name: String,
+    kernel: usize,
+    stride: usize,
+    max: bool,
+    geom: Option<Conv2dGeom>,
+    argmax: Vec<usize>,
+    in_shape: Vec<usize>,
+}
+
+impl PoolingLayer {
+    pub fn new_max(name: &str, kernel: usize, stride: usize) -> PoolingLayer {
+        PoolingLayer {
+            name: name.to_string(),
+            kernel,
+            stride,
+            max: true,
+            geom: None,
+            argmax: Vec::new(),
+            in_shape: Vec::new(),
+        }
+    }
+
+    pub fn new_avg(name: &str, kernel: usize, stride: usize) -> PoolingLayer {
+        PoolingLayer { max: false, ..PoolingLayer::new_max(name, kernel, stride) }
+    }
+}
+
+impl Layer for PoolingLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn type_name(&self) -> &'static str {
+        if self.max {
+            "MaxPool"
+        } else {
+            "AvgPool"
+        }
+    }
+
+    fn setup(&mut self, src_shapes: &[&[usize]], _rng: &mut Rng) -> Vec<usize> {
+        let s = src_shapes[0];
+        assert_eq!(s.len(), 4, "{}: Pooling wants NCHW input", self.name);
+        let g = Conv2dGeom {
+            in_c: s[1],
+            in_h: s[2],
+            in_w: s[3],
+            kernel: self.kernel,
+            stride: self.stride,
+            pad: 0,
+        };
+        let out = vec![s[0], s[1], g.out_h(), g.out_w()];
+        self.geom = Some(g);
+        self.in_shape = s.to_vec();
+        out
+    }
+
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+        let g = self.geom.expect("setup not called");
+        if self.max {
+            let (out, arg) = maxpool_forward(srcs[0], &g);
+            self.argmax = arg;
+            out
+        } else {
+            avgpool_forward(srcs[0], &g)
+        }
+    }
+
+    fn compute_gradient(
+        &mut self,
+        srcs: &[&Blob],
+        _own: &Blob,
+        grad_out: Option<&Blob>,
+    ) -> Vec<Option<Blob>> {
+        let dy = grad_out.expect("Pooling needs grad");
+        let dx = if self.max {
+            maxpool_backward(srcs[0].shape(), dy, &self.argmax)
+        } else {
+            // Spread each output grad evenly over its window.
+            let g = self.geom.expect("setup not called");
+            let mut dx = Blob::zeros(srcs[0].shape());
+            let (oh, ow) = (g.out_h(), g.out_w());
+            let k2 = (g.kernel * g.kernel) as f32;
+            let img_len = g.in_c * g.in_h * g.in_w;
+            let b = srcs[0].shape()[0];
+            for i in 0..b {
+                for c in 0..g.in_c {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let gval =
+                                dy.data()[((i * g.in_c + c) * oh + oy) * ow + ox] / k2;
+                            for ky in 0..g.kernel {
+                                let iy = oy * g.stride + ky;
+                                if iy >= g.in_h {
+                                    continue;
+                                }
+                                for kx in 0..g.kernel {
+                                    let ix = ox * g.stride + kx;
+                                    if ix >= g.in_w {
+                                        continue;
+                                    }
+                                    dx.data_mut()
+                                        [i * img_len + c * g.in_h * g.in_w + iy * g.in_w + ix] +=
+                                        gval;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            dx
+        };
+        vec![Some(dx)]
+    }
+
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// Local response normalization. The backward pass uses the exact LRN
+/// gradient restricted to the diagonal term plus the cross-channel term.
+pub struct LrnLayer {
+    name: String,
+    size: usize,
+    alpha: f32,
+    beta: f32,
+    k: f32,
+    input_cache: Blob,
+}
+
+impl LrnLayer {
+    pub fn new(name: &str, size: usize, alpha: f32, beta: f32, k: f32) -> LrnLayer {
+        LrnLayer { name: name.to_string(), size, alpha, beta, k, input_cache: Blob::zeros(&[0]) }
+    }
+}
+
+impl Layer for LrnLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "Lrn"
+    }
+
+    fn setup(&mut self, src_shapes: &[&[usize]], _rng: &mut Rng) -> Vec<usize> {
+        src_shapes[0].to_vec()
+    }
+
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+        self.input_cache = srcs[0].clone();
+        lrn_forward(srcs[0], self.size, self.alpha, self.beta, self.k)
+    }
+
+    fn compute_gradient(
+        &mut self,
+        srcs: &[&Blob],
+        own: &Blob,
+        grad_out: Option<&Blob>,
+    ) -> Vec<Option<Blob>> {
+        let dy = grad_out.expect("Lrn needs grad");
+        let x = srcs[0];
+        let s = x.shape();
+        let (b, c, h, w) = (s[0], s[1], s[2], s[3]);
+        let plane = h * w;
+        let mut dx = Blob::zeros(s);
+        let an = self.alpha / self.size as f32;
+        for i in 0..b {
+            for y in 0..plane {
+                // denom_c = k + an * sum a^2 over window(c)
+                let mut denom = vec![0.0f32; c];
+                for ch in 0..c {
+                    let lo = ch.saturating_sub(self.size / 2);
+                    let hi = (ch + self.size / 2 + 1).min(c);
+                    let mut acc = 0.0;
+                    for cc in lo..hi {
+                        let v = x.data()[(i * c + cc) * plane + y];
+                        acc += v * v;
+                    }
+                    denom[ch] = self.k + an * acc;
+                }
+                for ch in 0..c {
+                    // dL/dx_ch = dy_ch * denom_ch^-beta
+                    //   - 2*an*beta * x_ch * sum_{c' : ch in window(c')}
+                    //       dy_c' * y_c' / denom_c'
+                    let mut v = dy.data()[(i * c + ch) * plane + y] * denom[ch].powf(-self.beta);
+                    let lo = ch.saturating_sub(self.size / 2);
+                    let hi = (ch + self.size / 2 + 1).min(c);
+                    let mut cross = 0.0;
+                    for cc in lo..hi {
+                        cross += dy.data()[(i * c + cc) * plane + y]
+                            * own.data()[(i * c + cc) * plane + y]
+                            / denom[cc];
+                    }
+                    v -= 2.0 * an * self.beta * x.data()[(i * c + ch) * plane + y] * cross;
+                    dx.data_mut()[(i * c + ch) * plane + y] = v;
+                }
+            }
+        }
+        vec![Some(dx)]
+    }
+
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(1)
+    }
+
+    #[test]
+    fn conv_layer_shapes() {
+        let mut l = ConvolutionLayer::new("conv1", 8, 5, 1, 2, 0.05);
+        let out = l.setup(&[&[2, 3, 32, 32]], &mut rng());
+        assert_eq!(out, vec![2, 8, 32, 32]);
+        assert_eq!(l.params()[0].data.shape(), &[8, 75]);
+        assert_eq!(l.param_count(), 8 * 75 + 8);
+    }
+
+    #[test]
+    fn conv_layer_forward_backward_shapes() {
+        let mut l = ConvolutionLayer::new("c", 4, 3, 1, 1, 0.1);
+        l.setup(&[&[2, 3, 8, 8]], &mut rng());
+        let mut r = Rng::new(7);
+        let x = Blob::from_vec(&[2, 3, 8, 8], r.uniform_vec(2 * 3 * 64, -1.0, 1.0));
+        let y = l.compute_feature(Phase::Train, &[&x]);
+        assert_eq!(y.shape(), &[2, 4, 8, 8]);
+        let dy = Blob::full(y.shape(), 0.5);
+        let gs = l.compute_gradient(&[&x], &y, Some(&dy));
+        assert_eq!(gs[0].as_ref().unwrap().shape(), x.shape());
+        // param grads accumulated
+        assert!(l.params()[0].grad.norm() > 0.0);
+        assert!(l.params()[1].grad.norm() > 0.0);
+    }
+
+    #[test]
+    fn maxpool_layer_roundtrip() {
+        let mut l = PoolingLayer::new_max("p", 2, 2);
+        let out = l.setup(&[&[1, 1, 4, 4]], &mut rng());
+        assert_eq!(out, vec![1, 1, 2, 2]);
+        let x = Blob::from_vec(&[1, 1, 4, 4], (0..16).map(|v| v as f32).collect());
+        let y = l.compute_feature(Phase::Train, &[&x]);
+        assert_eq!(y.data(), &[5., 7., 13., 15.]);
+        let dy = Blob::full(&[1, 1, 2, 2], 1.0);
+        let dx = l.compute_gradient(&[&x], &y, Some(&dy))[0].clone().unwrap();
+        assert_eq!(dx.sum(), 4.0);
+    }
+
+    #[test]
+    fn avgpool_backward_conserves_grad() {
+        let mut l = PoolingLayer::new_avg("p", 2, 2);
+        l.setup(&[&[1, 2, 4, 4]], &mut rng());
+        let x = Blob::full(&[1, 2, 4, 4], 1.0);
+        let y = l.compute_feature(Phase::Train, &[&x]);
+        let dy = Blob::full(y.shape(), 1.0);
+        let dx = l.compute_gradient(&[&x], &y, Some(&dy))[0].clone().unwrap();
+        // total gradient mass is conserved
+        assert!((dx.sum() - dy.sum()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn lrn_gradcheck() {
+        let mut l = LrnLayer::new("n", 3, 5e-2, 0.75, 2.0);
+        l.setup(&[&[1, 4, 2, 2]], &mut rng());
+        let mut r = Rng::new(3);
+        let x = Blob::from_vec(&[1, 4, 2, 2], r.uniform_vec(16, 0.5, 1.5));
+        let y = l.compute_feature(Phase::Train, &[&x]);
+        let dy = Blob::full(y.shape(), 1.0);
+        let dx = l.compute_gradient(&[&x], &y, Some(&dy))[0].clone().unwrap();
+        let eps = 1e-3;
+        for i in 0..16 {
+            let mut p = x.clone();
+            p.data_mut()[i] += eps;
+            let mut m = x.clone();
+            m.data_mut()[i] -= eps;
+            let fp = l.compute_feature(Phase::Train, &[&p]).sum();
+            let fm = l.compute_feature(Phase::Train, &[&m]).sum();
+            let num = (fp - fm) / (2.0 * eps);
+            assert!(
+                (num - dx.data()[i]).abs() < 1e-2,
+                "lrn dx[{i}]: numeric {num} vs analytic {}",
+                dx.data()[i]
+            );
+        }
+    }
+}

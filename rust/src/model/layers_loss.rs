@@ -1,0 +1,354 @@
+//! Loss layers (paper Table II): softmax cross-entropy (classification),
+//! sequence softmax (Char-RNN), and euclidean distance (MDNN's cross-modal
+//! objective).
+
+use super::layer::{Layer, Phase};
+use crate::tensor::{ops, Blob};
+use crate::utils::rng::Rng;
+use std::any::Any;
+
+/// Softmax + cross-entropy against integer labels.
+///
+/// Sources: `[logits, labels]`; labels are a `[batch]` blob of label ids
+/// stored as f32 (produced by the label parser layer). The forward output is
+/// the probability matrix; `loss()` reports `(mean xent, accuracy)`.
+pub struct SoftmaxLossLayer {
+    name: String,
+    loss: f32,
+    accuracy: f32,
+    grad: Blob,
+}
+
+impl SoftmaxLossLayer {
+    pub fn new(name: &str) -> SoftmaxLossLayer {
+        SoftmaxLossLayer { name: name.to_string(), loss: 0.0, accuracy: 0.0, grad: Blob::zeros(&[0]) }
+    }
+}
+
+fn labels_of(blob: &Blob) -> Vec<usize> {
+    blob.data().iter().map(|&v| v as usize).collect()
+}
+
+impl Layer for SoftmaxLossLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "SoftmaxLoss"
+    }
+
+    fn setup(&mut self, src_shapes: &[&[usize]], _rng: &mut Rng) -> Vec<usize> {
+        assert_eq!(src_shapes.len(), 2, "{}: SoftmaxLoss wants [logits, labels]", self.name);
+        src_shapes[0].to_vec()
+    }
+
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+        let logits = srcs[0];
+        let labels = labels_of(srcs[1]);
+        let (loss, grad) = ops::softmax_xent(logits, &labels);
+        self.loss = loss;
+        self.accuracy = ops::accuracy(logits, &labels);
+        self.grad = grad;
+        ops::softmax(logits)
+    }
+
+    fn compute_gradient(
+        &mut self,
+        _srcs: &[&Blob],
+        _own: &Blob,
+        _grad_out: Option<&Blob>,
+    ) -> Vec<Option<Blob>> {
+        vec![Some(self.grad.clone()), None]
+    }
+
+    fn is_loss(&self) -> bool {
+        true
+    }
+
+    fn loss(&self) -> Option<(f32, f32)> {
+        Some((self.loss, self.accuracy))
+    }
+
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// Euclidean loss between two source features (MDNN: distance between image
+/// and text embeddings). Forward output is the first source (pass-through so
+/// retrieval code can read the embedding).
+pub struct EuclideanLossLayer {
+    name: String,
+    weight: f32,
+    loss: f32,
+    grad_a: Blob,
+    grad_b: Blob,
+}
+
+impl EuclideanLossLayer {
+    pub fn new(name: &str, weight: f32) -> EuclideanLossLayer {
+        EuclideanLossLayer {
+            name: name.to_string(),
+            weight,
+            loss: 0.0,
+            grad_a: Blob::zeros(&[0]),
+            grad_b: Blob::zeros(&[0]),
+        }
+    }
+}
+
+impl Layer for EuclideanLossLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "EuclideanLoss"
+    }
+
+    fn setup(&mut self, src_shapes: &[&[usize]], _rng: &mut Rng) -> Vec<usize> {
+        assert_eq!(src_shapes.len(), 2, "{}: EuclideanLoss wants 2 srcs", self.name);
+        assert_eq!(src_shapes[0], src_shapes[1], "{}: source shapes differ", self.name);
+        src_shapes[0].to_vec()
+    }
+
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+        let (loss, mut grad) = ops::euclidean_loss(srcs[0], srcs[1]);
+        grad.scale(self.weight);
+        self.loss = loss * self.weight;
+        self.grad_b = {
+            let mut g = grad.clone();
+            g.scale(-1.0);
+            g
+        };
+        self.grad_a = grad;
+        srcs[0].clone()
+    }
+
+    fn compute_gradient(
+        &mut self,
+        _srcs: &[&Blob],
+        _own: &Blob,
+        _grad_out: Option<&Blob>,
+    ) -> Vec<Option<Blob>> {
+        vec![Some(self.grad_a.clone()), Some(self.grad_b.clone())]
+    }
+
+    fn is_loss(&self) -> bool {
+        true
+    }
+
+    fn loss(&self) -> Option<(f32, f32)> {
+        Some((self.loss, 0.0))
+    }
+
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// Per-timestep softmax cross-entropy for sequence models.
+///
+/// Sources: `[logits, labels]` with logits `[batch, steps*vocab]` and labels
+/// `[batch, steps]` (the paper's Fig 9: the i-th SoftmaxLossLayer measures
+/// the loss of predicting the (i+1)-th character; here the unrolled loss
+/// layers are fused into one, averaging over steps).
+pub struct SeqSoftmaxLossLayer {
+    name: String,
+    steps: usize,
+    loss: f32,
+    accuracy: f32,
+    grad: Blob,
+}
+
+impl SeqSoftmaxLossLayer {
+    pub fn new(name: &str, steps: usize) -> SeqSoftmaxLossLayer {
+        SeqSoftmaxLossLayer {
+            name: name.to_string(),
+            steps,
+            loss: 0.0,
+            accuracy: 0.0,
+            grad: Blob::zeros(&[0]),
+        }
+    }
+}
+
+impl Layer for SeqSoftmaxLossLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "SeqSoftmaxLoss"
+    }
+
+    fn setup(&mut self, src_shapes: &[&[usize]], _rng: &mut Rng) -> Vec<usize> {
+        assert_eq!(src_shapes.len(), 2);
+        let logits = src_shapes[0];
+        assert_eq!(logits[1] % self.steps, 0, "{}: logits not divisible by steps", self.name);
+        logits.to_vec()
+    }
+
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+        let logits = srcs[0];
+        let labels = srcs[1];
+        let batch = logits.rows();
+        let vocab = logits.cols() / self.steps;
+        let mut total_loss = 0.0;
+        let mut total_acc = 0.0;
+        let mut grad = Blob::zeros(logits.shape());
+        for t in 0..self.steps {
+            // Gather step-t logits [batch, vocab] and labels [batch].
+            let mut step_logits = Blob::zeros(&[batch, vocab]);
+            for b in 0..batch {
+                let src = &logits.data()[b * self.steps * vocab + t * vocab..][..vocab];
+                step_logits.data_mut()[b * vocab..(b + 1) * vocab].copy_from_slice(src);
+            }
+            let step_labels: Vec<usize> =
+                (0..batch).map(|b| labels.data()[b * self.steps + t] as usize).collect();
+            let (l, g) = ops::softmax_xent(&step_logits, &step_labels);
+            total_loss += l;
+            total_acc += ops::accuracy(&step_logits, &step_labels);
+            for b in 0..batch {
+                grad.data_mut()[b * self.steps * vocab + t * vocab..][..vocab]
+                    .copy_from_slice(&g.data()[b * vocab..(b + 1) * vocab]);
+            }
+        }
+        self.loss = total_loss / self.steps as f32;
+        self.accuracy = total_acc / self.steps as f32;
+        grad.scale(1.0 / self.steps as f32);
+        self.grad = grad;
+        logits.clone()
+    }
+
+    fn compute_gradient(
+        &mut self,
+        _srcs: &[&Blob],
+        _own: &Blob,
+        _grad_out: Option<&Blob>,
+    ) -> Vec<Option<Blob>> {
+        vec![Some(self.grad.clone()), None]
+    }
+
+    fn is_loss(&self) -> bool {
+        true
+    }
+
+    fn loss(&self) -> Option<(f32, f32)> {
+        Some((self.loss, self.accuracy))
+    }
+
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(1)
+    }
+
+    #[test]
+    fn softmax_loss_uniform_logits() {
+        let mut l = SoftmaxLossLayer::new("loss");
+        l.setup(&[&[2, 4], &[2]], &mut rng());
+        let logits = Blob::zeros(&[2, 4]);
+        let labels = Blob::from_vec(&[2], vec![0.0, 3.0]);
+        l.compute_feature(Phase::Train, &[&logits, &labels]);
+        let (loss, _) = l.loss().unwrap();
+        assert!((loss - (4f32).ln()).abs() < 1e-5);
+        let gs = l.compute_gradient(&[&logits, &labels], &logits, None);
+        assert!(gs[0].is_some());
+        assert!(gs[1].is_none());
+    }
+
+    #[test]
+    fn softmax_loss_perfect_prediction() {
+        let mut l = SoftmaxLossLayer::new("loss");
+        l.setup(&[&[2, 3], &[2]], &mut rng());
+        let logits = Blob::from_vec(&[2, 3], vec![10., 0., 0., 0., 0., 10.]);
+        let labels = Blob::from_vec(&[2], vec![0.0, 2.0]);
+        l.compute_feature(Phase::Train, &[&logits, &labels]);
+        let (loss, acc) = l.loss().unwrap();
+        assert!(loss < 1e-3);
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn euclidean_loss_grads_are_opposite() {
+        let mut l = EuclideanLossLayer::new("dist", 1.0);
+        l.setup(&[&[2, 3], &[2, 3]], &mut rng());
+        let a = Blob::full(&[2, 3], 1.0);
+        let b = Blob::full(&[2, 3], 0.0);
+        let out = l.compute_feature(Phase::Train, &[&a, &b]);
+        assert_eq!(out, a);
+        let (loss, _) = l.loss().unwrap();
+        assert!((loss - 0.5 * 6.0 / 2.0).abs() < 1e-6);
+        let gs = l.compute_gradient(&[&a, &b], &out, None);
+        let ga = gs[0].as_ref().unwrap();
+        let gb = gs[1].as_ref().unwrap();
+        for (x, y) in ga.data().iter().zip(gb.data()) {
+            assert_eq!(*x, -*y);
+        }
+    }
+
+    #[test]
+    fn seq_softmax_matches_flat_softmax_for_one_step() {
+        let mut seq = SeqSoftmaxLossLayer::new("seq", 1);
+        seq.setup(&[&[3, 5], &[3, 1]], &mut rng());
+        let mut flat = SoftmaxLossLayer::new("flat");
+        flat.setup(&[&[3, 5], &[3]], &mut rng());
+        let mut r = Rng::new(5);
+        let logits = Blob::from_vec(&[3, 5], r.uniform_vec(15, -1.0, 1.0));
+        let labels = Blob::from_vec(&[3, 1], vec![1.0, 4.0, 0.0]);
+        let labels_flat = labels.reshape(&[3]);
+        seq.compute_feature(Phase::Train, &[&logits, &labels]);
+        flat.compute_feature(Phase::Train, &[&logits, &labels_flat]);
+        let (ls, as_) = seq.loss().unwrap();
+        let (lf, af) = flat.loss().unwrap();
+        assert!((ls - lf).abs() < 1e-6);
+        assert!((as_ - af).abs() < 1e-6);
+        let gs = seq.compute_gradient(&[&logits, &labels], &logits, None);
+        let gf = flat.compute_gradient(&[&logits, &labels_flat], &logits, None);
+        for (a, b) in gs[0].as_ref().unwrap().data().iter().zip(gf[0].as_ref().unwrap().data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn seq_softmax_multi_step_gradcheck() {
+        let steps = 3;
+        let vocab = 4;
+        let batch = 2;
+        let mut l = SeqSoftmaxLossLayer::new("seq", steps);
+        l.setup(&[&[batch, steps * vocab], &[batch, steps]], &mut rng());
+        let mut r = Rng::new(8);
+        let logits = Blob::from_vec(&[batch, steps * vocab], r.uniform_vec(batch * steps * vocab, -1.0, 1.0));
+        let labels = Blob::from_vec(&[batch, steps], vec![0., 1., 2., 3., 0., 1.]);
+        l.compute_feature(Phase::Train, &[&logits, &labels]);
+        let g = l.compute_gradient(&[&logits, &labels], &logits, None)[0].clone().unwrap();
+        let eps = 1e-2;
+        let mut probe = |ls: &Blob| -> f32 {
+            let mut tmp = SeqSoftmaxLossLayer::new("t", steps);
+            tmp.setup(&[&[batch, steps * vocab], &[batch, steps]], &mut rng());
+            tmp.compute_feature(Phase::Train, &[ls, &labels]);
+            tmp.loss().unwrap().0
+        };
+        for i in (0..logits.len()).step_by(3) {
+            let mut p = logits.clone();
+            p.data_mut()[i] += eps;
+            let mut m = logits.clone();
+            m.data_mut()[i] -= eps;
+            let num = (probe(&p) - probe(&m)) / (2.0 * eps);
+            assert!(
+                (num - g.data()[i]).abs() < 1e-3,
+                "idx {i}: numeric {num} vs {}",
+                g.data()[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! The SINGA programming model (paper §4): `Layer` abstraction, built-in
+//! layers (Table II), the `NeuralNet` dataflow graph, and the neural-net
+//! partitioner (§5.3) that realizes data / model / hybrid parallelism by
+//! splitting layers into located sub-layers and auto-inserting connection
+//! layers (slice / concat / split / bridge).
+
+pub mod checkpoint;
+pub mod layer;
+pub mod layers_basic;
+pub mod layers_conv;
+pub mod layers_loss;
+pub mod rbm;
+pub mod gru;
+pub mod net;
+pub mod partition;
+
+pub use layer::{Layer, LayerConf, LayerKind, Phase};
+pub use net::{NetBuilder, NeuralNet};
+pub use partition::partition_net;

@@ -1,0 +1,465 @@
+//! `NeuralNet`: the dataflow graph of layers (paper §4.1.1).
+//!
+//! Users declare `LayerConf`s (each recording its *source* layers, Fig 4b);
+//! `NetBuilder::build` instantiates layer objects, topologically sorts the
+//! graph, runs shape inference (`Layer::setup`) and produces a `NeuralNet`
+//! ready for the `TrainOneBatch` algorithms. Distributed training assigns
+//! sub-graphs to workers (paper §4.1.2) — see [`super::partition`].
+
+use super::layer::{create_layer, Layer, LayerConf, Phase};
+use super::layers_basic::InputLayer;
+use crate::tensor::blob::Param;
+use crate::tensor::Blob;
+use crate::utils::rng::Rng;
+use std::collections::HashMap;
+
+/// One vertex of the dataflow graph.
+pub struct Node {
+    pub layer: Box<dyn Layer>,
+    /// Indices of source nodes (always smaller than this node's index after
+    /// topological sorting).
+    pub srcs: Vec<usize>,
+    /// Indices of consumer nodes.
+    pub consumers: Vec<usize>,
+    /// Feature blob from the most recent forward pass.
+    pub feature: Blob,
+    /// Accumulated gradient w.r.t. `feature` (populated during backward).
+    pub grad: Option<Blob>,
+    /// Inferred output shape.
+    pub out_shape: Vec<usize>,
+    /// Worker slot this node is placed on (0 when unpartitioned).
+    pub location: usize,
+}
+
+/// The neural net instance passed to `TrainOneBatch` (paper Fig 6).
+pub struct NeuralNet {
+    nodes: Vec<Node>,
+    by_name: HashMap<String, usize>,
+}
+
+/// Builder accumulating layer configurations.
+#[derive(Default, Clone)]
+pub struct NetBuilder {
+    confs: Vec<LayerConf>,
+}
+
+impl NetBuilder {
+    pub fn new() -> NetBuilder {
+        NetBuilder { confs: Vec::new() }
+    }
+
+    /// Append a layer configuration.
+    pub fn add(mut self, conf: LayerConf) -> NetBuilder {
+        self.confs.push(conf);
+        self
+    }
+
+    pub fn confs(&self) -> &[LayerConf] {
+        &self.confs
+    }
+
+    pub fn confs_mut(&mut self) -> &mut Vec<LayerConf> {
+        &mut self.confs
+    }
+
+    /// Instantiate, topo-sort and shape-infer the net.
+    ///
+    /// Panics on malformed graphs: unknown source names, duplicate layer
+    /// names, or cycles (recurrent connections must be unrolled first —
+    /// paper Fig 5).
+    pub fn build(self, rng: &mut Rng) -> NeuralNet {
+        let mut by_name: HashMap<String, usize> = HashMap::new();
+        for (i, c) in self.confs.iter().enumerate() {
+            if by_name.insert(c.name.clone(), i).is_some() {
+                panic!("duplicate layer name '{}'", c.name);
+            }
+        }
+        // Adjacency on config indices.
+        let n = self.confs.len();
+        let mut srcs: Vec<Vec<usize>> = Vec::with_capacity(n);
+        for c in &self.confs {
+            let s: Vec<usize> = c
+                .srcs
+                .iter()
+                .map(|s| {
+                    *by_name
+                        .get(s)
+                        .unwrap_or_else(|| panic!("layer '{}': unknown source '{s}'", c.name))
+                })
+                .collect();
+            srcs.push(s);
+        }
+        // Kahn topological sort.
+        let mut indegree: Vec<usize> = srcs.iter().map(|s| s.len()).collect();
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, s) in srcs.iter().enumerate() {
+            for &j in s {
+                consumers[j].push(i);
+            }
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indegree[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut qi = 0;
+        while qi < queue.len() {
+            let u = queue[qi];
+            qi += 1;
+            order.push(u);
+            for &v in &consumers[u] {
+                indegree[v] -= 1;
+                if indegree[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        assert_eq!(
+            order.len(),
+            n,
+            "cycle detected in the layer graph; unroll recurrent connections (paper Fig 5)"
+        );
+        // Remap to topo positions.
+        let mut pos = vec![0usize; n];
+        for (p, &i) in order.iter().enumerate() {
+            pos[i] = p;
+        }
+        let mut nodes: Vec<Node> = Vec::with_capacity(n);
+        let mut final_by_name = HashMap::new();
+        for &ci in &order {
+            let conf = &self.confs[ci];
+            let layer = create_layer(conf);
+            final_by_name.insert(conf.name.clone(), nodes.len());
+            nodes.push(Node {
+                layer,
+                srcs: srcs[ci].iter().map(|&s| pos[s]).collect(),
+                consumers: consumers[ci].iter().map(|&c| pos[c]).collect(),
+                feature: Blob::zeros(&[0]),
+                grad: None,
+                out_shape: Vec::new(),
+                location: conf.location.unwrap_or(0),
+            });
+        }
+        // Shape inference in topo order.
+        for i in 0..nodes.len() {
+            let (before, rest) = nodes.split_at_mut(i);
+            let node = &mut rest[0];
+            let src_shapes: Vec<&[usize]> =
+                node.srcs.iter().map(|&s| before[s].out_shape.as_slice()).collect();
+            node.out_shape = node.layer.setup(&src_shapes, rng);
+        }
+        NeuralNet { nodes, by_name: final_by_name }
+    }
+}
+
+impl NeuralNet {
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn nodes_mut(&mut self) -> &mut [Node] {
+        &mut self.nodes
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    /// Feed a mini-batch into the named input layer if it exists (data
+    /// sources may provide fields a net does not consume, e.g. labels
+    /// during unsupervised RBM pre-training). Returns whether it was set.
+    pub fn try_set_input(&mut self, name: &str, batch: Blob) -> bool {
+        if self.index_of(name).is_none() {
+            return false;
+        }
+        self.set_input(name, batch);
+        true
+    }
+
+    /// Feed a mini-batch into the named input layer.
+    pub fn set_input(&mut self, name: &str, batch: Blob) {
+        let idx = self.index_of(name).unwrap_or_else(|| panic!("no layer '{name}'"));
+        let input = self.nodes[idx]
+            .layer
+            .as_any()
+            .downcast_mut::<InputLayer>()
+            .unwrap_or_else(|| panic!("layer '{name}' is not an Input layer"));
+        input.set_batch(batch);
+    }
+
+    /// Forward pass over all layers in topological order (first loop of the
+    /// paper's Algorithm 1).
+    pub fn forward(&mut self, phase: Phase) {
+        for i in 0..self.nodes.len() {
+            let (before, rest) = self.nodes.split_at_mut(i);
+            let node = &mut rest[0];
+            let src_feats: Vec<&Blob> = node.srcs.iter().map(|&s| &before[s].feature).collect();
+            node.feature = node.layer.compute_feature(phase, &src_feats);
+            node.grad = None;
+        }
+    }
+
+    /// Backward pass in reverse topological order (second loop of
+    /// Algorithm 1): each layer consumes the accumulated gradient w.r.t. its
+    /// feature and scatters gradients to its sources.
+    pub fn backward(&mut self) {
+        for i in (0..self.nodes.len()).rev() {
+            let (before, rest) = self.nodes.split_at_mut(i);
+            let node = &mut rest[0];
+            if node.srcs.is_empty() {
+                continue; // input layers
+            }
+            if node.grad.is_none() && !node.layer.is_loss() {
+                // No gradient reached this node (e.g. the label parser
+                // path); nothing to propagate.
+                continue;
+            }
+            let src_feats: Vec<&Blob> = node.srcs.iter().map(|&s| &before[s].feature).collect();
+            let grads =
+                node.layer.compute_gradient(&src_feats, &node.feature, node.grad.as_ref());
+            assert_eq!(grads.len(), node.srcs.len(), "{} returned wrong grad count", node.layer.name());
+            for (k, g) in grads.into_iter().enumerate() {
+                if let Some(g) = g {
+                    let src = &mut before[node.srcs[k]];
+                    match &mut src.grad {
+                        Some(acc) => acc.add_assign(&g),
+                        None => src.grad = Some(g),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Losses reported by loss layers: `(layer name, loss, metric)`.
+    pub fn losses(&self) -> Vec<(String, f32, f32)> {
+        self.nodes
+            .iter()
+            .filter_map(|n| {
+                n.layer.loss().map(|(l, m)| (n.layer.name().to_string(), l, m))
+            })
+            .collect()
+    }
+
+    /// Sum of all loss-layer losses (the training objective).
+    pub fn total_loss(&self) -> f32 {
+        self.losses().iter().map(|(_, l, _)| l).sum()
+    }
+
+    /// Feature blob of a named layer (after `forward`).
+    pub fn feature(&self, name: &str) -> &Blob {
+        &self.nodes[self.index_of(name).unwrap_or_else(|| panic!("no layer '{name}'"))].feature
+    }
+
+    /// All parameters across layers.
+    pub fn params(&self) -> Vec<&Param> {
+        self.nodes.iter().flat_map(|n| n.layer.params()).collect()
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut Param> {
+        self.nodes.iter_mut().flat_map(|n| n.layer.params_mut()).collect()
+    }
+
+    /// Total scalar parameter count.
+    pub fn param_count(&self) -> usize {
+        self.params().iter().map(|p| p.size()).sum()
+    }
+
+    /// Zero all parameter gradients (start of an SGD iteration).
+    pub fn zero_grads(&mut self) {
+        for p in self.params_mut() {
+            p.grad.fill(0.0);
+        }
+    }
+
+    /// Bytes moved across bridge layers in the last forward pass — the
+    /// partitioner's communication ledger (§5.4.1).
+    pub fn bridge_bytes(&mut self) -> usize {
+        use super::layers_basic::BridgeLayer;
+        self.nodes
+            .iter_mut()
+            .filter_map(|n| n.layer.as_any().downcast_mut::<BridgeLayer>().map(|b| b.last_bytes))
+            .sum()
+    }
+
+    /// Human-readable summary (name, type, shape, params, location).
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for n in &self.nodes {
+            let pc: usize = n.layer.params().iter().map(|p| p.size()).sum();
+            out.push_str(&format!(
+                "{:<24} {:<14} {:>18} params={:<10} loc={}\n",
+                n.layer.name(),
+                n.layer.type_name(),
+                format!("{:?}", n.out_shape),
+                pc,
+                n.location
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::{Activation, LayerKind};
+
+    fn mlp_builder(batch: usize, in_dim: usize, hidden: usize, classes: usize) -> NetBuilder {
+        NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, in_dim] }, &[]))
+            .add(LayerConf::new("label", LayerKind::Input { shape: vec![batch] }, &[]))
+            .add(LayerConf::new(
+                "hidden",
+                LayerKind::InnerProduct { out: hidden, act: Activation::Sigmoid, init_std: 0.5 },
+                &["data"],
+            ))
+            .add(LayerConf::new(
+                "logits",
+                LayerKind::InnerProduct { out: classes, act: Activation::Identity, init_std: 0.5 },
+                &["hidden"],
+            ))
+            .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]))
+    }
+
+    #[test]
+    fn build_topo_and_shapes() {
+        let net = mlp_builder(4, 6, 8, 3).build(&mut Rng::new(1));
+        assert_eq!(net.len(), 5);
+        let idx = net.index_of("logits").unwrap();
+        assert_eq!(net.nodes()[idx].out_shape, vec![4, 3]);
+        assert_eq!(net.param_count(), 6 * 8 + 8 + 8 * 3 + 3);
+        assert!(net.summary().contains("InnerProduct"));
+    }
+
+    #[test]
+    fn build_order_independent_of_declaration() {
+        // Declare layers in reverse order; topo sort must fix it.
+        let b = NetBuilder::new()
+            .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]))
+            .add(LayerConf::new(
+                "logits",
+                LayerKind::InnerProduct { out: 2, act: Activation::Identity, init_std: 0.1 },
+                &["data"],
+            ))
+            .add(LayerConf::new("label", LayerKind::Input { shape: vec![2] }, &[]))
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![2, 3] }, &[]));
+        let mut net = b.build(&mut Rng::new(1));
+        net.set_input("data", Blob::zeros(&[2, 3]));
+        net.set_input("label", Blob::zeros(&[2]));
+        net.forward(Phase::Train);
+        assert_eq!(net.losses().len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown source")]
+    fn unknown_source_panics() {
+        NetBuilder::new()
+            .add(LayerConf::new("a", LayerKind::Input { shape: vec![1] }, &["ghost"]))
+            .build(&mut Rng::new(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate layer name")]
+    fn duplicate_name_panics() {
+        NetBuilder::new()
+            .add(LayerConf::new("a", LayerKind::Input { shape: vec![1] }, &[]))
+            .add(LayerConf::new("a", LayerKind::Input { shape: vec![1] }, &[]))
+            .build(&mut Rng::new(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cycle_panics() {
+        NetBuilder::new()
+            .add(LayerConf::new("a", LayerKind::Split, &["b"]))
+            .add(LayerConf::new("b", LayerKind::Split, &["a"]))
+            .build(&mut Rng::new(1));
+    }
+
+    /// End-to-end sanity: an MLP trained with plain SGD on a separable
+    /// synthetic task must drive the loss down and accuracy up.
+    #[test]
+    fn mlp_learns_separable_task() {
+        let batch = 16;
+        let mut net = mlp_builder(batch, 4, 16, 2).build(&mut Rng::new(3));
+        let mut rng = Rng::new(9);
+        let mut first_loss = None;
+        let mut last_acc = 0.0;
+        for _ in 0..200 {
+            // Class 0: x ~ N(+1); class 1: x ~ N(-1) on first two dims.
+            let mut xs = Vec::new();
+            let mut ys = Vec::new();
+            for _ in 0..batch {
+                let c = rng.below(2);
+                let sign = if c == 0 { 1.0 } else { -1.0 };
+                xs.push(sign + 0.3 * rng.gaussian());
+                xs.push(sign + 0.3 * rng.gaussian());
+                xs.push(0.3 * rng.gaussian());
+                xs.push(0.3 * rng.gaussian());
+                ys.push(c as f32);
+            }
+            net.set_input("data", Blob::from_vec(&[batch, 4], xs));
+            net.set_input("label", Blob::from_vec(&[batch], ys));
+            net.zero_grads();
+            net.forward(Phase::Train);
+            net.backward();
+            for p in net.params_mut() {
+                let g = p.grad.clone();
+                let lr = 0.5 * p.lr_mult;
+                p.data.axpy(-lr, &g);
+            }
+            let (_, loss, acc) = net.losses()[0].clone();
+            if first_loss.is_none() {
+                first_loss = Some(loss);
+            }
+            last_acc = acc;
+        }
+        assert!(last_acc > 0.9, "accuracy should exceed 0.9, got {last_acc}");
+        assert!(net.total_loss() < first_loss.unwrap());
+    }
+
+    #[test]
+    fn split_fanout_accumulates_grads() {
+        // data -> split -> two ip layers -> euclidean loss between them.
+        let b = NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![2, 3] }, &[]))
+            .add(LayerConf::new("split", LayerKind::Split, &["data"]))
+            .add(LayerConf::new(
+                "a",
+                LayerKind::InnerProduct { out: 4, act: Activation::Identity, init_std: 0.3 },
+                &["split"],
+            ))
+            .add(LayerConf::new(
+                "b",
+                LayerKind::InnerProduct { out: 4, act: Activation::Identity, init_std: 0.3 },
+                &["split"],
+            ))
+            .add(LayerConf::new("loss", LayerKind::EuclideanLoss { weight: 1.0 }, &["a", "b"]));
+        let mut net = b.build(&mut Rng::new(5));
+        net.set_input("data", Blob::full(&[2, 3], 0.5));
+        net.forward(Phase::Train);
+        net.backward();
+        // The split node must have received gradient contributions from both
+        // consumers (accumulated), and its own source (data) gets one too.
+        let split_idx = net.index_of("split").unwrap();
+        assert!(net.nodes()[split_idx].grad.is_some());
+        let data_idx = net.index_of("data").unwrap();
+        assert!(net.nodes()[data_idx].grad.is_some());
+    }
+
+    #[test]
+    fn test_phase_skips_dropout_noise() {
+        let b = NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![1, 10] }, &[]))
+            .add(LayerConf::new("drop", LayerKind::Dropout { keep: 0.5 }, &["data"]));
+        let mut net = b.build(&mut Rng::new(1));
+        net.set_input("data", Blob::full(&[1, 10], 1.0));
+        net.forward(Phase::Test);
+        assert_eq!(net.feature("drop").data(), &[1.0; 10]);
+    }
+}

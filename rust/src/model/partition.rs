@@ -1,0 +1,597 @@
+//! Neural-net partitioning (paper §5.3, Fig 12): rewrite a layer-level
+//! `NetBuilder` into a partitioned one where layers become located
+//! sub-layers and connection layers (slice / concat / bridge) are inserted
+//! automatically, making communication transparent to the user.
+//!
+//! Strategies (paper's list at the end of §5.3):
+//! 1. per-layer placement (`LayerConf::at`)            → model parallelism
+//! 2. `partition_dim = 0` (batch dimension)            → data parallelism
+//! 3. `partition_dim = 1` (feature dimension)          → model parallelism
+//! 4. any mix of the above                             → hybrid parallelism
+//!
+//! Dim-0 sub-layers replicate their `Param`s (the server aggregates the
+//! replicas' gradients); dim-1 sub-layers own disjoint parameter slices
+//! (paper Fig 12: both W and b are split).
+
+use super::layer::{LayerConf, LayerKind};
+use super::net::NetBuilder;
+use std::collections::HashMap;
+
+/// How an original layer ended up partitioned.
+#[derive(Debug, Clone)]
+enum PartState {
+    /// Unsplit; (name, location).
+    Whole(String, usize),
+    /// Split along `dim` into sub-layers (name, location) in order.
+    Parts { dim: usize, parts: Vec<(String, usize)> },
+}
+
+/// Metadata the coordinator and parameter server need about a partitioned
+/// net: where layers live and how many gradient contributions to expect per
+/// logical parameter.
+#[derive(Debug, Clone, Default)]
+pub struct PartitionPlan {
+    pub num_workers: usize,
+    /// logical param name → number of replicas contributing gradients
+    /// (dim-0 data parallelism replicates params across sub-layers).
+    pub replicas: HashMap<String, usize>,
+    /// layer name (after partitioning) → worker location.
+    pub locations: HashMap<String, usize>,
+}
+
+/// Strip the sub-layer batch-replica suffix to recover the logical parameter
+/// name: `"fc1#b2/weight"` → `"fc1/weight"`. Dim-1 slices (`#f`) keep
+/// distinct names because their values genuinely differ per worker.
+pub fn logical_param_name(name: &str) -> String {
+    match name.find("#b") {
+        Some(start) => {
+            let rest = &name[start + 2..];
+            let end = rest.find('/').map(|e| start + 2 + e).unwrap_or(name.len());
+            format!("{}{}", &name[..start], &name[end..])
+        }
+        None => name.to_string(),
+    }
+}
+
+/// Partition a net across `num_workers` workers. Layers with
+/// `partition_dim = Some(d)` are split into `num_workers` sub-layers along
+/// `d`; unsplit layers stay at their configured location (default 0).
+/// Returns the rewritten builder plus the [`PartitionPlan`].
+pub fn partition_net(builder: &NetBuilder, num_workers: usize) -> (NetBuilder, PartitionPlan) {
+    assert!(num_workers >= 1);
+    let mut out = NetBuilder::new();
+    let mut plan = PartitionPlan { num_workers, ..Default::default() };
+    let mut states: HashMap<String, PartState> = HashMap::new();
+    // Memoized full-view concat layers per original layer name.
+    let mut full_views: HashMap<String, String> = HashMap::new();
+
+    // Process in topological order of the original graph so source states
+    // exist before consumers.
+    let order = topo_order(builder.confs());
+
+    for &ci in &order {
+        let conf = &builder.confs()[ci];
+        let split = conf.partition_dim.filter(|_| num_workers > 1);
+        let splittable = !matches!(conf.kind, LayerKind::Input { .. });
+        match split {
+            Some(dim) if splittable => {
+                validate_dim(conf, dim);
+                let mut parts = Vec::new();
+                for i in 0..num_workers {
+                    let sub_name = sub_layer_name(&conf.name, dim, i);
+                    let loc = conf.location.unwrap_or(i % num_workers);
+                    let loc = if conf.location.is_some() { loc } else { i };
+                    // Wire sources for this sub-layer.
+                    let mut srcs = Vec::new();
+                    for s in &conf.srcs {
+                        let src_name = wire_source(
+                            s,
+                            dim,
+                            i,
+                            num_workers,
+                            loc,
+                            &states,
+                            &mut full_views,
+                            &mut out,
+                            &mut plan,
+                        );
+                        srcs.push(src_name);
+                    }
+                    let kind = adjust_kind(&conf.kind, dim, i, num_workers);
+                    let src_refs: Vec<&str> = srcs.iter().map(String::as_str).collect();
+                    let mut c = LayerConf::new(&sub_name, kind, &src_refs);
+                    c.location = Some(loc);
+                    plan.locations.insert(sub_name.clone(), loc);
+                    out = out.add(c);
+                    parts.push((sub_name, loc));
+                }
+                // Record replica counts for dim-0 (replicated) params.
+                if dim == 0 {
+                    for pname in param_names(&conf.kind, &conf.name) {
+                        plan.replicas.insert(pname, num_workers);
+                    }
+                }
+                states.insert(conf.name.clone(), PartState::Parts { dim, parts });
+            }
+            _ => {
+                // Keep whole; re-wire sources to full views.
+                let loc = conf.location.unwrap_or(0);
+                let mut srcs = Vec::new();
+                for s in &conf.srcs {
+                    let src_name = full_view_of(
+                        s,
+                        loc,
+                        &states,
+                        &mut full_views,
+                        &mut out,
+                        &mut plan,
+                    );
+                    srcs.push(src_name);
+                }
+                let src_refs: Vec<&str> = srcs.iter().map(String::as_str).collect();
+                let mut c = LayerConf::new(&conf.name, conf.kind.clone(), &src_refs);
+                c.location = Some(loc);
+                plan.locations.insert(conf.name.clone(), loc);
+                out = out.add(c);
+                for pname in param_names(&conf.kind, &conf.name) {
+                    plan.replicas.insert(pname, 1);
+                }
+                states.insert(conf.name.clone(), PartState::Whole(conf.name.clone(), loc));
+            }
+        }
+    }
+
+    // Post-pass: insert bridge pairs on every cross-location edge.
+    let bridged = insert_bridges(out, &mut plan);
+    (bridged, plan)
+}
+
+/// Name of sub-layer `i` of `base` split along `dim`. `#b` (batch) replicas
+/// share logical params; `#f` (feature) slices do not.
+fn sub_layer_name(base: &str, dim: usize, i: usize) -> String {
+    if dim == 0 {
+        format!("{base}#b{i}")
+    } else {
+        format!("{base}#f{i}")
+    }
+}
+
+fn validate_dim(conf: &LayerConf, dim: usize) {
+    assert!(dim <= 1, "layer '{}': partition_dim must be 0 or 1", conf.name);
+    if dim == 1 {
+        let ok = matches!(
+            conf.kind,
+            LayerKind::InnerProduct { .. }
+                | LayerKind::Activation { .. }
+                | LayerKind::Dropout { .. }
+        );
+        assert!(
+            ok,
+            "layer '{}' ({:?}): feature-dimension partitioning is supported for \
+             InnerProduct and elementwise layers (paper §5.4.1: apply model \
+             parallelism only where neuron dependency is element-wise or the \
+             feature dimension is small)",
+            conf.name, conf.kind
+        );
+    }
+}
+
+/// Per-sub-layer hyper-parameter adjustment: dim-1 InnerProduct sub-layers
+/// own a slice of the output columns (paper Fig 12).
+fn adjust_kind(kind: &LayerKind, dim: usize, i: usize, k: usize) -> LayerKind {
+    match (kind, dim) {
+        (LayerKind::InnerProduct { out, act, init_std }, 1) => {
+            assert!(
+                *out >= k,
+                "feature-dimension partitioning needs at least one output \
+                 unit per worker (out={out}, workers={k}); use fewer workers \
+                 or partition_dim=0 for this layer"
+            );
+            let share = crate::tensor::Blob::split_points(*out, k)[i].1;
+            LayerKind::InnerProduct { out: share, act: *act, init_std: *init_std }
+        }
+        _ => kind.clone(),
+    }
+}
+
+/// Parameter names a layer kind will create (for replica accounting).
+fn param_names(kind: &LayerKind, layer: &str) -> Vec<String> {
+    match kind {
+        LayerKind::InnerProduct { .. } | LayerKind::Convolution { .. } => {
+            vec![format!("{layer}/weight"), format!("{layer}/bias")]
+        }
+        LayerKind::Rbm { .. } => vec![
+            format!("{layer}/weight"),
+            format!("{layer}/vbias"),
+            format!("{layer}/hbias"),
+        ],
+        LayerKind::Gru { .. } => {
+            vec![format!("{layer}/w"), format!("{layer}/u"), format!("{layer}/b")]
+        }
+        _ => Vec::new(),
+    }
+}
+
+/// Produce the name of a layer yielding the input that sub-layer `i`
+/// (split along `dim`, placed at `loc`) needs from source `src`.
+#[allow(clippy::too_many_arguments)]
+fn wire_source(
+    src: &str,
+    dim: usize,
+    i: usize,
+    k: usize,
+    loc: usize,
+    states: &HashMap<String, PartState>,
+    full_views: &mut HashMap<String, String>,
+    out: &mut NetBuilder,
+    plan: &mut PartitionPlan,
+) -> String {
+    let state = states.get(src).unwrap_or_else(|| panic!("unknown source '{src}'")).clone();
+    match (dim, &state) {
+        // Batch-split consumer from same-K batch-split producer: 1-to-1.
+        (0, PartState::Parts { dim: 0, parts }) if parts.len() == k => parts[i].0.clone(),
+        // Batch-split consumer: slice row-shard i out of the full view.
+        (0, _) => {
+            let full = full_view_inner(src, &state, None, states, full_views, out, plan);
+            let full_loc = plan.locations.get(&full).copied().unwrap_or(0);
+            let name = format!("{src}->slice0.{i}");
+            if out.confs().iter().any(|c| c.name == name) {
+                return name;
+            }
+            let mut c = LayerConf::new(
+                &name,
+                LayerKind::Slice { dim: 0, parts: k, index: i },
+                &[full.as_str()],
+            );
+            // Slice at the producer's location so only the shard crosses the
+            // wire (paper §5.4.1: prefer low-traffic boundaries).
+            c.location = Some(full_loc);
+            plan.locations.insert(name.clone(), full_loc);
+            *out = std::mem::take(out).add(c);
+            name
+        }
+        // Feature-split consumer needs the FULL source feature (paper
+        // Fig 13c: every hidden unit depends on the whole visible vector).
+        (1, _) => full_view_inner(src, &state, Some(loc), states, full_views, out, plan),
+        _ => unreachable!(),
+    }
+}
+
+/// Full (unsplit) view of `src` for a consumer at `loc`.
+fn full_view_of(
+    src: &str,
+    loc: usize,
+    states: &HashMap<String, PartState>,
+    full_views: &mut HashMap<String, String>,
+    out: &mut NetBuilder,
+    plan: &mut PartitionPlan,
+) -> String {
+    let state = states.get(src).unwrap_or_else(|| panic!("unknown source '{src}'")).clone();
+    full_view_inner(src, &state, Some(loc), states, full_views, out, plan)
+}
+
+fn full_view_inner(
+    src: &str,
+    state: &PartState,
+    prefer_loc: Option<usize>,
+    _states: &HashMap<String, PartState>,
+    full_views: &mut HashMap<String, String>,
+    out: &mut NetBuilder,
+    plan: &mut PartitionPlan,
+) -> String {
+    match state {
+        PartState::Whole(name, _) => name.clone(),
+        PartState::Parts { dim, parts } => {
+            if let Some(existing) = full_views.get(src) {
+                return existing.clone();
+            }
+            let name = format!("{src}->cat");
+            let loc = prefer_loc.unwrap_or(parts[0].1);
+            let part_names: Vec<&str> = parts.iter().map(|(n, _)| n.as_str()).collect();
+            let mut c = LayerConf::new(&name, LayerKind::Concat { dim: *dim }, &part_names);
+            c.location = Some(loc);
+            plan.locations.insert(name.clone(), loc);
+            *out = std::mem::take(out).add(c);
+            full_views.insert(src.to_string(), name.clone());
+            name
+        }
+    }
+}
+
+/// Insert BridgeSrc/BridgeDst pairs on every edge whose endpoints live on
+/// different workers (paper §5.3: "if two connected sub-layers are located
+/// at two different workers, then a pair of bridge layers is inserted").
+fn insert_bridges(builder: NetBuilder, plan: &mut PartitionPlan) -> NetBuilder {
+    let confs = builder.confs().to_vec();
+    let loc_of: HashMap<String, usize> =
+        confs.iter().map(|c| (c.name.clone(), c.location.unwrap_or(0))).collect();
+    let mut out = NetBuilder::new();
+    // bridge name per (src layer, dst location) so fan-outs share one bridge
+    let mut bridges: HashMap<(String, usize), String> = HashMap::new();
+
+    for conf in confs {
+        let my_loc = conf.location.unwrap_or(0);
+        let mut new_srcs = Vec::new();
+        for s in &conf.srcs {
+            let src_loc = *loc_of.get(s).unwrap_or(&0);
+            if src_loc == my_loc {
+                new_srcs.push(s.clone());
+                continue;
+            }
+            let key = (s.clone(), my_loc);
+            let bridge_dst = bridges.entry(key).or_insert_with(|| {
+                let bs = format!("{s}->bs.{my_loc}");
+                let bd = format!("{s}->bd.{my_loc}");
+                let mut c1 = LayerConf::new(&bs, LayerKind::BridgeSrc, &[s.as_str()]);
+                c1.location = Some(src_loc);
+                plan.locations.insert(bs.clone(), src_loc);
+                let mut c2 = LayerConf::new(&bd, LayerKind::BridgeDst, &[bs.as_str()]);
+                c2.location = Some(my_loc);
+                plan.locations.insert(bd.clone(), my_loc);
+                out = std::mem::take(&mut out).add(c1).add(c2);
+                bd
+            });
+            new_srcs.push(bridge_dst.clone());
+        }
+        let src_refs: Vec<&str> = new_srcs.iter().map(String::as_str).collect();
+        let mut c = LayerConf::new(&conf.name, conf.kind.clone(), &src_refs);
+        c.location = conf.location;
+        c.partition_dim = conf.partition_dim;
+        out = std::mem::take(&mut out).add(c);
+    }
+    out
+}
+
+/// Topological order over layer-config indices.
+fn topo_order(confs: &[LayerConf]) -> Vec<usize> {
+    let by_name: HashMap<&str, usize> =
+        confs.iter().enumerate().map(|(i, c)| (c.name.as_str(), i)).collect();
+    let n = confs.len();
+    let mut indegree = vec![0usize; n];
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, c) in confs.iter().enumerate() {
+        for s in &c.srcs {
+            let j = *by_name.get(s.as_str()).unwrap_or_else(|| panic!("unknown source '{s}'"));
+            consumers[j].push(i);
+            indegree[i] += 1;
+        }
+    }
+    let mut queue: Vec<usize> = (0..n).filter(|&i| indegree[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    let mut qi = 0;
+    while qi < queue.len() {
+        let u = queue[qi];
+        qi += 1;
+        order.push(u);
+        for &v in &consumers[u] {
+            indegree[v] -= 1;
+            if indegree[v] == 0 {
+                queue.push(v);
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "cycle in layer graph");
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::{Activation, Phase};
+    use crate::tensor::Blob;
+    use crate::utils::rng::Rng;
+
+    fn mlp(batch: usize) -> NetBuilder {
+        NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, 8] }, &[]))
+            .add(LayerConf::new("label", LayerKind::Input { shape: vec![batch] }, &[]))
+            .add(
+                LayerConf::new(
+                    "h1",
+                    LayerKind::InnerProduct { out: 12, act: Activation::Sigmoid, init_std: 0.3 },
+                    &["data"],
+                ),
+            )
+            .add(
+                LayerConf::new(
+                    "logits",
+                    LayerKind::InnerProduct { out: 4, act: Activation::Identity, init_std: 0.3 },
+                    &["h1"],
+                ),
+            )
+            .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]))
+    }
+
+    #[test]
+    fn logical_names() {
+        assert_eq!(logical_param_name("fc1#b2/weight"), "fc1/weight");
+        assert_eq!(logical_param_name("fc1#f1/weight"), "fc1#f1/weight");
+        assert_eq!(logical_param_name("fc1/weight"), "fc1/weight");
+        assert_eq!(logical_param_name("conv#b10"), "conv");
+    }
+
+    #[test]
+    fn k1_is_identity_modulo_locations() {
+        let b = mlp(4);
+        let (p, plan) = partition_net(&b, 1);
+        assert_eq!(p.confs().len(), b.confs().len());
+        assert_eq!(plan.num_workers, 1);
+        // all at location 0
+        assert!(p.confs().iter().all(|c| c.location == Some(0)));
+    }
+
+    /// Data parallelism (dim 0): the partitioned net must produce the SAME
+    /// forward loss as the unpartitioned one (deterministic layers, shared
+    /// init via replica params seeded identically).
+    #[test]
+    fn dim0_partition_preserves_forward_semantics() {
+        let batch = 8;
+        let b0 = mlp(batch);
+        // Partition both IP layers on the batch dimension.
+        let mut b1 = b0.clone();
+        for c in b1.confs_mut().iter_mut() {
+            if c.name == "h1" || c.name == "logits" || c.name == "loss" {
+                c.partition_dim = Some(0);
+            }
+        }
+        let (bp, plan) = partition_net(&b1, 2);
+        assert_eq!(plan.replicas.get("h1/weight"), Some(&2));
+
+        let mut net0 = b0.build(&mut Rng::new(42));
+        let mut net1 = bp.build(&mut Rng::new(42));
+        // Force identical params across replicas and with the reference:
+        // copy from net0 by logical name.
+        let ref_params: std::collections::HashMap<String, Blob> = net0
+            .params()
+            .iter()
+            .map(|p| (p.name.clone(), p.data.clone()))
+            .collect();
+        for p in net1.params_mut() {
+            let logical = logical_param_name(&p.name);
+            if let Some(v) = ref_params.get(&logical) {
+                assert_eq!(v.shape(), p.data.shape(), "replica shape {}", p.name);
+                p.data = v.clone();
+            }
+        }
+
+        let mut rng = Rng::new(5);
+        let x = Blob::from_vec(&[batch, 8], rng.uniform_vec(batch * 8, -1.0, 1.0));
+        let y = Blob::from_vec(&[batch], (0..batch).map(|i| (i % 4) as f32).collect());
+
+        net0.set_input("data", x.clone());
+        net0.set_input("label", y.clone());
+        net0.forward(Phase::Train);
+        let loss0 = net0.total_loss();
+
+        net1.set_input("data", x);
+        net1.set_input("label", y);
+        net1.forward(Phase::Train);
+        // Two loss shards, each over batch/2 rows; their mean equals the
+        // full-batch loss because shards are equal-sized.
+        let losses = net1.losses();
+        assert_eq!(losses.len(), 2);
+        let mean: f32 = losses.iter().map(|(_, l, _)| l).sum::<f32>() / 2.0;
+        assert!((mean - loss0).abs() < 1e-4, "sharded {mean} vs full {loss0}");
+    }
+
+    /// Model parallelism (dim 1): sub-layers own column slices; the concat
+    /// of their outputs must equal the unpartitioned layer's output.
+    #[test]
+    fn dim1_partition_preserves_forward_semantics() {
+        let batch = 4;
+        let b0 = NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, 6] }, &[]))
+            .add(LayerConf::new(
+                "fc",
+                LayerKind::InnerProduct { out: 10, act: Activation::Tanh, init_std: 0.3 },
+                &["data"],
+            ));
+        let mut b1 = b0.clone();
+        b1.confs_mut()[1].partition_dim = Some(1);
+        let (bp, plan) = partition_net(&b1, 2);
+        // dim-1 params are NOT replicated
+        assert_eq!(plan.replicas.get("fc/weight"), None);
+
+        let mut net0 = b0.build(&mut Rng::new(7));
+        let mut net1 = bp.build(&mut Rng::new(7));
+
+        // Copy slices of the reference weights into the sub-layers.
+        let w = net0.params()[0].data.clone(); // [6,10]
+        let bias = net0.params()[1].data.clone(); // [10]
+        for p in net1.params_mut() {
+            if p.name == "fc#f0/weight" {
+                p.data = w.slice_cols(0, 5);
+            } else if p.name == "fc#f1/weight" {
+                p.data = w.slice_cols(5, 5);
+            } else if p.name == "fc#f0/bias" {
+                p.data = Blob::from_vec(&[5], bias.data()[0..5].to_vec());
+            } else if p.name == "fc#f1/bias" {
+                p.data = Blob::from_vec(&[5], bias.data()[5..10].to_vec());
+            }
+        }
+
+        let mut rng = Rng::new(9);
+        let x = Blob::from_vec(&[batch, 6], rng.uniform_vec(batch * 6, -1.0, 1.0));
+        net0.set_input("data", x.clone());
+        net0.forward(Phase::Train);
+        net1.set_input("data", x);
+        net1.forward(Phase::Train);
+
+        let full = net0.feature("fc").clone();
+        let p0 = net1.feature("fc#f0").clone();
+        let p1 = net1.feature("fc#f1").clone();
+        let refs = [&p0, &p1];
+        let cat = Blob::concat_cols(&refs);
+        for (a, b) in cat.data().iter().zip(full.data()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bridges_inserted_on_cross_location_edges() {
+        // Place h1 at worker 1, rest at 0 → edges data->h1 and h1->logits
+        // cross locations and need bridges.
+        let mut b = mlp(4);
+        for c in b.confs_mut().iter_mut() {
+            if c.name == "h1" {
+                c.location = Some(1);
+            }
+        }
+        let (bp, plan) = partition_net(&b, 2);
+        let names: Vec<&str> = bp.confs().iter().map(|c| c.name.as_str()).collect();
+        assert!(names.iter().any(|n| n.contains("->bs.")), "bridge src missing: {names:?}");
+        assert!(names.iter().any(|n| n.contains("->bd.")), "bridge dst missing: {names:?}");
+        // Graph still builds and runs.
+        let mut net = bp.build(&mut Rng::new(3));
+        net.set_input("data", Blob::zeros(&[4, 8]));
+        net.set_input("label", Blob::zeros(&[4]));
+        net.forward(Phase::Train);
+        net.backward();
+        assert!(net.bridge_bytes() > 0);
+        assert_eq!(plan.locations.get("h1"), Some(&1));
+    }
+
+    #[test]
+    fn hybrid_partition_builds_and_trains() {
+        // Paper §5.4.1 hybrid for AlexNet-like nets: data parallelism below,
+        // model parallelism for the fully connected layer.
+        let batch = 8;
+        let mut b = mlp(batch);
+        for c in b.confs_mut().iter_mut() {
+            match c.name.as_str() {
+                "h1" => c.partition_dim = Some(0),
+                "logits" => c.partition_dim = Some(1),
+                "loss" => c.partition_dim = None,
+                _ => {}
+            }
+        }
+        let (bp, _plan) = partition_net(&b, 2);
+        let mut net = bp.build(&mut Rng::new(8));
+        let mut rng = Rng::new(2);
+        net.set_input("data", Blob::from_vec(&[batch, 8], rng.uniform_vec(batch * 8, -1.0, 1.0)));
+        net.set_input("label", Blob::from_vec(&[batch], vec![0., 1., 2., 3., 0., 1., 2., 3.]));
+        net.zero_grads();
+        net.forward(Phase::Train);
+        net.backward();
+        // Every learnable param received a gradient.
+        for p in net.params_mut() {
+            assert!(p.grad.norm() > 0.0, "param {} has zero grad", p.name);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "feature-dimension partitioning")]
+    fn dim1_conv_rejected() {
+        let b = NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![2, 3, 8, 8] }, &[]))
+            .add(
+                LayerConf::new(
+                    "conv",
+                    LayerKind::Convolution { out_channels: 4, kernel: 3, stride: 1, pad: 1, init_std: 0.1 },
+                    &["data"],
+                )
+                .partition(1),
+            );
+        partition_net(&b, 2);
+    }
+}

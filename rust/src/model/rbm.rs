@@ -1,0 +1,327 @@
+//! Restricted Boltzmann Machine layer — category B (undirected) model
+//! trained by Contrastive Divergence (paper §2.1, §4.2.2).
+//!
+//! The layer owns `W [visible, hidden]`, visible bias `bv` and hidden bias
+//! `bh`. The CD-k `TrainOneBatch` algorithm (see [`crate::train::cd`]) calls
+//! the sampling helpers directly (it downcasts through `Layer::as_any`),
+//! while the generic `compute_feature` path exposes the deterministic
+//! hidden activation so RBMs can also sit inside feed-forward nets after
+//! pre-training (the deep auto-encoder use case, Fig 8).
+
+use super::layer::{Layer, Phase};
+use crate::tensor::blob::Param;
+use crate::tensor::{ops, Blob};
+use crate::utils::rng::Rng;
+use std::any::Any;
+
+pub struct RbmLayer {
+    name: String,
+    hidden: usize,
+    init_std: f32,
+    pub weight: Param,
+    pub vbias: Param,
+    pub hbias: Param,
+    rng: Rng,
+    /// (reconstruction error, 0) from the last CD step.
+    last_loss: f32,
+}
+
+impl RbmLayer {
+    pub fn new(name: &str, hidden: usize, init_std: f32) -> RbmLayer {
+        RbmLayer {
+            name: name.to_string(),
+            hidden,
+            init_std,
+            weight: Param::new(&format!("{name}/weight"), Blob::zeros(&[0])),
+            vbias: Param::new(&format!("{name}/vbias"), Blob::zeros(&[0])),
+            hbias: Param::new(&format!("{name}/hbias"), Blob::zeros(&[0])),
+            rng: Rng::new(0xb0b + name.len() as u64),
+            last_loss: 0.0,
+        }
+    }
+
+    pub fn hidden_dim(&self) -> usize {
+        self.hidden
+    }
+
+    /// `p(h=1 | v) = sigmoid(v W + bh)`.
+    pub fn prop_up(&self, v: &Blob) -> Blob {
+        let mut h = ops::matmul(&v.reshape(&[v.rows(), v.cols()]), &self.weight.data);
+        ops::add_row_vec(&mut h, &self.hbias.data);
+        ops::sigmoid(&h)
+    }
+
+    /// `p(v=1 | h) = sigmoid(h W^T + bv)`.
+    pub fn prop_down(&self, h: &Blob) -> Blob {
+        let mut v = ops::matmul_nt(h, &self.weight.data);
+        ops::add_row_vec(&mut v, &self.vbias.data);
+        ops::sigmoid(&v)
+    }
+
+    /// Bernoulli-sample a probability blob.
+    pub fn sample(&mut self, p: &Blob) -> Blob {
+        Blob::from_vec(
+            p.shape(),
+            p.data().iter().map(|&q| if self.rng.uniform() < q { 1.0 } else { 0.0 }).collect(),
+        )
+    }
+
+    /// One CD-k step on a visible batch: accumulates gradients into the
+    /// params (positive phase minus negative phase, scaled by 1/batch) and
+    /// returns the reconstruction error. This is the body the paper's CD
+    /// `TrainOneBatch` performs per iteration.
+    pub fn cd_step(&mut self, v0: &Blob, k: usize) -> f32 {
+        let batch = v0.rows() as f32;
+        let h0 = self.prop_up(v0);
+        // Gibbs chain.
+        let mut hk = self.sample(&h0);
+        let mut vk = self.prop_down(&hk);
+        for _ in 1..k {
+            hk = self.sample(&self.prop_up(&vk).clone());
+            vk = self.prop_down(&hk);
+        }
+        let hk_prob = self.prop_up(&vk);
+
+        // dW = -(v0^T h0 - vk^T hk) / batch  (negative log-likelihood grad)
+        let v0m = v0.reshape(&[v0.rows(), v0.cols()]);
+        let mut dw = ops::matmul_tn(&v0m, &h0);
+        dw.axpy(-1.0, &ops::matmul_tn(&vk, &hk_prob));
+        dw.scale(-1.0 / batch);
+        self.weight.grad.add_assign(&dw);
+
+        let mut dbv = ops::sum_rows(&v0m);
+        dbv.axpy(-1.0, &ops::sum_rows(&vk));
+        dbv.scale(-1.0 / batch);
+        self.vbias.grad.add_assign(&dbv);
+
+        let mut dbh = ops::sum_rows(&h0);
+        dbh.axpy(-1.0, &ops::sum_rows(&hk_prob));
+        dbh.scale(-1.0 / batch);
+        self.hbias.grad.add_assign(&dbh);
+
+        // Reconstruction error (mean squared).
+        let mut diff = v0m.clone();
+        diff.axpy(-1.0, &vk);
+        let err = diff.data().iter().map(|x| x * x).sum::<f32>() / batch;
+        self.last_loss = err;
+        err
+    }
+
+    /// Free energy of visible configurations (diagnostic; lower is better
+    /// for data the model has learned).
+    pub fn free_energy(&self, v: &Blob) -> f32 {
+        let vm = v.reshape(&[v.rows(), v.cols()]);
+        let mut wx = ops::matmul(&vm, &self.weight.data);
+        ops::add_row_vec(&mut wx, &self.hbias.data);
+        let hidden_term: f32 = wx.data().iter().map(|&x| (1.0 + x.exp()).ln()).sum();
+        let vbias_term: f32 = {
+            let mut acc = 0.0;
+            for r in 0..vm.rows() {
+                for c in 0..vm.cols() {
+                    acc += vm.data()[r * vm.cols() + c] * self.vbias.data.data()[c];
+                }
+            }
+            acc
+        };
+        -(hidden_term + vbias_term) / v.rows() as f32
+    }
+}
+
+impl Layer for RbmLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "Rbm"
+    }
+
+    fn setup(&mut self, src_shapes: &[&[usize]], rng: &mut Rng) -> Vec<usize> {
+        let visible: usize = src_shapes[0][1..].iter().product();
+        let batch = src_shapes[0][0];
+        self.weight = Param::new(
+            &format!("{}/weight", self.name),
+            Blob::gaussian(&[visible, self.hidden], self.init_std, rng),
+        );
+        self.vbias = Param::new(&format!("{}/vbias", self.name), Blob::zeros(&[visible]))
+            .with_wd_mult(0.0);
+        self.hbias = Param::new(&format!("{}/hbias", self.name), Blob::zeros(&[self.hidden]))
+            .with_wd_mult(0.0);
+        vec![batch, self.hidden]
+    }
+
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+        self.prop_up(srcs[0])
+    }
+
+    fn compute_gradient(
+        &mut self,
+        srcs: &[&Blob],
+        own: &Blob,
+        grad_out: Option<&Blob>,
+    ) -> Vec<Option<Blob>> {
+        // Feed-forward fine-tuning path (auto-encoder after unfolding):
+        // behave like a sigmoid inner-product layer.
+        let dy = grad_out.expect("Rbm backward needs grad in feed-forward mode");
+        let dpre = ops::sigmoid_grad(own, dy);
+        let x = srcs[0].reshape(&[srcs[0].rows(), srcs[0].cols()]);
+        self.weight.grad.add_assign(&ops::matmul_tn(&x, &dpre));
+        self.hbias.grad.add_assign(&ops::sum_rows(&dpre));
+        let dx = ops::matmul_nt(&dpre, &self.weight.data);
+        vec![Some(dx.reshape(srcs[0].shape()))]
+    }
+
+    fn params(&self) -> Vec<&Param> {
+        vec![&self.weight, &self.vbias, &self.hbias]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.weight, &mut self.vbias, &mut self.hbias]
+    }
+
+    fn loss(&self) -> Option<(f32, f32)> {
+        Some((self.last_loss, 0.0))
+    }
+
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup_rbm(visible: usize, hidden: usize) -> RbmLayer {
+        let mut l = RbmLayer::new("rbm", hidden, 0.1);
+        l.setup(&[&[4, visible]], &mut Rng::new(2));
+        l
+    }
+
+    #[test]
+    fn shapes() {
+        let l = setup_rbm(6, 3);
+        assert_eq!(l.weight.data.shape(), &[6, 3]);
+        assert_eq!(l.vbias.data.shape(), &[6]);
+        assert_eq!(l.hbias.data.shape(), &[3]);
+        assert_eq!(l.params().len(), 3);
+    }
+
+    #[test]
+    fn prop_up_down_shapes_and_range() {
+        let l = setup_rbm(6, 3);
+        let mut r = Rng::new(4);
+        let v = Blob::from_vec(&[4, 6], r.uniform_vec(24, 0.0, 1.0));
+        let h = l.prop_up(&v);
+        assert_eq!(h.shape(), &[4, 3]);
+        assert!(h.data().iter().all(|&p| (0.0..=1.0).contains(&p)));
+        let vr = l.prop_down(&h);
+        assert_eq!(vr.shape(), &[4, 6]);
+        assert!(vr.data().iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn sample_is_binary() {
+        let mut l = setup_rbm(4, 4);
+        let p = Blob::full(&[2, 4], 0.5);
+        let s = l.sample(&p);
+        assert!(s.data().iter().all(|&v| v == 0.0 || v == 1.0));
+        // extremes
+        let ones = l.sample(&Blob::full(&[1, 4], 1.0));
+        assert!(ones.data().iter().all(|&v| v == 1.0));
+        let zeros = l.sample(&Blob::full(&[1, 4], 0.0));
+        assert!(zeros.data().iter().all(|&v| v == 0.0));
+    }
+
+    /// CD-1 on a tiny dataset must decrease reconstruction error — the core
+    /// convergence signal of §4.2.2.
+    #[test]
+    fn cd_learning_reduces_reconstruction_error() {
+        let mut l = setup_rbm(8, 16);
+        let mut rng = Rng::new(9);
+        // Two binary prototype patterns + noise.
+        let proto = [
+            [1., 1., 1., 1., 0., 0., 0., 0.],
+            [0., 0., 0., 0., 1., 1., 1., 1.],
+        ];
+        let make_batch = |rng: &mut Rng| -> Blob {
+            let mut data = Vec::new();
+            for _ in 0..16 {
+                let p = &proto[rng.below(2)];
+                for &v in p.iter() {
+                    let flip = rng.uniform() < 0.05;
+                    data.push(if flip { 1.0 - v } else { v });
+                }
+            }
+            Blob::from_vec(&[16, 8], data)
+        };
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for it in 0..300 {
+            let batch = make_batch(&mut rng);
+            let err = l.cd_step(&batch, 1);
+            // SGD update
+            for p in l.params_mut() {
+                let g = p.grad.clone();
+                p.data.axpy(-0.1, &g);
+                p.grad.fill(0.0);
+            }
+            if it == 0 {
+                first = err;
+            }
+            last = err;
+        }
+        assert!(
+            last < first * 0.5,
+            "reconstruction error should halve: first {first}, last {last}"
+        );
+    }
+
+    #[test]
+    fn free_energy_lower_for_trained_patterns() {
+        let mut l = setup_rbm(8, 16);
+        let mut rng = Rng::new(9);
+        let pattern = Blob::from_vec(&[1, 8], vec![1., 1., 1., 1., 0., 0., 0., 0.]);
+        let anti = Blob::from_vec(&[1, 8], vec![0., 1., 0., 1., 0., 1., 0., 1.]);
+        for _ in 0..300 {
+            let mut data = Vec::new();
+            for _ in 0..8 {
+                data.extend_from_slice(pattern.data());
+            }
+            let batch = Blob::from_vec(&[8, 8], data);
+            l.cd_step(&batch, 1);
+            for p in l.params_mut() {
+                let g = p.grad.clone();
+                p.data.axpy(-0.1, &g);
+                p.grad.fill(0.0);
+            }
+            let _ = rng.next_u32();
+        }
+        assert!(
+            l.free_energy(&pattern) < l.free_energy(&anti),
+            "trained pattern should have lower free energy"
+        );
+    }
+
+    #[test]
+    fn feed_forward_backward_gradcheck() {
+        let mut l = setup_rbm(5, 3);
+        let mut r = Rng::new(6);
+        let x = Blob::from_vec(&[2, 5], r.uniform_vec(10, 0.0, 1.0));
+        let y = l.compute_feature(Phase::Train, &[&x]);
+        let dy = Blob::full(y.shape(), 1.0);
+        let gs = l.compute_gradient(&[&x], &y, Some(&dy));
+        let dx = gs[0].as_ref().unwrap();
+        let eps = 1e-2;
+        for i in 0..x.len() {
+            let mut p = x.clone();
+            p.data_mut()[i] += eps;
+            let mut m = x.clone();
+            m.data_mut()[i] -= eps;
+            let fp = l.prop_up(&p).sum();
+            let fm = l.prop_up(&m).sum();
+            let num = (fp - fm) / (2.0 * eps);
+            assert!((num - dx.data()[i]).abs() < 1e-2, "dx[{i}] {num} vs {}", dx.data()[i]);
+        }
+    }
+}

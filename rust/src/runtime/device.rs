@@ -1,0 +1,87 @@
+//! Simulated accelerator devices (DESIGN.md §Hardware-Adaptation).
+//!
+//! The paper's GPU experiments (3× GTX 970 over PCIe) are modeled as
+//! devices with a compute-rate multiplier relative to the measured CPU
+//! execution and a host↔device transfer link. The copy-queue experiments
+//! (Fig 14 / Fig 20a) charge transfers against the device's link while
+//! compute proceeds — see [`crate::coordinator::copyqueue`].
+
+use crate::comm::LinkModel;
+
+/// Kind of execution resource backing a worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    Cpu,
+    /// Simulated GPU: compute time = measured CPU time / speedup.
+    SimGpu,
+}
+
+/// One device slot assignable to a worker (paper §5.1: "SINGA automatically
+/// assigns g GPU devices to the first g workers on each node").
+#[derive(Debug, Clone, Copy)]
+pub struct Device {
+    pub kind: DeviceKind,
+    pub id: usize,
+    /// Speedup over the host CPU for dense compute (GTX-970-class cards ran
+    /// the paper's convnets ~15-30x faster than one CPU core).
+    pub speedup: f64,
+    /// Host ↔ device link.
+    pub link: LinkModel,
+}
+
+impl Device {
+    pub fn cpu(id: usize) -> Device {
+        Device { kind: DeviceKind::Cpu, id, speedup: 1.0, link: LinkModel::shared_memory() }
+    }
+
+    pub fn sim_gpu(id: usize) -> Device {
+        Device { kind: DeviceKind::SimGpu, id, speedup: 20.0, link: LinkModel::pcie3() }
+    }
+
+    /// Device-clock compute time for work measured at `cpu_us` on the host.
+    pub fn compute_us(&self, cpu_us: f64) -> f64 {
+        cpu_us / self.speedup
+    }
+
+    /// Host↔device transfer time for `bytes`.
+    pub fn transfer_us(&self, bytes: usize) -> f64 {
+        self.link.transfer_us(bytes)
+    }
+}
+
+/// Assign `g` simulated GPUs to the first `g` of `n` workers, CPUs to the
+/// rest (the paper's §5.1 assignment rule).
+pub fn assign_devices(n: usize, g: usize) -> Vec<Device> {
+    (0..n)
+        .map(|i| if i < g { Device::sim_gpu(i) } else { Device::cpu(i) })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_rule() {
+        let d = assign_devices(4, 2);
+        assert_eq!(d[0].kind, DeviceKind::SimGpu);
+        assert_eq!(d[1].kind, DeviceKind::SimGpu);
+        assert_eq!(d[2].kind, DeviceKind::Cpu);
+        assert_eq!(d[3].kind, DeviceKind::Cpu);
+    }
+
+    #[test]
+    fn compute_scaling() {
+        let gpu = Device::sim_gpu(0);
+        assert!((gpu.compute_us(2000.0) - 100.0).abs() < 1e-9);
+        let cpu = Device::cpu(0);
+        assert_eq!(cpu.compute_us(2000.0), 2000.0);
+    }
+
+    #[test]
+    fn gpu_transfers_cost_more_than_cpu() {
+        let gpu = Device::sim_gpu(0);
+        let cpu = Device::cpu(0);
+        assert!(gpu.transfer_us(1_000_000) > cpu.transfer_us(1_000_000));
+    }
+}

@@ -1,0 +1,169 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime — which HLO file implements which step function, and the
+//! names/shapes/dtypes of its inputs and outputs.
+
+use crate::utils::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One input or output tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    /// `param:<name>` inputs come from the parameter server; `grad:<name>`
+    /// outputs go back to it; everything else is batch data.
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn is_param(&self) -> bool {
+        self.name.starts_with("param:")
+    }
+
+    pub fn is_grad(&self) -> bool {
+        self.name.starts_with("grad:")
+    }
+
+    /// Logical parameter name without the role prefix.
+    pub fn logical(&self) -> &str {
+        self.name
+            .strip_prefix("param:")
+            .or_else(|| self.name.strip_prefix("grad:"))
+            .unwrap_or(&self.name)
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled step function.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    /// Parameter inputs in order.
+    pub fn params(&self) -> Vec<&IoSpec> {
+        self.inputs.iter().filter(|i| i.is_param()).collect()
+    }
+
+    /// Data (non-param) inputs in order.
+    pub fn data_inputs(&self) -> Vec<&IoSpec> {
+        self.inputs.iter().filter(|i| !i.is_param()).collect()
+    }
+
+    /// Index of the first output named `name`.
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|o| o.name == name)
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let doc = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let arts = doc
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: missing 'artifacts' object"))?;
+        let mut out = BTreeMap::new();
+        for (name, spec) in arts {
+            let file = spec
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact '{name}': missing file"))?
+                .to_string();
+            let ios = |key: &str| -> Result<Vec<IoSpec>> {
+                spec.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact '{name}': missing {key}"))?
+                    .iter()
+                    .map(|io| {
+                        Ok(IoSpec {
+                            name: io
+                                .get("name")
+                                .and_then(Json::as_str)
+                                .ok_or_else(|| anyhow!("io missing name"))?
+                                .to_string(),
+                            shape: io
+                                .get("shape")
+                                .map(Json::usize_vec)
+                                .ok_or_else(|| anyhow!("io missing shape"))?,
+                            dtype: io
+                                .get("dtype")
+                                .and_then(Json::as_str)
+                                .unwrap_or("float32")
+                                .to_string(),
+                        })
+                    })
+                    .collect()
+            };
+            out.insert(
+                name.clone(),
+                ArtifactSpec { file, inputs: ios("inputs")?, outputs: ios("outputs")? },
+            );
+        }
+        Ok(Manifest { artifacts: out })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "mlp_step": {
+          "file": "mlp_step.hlo.txt",
+          "inputs": [
+            {"name": "param:mlp/w0", "shape": [784, 256], "dtype": "float32"},
+            {"name": "data", "shape": [32, 784], "dtype": "float32"},
+            {"name": "chars", "shape": [16, 20], "dtype": "int32"}
+          ],
+          "outputs": [
+            {"name": "loss", "shape": [], "dtype": "float32"},
+            {"name": "grad:mlp/w0", "shape": [784, 256], "dtype": "float32"}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = &m.artifacts["mlp_step"];
+        assert_eq!(a.file, "mlp_step.hlo.txt");
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.params().len(), 1);
+        assert_eq!(a.data_inputs().len(), 2);
+        assert_eq!(a.params()[0].logical(), "mlp/w0");
+        assert_eq!(a.inputs[2].dtype, "int32");
+        assert_eq!(a.output_index("grad:mlp/w0"), Some(1));
+        assert!(a.outputs[1].is_grad());
+        assert_eq!(a.outputs[1].logical(), "mlp/w0");
+        assert_eq!(a.inputs[0].elements(), 784 * 256);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("{\"artifacts\": {\"x\": {}}}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

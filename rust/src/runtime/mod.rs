@@ -1,0 +1,217 @@
+//! Runtime: load and execute the AOT-compiled XLA artifacts (L2 models with
+//! L1 Pallas kernels lowered in) from the rust hot path via the PJRT C API.
+//!
+//! `python/compile/aot.py` writes `artifacts/*.hlo.txt` plus
+//! `manifest.json`; [`XlaRuntime`] compiles each HLO module once on the
+//! PJRT CPU client and serves typed executions. Interchange is HLO *text*
+//! (see /opt/xla-example/README.md: jax≥0.5 protos have 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! [`device`] models accelerator devices (compute-rate multiplier + PCIe
+//! transfer link) for the GPU-era experiments on this CPU-only testbed.
+
+pub mod device;
+pub mod manifest;
+pub mod xla_job;
+
+use crate::tensor::Blob;
+use anyhow::{anyhow, Context, Result};
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact ready to execute.
+pub struct LoadedStep {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT client + compiled executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    loaded: HashMap<String, LoadedStep>,
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory (compiles nothing yet).
+    pub fn open(dir: &Path) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(XlaRuntime { client, dir: dir.to_path_buf(), manifest, loaded: HashMap::new() })
+    }
+
+    /// Default artifact directory (repo-root `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and cache the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedStep> {
+        if !self.loaded.contains_key(name) {
+            let spec = self
+                .manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+                .clone();
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling '{name}': {e:?}"))?;
+            self.loaded.insert(name.to_string(), LoadedStep { spec, exe });
+        }
+        Ok(&self.loaded[name])
+    }
+
+    /// Execute an artifact on f32 blobs ordered per the manifest. Integer
+    /// inputs (dtype `int32` in the manifest) are converted from the blob's
+    /// f32 values. Returns output blobs ordered per the manifest.
+    pub fn execute(&mut self, name: &str, inputs: &[&Blob]) -> Result<Vec<Blob>> {
+        self.load(name)?;
+        let step = &self.loaded[name];
+        let spec = &step.spec;
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "artifact '{name}' wants {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (b, io) in inputs.iter().zip(&spec.inputs) {
+            let expect: usize = io.shape.iter().product();
+            if b.len() != expect {
+                return Err(anyhow!(
+                    "input '{}' of '{name}': expected {:?} ({expect}), got {} elements",
+                    io.name,
+                    io.shape,
+                    b.len()
+                ));
+            }
+            let dims: Vec<i64> = io.shape.iter().map(|&d| d as i64).collect();
+            let lit = if io.dtype == "int32" {
+                let ints: Vec<i32> = b.data().iter().map(|&v| v as i32).collect();
+                xla::Literal::vec1(&ints)
+            } else {
+                xla::Literal::vec1(b.data())
+            };
+            let lit = if dims.is_empty() {
+                lit
+            } else {
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape input: {e:?}"))?
+            };
+            literals.push(lit);
+        }
+        let result = step
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing '{name}': {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "artifact '{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, io) in parts.into_iter().zip(&spec.outputs) {
+            let data: Vec<f32> = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("output '{}' to_vec: {e:?}", io.name))?;
+            let shape = if io.shape.is_empty() { vec![1] } else { io.shape.clone() };
+            out.push(Blob::from_vec(&shape, data));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        XlaRuntime::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_and_execution_roundtrip() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = XlaRuntime::open(&XlaRuntime::default_dir()).unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        let spec = rt.manifest.artifacts.get("mlp_step").unwrap().clone();
+        // Build zero-ish inputs per spec; params get small values.
+        let inputs: Vec<Blob> = spec
+            .inputs
+            .iter()
+            .map(|io| {
+                let n: usize = io.shape.iter().product();
+                if io.name.starts_with("param:") {
+                    Blob::from_vec(
+                        &io.shape,
+                        (0..n).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect(),
+                    )
+                } else if io.name == "label_onehot" {
+                    // one-hot rows
+                    let classes = io.shape[1];
+                    let rows = io.shape[0];
+                    let mut v = vec![0.0; n];
+                    for r in 0..rows {
+                        v[r * classes + r % classes] = 1.0;
+                    }
+                    Blob::from_vec(&io.shape, v)
+                } else {
+                    Blob::from_vec(&io.shape, vec![0.1; n])
+                }
+            })
+            .collect();
+        let refs: Vec<&Blob> = inputs.iter().collect();
+        let outs = rt.execute("mlp_step", &refs).unwrap();
+        assert_eq!(outs.len(), spec.outputs.len());
+        let loss = outs[0].data()[0];
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        // grads shaped like params
+        for (o, io) in outs.iter().zip(&spec.outputs) {
+            if io.name.starts_with("grad:") {
+                assert_eq!(o.len(), io.shape.iter().product::<usize>());
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_input_count_rejected() {
+        if !artifacts_ready() {
+            return;
+        }
+        let mut rt = XlaRuntime::open(&XlaRuntime::default_dir()).unwrap();
+        let err = rt.execute("mlp_step", &[]).unwrap_err();
+        assert!(err.to_string().contains("inputs"));
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        if !artifacts_ready() {
+            return;
+        }
+        let mut rt = XlaRuntime::open(&XlaRuntime::default_dir()).unwrap();
+        assert!(rt.execute("ghost", &[]).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! XLA-backed distributed training: the production path where worker
+//! groups execute an AOT-compiled step artifact (L2 model + L1 Pallas
+//! kernels) through PJRT while the L3 coordinator moves parameters between
+//! them and the server groups. Python never runs here.
+
+use super::XlaRuntime;
+use crate::cluster::ClusterTopology;
+use crate::comm::{ByteLedger, CostModel, VirtualClock};
+use crate::metrics::{Record, TrainingLog};
+use crate::server::ServerGroup;
+use crate::tensor::Blob;
+use crate::updater::UpdaterConf;
+use crate::utils::rng::Rng;
+use crate::utils::timer::Stopwatch;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Produces the data inputs (non-param inputs) of a step artifact for a
+/// given batch index.
+pub type Batcher = Arc<dyn Fn(u64) -> HashMap<String, Blob> + Send + Sync>;
+
+/// Job configuration for XLA-backed training.
+#[derive(Clone)]
+pub struct XlaJobConf {
+    pub artifact: String,
+    pub artifact_dir: PathBuf,
+    pub updater: UpdaterConf,
+    pub topology: ClusterTopology,
+    pub iters: u64,
+    pub seed: u64,
+    pub cost: CostModel,
+    pub log_every: u64,
+}
+
+impl XlaJobConf {
+    pub fn new(artifact: &str) -> XlaJobConf {
+        XlaJobConf {
+            artifact: artifact.to_string(),
+            artifact_dir: XlaRuntime::default_dir(),
+            updater: UpdaterConf::sgd(0.1),
+            topology: ClusterTopology::sandblaster(1, 1),
+            iters: 50,
+            seed: 0xa07,
+            cost: CostModel::numa_server(),
+            log_every: 1,
+        }
+    }
+}
+
+/// Report mirror of [`crate::coordinator::JobReport`] for the XLA path.
+pub struct XlaJobReport {
+    pub log: Arc<TrainingLog>,
+    pub ledger: Arc<ByteLedger>,
+    pub wall_ms: f64,
+    pub params: HashMap<String, Blob>,
+}
+
+/// Run the XLA-backed training job.
+pub fn run_xla_job(conf: &XlaJobConf, batcher: Batcher) -> Result<XlaJobReport> {
+    let ledger = Arc::new(ByteLedger::new());
+    // One probe runtime on the main thread to read the manifest and
+    // initialize parameters at the servers.
+    let probe = XlaRuntime::open(&conf.artifact_dir)?;
+    let spec = probe
+        .manifest
+        .artifacts
+        .get(&conf.artifact)
+        .ok_or_else(|| anyhow::anyhow!("artifact '{}' missing", conf.artifact))?
+        .clone();
+    drop(probe);
+
+    let topo = &conf.topology;
+    let servers: Arc<Vec<ServerGroup>> = Arc::new(
+        (0..topo.nserver_groups)
+            .map(|_| ServerGroup::new(topo.nservers_per_group, conf.updater.clone(), ledger.clone()))
+            .collect(),
+    );
+    // Gaussian init scaled per fan-in (weights) / zero (1-d biases).
+    let mut rng = Rng::new(conf.seed);
+    for io in spec.params() {
+        let init = if io.shape.len() >= 2 {
+            let fan_in: usize = io.shape[..io.shape.len() - 1].iter().product();
+            Blob::gaussian(&io.shape, (1.0 / (fan_in as f32).sqrt()).min(0.1), &mut rng)
+        } else {
+            Blob::zeros(&io.shape)
+        };
+        for sg in servers.iter() {
+            sg.put(io.logical(), init.clone(), 1.0, 1.0);
+        }
+    }
+
+    let log = Arc::new(TrainingLog::new());
+    let sw = Stopwatch::new();
+    let mut handles = Vec::new();
+    for g in 0..topo.nworker_groups {
+        let conf = conf.clone();
+        let spec = spec.clone();
+        let servers = servers.clone();
+        let log = log.clone();
+        let batcher = batcher.clone();
+        let topo = topo.clone();
+        let sw = sw.clone();
+        handles.push(std::thread::Builder::new().name(format!("xwg{g}")).spawn(
+            move || -> Result<()> {
+                let mut rt = XlaRuntime::open(&conf.artifact_dir)?;
+                let sg = &servers[topo.server_group_of(g)];
+                let mut clock = VirtualClock::new();
+                // local param cache, ordered per spec
+                let mut values: HashMap<String, Blob> = HashMap::new();
+                for io in spec.params() {
+                    let (v, _) = sg.get(io.logical());
+                    values.insert(io.logical().to_string(), v);
+                }
+                for step in 0..conf.iters {
+                    let idx = crate::data::shard_index(step, g, topo.nworker_groups);
+                    let data = batcher(idx);
+                    // Assemble inputs in manifest order.
+                    let inputs: Vec<Blob> = spec
+                        .inputs
+                        .iter()
+                        .map(|io| {
+                            if io.is_param() {
+                                values[io.logical()].clone()
+                            } else {
+                                data.get(&io.name)
+                                    .unwrap_or_else(|| {
+                                        panic!("batcher missing input '{}'", io.name)
+                                    })
+                                    .clone()
+                            }
+                        })
+                        .collect();
+                    let refs: Vec<&Blob> = inputs.iter().collect();
+                    let t = Stopwatch::new();
+                    let outs = rt.execute(&conf.artifact, &refs)?;
+                    clock.advance(t.elapsed_us());
+                    let loss = outs[0].data()[0];
+                    // Ship each grad:* output to the server; refresh values.
+                    let mut bytes = 0usize;
+                    for (o, io) in outs.iter().zip(&spec.outputs) {
+                        if io.is_grad() {
+                            bytes += 2 * o.byte_size() + 128;
+                            let (fresh, _) = sg.update(io.logical(), o, step);
+                            values.insert(io.logical().to_string(), fresh);
+                        }
+                    }
+                    clock.transfer(&conf.cost.intra_node, bytes);
+                    if step % conf.log_every == 0 || step + 1 == conf.iters {
+                        log.push(Record {
+                            group: g,
+                            step,
+                            wall_ms: sw.elapsed_ms(),
+                            virt_ms: clock.ms(),
+                            loss,
+                            metric: 0.0,
+                        });
+                    }
+                }
+                Ok(())
+            },
+        )?);
+    }
+    for h in handles {
+        h.join().expect("xla worker panicked")?;
+    }
+
+    let mut params = HashMap::new();
+    for name in servers[0].param_names() {
+        params.insert(name.clone(), servers[0].get(&name).0);
+    }
+    Ok(XlaJobReport { log, ledger, wall_ms: sw.elapsed_ms(), params })
+}
+
+/// Batcher adapter: integer labels → one-hot, pass-through otherwise.
+pub fn onehot_batcher(
+    src: Arc<dyn crate::data::DataSource>,
+    batch: usize,
+    classes: usize,
+    data_key: &str,
+    label_key: &str,
+) -> Batcher {
+    let data_key = data_key.to_string();
+    let label_key = label_key.to_string();
+    Arc::new(move |idx| {
+        let mut m = src.batch(idx, batch);
+        let labels = m.remove("label").expect("source must provide 'label'");
+        let rows = labels.len();
+        let mut oh = Blob::zeros(&[rows, classes]);
+        for (r, &l) in labels.data().iter().enumerate() {
+            oh.data_mut()[r * classes + l as usize] = 1.0;
+        }
+        let mut out = HashMap::new();
+        let data = m.remove("data").expect("source must provide 'data'");
+        // flatten NCHW to [b, dim] if the artifact expects 2-d data
+        out.insert(data_key.clone(), data);
+        out.insert(label_key.clone(), oh);
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticDigits;
+
+    fn ready() -> bool {
+        XlaRuntime::default_dir().join("manifest.json").exists()
+    }
+
+    /// End-to-end three-layer smoke: L3 coordinator + PJRT runtime + the
+    /// AOT-compiled JAX/Pallas MLP — loss must drop under SGD.
+    #[test]
+    fn xla_mlp_training_reduces_loss() {
+        if !ready() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut conf = XlaJobConf::new("mlp_step");
+        conf.iters = 12;
+        conf.updater = UpdaterConf::sgd(0.3);
+        let src = Arc::new(SyntheticDigits::new(784, 10, 5));
+        let batcher = onehot_batcher(src, 32, 10, "data", "label_onehot");
+        let report = run_xla_job(&conf, batcher).unwrap();
+        let recs = report.log.snapshot();
+        assert_eq!(recs.len(), 12);
+        let first = recs.first().unwrap().loss;
+        let last = recs.last().unwrap().loss;
+        assert!(
+            last < 0.6 * first,
+            "XLA training should reduce loss: {first} -> {last}"
+        );
+        assert!(report.ledger.param_bytes() > 0);
+    }
+}

@@ -1,0 +1,302 @@
+//! Parameter server (paper §5.1): server groups maintain complete replicas
+//! of the model parameters; each server in a group manages a partition
+//! (shard). Workers send `Update` messages with gradients and fetch fresh
+//! values with `Get`.
+//!
+//! * A [`ServerGroup`] owns a full parameter replica sharded over `size`
+//!   servers. Shard assignment is size-balanced (largest params first) so
+//!   ingress load spreads evenly.
+//! * Inside a worker group, dim-0 replicated sub-layer params are aggregated
+//!   by the group's stub before a single `Update` reaches the server (the
+//!   paper's stub "aggregates local messages and forwards them").
+//! * Across server groups (distributed Hogwild, Fig 11d), neighbouring
+//!   groups periodically synchronize by averaging — see [`ServerGroup::sync_with`].
+
+use crate::comm::{ByteLedger, Msg};
+use crate::tensor::Blob;
+use crate::updater::{Updater, UpdaterConf};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// One parameter's server-side record.
+struct ParamEntry {
+    value: Blob,
+    version: u64,
+    lr_mult: f32,
+    wd_mult: f32,
+}
+
+/// A single server (thread) managing a shard of the parameters.
+pub struct ServerShard {
+    params: HashMap<String, ParamEntry>,
+    updater: Updater,
+}
+
+impl ServerShard {
+    pub fn new(conf: UpdaterConf) -> ServerShard {
+        ServerShard { params: HashMap::new(), updater: Updater::new(conf) }
+    }
+
+    /// Handle one message; returns a response for `Get`/`Update`.
+    pub fn handle(&mut self, msg: Msg) -> Option<Msg> {
+        match msg {
+            Msg::Put { param, value, lr_mult, wd_mult } => {
+                self.params.insert(
+                    param,
+                    ParamEntry { value, version: 0, lr_mult, wd_mult },
+                );
+                None
+            }
+            Msg::Update { param, grad, step } => {
+                let e = self
+                    .params
+                    .get_mut(&param)
+                    .unwrap_or_else(|| panic!("update for unregistered param '{param}'"));
+                self.updater.update(&param, &mut e.value, &grad, e.lr_mult, e.wd_mult, step);
+                e.version += 1;
+                Some(Msg::Response { param, value: e.value.clone(), version: e.version })
+            }
+            Msg::Get { param } => {
+                let e = self
+                    .params
+                    .get(&param)
+                    .unwrap_or_else(|| panic!("get for unregistered param '{param}'"));
+                Some(Msg::Response { param, value: e.value.clone(), version: e.version })
+            }
+            Msg::Response { .. } => None,
+        }
+    }
+
+    pub fn param_names(&self) -> Vec<String> {
+        self.params.keys().cloned().collect()
+    }
+
+    pub fn value(&self, name: &str) -> Option<(&Blob, u64)> {
+        self.params.get(name).map(|e| (&e.value, e.version))
+    }
+
+    /// Overwrite a value (used by inter-group synchronization).
+    pub fn set_value(&mut self, name: &str, value: Blob) {
+        if let Some(e) = self.params.get_mut(name) {
+            e.value = value;
+            e.version += 1;
+        }
+    }
+}
+
+/// A server group: `size` shards plus the routing table.
+pub struct ServerGroup {
+    shards: Vec<Mutex<ServerShard>>,
+    /// param name → shard index.
+    route: Mutex<HashMap<String, usize>>,
+    /// bytes by plane, shared with the workers' ledger.
+    pub ledger: Arc<ByteLedger>,
+}
+
+impl ServerGroup {
+    pub fn new(size: usize, conf: UpdaterConf, ledger: Arc<ByteLedger>) -> ServerGroup {
+        assert!(size >= 1);
+        ServerGroup {
+            shards: (0..size).map(|_| Mutex::new(ServerShard::new(conf.clone()))).collect(),
+            route: Mutex::new(HashMap::new()),
+            ledger,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Register a parameter, assigning it to the shard with the least bytes
+    /// so far (size-balanced sharding).
+    pub fn put(&self, name: &str, value: Blob, lr_mult: f32, wd_mult: f32) {
+        let mut route = self.route.lock().unwrap();
+        let shard = if let Some(&s) = route.get(name) {
+            s
+        } else {
+            // least-loaded shard by registered parameter bytes
+            let mut loads = vec![0usize; self.shards.len()];
+            for (p, &s) in route.iter() {
+                let _ = p;
+                loads[s] += 1;
+            }
+            // count bytes precisely
+            let mut byte_loads = vec![0usize; self.shards.len()];
+            for (i, sh) in self.shards.iter().enumerate() {
+                let sh = sh.lock().unwrap();
+                byte_loads[i] = sh
+                    .params
+                    .values()
+                    .map(|e| e.value.byte_size())
+                    .sum();
+            }
+            let s = byte_loads
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &b)| b)
+                .map(|(i, _)| i)
+                .unwrap();
+            route.insert(name.to_string(), s);
+            s
+        };
+        drop(route);
+        let msg = Msg::Put { param: name.to_string(), value, lr_mult, wd_mult };
+        self.ledger.add_param(msg.byte_size());
+        self.shards[shard].lock().unwrap().handle(msg);
+    }
+
+    fn shard_of(&self, name: &str) -> usize {
+        *self
+            .route
+            .lock()
+            .unwrap()
+            .get(name)
+            .unwrap_or_else(|| panic!("param '{name}' not registered"))
+    }
+
+    /// Apply a gradient; returns the fresh value and version.
+    pub fn update(&self, name: &str, grad: &Blob, step: u64) -> (Blob, u64) {
+        let msg = Msg::Update { param: name.to_string(), grad: grad.clone(), step };
+        self.ledger.add_param(msg.byte_size());
+        let resp = self.shards[self.shard_of(name)].lock().unwrap().handle(msg).unwrap();
+        match resp {
+            Msg::Response { value, version, .. } => {
+                self.ledger.add_param(value.byte_size() + 64);
+                (value, version)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Fetch the current value and version.
+    pub fn get(&self, name: &str) -> (Blob, u64) {
+        let msg = Msg::Get { param: name.to_string() };
+        self.ledger.add_param(msg.byte_size());
+        let resp = self.shards[self.shard_of(name)].lock().unwrap().handle(msg).unwrap();
+        match resp {
+            Msg::Response { value, version, .. } => {
+                self.ledger.add_param(value.byte_size() + 64);
+                (value, version)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn param_names(&self) -> Vec<String> {
+        self.route.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Pairwise synchronization with a neighbouring server group
+    /// (distributed Hogwild, Fig 11d): both groups converge to the mean of
+    /// their replicas. Returns bytes exchanged (both directions).
+    pub fn sync_with(&self, other: &ServerGroup) -> usize {
+        let mut bytes = 0;
+        for name in self.param_names() {
+            let (a, _) = self.get(&name);
+            let (b, _) = other.get(&name);
+            let mut mean = a.clone();
+            mean.add_assign(&b);
+            mean.scale(0.5);
+            bytes += 2 * mean.byte_size();
+            self.shards[self.shard_of(&name)].lock().unwrap().set_value(&name, mean.clone());
+            other.shards[other.shard_of(&name)].lock().unwrap().set_value(&name, mean);
+        }
+        self.ledger.add_param(bytes);
+        bytes
+    }
+
+    /// Distribution of parameter bytes across shards (for balance tests and
+    /// the Fig 18b server-ingress model).
+    pub fn shard_loads(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.lock()
+                    .unwrap()
+                    .params
+                    .values()
+                    .map(|e| e.value.byte_size())
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::updater::UpdaterConf;
+
+    fn group(size: usize) -> ServerGroup {
+        ServerGroup::new(size, UpdaterConf::sgd(0.1), Arc::new(ByteLedger::new()))
+    }
+
+    #[test]
+    fn put_get_update_roundtrip() {
+        let g = group(2);
+        g.put("w", Blob::full(&[4], 1.0), 1.0, 1.0);
+        let (v, ver) = g.get("w");
+        assert_eq!(v.data(), &[1.0; 4]);
+        assert_eq!(ver, 0);
+        let (v2, ver2) = g.update("w", &Blob::full(&[4], 1.0), 0);
+        assert_eq!(ver2, 1);
+        for x in v2.data() {
+            assert!((x - 0.9).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not registered")]
+    fn get_unregistered_panics() {
+        group(1).get("ghost");
+    }
+
+    #[test]
+    fn sharding_balances_bytes() {
+        let g = group(4);
+        // Register params of mixed sizes.
+        for i in 0..16 {
+            let n = 100 + (i % 5) * 50;
+            g.put(&format!("p{i}"), Blob::zeros(&[n]), 1.0, 1.0);
+        }
+        let loads = g.shard_loads();
+        let max = *loads.iter().max().unwrap() as f64;
+        let min = *loads.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) < 2.0, "unbalanced shards: {loads:?}");
+    }
+
+    #[test]
+    fn versions_monotonic() {
+        let g = group(1);
+        g.put("w", Blob::zeros(&[2]), 1.0, 1.0);
+        let mut last = 0;
+        for step in 0..5 {
+            let (_, v) = g.update("w", &Blob::full(&[2], 0.1), step);
+            assert!(v > last);
+            last = v;
+        }
+    }
+
+    #[test]
+    fn ledger_sees_traffic() {
+        let ledger = Arc::new(ByteLedger::new());
+        let g = ServerGroup::new(1, UpdaterConf::sgd(0.1), ledger.clone());
+        g.put("w", Blob::zeros(&[100]), 1.0, 1.0);
+        let before = ledger.param_bytes();
+        g.update("w", &Blob::zeros(&[100]), 0);
+        // update sends 400B grad + header and receives 400B value + header
+        assert!(ledger.param_bytes() >= before + 800);
+    }
+
+    #[test]
+    fn hogwild_group_sync_averages() {
+        let a = group(1);
+        let b = group(1);
+        a.put("w", Blob::full(&[2], 0.0), 1.0, 1.0);
+        b.put("w", Blob::full(&[2], 2.0), 1.0, 1.0);
+        let bytes = a.sync_with(&b);
+        assert!(bytes > 0);
+        assert_eq!(a.get("w").0.data(), &[1.0, 1.0]);
+        assert_eq!(b.get("w").0.data(), &[1.0, 1.0]);
+    }
+}

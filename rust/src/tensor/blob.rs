@@ -1,0 +1,414 @@
+//! `Blob`: the dense n-d f32 tensor flowing between layers.
+//!
+//! Mirrors the paper's Fig 6: every layer owns feature/gradient blobs and
+//! `Param` objects wrap a pair of blobs. The first dimension is by
+//! convention the batch dimension (paper §5.3 "every layer's feature blob is
+//! considered a matrix whose rows are feature vectors"), so partitioning
+//! support is expressed as row/column slice + concat (dim 0 / dim 1).
+
+use crate::utils::rng::Rng;
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Blob {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Blob {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Blob{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, "{:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Blob {
+    /// Zero-filled blob.
+    pub fn zeros(shape: &[usize]) -> Blob {
+        let n: usize = shape.iter().product();
+        Blob { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Constant-filled blob.
+    pub fn full(shape: &[usize], v: f32) -> Blob {
+        let n: usize = shape.iter().product();
+        Blob { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Blob from existing data (length must match shape product).
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Blob {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} incompatible with data length {}",
+            shape,
+            data.len()
+        );
+        Blob { shape: shape.to_vec(), data }
+    }
+
+    /// Gaussian-initialized blob (weight init).
+    pub fn gaussian(shape: &[usize], std: f32, rng: &mut Rng) -> Blob {
+        let n: usize = shape.iter().product();
+        Blob { shape: shape.to_vec(), data: rng.gaussian_vec(n, std) }
+    }
+
+    /// Uniform-initialized blob.
+    pub fn uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut Rng) -> Blob {
+        let n: usize = shape.iter().product();
+        Blob { shape: shape.to_vec(), data: rng.uniform_vec(n, lo, hi) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of rows when viewed as a matrix (dim 0; batch dimension).
+    pub fn rows(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape[0]
+        }
+    }
+
+    /// Number of columns when viewed as a matrix (product of dims 1..).
+    pub fn cols(&self) -> usize {
+        if self.shape.len() <= 1 {
+            if self.shape.is_empty() { 1 } else { self.data.len() / self.shape[0].max(1) }
+        } else {
+            self.shape[1..].iter().product()
+        }
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret the shape without touching data.
+    pub fn reshape(&self, shape: &[usize]) -> Blob {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?}",
+            self.shape,
+            shape
+        );
+        Blob { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// `self += other` (shape-checked).
+    pub fn add_assign(&mut self, other: &Blob) {
+        assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Blob) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `self *= alpha`.
+    pub fn scale(&mut self, alpha: f32) {
+        self.data.iter_mut().for_each(|x| *x *= alpha);
+    }
+
+    /// Sum of elements.
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// Mean of elements (0 for empty).
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.data.len() as f32
+        }
+    }
+
+    /// L2 norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Size in bytes when serialized over the (simulated) wire — used by the
+    /// communication cost model (§5.4.1).
+    pub fn byte_size(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    // ---- Partitioning primitives (paper §5.3, Fig 12) ----
+
+    /// Slice rows `[start, start+count)` (batch-dimension partitioning;
+    /// partition_dim = 0).
+    pub fn slice_rows(&self, start: usize, count: usize) -> Blob {
+        let cols = self.cols();
+        let rows = self.rows();
+        assert!(start + count <= rows, "slice_rows {start}+{count} > {rows}");
+        let mut shape = self.shape.clone();
+        shape[0] = count;
+        Blob {
+            shape,
+            data: self.data[start * cols..(start + count) * cols].to_vec(),
+        }
+    }
+
+    /// Slice columns `[start, start+count)` of the matrix view (feature-
+    /// dimension partitioning; partition_dim = 1). Result is 2-d.
+    pub fn slice_cols(&self, start: usize, count: usize) -> Blob {
+        let rows = self.rows();
+        let cols = self.cols();
+        assert!(start + count <= cols, "slice_cols {start}+{count} > {cols}");
+        let mut data = Vec::with_capacity(rows * count);
+        for r in 0..rows {
+            let base = r * cols + start;
+            data.extend_from_slice(&self.data[base..base + count]);
+        }
+        Blob { shape: vec![rows, count], data }
+    }
+
+    /// Concatenate along dim 0 (rows). Inverse of `slice_rows` over even
+    /// splits; used by ConcatLayer.
+    pub fn concat_rows(parts: &[&Blob]) -> Blob {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols();
+        let mut shape = parts[0].shape.clone();
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            assert_eq!(p.cols(), cols, "concat_rows column mismatch");
+            rows += p.rows();
+            data.extend_from_slice(&p.data);
+        }
+        shape[0] = rows;
+        Blob { shape, data }
+    }
+
+    /// Concatenate along dim 1 (columns of the matrix view). Result is 2-d.
+    pub fn concat_cols(parts: &[&Blob]) -> Blob {
+        assert!(!parts.is_empty());
+        let rows = parts[0].rows();
+        let total_cols: usize = parts.iter().map(|p| p.cols()).sum();
+        let mut data = Vec::with_capacity(rows * total_cols);
+        for r in 0..rows {
+            for p in parts {
+                assert_eq!(p.rows(), rows, "concat_cols row mismatch");
+                let c = p.cols();
+                data.extend_from_slice(&p.data[r * c..(r + 1) * c]);
+            }
+        }
+        Blob { shape: vec![rows, total_cols], data }
+    }
+
+    /// Even split points for partitioning `total` into `k` parts: the first
+    /// `total % k` parts get one extra element (paper: mini-batch 256 into 2
+    /// sub-layers of 128 each).
+    pub fn split_points(total: usize, k: usize) -> Vec<(usize, usize)> {
+        assert!(k > 0);
+        let base = total / k;
+        let extra = total % k;
+        let mut out = Vec::with_capacity(k);
+        let mut start = 0;
+        for i in 0..k {
+            let count = base + usize::from(i < extra);
+            out.push((start, count));
+            start += count;
+        }
+        out
+    }
+}
+
+/// A learnable parameter: value + gradient blobs plus versioning metadata
+/// used by the parameter server (paper Fig 6 `Param`).
+#[derive(Debug, Clone)]
+pub struct Param {
+    /// Global name, e.g. `"conv1/weight"`. Sub-layer params share a prefix
+    /// with a slice suffix (e.g. `"fc1/weight@1of2"`).
+    pub name: String,
+    pub data: Blob,
+    pub grad: Blob,
+    /// Version incremented by the server on every update; workers use it to
+    /// detect staleness in asynchronous frameworks.
+    pub version: u64,
+    /// Multiplier on the learning rate (paper convention: bias terms often
+    /// train at 2x the weight LR).
+    pub lr_mult: f32,
+    /// L2 regularization multiplier.
+    pub wd_mult: f32,
+}
+
+impl Param {
+    pub fn new(name: &str, data: Blob) -> Param {
+        let grad = Blob::zeros(data.shape());
+        Param { name: name.to_string(), data, grad, version: 0, lr_mult: 1.0, wd_mult: 1.0 }
+    }
+
+    pub fn with_lr_mult(mut self, m: f32) -> Param {
+        self.lr_mult = m;
+        self
+    }
+
+    pub fn with_wd_mult(mut self, m: f32) -> Param {
+        self.wd_mult = m;
+        self
+    }
+
+    /// Number of scalar parameters.
+    pub fn size(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::quickcheck::{forall, prop_assert, prop_close};
+
+    #[test]
+    fn construction_and_views() {
+        let b = Blob::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(b.rows(), 2);
+        assert_eq!(b.cols(), 3);
+        assert_eq!(b.len(), 6);
+        assert_eq!(b.byte_size(), 24);
+        let r = b.reshape(&[3, 2]);
+        assert_eq!(r.rows(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible")]
+    fn bad_shape_panics() {
+        Blob::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let mut a = Blob::full(&[2, 2], 1.0);
+        let b = Blob::full(&[2, 2], 2.0);
+        a.add_assign(&b);
+        assert_eq!(a.data(), &[3.0; 4]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[4.0; 4]);
+        a.scale(0.25);
+        assert_eq!(a.data(), &[1.0; 4]);
+        assert_eq!(a.sum(), 4.0);
+        assert_eq!(a.mean(), 1.0);
+        assert!((a.norm() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn slicing_rows() {
+        let b = Blob::from_vec(&[4, 2], (0..8).map(|x| x as f32).collect());
+        let s = b.slice_rows(1, 2);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[2., 3., 4., 5.]);
+    }
+
+    #[test]
+    fn slicing_cols() {
+        let b = Blob::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let s = b.slice_cols(1, 2);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[2., 3., 5., 6.]);
+    }
+
+    #[test]
+    fn concat_inverts_slice_rows() {
+        forall(50, |g| {
+            let rows = g.usize(1, 12);
+            let cols = g.usize(1, 8);
+            let k = g.usize(1, rows);
+            let b = Blob::from_vec(&[rows, cols], g.f32_vec(rows * cols, -1.0, 1.0));
+            let parts: Vec<Blob> = Blob::split_points(rows, k)
+                .into_iter()
+                .map(|(s, c)| b.slice_rows(s, c))
+                .collect();
+            let refs: Vec<&Blob> = parts.iter().collect();
+            let back = Blob::concat_rows(&refs);
+            prop_close(back.data(), b.data(), 0.0, 0.0, "roundtrip rows")
+        });
+    }
+
+    #[test]
+    fn concat_inverts_slice_cols() {
+        forall(50, |g| {
+            let rows = g.usize(1, 8);
+            let cols = g.usize(1, 12);
+            let k = g.usize(1, cols);
+            let b = Blob::from_vec(&[rows, cols], g.f32_vec(rows * cols, -1.0, 1.0));
+            let parts: Vec<Blob> = Blob::split_points(cols, k)
+                .into_iter()
+                .map(|(s, c)| b.slice_cols(s, c))
+                .collect();
+            let refs: Vec<&Blob> = parts.iter().collect();
+            let back = Blob::concat_cols(&refs);
+            prop_close(back.data(), b.data(), 0.0, 0.0, "roundtrip cols")
+        });
+    }
+
+    #[test]
+    fn split_points_cover_exactly() {
+        forall(100, |g| {
+            let total = g.usize(1, 100);
+            let k = g.usize(1, 16);
+            let pts = Blob::split_points(total, k);
+            let covered: usize = pts.iter().map(|&(_, c)| c).sum();
+            prop_assert(pts.len() == k && covered == total, "coverage")?;
+            // contiguity
+            let mut pos = 0;
+            for &(s, c) in &pts {
+                prop_assert(s == pos, "contiguous")?;
+                pos = s + c;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn split_points_balanced() {
+        let pts = Blob::split_points(256, 2);
+        assert_eq!(pts, vec![(0, 128), (128, 128)]);
+        let pts = Blob::split_points(10, 3);
+        assert_eq!(pts, vec![(0, 4), (4, 3), (7, 3)]);
+    }
+
+    #[test]
+    fn param_metadata() {
+        let p = Param::new("fc/w", Blob::zeros(&[3, 4])).with_lr_mult(2.0).with_wd_mult(0.0);
+        assert_eq!(p.size(), 12);
+        assert_eq!(p.lr_mult, 2.0);
+        assert_eq!(p.wd_mult, 0.0);
+        assert_eq!(p.grad.shape(), &[3, 4]);
+        assert_eq!(p.version, 0);
+    }
+}

@@ -1,0 +1,466 @@
+//! Convolution and pooling primitives via im2col — the approach the paper
+//! adopts from Caffe (§6.2.1 "Caffe's im2col and pooling code is adopted").
+//!
+//! Layout: images are `[batch, channels, height, width]` row-major.
+
+use super::blob::Blob;
+use super::gemm::{gemm, Transpose};
+
+/// Static geometry of a conv/pool operation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Conv2dGeom {
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2dGeom {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.kernel) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.kernel) / self.stride + 1
+    }
+
+    /// Rows of the im2col matrix = kernel*kernel*in_c.
+    pub fn col_rows(&self) -> usize {
+        self.in_c * self.kernel * self.kernel
+    }
+
+    /// Cols of the im2col matrix = out_h*out_w.
+    pub fn col_cols(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+}
+
+/// Unfold one image `[C,H,W]` into the im2col matrix
+/// `[C*k*k, out_h*out_w]` (zero padding outside the image).
+pub fn im2col(img: &[f32], g: &Conv2dGeom, out: &mut [f32]) {
+    let (oh, ow) = (g.out_h(), g.out_w());
+    assert_eq!(img.len(), g.in_c * g.in_h * g.in_w, "im2col input size");
+    assert_eq!(out.len(), g.col_rows() * g.col_cols(), "im2col output size");
+    let mut row = 0;
+    for c in 0..g.in_c {
+        for ky in 0..g.kernel {
+            for kx in 0..g.kernel {
+                let base = row * oh * ow;
+                for oy in 0..oh {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    for ox in 0..ow {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        out[base + oy * ow + ox] = if iy >= 0
+                            && (iy as usize) < g.in_h
+                            && ix >= 0
+                            && (ix as usize) < g.in_w
+                        {
+                            img[c * g.in_h * g.in_w + iy as usize * g.in_w + ix as usize]
+                        } else {
+                            0.0
+                        };
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// Fold an im2col matrix back into image gradients (transpose of `im2col`,
+/// accumulating where patches overlap).
+pub fn col2im(col: &[f32], g: &Conv2dGeom, img: &mut [f32]) {
+    let (oh, ow) = (g.out_h(), g.out_w());
+    img.iter_mut().for_each(|v| *v = 0.0);
+    let mut row = 0;
+    for c in 0..g.in_c {
+        for ky in 0..g.kernel {
+            for kx in 0..g.kernel {
+                let base = row * oh * ow;
+                for oy in 0..oh {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    for ox in 0..ow {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        if iy >= 0 && (iy as usize) < g.in_h && ix >= 0 && (ix as usize) < g.in_w
+                        {
+                            img[c * g.in_h * g.in_w + iy as usize * g.in_w + ix as usize] +=
+                                col[base + oy * ow + ox];
+                        }
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// Forward convolution: input `[B,C,H,W]`, weight `[out_c, C*k*k]`, bias
+/// `[out_c]` → output `[B, out_c, out_h, out_w]`. Also returns the im2col
+/// buffers (one per image) for reuse in the backward pass.
+pub fn conv2d_forward(
+    input: &Blob,
+    weight: &Blob,
+    bias: &Blob,
+    g: &Conv2dGeom,
+) -> (Blob, Vec<Vec<f32>>) {
+    let b = input.shape()[0];
+    let out_c = weight.shape()[0];
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let img_len = g.in_c * g.in_h * g.in_w;
+    let mut out = Blob::zeros(&[b, out_c, oh, ow]);
+    let mut cols = Vec::with_capacity(b);
+    let (cr, cc) = (g.col_rows(), g.col_cols());
+    // Batch all images into ONE wide GEMM: W [out_c, cr] @ bigcol
+    // [cr, b*cc]. The weight pack is amortized across the whole batch
+    // (perf pass, EXPERIMENTS.md §Perf L3 iteration 5).
+    let mut bigcol = vec![0.0f32; cr * b * cc];
+    for i in 0..b {
+        let mut col = vec![0.0f32; cr * cc];
+        im2col(&input.data()[i * img_len..(i + 1) * img_len], g, &mut col);
+        for r in 0..cr {
+            bigcol[r * b * cc + i * cc..r * b * cc + (i + 1) * cc]
+                .copy_from_slice(&col[r * cc..(r + 1) * cc]);
+        }
+        cols.push(col);
+    }
+    let mut bigout = vec![0.0f32; out_c * b * cc];
+    gemm(Transpose::No, Transpose::No, out_c, b * cc, cr, 1.0, weight.data(), &bigcol, 0.0, &mut bigout);
+    for i in 0..b {
+        let dst = &mut out.data_mut()[i * out_c * cc..(i + 1) * out_c * cc];
+        for oc in 0..out_c {
+            let bv = bias.data()[oc];
+            let src = &bigout[oc * b * cc + i * cc..oc * b * cc + (i + 1) * cc];
+            for (d, s) in dst[oc * cc..(oc + 1) * cc].iter_mut().zip(src) {
+                *d = s + bv;
+            }
+        }
+    }
+    (out, cols)
+}
+
+/// Backward convolution: returns (d_input, d_weight, d_bias).
+pub fn conv2d_backward(
+    input: &Blob,
+    weight: &Blob,
+    grad_out: &Blob,
+    cols: &[Vec<f32>],
+    g: &Conv2dGeom,
+) -> (Blob, Blob, Blob) {
+    let b = input.shape()[0];
+    let out_c = weight.shape()[0];
+    let (cr, cc) = (g.col_rows(), g.col_cols());
+    let img_len = g.in_c * g.in_h * g.in_w;
+
+    let mut d_input = Blob::zeros(input.shape());
+    let mut d_weight = Blob::zeros(weight.shape());
+    let mut d_bias = Blob::zeros(&[out_c]);
+    let mut d_col = vec![0.0f32; cr * cc];
+
+    for i in 0..b {
+        let go = &grad_out.data()[i * out_c * cc..(i + 1) * out_c * cc];
+        // dW += dOut [out_c, cc] @ col^T [cc, cr]
+        gemm(
+            Transpose::No,
+            Transpose::Yes,
+            out_c,
+            cr,
+            cc,
+            1.0,
+            go,
+            &cols[i],
+            1.0,
+            d_weight.data_mut(),
+        );
+        // d_col = W^T [cr, out_c] @ dOut [out_c, cc]
+        gemm(Transpose::Yes, Transpose::No, cr, cc, out_c, 1.0, weight.data(), go, 0.0, &mut d_col);
+        col2im(&d_col, g, &mut d_input.data_mut()[i * img_len..(i + 1) * img_len]);
+        for oc in 0..out_c {
+            d_bias.data_mut()[oc] += go[oc * cc..(oc + 1) * cc].iter().sum::<f32>();
+        }
+    }
+    (d_input, d_weight, d_bias)
+}
+
+/// Max-pool forward: input `[B,C,H,W]` → (output, argmax indices).
+pub fn maxpool_forward(input: &Blob, g: &Conv2dGeom) -> (Blob, Vec<usize>) {
+    let b = input.shape()[0];
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let img_len = g.in_c * g.in_h * g.in_w;
+    let mut out = Blob::zeros(&[b, g.in_c, oh, ow]);
+    let mut arg = vec![0usize; b * g.in_c * oh * ow];
+    for i in 0..b {
+        for c in 0..g.in_c {
+            let plane = &input.data()[i * img_len + c * g.in_h * g.in_w..];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_idx = 0;
+                    for ky in 0..g.kernel {
+                        let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                        if iy < 0 || iy as usize >= g.in_h {
+                            continue;
+                        }
+                        for kx in 0..g.kernel {
+                            let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                            if ix < 0 || ix as usize >= g.in_w {
+                                continue;
+                            }
+                            let idx = iy as usize * g.in_w + ix as usize;
+                            if plane[idx] > best {
+                                best = plane[idx];
+                                best_idx = idx;
+                            }
+                        }
+                    }
+                    let o = ((i * g.in_c + c) * oh + oy) * ow + ox;
+                    out.data_mut()[o] = best;
+                    arg[o] = i * img_len + c * g.in_h * g.in_w + best_idx;
+                }
+            }
+        }
+    }
+    (out, arg)
+}
+
+/// Max-pool backward: scatter output grads to the argmax positions.
+pub fn maxpool_backward(input_shape: &[usize], grad_out: &Blob, arg: &[usize]) -> Blob {
+    let mut d_input = Blob::zeros(input_shape);
+    for (o, &src) in arg.iter().enumerate() {
+        d_input.data_mut()[src] += grad_out.data()[o];
+    }
+    d_input
+}
+
+/// Average-pool forward.
+pub fn avgpool_forward(input: &Blob, g: &Conv2dGeom) -> Blob {
+    let b = input.shape()[0];
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let img_len = g.in_c * g.in_h * g.in_w;
+    let mut out = Blob::zeros(&[b, g.in_c, oh, ow]);
+    let k2 = (g.kernel * g.kernel) as f32;
+    for i in 0..b {
+        for c in 0..g.in_c {
+            let plane = &input.data()[i * img_len + c * g.in_h * g.in_w..];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0;
+                    for ky in 0..g.kernel {
+                        let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                        if iy < 0 || iy as usize >= g.in_h {
+                            continue;
+                        }
+                        for kx in 0..g.kernel {
+                            let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                            if ix < 0 || ix as usize >= g.in_w {
+                                continue;
+                            }
+                            acc += plane[iy as usize * g.in_w + ix as usize];
+                        }
+                    }
+                    out.data_mut()[((i * g.in_c + c) * oh + oy) * ow + ox] = acc / k2;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Local response normalization across channels (AlexNet §3.3):
+/// `b[c] = a[c] / (k + alpha/n * sum_{c'} a[c']^2)^beta`.
+pub fn lrn_forward(input: &Blob, size: usize, alpha: f32, beta: f32, k: f32) -> Blob {
+    let (b, c, h, w) = nchw(input);
+    let mut out = input.clone();
+    let plane = h * w;
+    for i in 0..b {
+        for y in 0..plane {
+            for ch in 0..c {
+                let lo = ch.saturating_sub(size / 2);
+                let hi = (ch + size / 2 + 1).min(c);
+                let mut acc = 0.0;
+                for cc in lo..hi {
+                    let v = input.data()[(i * c + cc) * plane + y];
+                    acc += v * v;
+                }
+                let denom = (k + alpha / size as f32 * acc).powf(beta);
+                out.data_mut()[(i * c + ch) * plane + y] /= denom;
+            }
+        }
+    }
+    out
+}
+
+fn nchw(x: &Blob) -> (usize, usize, usize, usize) {
+    let s = x.shape();
+    assert_eq!(s.len(), 4, "expected NCHW blob, got {s:?}");
+    (s[0], s[1], s[2], s[3])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::quickcheck::{forall, prop_close};
+    use crate::utils::rng::Rng;
+
+    fn geom(c: usize, h: usize, w: usize, k: usize, s: usize, p: usize) -> Conv2dGeom {
+        Conv2dGeom { in_c: c, in_h: h, in_w: w, kernel: k, stride: s, pad: p }
+    }
+
+    #[test]
+    fn geometry() {
+        let g = geom(3, 32, 32, 5, 1, 2);
+        assert_eq!(g.out_h(), 32);
+        assert_eq!(g.out_w(), 32);
+        let g = geom(3, 32, 32, 3, 2, 0);
+        assert_eq!(g.out_h(), 15);
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // k=1, s=1, p=0 → im2col is the identity on each channel plane.
+        let g = geom(2, 3, 3, 1, 1, 0);
+        let img: Vec<f32> = (0..18).map(|x| x as f32).collect();
+        let mut col = vec![0.0; g.col_rows() * g.col_cols()];
+        im2col(&img, &g, &mut col);
+        assert_eq!(col, img);
+    }
+
+    #[test]
+    fn im2col_known_patch() {
+        let g = geom(1, 3, 3, 2, 1, 0);
+        let img = [1., 2., 3., 4., 5., 6., 7., 8., 9.];
+        let mut col = vec![0.0; g.col_rows() * g.col_cols()];
+        im2col(&img, &g, &mut col);
+        // rows are kernel positions, cols are the 4 output locations
+        assert_eq!(col[0..4], [1., 2., 4., 5.]); // ky=0,kx=0
+        assert_eq!(col[4..8], [2., 3., 5., 6.]); // ky=0,kx=1
+        assert_eq!(col[8..12], [4., 5., 7., 8.]); // ky=1,kx=0
+        assert_eq!(col[12..16], [5., 6., 8., 9.]); // ky=1,kx=1
+    }
+
+    #[test]
+    fn conv_forward_known_value() {
+        // 1x1 input channel, 3x3 image of ones, 2x2 kernel of ones → each
+        // output = 4 + bias.
+        let g = geom(1, 3, 3, 2, 1, 0);
+        let input = Blob::full(&[1, 1, 3, 3], 1.0);
+        let weight = Blob::full(&[1, 4], 1.0);
+        let bias = Blob::from_vec(&[1], vec![0.5]);
+        let (out, _) = conv2d_forward(&input, &weight, &bias, &g);
+        assert_eq!(out.shape(), &[1, 1, 2, 2]);
+        assert_eq!(out.data(), &[4.5; 4]);
+    }
+
+    /// Convolution gradient check against numerical differentiation.
+    #[test]
+    fn conv_backward_numerical() {
+        let g = geom(2, 5, 5, 3, 1, 1);
+        let mut rng = Rng::new(77);
+        let input = Blob::from_vec(&[2, 2, 5, 5], rng.uniform_vec(100, -1.0, 1.0));
+        let out_c = 3;
+        let weight = Blob::from_vec(&[out_c, g.col_rows()], rng.uniform_vec(out_c * g.col_rows(), -0.5, 0.5));
+        let bias = Blob::zeros(&[out_c]);
+
+        // Scalar objective: sum of outputs.
+        let f = |input: &Blob, weight: &Blob| -> f32 {
+            conv2d_forward(input, weight, &bias, &g).0.sum()
+        };
+
+        let (out, cols) = conv2d_forward(&input, &weight, &bias, &g);
+        let grad_out = Blob::full(out.shape(), 1.0);
+        let (d_in, d_w, d_b) = conv2d_backward(&input, &weight, &grad_out, &cols, &g);
+
+        let eps = 1e-2;
+        // spot-check 12 coordinates of d_input
+        for i in (0..input.len()).step_by(input.len() / 12) {
+            let mut p = input.clone();
+            p.data_mut()[i] += eps;
+            let mut m = input.clone();
+            m.data_mut()[i] -= eps;
+            let num = (f(&p, &weight) - f(&m, &weight)) / (2.0 * eps);
+            assert!(
+                (num - d_in.data()[i]).abs() < 2e-2,
+                "d_input[{i}]: numeric {num} vs {}",
+                d_in.data()[i]
+            );
+        }
+        // spot-check d_weight
+        for i in (0..weight.len()).step_by(weight.len() / 12) {
+            let mut p = weight.clone();
+            p.data_mut()[i] += eps;
+            let mut m = weight.clone();
+            m.data_mut()[i] -= eps;
+            let num = (f(&input, &p) - f(&input, &m)) / (2.0 * eps);
+            assert!(
+                (num - d_w.data()[i]).abs() < 5e-2,
+                "d_weight[{i}]: numeric {num} vs {}",
+                d_w.data()[i]
+            );
+        }
+        // bias gradient is just the count of output positions per channel
+        let per_c = 2.0 * (g.out_h() * g.out_w()) as f32;
+        for &v in d_b.data() {
+            assert!((v - per_c).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn col2im_is_im2col_transpose() {
+        // <im2col(x), y> == <x, col2im(y)> for random x, y (adjoint test).
+        forall(20, |g_| {
+            let c = g_.usize(1, 3);
+            let h = g_.usize(3, 7);
+            let k = g_.usize(1, 3.min(h));
+            let g = geom(c, h, h, k, 1, g_.usize(0, 1));
+            let x = g_.f32_vec(c * h * h, -1.0, 1.0);
+            let y = g_.f32_vec(g.col_rows() * g.col_cols(), -1.0, 1.0);
+            let mut cx = vec![0.0; y.len()];
+            im2col(&x, &g, &mut cx);
+            let mut ty = vec![0.0; x.len()];
+            col2im(&y, &g, &mut ty);
+            let lhs: f32 = cx.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let rhs: f32 = x.iter().zip(&ty).map(|(a, b)| a * b).sum();
+            prop_close(&[lhs], &[rhs], 1e-2, 1e-3, "adjoint")
+        });
+    }
+
+    #[test]
+    fn maxpool_forward_backward() {
+        let g = geom(1, 4, 4, 2, 2, 0);
+        let input = Blob::from_vec(
+            &[1, 1, 4, 4],
+            vec![1., 2., 3., 4., 5., 6., 7., 8., 9., 10., 11., 12., 13., 14., 15., 16.],
+        );
+        let (out, arg) = maxpool_forward(&input, &g);
+        assert_eq!(out.shape(), &[1, 1, 2, 2]);
+        assert_eq!(out.data(), &[6., 8., 14., 16.]);
+        let go = Blob::from_vec(&[1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let d = maxpool_backward(input.shape(), &go, &arg);
+        assert_eq!(d.data()[5], 1.0);
+        assert_eq!(d.data()[7], 2.0);
+        assert_eq!(d.data()[13], 3.0);
+        assert_eq!(d.data()[15], 4.0);
+        assert_eq!(d.sum(), 10.0);
+    }
+
+    #[test]
+    fn avgpool_values() {
+        let g = geom(1, 2, 2, 2, 2, 0);
+        let input = Blob::from_vec(&[1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let out = avgpool_forward(&input, &g);
+        assert_eq!(out.data(), &[2.5]);
+    }
+
+    #[test]
+    fn lrn_shape_preserving_and_shrinks() {
+        let mut rng = Rng::new(3);
+        let x = Blob::from_vec(&[1, 4, 2, 2], rng.uniform_vec(16, 0.5, 1.5));
+        let y = lrn_forward(&x, 3, 1e-2, 0.75, 2.0);
+        assert_eq!(y.shape(), x.shape());
+        // k=2, beta>0 → outputs strictly smaller in magnitude
+        for (a, b) in x.data().iter().zip(y.data()) {
+            assert!(b.abs() < a.abs());
+        }
+    }
+}

@@ -1,0 +1,319 @@
+//! Blocked single-precision GEMM — the OpenBLAS stand-in for the native
+//! backend. `C = alpha * op(A) @ op(B) + beta * C` with row-major storage.
+//!
+//! The kernel packs the operands into cache-friendly tiles and accumulates
+//! with 4-wide column unrolling, which the compiler auto-vectorizes. The
+//! perf pass (EXPERIMENTS.md §Perf) records the blocking iterations.
+
+/// Whether an operand is logically transposed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transpose {
+    No,
+    Yes,
+}
+
+/// `C[m,n] = alpha * op(A)[m,k] @ op(B)[k,n] + beta * C[m,n]`.
+///
+/// `a` is `m x k` when `ta == No`, else `k x m` (and similarly for `b`).
+/// All matrices are dense row-major slices.
+pub fn gemm(
+    ta: Transpose,
+    tb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "A size");
+    assert_eq!(b.len(), k * n, "B size");
+    assert_eq!(c.len(), m * n, "C size");
+
+    if beta == 0.0 {
+        c.iter_mut().for_each(|x| *x = 0.0);
+    } else if beta != 1.0 {
+        c.iter_mut().for_each(|x| *x *= beta);
+    }
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+
+    // Pack op(A) row-major (m x k) and op(B) row-major (k x n) tile by tile.
+    // Tiles sized to keep the working set (~MC*KC + KC*NC floats) in L2.
+    const MC: usize = 64;
+    const KC: usize = 256;
+    const NC: usize = 256;
+
+    let mut a_pack = vec![0.0f32; MC * KC];
+    let mut b_pack = vec![0.0f32; KC * NC];
+
+    let mut kk = 0;
+    while kk < k {
+        let kb = KC.min(k - kk);
+        let mut jj = 0;
+        while jj < n {
+            let nb = NC.min(n - jj);
+            pack_b(tb, b, k, n, kk, jj, kb, nb, &mut b_pack);
+            let mut ii = 0;
+            while ii < m {
+                let mb = MC.min(m - ii);
+                pack_a(ta, a, m, k, ii, kk, mb, kb, &mut a_pack);
+                kernel(mb, nb, kb, alpha, &a_pack, &b_pack, &mut c[ii * n + jj..], n, NC);
+                ii += mb;
+            }
+            jj += nb;
+        }
+        kk += kb;
+    }
+}
+
+/// Pack a `mb x kb` tile of op(A) starting at (ii, kk) into row-major.
+#[inline]
+fn pack_a(
+    ta: Transpose,
+    a: &[f32],
+    _m: usize,
+    k: usize,
+    ii: usize,
+    kk: usize,
+    mb: usize,
+    kb: usize,
+    out: &mut [f32],
+) {
+    match ta {
+        Transpose::No => {
+            for r in 0..mb {
+                let src = (ii + r) * k + kk;
+                out[r * kb..r * kb + kb].copy_from_slice(&a[src..src + kb]);
+            }
+        }
+        Transpose::Yes => {
+            // A is stored k x m; op(A)[r, c] = A[c, r].
+            let m_stride = _m;
+            for r in 0..mb {
+                for c in 0..kb {
+                    out[r * kb + c] = a[(kk + c) * m_stride + (ii + r)];
+                }
+            }
+        }
+    }
+}
+
+/// Pack a `kb x nb` tile of op(B) starting at (kk, jj) into row-major.
+#[inline]
+fn pack_b(
+    tb: Transpose,
+    b: &[f32],
+    k: usize,
+    n: usize,
+    kk: usize,
+    jj: usize,
+    kb: usize,
+    nb: usize,
+    out: &mut [f32],
+) {
+    match tb {
+        Transpose::No => {
+            for r in 0..kb {
+                let src = (kk + r) * n + jj;
+                out[r * nb..r * nb + nb].copy_from_slice(&b[src..src + nb]);
+            }
+        }
+        Transpose::Yes => {
+            // B is stored n x k; op(B)[r, c] = B[c, r].
+            let _ = n;
+            for r in 0..kb {
+                for c in 0..nb {
+                    out[r * nb + c] = b[(jj + c) * k + (kk + r)];
+                }
+            }
+        }
+    }
+}
+
+/// Micro-kernel over packed tiles: C_tile += alpha * Apack @ Bpack.
+/// `c` points at C[ii*n + jj]; rows of the C tile are `ldc` apart.
+#[inline]
+fn kernel(
+    mb: usize,
+    nb: usize,
+    kb: usize,
+    alpha: f32,
+    a_pack: &[f32],
+    b_pack: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    nc: usize,
+) {
+    let _ = nc;
+    // 2-row register blocking: each pass streams one B row against two A
+    // scalars, halving B-pack traffic. chunks_exact elides bounds checks so
+    // LLVM emits SIMD FMA over the 8-wide lanes.
+    let mut r = 0;
+    while r + 2 <= mb {
+        let (arow0, arow1) = (&a_pack[r * kb..r * kb + kb], &a_pack[(r + 1) * kb..(r + 1) * kb + kb]);
+        let (c0, c1) = c[r * ldc..].split_at_mut(ldc);
+        let c0 = &mut c0[..nb];
+        let c1 = &mut c1[..nb];
+        for p in 0..kb {
+            let av0 = arow0[p] * alpha;
+            let av1 = arow1[p] * alpha;
+            let brow = &b_pack[p * nb..p * nb + nb];
+            let mut b8 = brow.chunks_exact(8);
+            let mut c08 = c0.chunks_exact_mut(8);
+            let mut c18 = c1.chunks_exact_mut(8);
+            for ((bv, cv0), cv1) in (&mut b8).zip(&mut c08).zip(&mut c18) {
+                for i in 0..8 {
+                    cv0[i] += av0 * bv[i];
+                    cv1[i] += av1 * bv[i];
+                }
+            }
+            let rem = b8.remainder();
+            let c0r = c08.into_remainder();
+            let c1r = c18.into_remainder();
+            for i in 0..rem.len() {
+                c0r[i] += av0 * rem[i];
+                c1r[i] += av1 * rem[i];
+            }
+        }
+        r += 2;
+    }
+    if r < mb {
+        let arow = &a_pack[r * kb..r * kb + kb];
+        let crow = &mut c[r * ldc..r * ldc + nb];
+        for (p, &av) in arow.iter().enumerate() {
+            let av = av * alpha;
+            let brow = &b_pack[p * nb..p * nb + nb];
+            let mut b8 = brow.chunks_exact(8);
+            let mut c8 = crow.chunks_exact_mut(8);
+            for (bv, cv) in (&mut b8).zip(&mut c8) {
+                for i in 0..8 {
+                    cv[i] += av * bv[i];
+                }
+            }
+            let rem = b8.remainder();
+            let cr = c8.into_remainder();
+            for i in 0..rem.len() {
+                cr[i] += av * rem[i];
+            }
+        }
+    }
+}
+
+/// Naive reference used by tests.
+pub fn gemm_ref(
+    ta: Transpose,
+    tb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                let av = match ta {
+                    Transpose::No => a[i * k + p],
+                    Transpose::Yes => a[p * m + i],
+                };
+                let bv = match tb {
+                    Transpose::No => b[p * n + j],
+                    Transpose::Yes => b[j * k + p],
+                };
+                acc += av * bv;
+            }
+            c[i * n + j] = alpha * acc + beta * c[i * n + j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::quickcheck::{forall, prop_close};
+
+    fn check(ta: Transpose, tb: Transpose, m: usize, n: usize, k: usize, alpha: f32, beta: f32) {
+        let mut rng = crate::utils::rng::Rng::new((m * 31 + n * 7 + k) as u64);
+        let a = rng.uniform_vec(m * k, -1.0, 1.0);
+        let b = rng.uniform_vec(k * n, -1.0, 1.0);
+        let c0 = rng.uniform_vec(m * n, -1.0, 1.0);
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        gemm(ta, tb, m, n, k, alpha, &a, &b, beta, &mut c1);
+        gemm_ref(ta, tb, m, n, k, alpha, &a, &b, beta, &mut c2);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-3 + 1e-4 * y.abs(), "{x} vs {y} (m={m} n={n} k={k})");
+        }
+    }
+
+    #[test]
+    fn small_exact() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let a = [1., 2., 3., 4.];
+        let b = [1., 1., 1., 1.];
+        let mut c = [0.0; 4];
+        gemm(Transpose::No, Transpose::No, 2, 2, 2, 1.0, &a, &b, 0.0, &mut c);
+        assert_eq!(c, [3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn all_transpose_combos() {
+        for &(ta, tb) in &[
+            (Transpose::No, Transpose::No),
+            (Transpose::No, Transpose::Yes),
+            (Transpose::Yes, Transpose::No),
+            (Transpose::Yes, Transpose::Yes),
+        ] {
+            check(ta, tb, 5, 7, 3, 1.0, 0.0);
+            check(ta, tb, 64, 64, 64, 1.0, 0.0);
+        }
+    }
+
+    #[test]
+    fn alpha_beta() {
+        check(Transpose::No, Transpose::No, 8, 8, 8, 2.5, 0.5);
+        check(Transpose::No, Transpose::No, 8, 8, 8, 0.0, 1.0);
+        check(Transpose::Yes, Transpose::No, 13, 9, 17, -1.0, 2.0);
+    }
+
+    #[test]
+    fn crosses_block_boundaries() {
+        // Sizes straddling MC/KC/NC.
+        check(Transpose::No, Transpose::No, 65, 257, 300, 1.0, 0.0);
+        check(Transpose::No, Transpose::Yes, 70, 130, 260, 1.0, 1.0);
+    }
+
+    #[test]
+    fn property_matches_reference() {
+        forall(25, |g| {
+            let m = g.usize(1, 40);
+            let n = g.usize(1, 40);
+            let k = g.usize(1, 40);
+            let a = g.f32_vec(m * k, -1.0, 1.0);
+            let b = g.f32_vec(k * n, -1.0, 1.0);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            gemm(Transpose::No, Transpose::No, m, n, k, 1.0, &a, &b, 0.0, &mut c1);
+            gemm_ref(Transpose::No, Transpose::No, m, n, k, 1.0, &a, &b, 0.0, &mut c2);
+            prop_close(&c1, &c2, 1e-3, 1e-4, "gemm vs ref")
+        });
+    }
+
+    #[test]
+    fn degenerate_dims() {
+        let mut c = vec![5.0; 0];
+        gemm(Transpose::No, Transpose::No, 0, 0, 0, 1.0, &[], &[], 0.0, &mut c);
+        // k = 0 → C = beta*C
+        let mut c = vec![2.0; 4];
+        gemm(Transpose::No, Transpose::No, 2, 2, 0, 1.0, &[], &[], 0.5, &mut c);
+        assert_eq!(c, [1.0; 4]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Native tensor math library — the role OpenBLAS + Mshadow play in the
+//! paper (§6.2.1): dense f32 blobs plus the linear-algebra and neural-net
+//! primitives the built-in layers need.
+//!
+//! This is the `NativeBackend` compute substrate. The production hot loop
+//! runs AOT-compiled XLA executables instead (see [`crate::runtime`]); the
+//! native path is the reference implementation, the engine for partitioning
+//! experiments with configuration-dependent shapes, and the baseline for
+//! the op-level-parallelism comparisons in Fig 18(a).
+
+pub mod blob;
+pub mod gemm;
+pub mod ops;
+pub mod conv;
+
+pub use blob::Blob;
+pub use gemm::{gemm, Transpose};

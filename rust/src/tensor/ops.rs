@@ -1,0 +1,339 @@
+//! Elementwise / reduction / matrix ops used by the built-in layers.
+//!
+//! These are the "linear algebra functions" the paper exposes to layer
+//! implementers (§5.1); in SINGA they dispatch to CPU or GPU — here they are
+//! the native-backend implementations, with the XLA path covering the
+//! AOT-compiled production loop.
+
+use super::blob::Blob;
+use super::gemm::{gemm, Transpose};
+
+/// `C = A @ B` on the matrix views of the blobs.
+pub fn matmul(a: &Blob, b: &Blob) -> Blob {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dim: {:?} @ {:?}", a.shape(), b.shape());
+    let mut c = Blob::zeros(&[m, n]);
+    gemm(Transpose::No, Transpose::No, m, n, k, 1.0, a.data(), b.data(), 0.0, c.data_mut());
+    c
+}
+
+/// `C = A^T @ B`.
+pub fn matmul_tn(a: &Blob, b: &Blob) -> Blob {
+    let (k, m) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_tn inner dim");
+    let mut c = Blob::zeros(&[m, n]);
+    gemm(Transpose::Yes, Transpose::No, m, n, k, 1.0, a.data(), b.data(), 0.0, c.data_mut());
+    c
+}
+
+/// `C = A @ B^T`.
+pub fn matmul_nt(a: &Blob, b: &Blob) -> Blob {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_nt inner dim");
+    let mut c = Blob::zeros(&[m, n]);
+    gemm(Transpose::No, Transpose::Yes, m, n, k, 1.0, a.data(), b.data(), 0.0, c.data_mut());
+    c
+}
+
+/// Add a row vector (bias) to every row of the matrix view.
+pub fn add_row_vec(x: &mut Blob, bias: &Blob) {
+    let cols = x.cols();
+    assert_eq!(bias.len(), cols, "bias length");
+    for row in x.data_mut().chunks_mut(cols) {
+        for (v, b) in row.iter_mut().zip(bias.data()) {
+            *v += b;
+        }
+    }
+}
+
+/// Column-wise sum of the matrix view → row vector (bias gradient).
+pub fn sum_rows(x: &Blob) -> Blob {
+    let cols = x.cols();
+    let mut out = Blob::zeros(&[cols]);
+    for row in x.data().chunks(cols) {
+        for (o, v) in out.data_mut().iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+pub fn sigmoid(x: &Blob) -> Blob {
+    map(x, |v| 1.0 / (1.0 + (-v).exp()))
+}
+
+/// d/dx of sigmoid given the *output* y: y * (1 - y).
+pub fn sigmoid_grad(y: &Blob, dy: &Blob) -> Blob {
+    zip(y, dy, |yv, dv| dv * yv * (1.0 - yv))
+}
+
+pub fn tanh(x: &Blob) -> Blob {
+    map(x, f32::tanh)
+}
+
+pub fn tanh_grad(y: &Blob, dy: &Blob) -> Blob {
+    zip(y, dy, |yv, dv| dv * (1.0 - yv * yv))
+}
+
+pub fn relu(x: &Blob) -> Blob {
+    map(x, |v| v.max(0.0))
+}
+
+pub fn relu_grad(x: &Blob, dy: &Blob) -> Blob {
+    zip(x, dy, |xv, dv| if xv > 0.0 { dv } else { 0.0 })
+}
+
+/// Row-wise softmax of the matrix view (numerically stabilized).
+pub fn softmax(x: &Blob) -> Blob {
+    let cols = x.cols();
+    let mut out = x.clone();
+    for row in out.data_mut().chunks_mut(cols) {
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+/// Mean cross-entropy loss of row-wise softmax probabilities `p` against
+/// integer labels, plus the gradient w.r.t. the logits (p - onehot)/batch.
+pub fn softmax_xent(logits: &Blob, labels: &[usize]) -> (f32, Blob) {
+    let probs = softmax(logits);
+    let cols = probs.cols();
+    let rows = probs.rows();
+    assert_eq!(labels.len(), rows, "labels length");
+    let mut loss = 0.0f32;
+    let mut grad = probs.clone();
+    for (r, &label) in labels.iter().enumerate() {
+        assert!(label < cols, "label {label} out of range {cols}");
+        let p = probs.data()[r * cols + label].max(1e-12);
+        loss -= p.ln();
+        grad.data_mut()[r * cols + label] -= 1.0;
+    }
+    grad.scale(1.0 / rows as f32);
+    (loss / rows as f32, grad)
+}
+
+/// Fraction of rows whose argmax equals the label.
+pub fn accuracy(logits: &Blob, labels: &[usize]) -> f32 {
+    let cols = logits.cols();
+    let mut correct = 0;
+    for (r, &label) in labels.iter().enumerate() {
+        let row = &logits.data()[r * cols..(r + 1) * cols];
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if argmax == label {
+            correct += 1;
+        }
+    }
+    correct as f32 / labels.len().max(1) as f32
+}
+
+/// Mean squared euclidean distance between rows of a and b: loss and grad
+/// w.r.t. a ((a-b)/batch). Used by the EuclideanLoss layer in MDNN.
+pub fn euclidean_loss(a: &Blob, b: &Blob) -> (f32, Blob) {
+    assert_eq!(a.shape(), b.shape(), "euclidean shapes");
+    let rows = a.rows().max(1);
+    let mut grad = a.clone();
+    grad.axpy(-1.0, b);
+    let loss = 0.5 * grad.data().iter().map(|v| v * v).sum::<f32>() / rows as f32;
+    grad.scale(1.0 / rows as f32);
+    (loss, grad)
+}
+
+pub fn map<F: Fn(f32) -> f32>(x: &Blob, f: F) -> Blob {
+    Blob::from_vec(x.shape(), x.data().iter().map(|&v| f(v)).collect())
+}
+
+pub fn zip<F: Fn(f32, f32) -> f32>(a: &Blob, b: &Blob, f: F) -> Blob {
+    assert_eq!(a.shape(), b.shape(), "zip shapes");
+    Blob::from_vec(
+        a.shape(),
+        a.data().iter().zip(b.data()).map(|(&x, &y)| f(x, y)).collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::quickcheck::{forall, prop_assert, prop_close};
+    use crate::utils::rng::Rng;
+
+    #[test]
+    fn matmul_shapes_and_values() {
+        let a = Blob::from_vec(&[2, 3], vec![1., 0., 2., 0., 1., 1.]);
+        let b = Blob::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.shape(), &[2, 2]);
+        assert_eq!(c.data(), &[11., 14., 8., 10.]);
+    }
+
+    #[test]
+    fn transposed_matmuls_agree() {
+        let mut rng = Rng::new(4);
+        let a = Blob::from_vec(&[3, 5], rng.uniform_vec(15, -1.0, 1.0));
+        let b = Blob::from_vec(&[3, 4], rng.uniform_vec(12, -1.0, 1.0));
+        // A^T @ B  vs materialized transpose
+        let at = transpose(&a);
+        let c1 = matmul_tn(&a, &b);
+        let c2 = matmul(&at, &b);
+        prop_close(c1.data(), c2.data(), 1e-5, 1e-5, "tn").unwrap();
+        // A @ B^T
+        let b2 = Blob::from_vec(&[4, 5], rng.uniform_vec(20, -1.0, 1.0));
+        let c3 = matmul_nt(&a, &b2);
+        let c4 = matmul(&a, &transpose(&b2));
+        prop_close(c3.data(), c4.data(), 1e-5, 1e-5, "nt").unwrap();
+    }
+
+    fn transpose(x: &Blob) -> Blob {
+        let (r, c) = (x.rows(), x.cols());
+        let mut out = Blob::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data_mut()[j * r + i] = x.data()[i * c + j];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn bias_and_sum_rows_roundtrip() {
+        let mut x = Blob::zeros(&[3, 2]);
+        let bias = Blob::from_vec(&[2], vec![1.0, -2.0]);
+        add_row_vec(&mut x, &bias);
+        assert_eq!(x.data(), &[1., -2., 1., -2., 1., -2.]);
+        let s = sum_rows(&x);
+        assert_eq!(s.data(), &[3.0, -6.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        forall(30, |g| {
+            let rows = g.usize(1, 8);
+            let cols = g.usize(1, 10);
+            let x = Blob::from_vec(&[rows, cols], g.f32_vec(rows * cols, -30.0, 30.0));
+            let p = softmax(&x);
+            for r in 0..rows {
+                let s: f32 = p.data()[r * cols..(r + 1) * cols].iter().sum();
+                prop_assert((s - 1.0).abs() < 1e-4, &format!("row {r} sums to {s}"))?;
+                prop_assert(
+                    p.data()[r * cols..(r + 1) * cols].iter().all(|&v| v >= 0.0),
+                    "non-negative",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn softmax_shift_invariant() {
+        let x = Blob::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let y = Blob::from_vec(&[1, 3], vec![101.0, 102.0, 103.0]);
+        prop_close(softmax(&x).data(), softmax(&y).data(), 1e-6, 0.0, "shift").unwrap();
+    }
+
+    #[test]
+    fn xent_matches_manual() {
+        // Uniform logits → loss = ln(C).
+        let x = Blob::zeros(&[2, 4]);
+        let (loss, grad) = softmax_xent(&x, &[0, 3]);
+        assert!((loss - (4.0f32).ln()).abs() < 1e-5);
+        // grad rows sum to 0
+        for r in 0..2 {
+            let s: f32 = grad.data()[r * 4..(r + 1) * 4].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn xent_gradient_numerically() {
+        let mut rng = Rng::new(10);
+        let x = Blob::from_vec(&[2, 3], rng.uniform_vec(6, -1.0, 1.0));
+        let labels = [1usize, 2];
+        let (_, grad) = softmax_xent(&x, &labels);
+        let eps = 1e-3;
+        for i in 0..6 {
+            let mut xp = x.clone();
+            xp.data_mut()[i] += eps;
+            let (lp, _) = softmax_xent(&xp, &labels);
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= eps;
+            let (lm, _) = softmax_xent(&xm, &labels);
+            let num = (lp - lm) / (2.0 * eps);
+            assert!(
+                (num - grad.data()[i]).abs() < 1e-3,
+                "idx {i}: numeric {num} vs analytic {}",
+                grad.data()[i]
+            );
+        }
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let x = Blob::from_vec(&[2, 3], vec![0.1, 0.9, 0.0, 0.8, 0.1, 0.1]);
+        assert_eq!(accuracy(&x, &[1, 0]), 1.0);
+        assert_eq!(accuracy(&x, &[0, 0]), 0.5);
+    }
+
+    #[test]
+    fn euclidean_loss_grad() {
+        let a = Blob::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Blob::from_vec(&[2, 2], vec![0., 2., 3., 2.]);
+        let (loss, grad) = euclidean_loss(&a, &b);
+        assert!((loss - 0.5 * (1.0 + 4.0) / 2.0).abs() < 1e-6);
+        assert_eq!(grad.data(), &[0.5, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn activation_grads_numerically() {
+        let mut rng = Rng::new(2);
+        let x = Blob::from_vec(&[1, 8], rng.uniform_vec(8, -2.0, 2.0));
+        let dy = Blob::full(&[1, 8], 1.0);
+        let eps = 1e-3;
+
+        // sigmoid
+        let y = sigmoid(&x);
+        let g = sigmoid_grad(&y, &dy);
+        for i in 0..8 {
+            let mut xp = x.clone();
+            xp.data_mut()[i] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= eps;
+            let num = (sigmoid(&xp).data()[i] - sigmoid(&xm).data()[i]) / (2.0 * eps);
+            assert!((num - g.data()[i]).abs() < 1e-3, "sigmoid idx {i}");
+        }
+        // tanh
+        let y = tanh(&x);
+        let g = tanh_grad(&y, &dy);
+        for i in 0..8 {
+            let mut xp = x.clone();
+            xp.data_mut()[i] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= eps;
+            let num = (tanh(&xp).data()[i] - tanh(&xm).data()[i]) / (2.0 * eps);
+            assert!((num - g.data()[i]).abs() < 1e-3, "tanh idx {i}");
+        }
+        // relu (away from 0 kink)
+        let g = relu_grad(&x, &dy);
+        for i in 0..8 {
+            if x.data()[i].abs() < 0.05 {
+                continue;
+            }
+            let expect = if x.data()[i] > 0.0 { 1.0 } else { 0.0 };
+            assert_eq!(g.data()[i], expect);
+        }
+    }
+}

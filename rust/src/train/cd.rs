@@ -1,0 +1,165 @@
+//! Contrastive-Divergence `TrainOneBatch` for undirected models (paper
+//! §4.1.3). Drives every [`RbmLayer`] in the net through a CD-k step on the
+//! feature produced by its source layers — the layer-by-layer greedy
+//! pre-training scheme of Hinton & Salakhutdinov used by the deep
+//! auto-encoder application (paper §4.2.2, Fig 8).
+
+use super::{StepStats, TrainOneBatch};
+use crate::model::rbm::RbmLayer;
+use crate::model::{NeuralNet, Phase};
+use crate::tensor::Blob;
+use std::collections::HashMap;
+
+/// CD-k driver. `train_upto` limits which RBM (by name) is being trained in
+/// the current greedy stage; earlier RBMs only propagate features.
+pub struct Cd {
+    pub k: usize,
+    /// Name of the RBM currently being trained; `None` trains every RBM.
+    pub train_only: Option<String>,
+}
+
+impl Cd {
+    pub fn new(k: usize) -> Cd {
+        Cd { k, train_only: None }
+    }
+
+    pub fn stage(k: usize, layer: &str) -> Cd {
+        Cd { k, train_only: Some(layer.to_string()) }
+    }
+}
+
+impl TrainOneBatch for Cd {
+    fn train_one_batch(
+        &mut self,
+        net: &mut NeuralNet,
+        inputs: &HashMap<String, Blob>,
+    ) -> StepStats {
+        for (name, blob) in inputs {
+            net.try_set_input(name, blob.clone());
+        }
+        // Positive-phase forward to materialize features up to each RBM.
+        net.forward(Phase::Train);
+        let mut losses = Vec::new();
+        // For each RBM layer, run CD-k with its source feature as v0.
+        for i in 0..net.len() {
+            let src_feature: Option<Blob> = {
+                let node = &net.nodes()[i];
+                if node.layer.type_name() == "Rbm" && !node.srcs.is_empty() {
+                    Some(net.nodes()[node.srcs[0]].feature.clone())
+                } else {
+                    None
+                }
+            };
+            if let Some(v0) = src_feature {
+                let node = &mut net.nodes_mut()[i];
+                let name = node.layer.name().to_string();
+                if let Some(only) = &self.train_only {
+                    if &name != only {
+                        continue;
+                    }
+                }
+                let rbm = node
+                    .layer
+                    .as_any()
+                    .downcast_mut::<RbmLayer>()
+                    .expect("type_name Rbm but downcast failed");
+                let err = rbm.cd_step(&v0, self.k);
+                losses.push((name, err, 0.0));
+            }
+        }
+        StepStats { losses }
+    }
+
+    fn name(&self) -> &'static str {
+        "CD"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::{LayerConf, LayerKind};
+    use crate::model::NetBuilder;
+    use crate::utils::rng::Rng;
+
+    fn rbm_net(batch: usize, visible: usize, h1: usize, h2: usize) -> NeuralNet {
+        NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, visible] }, &[]))
+            .add(LayerConf::new("rbm1", LayerKind::Rbm { hidden: h1, init_std: 0.1 }, &["data"]))
+            .add(LayerConf::new("rbm2", LayerKind::Rbm { hidden: h2, init_std: 0.1 }, &["rbm1"]))
+            .build(&mut Rng::new(17))
+    }
+
+    fn batch_patterns(rng: &mut Rng, batch: usize) -> Blob {
+        // Stripe patterns over 8 visible units.
+        let protos = [[1., 1., 1., 1., 0., 0., 0., 0.], [0., 0., 0., 0., 1., 1., 1., 1.]];
+        let mut data = Vec::new();
+        for _ in 0..batch {
+            let p = &protos[rng.below(2)];
+            for &v in p {
+                data.push(if rng.uniform() < 0.05 { 1.0 - v } else { v });
+            }
+        }
+        Blob::from_vec(&[batch, 8], data)
+    }
+
+    #[test]
+    fn cd_trains_stacked_rbms_greedily() {
+        let mut net = rbm_net(16, 8, 12, 6);
+        let mut rng = Rng::new(3);
+
+        // Stage 1: train rbm1 only.
+        let mut alg = Cd::stage(1, "rbm1");
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for it in 0..200 {
+            let mut inputs = HashMap::new();
+            inputs.insert("data".to_string(), batch_patterns(&mut rng, 16));
+            net.zero_grads();
+            let stats = alg.train_one_batch(&mut net, &inputs);
+            assert_eq!(stats.losses.len(), 1);
+            assert_eq!(stats.losses[0].0, "rbm1");
+            for p in net.params_mut() {
+                let g = p.grad.clone();
+                p.data.axpy(-0.1, &g);
+            }
+            if it == 0 {
+                first = stats.total_loss();
+            }
+            last = stats.total_loss();
+        }
+        assert!(last < first * 0.6, "stage-1 reconstruction: first {first} last {last}");
+
+        // Stage 2: train rbm2 on rbm1 features.
+        let mut alg2 = Cd::stage(1, "rbm2");
+        let mut first2 = 0.0;
+        let mut last2 = 0.0;
+        for it in 0..200 {
+            let mut inputs = HashMap::new();
+            inputs.insert("data".to_string(), batch_patterns(&mut rng, 16));
+            net.zero_grads();
+            let stats = alg2.train_one_batch(&mut net, &inputs);
+            assert_eq!(stats.losses[0].0, "rbm2");
+            for p in net.params_mut() {
+                let g = p.grad.clone();
+                p.data.axpy(-0.1, &g);
+            }
+            if it == 0 {
+                first2 = stats.total_loss();
+            }
+            last2 = stats.total_loss();
+        }
+        assert!(last2 < first2, "stage-2 reconstruction should improve");
+    }
+
+    #[test]
+    fn cd_all_mode_reports_every_rbm() {
+        let mut net = rbm_net(4, 8, 6, 4);
+        let mut rng = Rng::new(5);
+        let mut alg = Cd::new(1);
+        let mut inputs = HashMap::new();
+        inputs.insert("data".to_string(), batch_patterns(&mut rng, 4));
+        let stats = alg.train_one_batch(&mut net, &inputs);
+        assert_eq!(stats.losses.len(), 2);
+    }
+}

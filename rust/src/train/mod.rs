@@ -1,0 +1,76 @@
+//! `TrainOneBatch` algorithms (paper §4.1.3): one per model category.
+//!
+//! * [`bp`] — Back-Propagation for feed-forward nets (Algorithm 1), which
+//!   also drives recurrent nets whose layers unroll internally (BPTT,
+//!   paper Fig 5b / §4.2.3).
+//! * [`cd`] — Contrastive Divergence for undirected models (RBM).
+//!
+//! Each algorithm determines the order in which `ComputeFeature` and
+//! `ComputeGradient` are invoked across the `NeuralNet`. Users with bespoke
+//! workflows implement [`TrainOneBatch`] themselves (the paper's template).
+
+pub mod bp;
+pub mod cd;
+
+use crate::model::{NeuralNet, Phase};
+use crate::tensor::Blob;
+use std::collections::HashMap;
+
+/// Result of one training iteration.
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    /// `(loss layer name, loss, metric)` per loss layer.
+    pub losses: Vec<(String, f32, f32)>,
+}
+
+impl StepStats {
+    pub fn total_loss(&self) -> f32 {
+        self.losses.iter().map(|(_, l, _)| l).sum()
+    }
+
+    /// Mean metric (accuracy) over loss layers that report one.
+    pub fn metric(&self) -> f32 {
+        if self.losses.is_empty() {
+            return 0.0;
+        }
+        self.losses.iter().map(|(_, _, m)| m).sum::<f32>() / self.losses.len() as f32
+    }
+}
+
+/// The algorithm template from the paper: given the net and this iteration's
+/// named input blobs, run one gradient-computation pass. Gradients are left
+/// in `Param::grad`; the caller (worker) ships them to the servers.
+pub trait TrainOneBatch: Send {
+    fn train_one_batch(
+        &mut self,
+        net: &mut NeuralNet,
+        inputs: &HashMap<String, Blob>,
+    ) -> StepStats;
+
+    /// Algorithm name for logs/configs.
+    fn name(&self) -> &'static str;
+}
+
+/// Evaluation pass (no gradients).
+pub fn evaluate(net: &mut NeuralNet, inputs: &HashMap<String, Blob>) -> StepStats {
+    for (name, blob) in inputs {
+        net.try_set_input(name, blob.clone());
+    }
+    net.forward(Phase::Test);
+    StepStats { losses: net.losses() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_stats_aggregation() {
+        let s = StepStats {
+            losses: vec![("a".into(), 1.0, 0.5), ("b".into(), 2.0, 0.7)],
+        };
+        assert_eq!(s.total_loss(), 3.0);
+        assert!((s.metric() - 0.6).abs() < 1e-6);
+        assert_eq!(StepStats::default().metric(), 0.0);
+    }
+}

@@ -1,0 +1,275 @@
+//! Parameter updaters (paper §4.1.4): the protocol servers apply when a
+//! gradient arrives. SGD (+momentum), AdaGrad (the paper's example),
+//! Nesterov and RMSProp, each combined with a learning-rate schedule.
+//!
+//! Updaters are stateful per parameter (momentum / accumulated squares), so
+//! each server shard owns one updater state entry per parameter it manages.
+
+use crate::tensor::Blob;
+use std::collections::HashMap;
+
+/// Learning-rate schedules.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    Fixed,
+    /// `lr * gamma^(step / stride)` (staircase).
+    Step { gamma: f32, stride: u64 },
+    /// `lr * gamma^step` (smooth exponential).
+    Exp { gamma: f32 },
+    /// `lr / (1 + gamma * step)^power`.
+    Inverse { gamma: f32, power: f32 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, base: f32, step: u64) -> f32 {
+        match *self {
+            LrSchedule::Fixed => base,
+            LrSchedule::Step { gamma, stride } => base * gamma.powi((step / stride) as i32),
+            LrSchedule::Exp { gamma } => base * gamma.powi(step as i32),
+            LrSchedule::Inverse { gamma, power } => {
+                base / (1.0 + gamma * step as f32).powf(power)
+            }
+        }
+    }
+}
+
+/// Updater algorithm + hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct UpdaterConf {
+    pub algo: Algo,
+    pub lr: f32,
+    pub schedule: LrSchedule,
+    /// L2 weight decay coefficient.
+    pub weight_decay: f32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Algo {
+    Sgd { momentum: f32 },
+    AdaGrad { eps: f32 },
+    Nesterov { momentum: f32 },
+    RmsProp { decay: f32, eps: f32 },
+}
+
+impl UpdaterConf {
+    pub fn sgd(lr: f32) -> UpdaterConf {
+        UpdaterConf { algo: Algo::Sgd { momentum: 0.0 }, lr, schedule: LrSchedule::Fixed, weight_decay: 0.0 }
+    }
+
+    pub fn sgd_momentum(lr: f32, momentum: f32) -> UpdaterConf {
+        UpdaterConf { algo: Algo::Sgd { momentum }, lr, schedule: LrSchedule::Fixed, weight_decay: 0.0 }
+    }
+
+    pub fn adagrad(lr: f32) -> UpdaterConf {
+        UpdaterConf { algo: Algo::AdaGrad { eps: 1e-8 }, lr, schedule: LrSchedule::Fixed, weight_decay: 0.0 }
+    }
+
+    pub fn nesterov(lr: f32, momentum: f32) -> UpdaterConf {
+        UpdaterConf { algo: Algo::Nesterov { momentum }, lr, schedule: LrSchedule::Fixed, weight_decay: 0.0 }
+    }
+
+    pub fn rmsprop(lr: f32) -> UpdaterConf {
+        UpdaterConf {
+            algo: Algo::RmsProp { decay: 0.9, eps: 1e-8 },
+            lr,
+            schedule: LrSchedule::Fixed,
+            weight_decay: 0.0,
+        }
+    }
+
+    pub fn with_schedule(mut self, s: LrSchedule) -> UpdaterConf {
+        self.schedule = s;
+        self
+    }
+
+    pub fn with_weight_decay(mut self, wd: f32) -> UpdaterConf {
+        self.weight_decay = wd;
+        self
+    }
+}
+
+/// Stateful updater over a set of named parameters.
+pub struct Updater {
+    conf: UpdaterConf,
+    /// Per-param auxiliary state (momentum buffer / squared-grad history).
+    state: HashMap<String, Blob>,
+}
+
+impl Updater {
+    pub fn new(conf: UpdaterConf) -> Updater {
+        Updater { conf, state: HashMap::new() }
+    }
+
+    pub fn conf(&self) -> &UpdaterConf {
+        &self.conf
+    }
+
+    /// Apply one update: `value -= f(grad)` where `f` depends on the
+    /// algorithm. `lr_mult`/`wd_mult` come from the `Param` metadata; `step`
+    /// is the global iteration for the LR schedule.
+    pub fn update(
+        &mut self,
+        name: &str,
+        value: &mut Blob,
+        grad: &Blob,
+        lr_mult: f32,
+        wd_mult: f32,
+        step: u64,
+    ) {
+        assert_eq!(value.shape(), grad.shape(), "updater shape mismatch for {name}");
+        let lr = self.conf.schedule.at(self.conf.lr, step) * lr_mult;
+        let wd = self.conf.weight_decay * wd_mult;
+        // Effective gradient with L2 decay.
+        let mut g = grad.clone();
+        if wd != 0.0 {
+            g.axpy(wd, value);
+        }
+        match self.conf.algo {
+            Algo::Sgd { momentum } => {
+                if momentum == 0.0 {
+                    value.axpy(-lr, &g);
+                } else {
+                    let buf = self
+                        .state
+                        .entry(name.to_string())
+                        .or_insert_with(|| Blob::zeros(value.shape()));
+                    // v = mu*v + g ; w -= lr*v
+                    buf.scale(momentum);
+                    buf.add_assign(&g);
+                    value.axpy(-lr, buf);
+                }
+            }
+            Algo::AdaGrad { eps } => {
+                let hist = self
+                    .state
+                    .entry(name.to_string())
+                    .or_insert_with(|| Blob::zeros(value.shape()));
+                for ((h, w), gi) in hist.data_mut().iter_mut().zip(value.data_mut()).zip(g.data())
+                {
+                    *h += gi * gi;
+                    *w -= lr * gi / (h.sqrt() + eps);
+                }
+            }
+            Algo::Nesterov { momentum } => {
+                let buf = self
+                    .state
+                    .entry(name.to_string())
+                    .or_insert_with(|| Blob::zeros(value.shape()));
+                // v' = mu*v - lr*g ; w += -mu*v + (1+mu)*v'
+                let prev = buf.clone();
+                buf.scale(momentum);
+                buf.axpy(-lr, &g);
+                value.axpy(-momentum, &prev);
+                value.axpy(1.0 + momentum, buf);
+            }
+            Algo::RmsProp { decay, eps } => {
+                let hist = self
+                    .state
+                    .entry(name.to_string())
+                    .or_insert_with(|| Blob::zeros(value.shape()));
+                for ((h, w), gi) in hist.data_mut().iter_mut().zip(value.data_mut()).zip(g.data())
+                {
+                    *h = decay * *h + (1.0 - decay) * gi * gi;
+                    *w -= lr * gi / (h.sqrt() + eps);
+                }
+            }
+        }
+    }
+
+    /// Bytes of auxiliary state held (server memory accounting).
+    pub fn state_bytes(&self) -> usize {
+        self.state.values().map(|b| b.byte_size()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic_descent(conf: UpdaterConf, iters: usize) -> f32 {
+        // Minimize f(w) = 0.5*||w||^2 starting from w = 3.
+        let mut u = Updater::new(conf);
+        let mut w = Blob::full(&[4], 3.0);
+        for step in 0..iters {
+            let g = w.clone(); // grad of 0.5 w^2 is w
+            u.update("w", &mut w, &g, 1.0, 1.0, step as u64);
+        }
+        w.norm()
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        assert!(quadratic_descent(UpdaterConf::sgd(0.1), 100) < 1e-3);
+    }
+
+    #[test]
+    fn momentum_beats_plain_sgd_same_lr() {
+        let plain = quadratic_descent(UpdaterConf::sgd(0.01), 100);
+        let mom = quadratic_descent(UpdaterConf::sgd_momentum(0.01, 0.9), 100);
+        assert!(mom < plain, "momentum {mom} vs plain {plain}");
+    }
+
+    #[test]
+    fn adagrad_converges() {
+        assert!(quadratic_descent(UpdaterConf::adagrad(0.5), 300) < 0.1);
+    }
+
+    #[test]
+    fn nesterov_converges() {
+        assert!(quadratic_descent(UpdaterConf::nesterov(0.05, 0.9), 200) < 1e-2);
+    }
+
+    #[test]
+    fn rmsprop_converges() {
+        assert!(quadratic_descent(UpdaterConf::rmsprop(0.05), 300) < 0.1);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_weights() {
+        let mut u = Updater::new(UpdaterConf::sgd(0.1).with_weight_decay(0.5));
+        let mut w = Blob::full(&[2], 1.0);
+        let zero_grad = Blob::zeros(&[2]);
+        u.update("w", &mut w, &zero_grad, 1.0, 1.0, 0);
+        // w -= lr * wd * w → 1 - 0.05
+        assert!((w.data()[0] - 0.95).abs() < 1e-6);
+        // wd_mult = 0 disables decay (bias convention)
+        let mut b = Blob::full(&[2], 1.0);
+        u.update("b", &mut b, &zero_grad, 1.0, 0.0, 0);
+        assert_eq!(b.data()[0], 1.0);
+    }
+
+    #[test]
+    fn schedules() {
+        let s = LrSchedule::Step { gamma: 0.1, stride: 10 };
+        assert_eq!(s.at(1.0, 0), 1.0);
+        assert!((s.at(1.0, 10) - 0.1).abs() < 1e-6);
+        assert!((s.at(1.0, 25) - 0.01).abs() < 1e-7);
+        let e = LrSchedule::Exp { gamma: 0.99 };
+        assert!(e.at(1.0, 100) < 0.4);
+        let inv = LrSchedule::Inverse { gamma: 1e-2, power: 0.75 };
+        assert!(inv.at(1.0, 1000) < 0.2);
+        assert_eq!(LrSchedule::Fixed.at(0.3, 999), 0.3);
+    }
+
+    #[test]
+    fn lr_mult_scales_update() {
+        let mut u = Updater::new(UpdaterConf::sgd(0.1));
+        let mut a = Blob::full(&[1], 1.0);
+        let mut b = Blob::full(&[1], 1.0);
+        let g = Blob::full(&[1], 1.0);
+        u.update("a", &mut a, &g, 1.0, 1.0, 0);
+        u.update("b", &mut b, &g, 2.0, 1.0, 0);
+        assert!((a.data()[0] - 0.9).abs() < 1e-6);
+        assert!((b.data()[0] - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn state_bytes_accounting() {
+        let mut u = Updater::new(UpdaterConf::sgd_momentum(0.1, 0.9));
+        assert_eq!(u.state_bytes(), 0);
+        let mut w = Blob::zeros(&[10]);
+        let g = Blob::zeros(&[10]);
+        u.update("w", &mut w, &g, 1.0, 1.0, 0);
+        assert_eq!(u.state_bytes(), 40);
+    }
+}

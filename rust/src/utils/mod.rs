@@ -1,0 +1,16 @@
+//! Support substrates: JSON, PRNG, timing, logging, and a mini
+//! property-testing harness.
+//!
+//! The build environment vendors only `xla` and `anyhow`, so everything a
+//! production framework would normally pull from crates.io (serde, rand,
+//! proptest, env_logger) is implemented here from scratch.
+
+pub mod json;
+pub mod rng;
+pub mod timer;
+pub mod log;
+pub mod quickcheck;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use timer::Stopwatch;

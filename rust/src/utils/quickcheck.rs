@@ -1,0 +1,152 @@
+//! Mini property-testing harness (proptest is not in the offline vendor
+//! set). Generates random cases from a seeded [`Rng`], runs the property,
+//! and on failure re-runs with a bisected "size" to report a smaller
+//! counterexample where possible.
+//!
+//! Usage (`no_run`: doctest binaries bypass the crate's rpath config):
+//! ```no_run
+//! use singa::utils::quickcheck::{forall, prop_assert, Gen};
+//! forall(100, |g| {
+//!     let n = g.usize(1, 64);
+//!     let v = g.f32_vec(n, -10.0, 10.0);
+//!     let s: f32 = v.iter().sum();
+//!     prop_assert(s.is_finite(), &format!("sum finite for n={n}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Case generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint in `[0,1]`: properties can scale their inputs by it so the
+    /// harness can retry failures with smaller cases.
+    pub size: f32,
+}
+
+impl Gen {
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        // Scale the upper bound by the current size hint (min lo+1 span).
+        let span = ((hi - lo) as f32 * self.size).ceil() as usize + 1;
+        lo + self.rng.below(span.min(hi - lo + 1))
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    pub fn f32_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        self.rng.uniform_vec(n, lo, hi)
+    }
+
+    pub fn gaussian_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        self.rng.gaussian_vec(n, std)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Result of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn prop_close(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("{what}: idx {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Run `prop` against `cases` random cases. Panics with the seed and case
+/// index on failure so the case is replayable; retries the failing seed at
+/// smaller sizes first to report the smallest size that still fails.
+pub fn forall<F: FnMut(&mut Gen) -> PropResult>(cases: u32, mut prop: F) {
+    forall_seeded(0x5eed_cafe, cases, &mut prop);
+}
+
+pub fn forall_seeded<F: FnMut(&mut Gen) -> PropResult>(seed: u64, cases: u32, prop: &mut F) {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64);
+        let mut g = Gen { rng: Rng::with_stream(case_seed, 77), size: 1.0 };
+        if let Err(msg) = prop(&mut g) {
+            // Try smaller sizes with the same stream to shrink.
+            let mut smallest: Option<(f32, String)> = None;
+            for &size in &[0.1f32, 0.25, 0.5, 0.75] {
+                let mut g = Gen { rng: Rng::with_stream(case_seed, 77), size };
+                if let Err(m) = prop(&mut g) {
+                    smallest = Some((size, m));
+                    break;
+                }
+            }
+            match smallest {
+                Some((size, m)) => panic!(
+                    "property failed (case {case}, seed {case_seed:#x}, shrunk to size {size}): {m}"
+                ),
+                None => panic!("property failed (case {case}, seed {case_seed:#x}): {msg}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(50, |g| {
+            count += 1;
+            let n = g.usize(0, 32);
+            prop_assert(n <= 32, "bounded")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(20, |g| {
+            let n = g.usize(0, 100);
+            prop_assert(n < 5, "always small")
+        });
+    }
+
+    #[test]
+    fn prop_close_tolerances() {
+        assert!(prop_close(&[1.0], &[1.0 + 1e-7], 1e-6, 0.0, "t").is_ok());
+        assert!(prop_close(&[1.0], &[1.1], 1e-6, 1e-6, "t").is_err());
+        assert!(prop_close(&[1.0, 2.0], &[1.0], 0.1, 0.0, "t").is_err());
+        assert!(prop_close(&[100.0], &[100.5], 0.0, 0.01, "t").is_ok());
+    }
+
+    #[test]
+    fn gen_usize_respects_bounds() {
+        forall(200, |g| {
+            let v = g.usize(3, 9);
+            prop_assert((3..=9).contains(&v), &format!("v={v}"))
+        });
+    }
+}

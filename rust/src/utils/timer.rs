@@ -1,0 +1,151 @@
+//! Wall-clock stopwatch plus simple statistics over repeated measurements.
+
+use std::time::{Duration, Instant};
+
+/// A restartable stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn restart(&mut self) {
+        self.start = Instant::now();
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+/// Streaming summary statistics (Welford) over f64 samples — used by the
+/// bench harness to report mean/std/min/max per configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Stats {
+        Stats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Time a closure `iters` times, returning per-iteration stats in
+/// milliseconds. `warmup` iterations are discarded first (paper §6.2.2
+/// averages iterations 30–80 of 100 to skip the start/end phases; this is
+/// the same idea).
+pub fn time_iters<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut st = Stats::new();
+    for _ in 0..iters {
+        let sw = Stopwatch::new();
+        f();
+        st.add(sw.elapsed_ms());
+    }
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn stats_single_sample() {
+        let mut s = Stats::new();
+        s.add(5.0);
+        assert_eq!(s.var(), 0.0);
+        assert_eq!(s.mean(), 5.0);
+    }
+
+    #[test]
+    fn time_iters_counts() {
+        let mut calls = 0;
+        let st = time_iters(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(st.count(), 5);
+        assert!(st.mean() >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::new();
+        let a = sw.elapsed_us();
+        let b = sw.elapsed_us();
+        assert!(b >= a);
+    }
+}

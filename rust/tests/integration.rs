@@ -1,0 +1,303 @@
+//! Integration tests across modules: partitioned distributed training end
+//! to end, framework equivalences, native-vs-XLA numeric cross-checks, and
+//! config-driven job runs.
+
+use singa::cluster::ClusterTopology;
+use singa::coordinator::{run_job, JobConf};
+use singa::data::{DataSource, SyntheticDigits, SyntheticImages};
+use singa::model::layer::{Activation, LayerConf, LayerKind};
+use singa::model::partition::partition_net;
+use singa::model::{NetBuilder, Phase};
+use singa::tensor::{ops, Blob};
+use singa::updater::UpdaterConf;
+use singa::utils::rng::Rng;
+use std::sync::Arc;
+
+fn mlp(batch: usize, dim: usize, hidden: usize, classes: usize) -> NetBuilder {
+    NetBuilder::new()
+        .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, dim] }, &[]))
+        .add(LayerConf::new("label", LayerKind::Input { shape: vec![batch] }, &[]))
+        .add(LayerConf::new(
+            "h1",
+            LayerKind::InnerProduct { out: hidden, act: Activation::Relu, init_std: 0.08 },
+            &["data"],
+        ))
+        .add(LayerConf::new(
+            "logits",
+            LayerKind::InnerProduct { out: classes, act: Activation::Identity, init_std: 0.08 },
+            &["h1"],
+        ))
+        .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]))
+}
+
+/// Synchronous frameworks (Sandblaster vs AllReduce topologies) produce
+/// identical training trajectories — both are a single worker group.
+#[test]
+fn sandblaster_and_allreduce_trajectories_match() {
+    let run = |topo: ClusterTopology| {
+        let mut conf = JobConf::new("t", mlp(16, 64, 32, 5));
+        conf.iters = 25;
+        conf.updater = UpdaterConf::sgd(0.2);
+        conf.topology = topo;
+        let data: Arc<dyn DataSource> = Arc::new(SyntheticDigits::new(64, 5, 3));
+        run_job(&conf, data).log.snapshot()
+    };
+    let a = run(ClusterTopology::sandblaster(1, 1));
+    let b = run(ClusterTopology::allreduce(4, 1)); // 1 group, 4 shards
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x.loss - y.loss).abs() < 1e-5, "step {}: {} vs {}", x.step, x.loss, y.loss);
+    }
+}
+
+/// Full hybrid parallelism through the coordinator: conv layers dim-0, fc
+/// dim-1, loss unsplit — the paper's recommended AlexNet scheme (§5.4.1).
+#[test]
+fn hybrid_partitioned_convnet_trains() {
+    let batch = 8;
+    let mut b = NetBuilder::new()
+        .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, 3, 8, 8] }, &[]))
+        .add(LayerConf::new("label", LayerKind::Input { shape: vec![batch] }, &[]))
+        .add(LayerConf::new(
+            "conv1",
+            LayerKind::Convolution { out_channels: 6, kernel: 3, stride: 1, pad: 1, init_std: 0.1 },
+            &["data"],
+        ))
+        .add(LayerConf::new("pool1", LayerKind::MaxPool { kernel: 2, stride: 2 }, &["conv1"]))
+        .add(LayerConf::new("relu1", LayerKind::Activation { act: Activation::Relu }, &["pool1"]))
+        .add(LayerConf::new(
+            "fc",
+            LayerKind::InnerProduct { out: 4, act: Activation::Identity, init_std: 0.1 },
+            &["relu1"],
+        ))
+        .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["fc", "label"]));
+    for c in b.confs_mut().iter_mut() {
+        match c.name.as_str() {
+            "conv1" | "pool1" | "relu1" => c.partition_dim = Some(0),
+            "fc" => c.partition_dim = Some(1),
+            _ => {}
+        }
+    }
+    let mut conf = JobConf::new("hybrid", b);
+    conf.batch_size = batch;
+    conf.iters = 60;
+    conf.updater = UpdaterConf::sgd(0.1);
+    conf.topology = ClusterTopology::sandblaster(2, 1);
+    conf.partition_within_group = true;
+    let data: Arc<dyn DataSource> = Arc::new(SyntheticImages::new(4, 3, 8, 8, 0.25, 5));
+    let report = run_job(&conf, data);
+    let recs = report.log.snapshot();
+    let first = recs.first().unwrap().loss;
+    let last = recs.last().unwrap().loss;
+    assert!(last < 0.7 * first, "hybrid training should learn: {first} -> {last}");
+    // feature traffic (bridges) was accounted
+    assert!(report.ledger.feature_bytes() > 0, "bridge traffic must be recorded");
+}
+
+/// Async Downpour with many groups reaches accuracy comparable to sync on
+/// this separable task (the convergence property behind Fig 19).
+#[test]
+fn downpour_matches_sync_final_accuracy() {
+    let data: Arc<dyn DataSource> = Arc::new(SyntheticDigits::new(64, 5, 9));
+    let run = |topo: ClusterTopology, iters: u64| {
+        let mut conf = JobConf::new("c", mlp(16, 64, 32, 5));
+        conf.iters = iters;
+        conf.updater = UpdaterConf::sgd(0.15);
+        conf.topology = topo;
+        let report = run_job(&conf, data.clone());
+        let recs = report.log.snapshot();
+        recs.iter().filter(|r| r.group == 0).last().unwrap().metric
+    };
+    let sync_acc = run(ClusterTopology::sandblaster(1, 1), 80);
+    let async_acc = run(ClusterTopology::downpour(4, 1, 1), 80);
+    assert!(sync_acc > 0.9, "sync {sync_acc}");
+    assert!(async_acc > 0.8, "async {async_acc}");
+}
+
+/// Native backend vs XLA artifact: the same logical MLP forward/backward
+/// cross-checked numerically (weights copied across, same batch).
+#[test]
+fn native_and_xla_mlp_agree() {
+    let dir = singa::runtime::XlaRuntime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rt = singa::runtime::XlaRuntime::open(&dir).unwrap();
+    let spec = rt.manifest.artifacts.get("mlp_step").unwrap().clone();
+    // Artifact: 784 -> 256 (relu) -> 10, batch 32.
+    let batch = 32;
+    let mut rng = Rng::new(77);
+    let w0 = Blob::gaussian(&[784, 256], 0.05, &mut rng);
+    let b0 = Blob::zeros(&[256]);
+    let w1 = Blob::gaussian(&[256, 10], 0.05, &mut rng);
+    let b1 = Blob::zeros(&[10]);
+    let x = Blob::from_vec(&[batch, 784], rng.uniform_vec(batch * 784, 0.0, 1.0));
+    let labels: Vec<usize> = (0..batch).map(|i| i % 10).collect();
+    let mut y1h = Blob::zeros(&[batch, 10]);
+    for (r, &l) in labels.iter().enumerate() {
+        y1h.data_mut()[r * 10 + l] = 1.0;
+    }
+
+    // XLA side.
+    let inputs = [&w0, &b0, &w1, &b1, &x, &y1h];
+    assert_eq!(spec.inputs.len(), inputs.len());
+    let outs = rt.execute("mlp_step", &inputs).unwrap();
+    let xla_loss = outs[0].data()[0];
+
+    // Native side: h = relu(x w0 + b0); logits = h w1 + b1.
+    let mut h = ops::matmul(&x, &w0);
+    ops::add_row_vec(&mut h, &b0);
+    let h = ops::relu(&h);
+    let mut logits = ops::matmul(&h, &w1);
+    ops::add_row_vec(&mut logits, &b1);
+    let (native_loss, native_grad) = ops::softmax_xent(&logits, &labels);
+
+    assert!(
+        (xla_loss - native_loss).abs() < 1e-3,
+        "loss mismatch: xla {xla_loss} vs native {native_loss}"
+    );
+    // grad of w1 = h^T @ dlogits
+    let gw1 = ops::matmul_tn(&h, &native_grad);
+    let xla_gw1_idx = spec.output_index("grad:mlp/w1").unwrap();
+    let xla_gw1 = &outs[xla_gw1_idx];
+    for (a, b) in xla_gw1.data().iter().zip(gw1.data()).take(500) {
+        assert!((a - b).abs() < 1e-3, "grad w1 mismatch: {a} vs {b}");
+    }
+}
+
+/// Config-file driven job (the paper's "submit a job configuration" flow).
+#[test]
+fn config_file_job_runs() {
+    let conf = singa::config::parse_job(
+        r#"{
+          "name": "cfg", "model": "mlp", "batch": 8, "iters": 10,
+          "updater": {"algo": "adagrad", "lr": 0.1},
+          "cluster": {"worker_groups": 2, "workers_per_group": 1,
+                       "server_groups": 2, "servers_per_group": 1,
+                       "sync_interval": 5}
+        }"#,
+    )
+    .unwrap();
+    assert_eq!(
+        conf.topology.framework(),
+        Some(singa::cluster::Framework::DistributedHogwild)
+    );
+    let data: Arc<dyn DataSource> = Arc::new(SyntheticDigits::mnist_like(1));
+    let report = run_job(&conf, data);
+    assert_eq!(report.log.snapshot().len(), 20); // 2 groups x 10 iters
+}
+
+/// Partitioned nets preserve forward semantics at larger scale (convnet,
+/// dim-0 across 3 workers, real data).
+#[test]
+fn dim0_convnet_partition_preserves_loss() {
+    let batch = 12;
+    let data = SyntheticImages::new(4, 3, 8, 8, 0.2, 2);
+    let b0 = NetBuilder::new()
+        .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, 3, 8, 8] }, &[]))
+        .add(LayerConf::new("label", LayerKind::Input { shape: vec![batch] }, &[]))
+        .add(LayerConf::new(
+            "conv",
+            LayerKind::Convolution { out_channels: 4, kernel: 3, stride: 1, pad: 1, init_std: 0.1 },
+            &["data"],
+        ))
+        .add(LayerConf::new(
+            "fc",
+            LayerKind::InnerProduct { out: 4, act: Activation::Identity, init_std: 0.1 },
+            &["conv"],
+        ))
+        .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["fc", "label"]));
+    let mut b1 = b0.clone();
+    for c in b1.confs_mut().iter_mut() {
+        if ["conv", "fc", "loss"].contains(&c.name.as_str()) {
+            c.partition_dim = Some(0);
+        }
+    }
+    let (bp, _) = partition_net(&b1, 3);
+    let mut net0 = b0.build(&mut Rng::new(42));
+    let mut net1 = bp.build(&mut Rng::new(42));
+    // sync replica params to reference values by logical name
+    let reference: std::collections::HashMap<String, Blob> =
+        net0.params().iter().map(|p| (p.name.clone(), p.data.clone())).collect();
+    for p in net1.params_mut() {
+        let logical = singa::model::partition::logical_param_name(&p.name);
+        if let Some(v) = reference.get(&logical) {
+            p.data = v.clone();
+        }
+    }
+    let inputs = data.batch(0, batch);
+    net0.set_input("data", inputs["data"].clone());
+    net0.set_input("label", inputs["label"].clone());
+    net0.forward(Phase::Train);
+    net1.set_input("data", inputs["data"].clone());
+    net1.set_input("label", inputs["label"].clone());
+    net1.forward(Phase::Train);
+    let full = net0.total_loss();
+    let shards = net1.losses();
+    let mean: f32 = shards.iter().map(|(_, l, _)| l).sum::<f32>() / shards.len() as f32;
+    assert!((full - mean).abs() < 1e-4, "full {full} vs sharded mean {mean}");
+}
+
+/// Warm-up stage (paper §6.2.3): with `warmup_iters` set, group 0 runs
+/// alone first; other groups' first records appear only after group 0 has
+/// progressed through the warm-up.
+#[test]
+fn warmup_stage_delays_other_groups() {
+    let data: Arc<dyn DataSource> = Arc::new(SyntheticDigits::new(64, 5, 13));
+    let mut conf = JobConf::new("warmup", mlp(8, 64, 16, 5));
+    conf.iters = 30;
+    conf.warmup_iters = 15;
+    conf.updater = UpdaterConf::sgd(0.1);
+    conf.topology = ClusterTopology::downpour(2, 1, 1);
+    let report = run_job(&conf, data);
+    let recs = report.log.snapshot();
+    let g0_warm_done = recs
+        .iter()
+        .filter(|r| r.group == 0 && r.step == 14)
+        .map(|r| r.wall_ms)
+        .next()
+        .expect("group 0 step 14 logged");
+    let g1_first = recs
+        .iter()
+        .filter(|r| r.group == 1)
+        .map(|r| r.wall_ms)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        g1_first >= g0_warm_done,
+        "group 1 started at {g1_first} before warm-up finished at {g0_warm_done}"
+    );
+}
+
+/// Checkpoint round-trips through the coordinator: train, save, restore
+/// into a fresh net, and verify the restored net evaluates identically.
+#[test]
+fn checkpoint_restores_trained_state() {
+    use singa::model::checkpoint::Checkpoint;
+    let data: Arc<dyn DataSource> = Arc::new(SyntheticDigits::new(64, 5, 21));
+    let mut conf = JobConf::new("ckpt", mlp(8, 64, 16, 5));
+    conf.iters = 40;
+    conf.updater = UpdaterConf::sgd(0.2);
+    let report = run_job(&conf, data.clone());
+
+    // Rebuild a net and load the trained server params into it.
+    let mut net = mlp(8, 64, 16, 5).build(&mut Rng::new(999));
+    for p in net.params_mut() {
+        if let Some(v) = report.params.get(&p.name) {
+            p.data = v.clone();
+        }
+    }
+    let ckpt = Checkpoint::from_net(&net);
+    let mut buf = Vec::new();
+    ckpt.write_to(&mut buf).unwrap();
+    let loaded = Checkpoint::read_from(&mut buf.as_slice()).unwrap();
+    let mut net2 = mlp(8, 64, 16, 5).build(&mut Rng::new(123));
+    assert_eq!(loaded.restore(&mut net2), net.params().len());
+
+    // Identical evaluation on a held-out batch.
+    let batch = data.batch(9_999, 8);
+    let s1 = singa::train::evaluate(&mut net, &batch);
+    let s2 = singa::train::evaluate(&mut net2, &batch);
+    assert_eq!(s1.total_loss(), s2.total_loss());
+    assert!(s1.metric() > 0.8, "trained checkpoint should be accurate");
+}

