@@ -59,8 +59,7 @@ fn main() {
         net.zero_grads();
         let stats = alg.train_one_batch(&mut net, &inputs);
         for p in net.params_mut() {
-            let g = p.grad.clone();
-            upd.update(&p.name, &mut p.data, &g, p.lr_mult, p.wd_mult, it);
+            upd.update_param(p, it);
         }
         last = (stats.total_loss(), stats.metric());
         if first.is_none() {
@@ -111,9 +110,9 @@ fn main() {
 fn find_proj(net: &singa::model::NeuralNet) -> Blob {
     // proj may have been renamed by placement; find a layer whose name
     // starts with "proj".
-    for n in net.nodes() {
+    for (i, n) in net.nodes().iter().enumerate() {
         if n.layer.name().starts_with("proj") && n.layer.type_name() == "InnerProduct" {
-            return n.feature.clone();
+            return net.feature_of(i).clone();
         }
     }
     panic!("proj layer not found");

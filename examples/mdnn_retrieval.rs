@@ -98,8 +98,7 @@ fn main() {
         net.zero_grads();
         let stats = alg.train_one_batch(&mut net, &inputs);
         for p in net.params_mut() {
-            let g = p.grad.clone();
-            upd.update(&p.name, &mut p.data, &g, p.lr_mult, p.wd_mult, it);
+            upd.update_param(p, it);
         }
         if it % 100 == 0 {
             let l: Vec<String> =

@@ -46,8 +46,7 @@ fn main() {
             net.zero_grads();
             let stats = alg.train_one_batch(&mut net, &inputs);
             for p in net.params_mut() {
-                let g = p.grad.clone();
-                p.data.axpy(-0.05, &g);
+                p.sgd_step(0.05);
             }
             last = stats.total_loss();
         }
@@ -113,8 +112,7 @@ fn main() {
         ae.zero_grads();
         let stats = alg.train_one_batch(&mut ae, &inputs);
         for p in ae.params_mut() {
-            let g = p.grad.clone();
-            upd.update(&p.name, &mut p.data, &g, p.lr_mult, p.wd_mult, it);
+            upd.update_param(p, it);
         }
         last = stats.total_loss();
         if first.is_none() {

@@ -5,7 +5,28 @@
 
 use singa::utils::timer::time_iters;
 
+/// Run the steady-state allocation/throughput probe and write the
+/// `BENCH_alloc.json` artifact at the repo root.
+fn emit_alloc_probe() {
+    let json = singa::bench::alloc_probe_json(20);
+    println!("==== steady-state allocation probe ====");
+    print!("{json}");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_alloc.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
 fn main() {
+    // `cargo bench --bench figures -- alloc` runs only the allocation probe
+    // (the mode CI uses); no argument runs everything.
+    let alloc_only = std::env::args().any(|a| a == "alloc");
+    emit_alloc_probe();
+    if alloc_only {
+        return;
+    }
+
     println!("==== paper figures (quick mode) ====");
     let out = singa::bench::run_all(true);
     println!("{out}");

@@ -74,6 +74,120 @@ fn header(title: &str, cols: &[&str]) -> String {
 }
 
 // ---------------------------------------------------------------------------
+// Steady-state allocation / throughput probe (planned-executor contract)
+// ---------------------------------------------------------------------------
+
+/// Result of probing one model's steady-state training loop.
+#[derive(Debug, Clone)]
+pub struct AllocProbe {
+    pub model: &'static str,
+    /// Blob allocations during the warm-up iterations (workspace resizes,
+    /// lazily-sized scratch — expected non-zero).
+    pub warmup_allocs: u64,
+    /// Blob allocations per step AFTER warm-up — the zero-allocation
+    /// steady-state claim; must be 0.
+    pub steady_allocs_per_step: f64,
+    /// Mean wall time per training step (ms) at steady state.
+    pub step_ms: f64,
+    pub steps: usize,
+}
+
+fn probe_training_loop(
+    model: &'static str,
+    mut net: crate::model::NeuralNet,
+    inputs: std::collections::HashMap<String, Blob>,
+    steps: usize,
+) -> AllocProbe {
+    let mut alg = Bp::new();
+    let mut run = |net: &mut crate::model::NeuralNet, alg: &mut Bp| {
+        net.zero_grads();
+        alg.train_one_batch(net, &inputs);
+        for p in net.params_mut() {
+            p.sgd_step(0.01);
+        }
+    };
+    let before_warm = Blob::alloc_count();
+    for _ in 0..2 {
+        run(&mut net, &mut alg);
+    }
+    let warmup_allocs = Blob::alloc_count() - before_warm;
+    let before = Blob::alloc_count();
+    let sw = Stopwatch::new();
+    for _ in 0..steps {
+        run(&mut net, &mut alg);
+    }
+    let step_ms = sw.elapsed_ms() / steps.max(1) as f64;
+    let steady = Blob::alloc_count() - before;
+    AllocProbe {
+        model,
+        warmup_allocs,
+        steady_allocs_per_step: steady as f64 / steps.max(1) as f64,
+        step_ms,
+        steps,
+    }
+}
+
+/// Probe the MLP and CIFAR-convnet training loops: Blob allocations per
+/// steady-state step (must be zero after the first iteration sized the
+/// workspace) plus per-step wall time.
+pub fn alloc_probe(steps: usize) -> Vec<AllocProbe> {
+    let mut out = Vec::new();
+    {
+        let batch = 32;
+        let b = NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, 256] }, &[]))
+            .add(LayerConf::new("label", LayerKind::Input { shape: vec![batch] }, &[]))
+            .add(LayerConf::new(
+                "h1",
+                LayerKind::InnerProduct { out: 128, act: Activation::Relu, init_std: 0.05 },
+                &["data"],
+            ))
+            .add(LayerConf::new(
+                "h2",
+                LayerKind::InnerProduct { out: 64, act: Activation::Tanh, init_std: 0.05 },
+                &["h1"],
+            ))
+            .add(LayerConf::new(
+                "logits",
+                LayerKind::InnerProduct { out: 10, act: Activation::Identity, init_std: 0.05 },
+                &["h2"],
+            ))
+            .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]));
+        let net = b.build(&mut Rng::new(7));
+        let data = SyntheticDigits::new(256, 10, 3);
+        out.push(probe_training_loop("mlp", net, data.batch(1, batch), steps));
+    }
+    {
+        let batch = 16;
+        let net = cifar_convnet(batch).build(&mut Rng::new(9));
+        let data = SyntheticImages::cifar_like(4);
+        out.push(probe_training_loop("cifar_convnet", net, data.batch(1, batch), steps));
+    }
+    out
+}
+
+/// `alloc_probe` serialized as the `BENCH_alloc.json` artifact emitted by
+/// `cargo bench --bench figures -- alloc`.
+pub fn alloc_probe_json(steps: usize) -> String {
+    let probes = alloc_probe(steps);
+    let mut s = String::from("{\n  \"probe\": \"steady_state_alloc\",\n  \"models\": [\n");
+    for (i, p) in probes.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"model\": \"{}\", \"warmup_allocs\": {}, \
+             \"steady_allocs_per_step\": {:.3}, \"step_ms\": {:.4}, \"steps\": {}}}{}\n",
+            p.model,
+            p.warmup_allocs,
+            p.steady_allocs_per_step,
+            p.step_ms,
+            p.steps,
+            if i + 1 == probes.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+// ---------------------------------------------------------------------------
 
 /// Table I: feature matrix from code introspection.
 pub fn table1() -> String {
@@ -122,8 +236,7 @@ pub fn fig16(iters: usize) -> String {
             net.zero_grads();
             let stats = alg.train_one_batch(&mut net, &inputs);
             for p in net.params_mut() {
-                let g = p.grad.clone();
-                p.data.axpy(-0.05, &g);
+                p.sgd_step(0.05);
             }
             if it % (iters / 8).max(1) == 0 || it + 1 == iters {
                 out.push_str(&format!("{stage}\t{it}\t{:.5}\n", stats.total_loss()));
@@ -133,7 +246,7 @@ pub fn fig16(iters: usize) -> String {
     // Class separation of top-layer codes: between-class vs within-class
     // mean distance (>1 = clusters separate, the paper's Fig 16b visual).
     let inputs = data.batch(9999, 128);
-    net.set_input("data", inputs["data"].clone());
+    net.set_input_ref("data", &inputs["data"]);
     net.forward(Phase::Test);
     let codes = net.feature("rbm2").clone();
     let labels: Vec<usize> = inputs["label"].data().iter().map(|&v| v as usize).collect();
@@ -194,8 +307,7 @@ pub fn fig17(iters: usize) -> String {
         net.zero_grads();
         let stats = alg.train_one_batch(&mut net, &inputs);
         for p in net.params_mut() {
-            let g = p.grad.clone();
-            upd.update(&p.name, &mut p.data, &g, p.lr_mult, p.wd_mult, it as u64);
+            upd.update_param(p, it as u64);
         }
         if it % (iters / 12).max(1) == 0 || it + 1 == iters {
             out.push_str(&format!(
@@ -716,6 +828,32 @@ mod tests {
         let tsv = ablation_partition_rule();
         assert!(tsv.contains("model"));
         assert!(tsv.contains("data"));
+    }
+
+    /// THE acceptance probe for the planned executor: after warm-up, one
+    /// full training step (input copy + forward + backward + SGD) performs
+    /// zero feature/gradient-blob allocations for both the MLP and the
+    /// convnet.
+    #[test]
+    fn steady_state_training_is_allocation_free() {
+        for p in alloc_probe(3) {
+            assert_eq!(
+                p.steady_allocs_per_step, 0.0,
+                "{}: steady-state must not allocate blobs (got {} allocs/step)",
+                p.model, p.steady_allocs_per_step
+            );
+            assert!(p.warmup_allocs > 0, "{}: warm-up sizes the workspace", p.model);
+        }
+    }
+
+    #[test]
+    fn alloc_probe_json_is_well_formed() {
+        let j = alloc_probe_json(2);
+        assert!(j.contains("\"steady_state_alloc\""));
+        assert!(j.contains("\"mlp\""));
+        assert!(j.contains("\"cifar_convnet\""));
+        // trivially parseable by the in-repo JSON reader
+        assert!(crate::utils::json::Json::parse(&j).is_ok());
     }
 
     #[test]

@@ -12,6 +12,11 @@
 //!
 //! Sequence blobs are `[batch, steps*dim]` row-major with step-major inner
 //! layout (step t occupies columns `[t*dim, (t+1)*dim)`).
+//!
+//! Under the planned-executor contract the per-step unroll state (gate
+//! activations, candidate, hidden states, gathered inputs) and every BPTT
+//! temporary live in layer-owned scratch buffers allocated once and reused
+//! each step — the whole BPTT loop is allocation-free at steady state.
 
 use super::layer::{Layer, Phase};
 use crate::tensor::blob::Param;
@@ -35,18 +40,53 @@ pub struct GruLayer {
     w: Param,
     u: Param,
     b: Param,
-    // Per-step caches from the last forward pass (batch-major blobs).
+    // Per-step unroll caches from the last forward pass, reused across
+    // steps (batch-major blobs).
     cache: Vec<StepCache>,
     h0: Blob,
+    scratch: GruScratch,
 }
 
+#[derive(Default)]
 struct StepCache {
     x: Blob,
-    h_prev: Blob,
     r: Blob,
     z: Blob,
     c: Blob,
     h: Blob,
+}
+
+/// Reusable forward/BPTT temporaries ([batch, h] unless noted).
+#[derive(Default)]
+struct GruScratch {
+    /// `x W + b`, stacked r|z|c — [batch, 3h].
+    pre: Blob,
+    /// `h_prev U`, stacked — [batch, 3h].
+    pre_rec: Blob,
+    /// `r ⊙ h_prev`.
+    rh: Blob,
+    /// `(r ⊙ h_prev) Uc`.
+    rec: Blob,
+    /// Materialized candidate block `Uc = U[:, 2h..3h]` — [h, h].
+    uc: Blob,
+    dh: Blob,
+    dh_next: Blob,
+    dh_prev: Blob,
+    dz: Blob,
+    dc: Blob,
+    dcpre: Blob,
+    drh: Blob,
+    dr: Blob,
+    drpre: Blob,
+    dzpre: Blob,
+    /// Stacked pre-activation gradient — [batch, 3h].
+    dpre: Blob,
+    /// `dpre` with the candidate block zeroed — [batch, 3h].
+    dpre_rz: Blob,
+    /// Candidate-block weight gradient — [h, h].
+    duc: Blob,
+    /// Per-step input gradient — [batch, in_dim].
+    dx_step: Blob,
 }
 
 impl GruLayer {
@@ -61,7 +101,8 @@ impl GruLayer {
             u: Param::new(&format!("{name}/u"), Blob::zeros(&[0])),
             b: Param::new(&format!("{name}/b"), Blob::zeros(&[0])),
             cache: Vec::new(),
-            h0: Blob::zeros(&[0]),
+            h0: Blob::default(),
+            scratch: GruScratch::default(),
         }
     }
 
@@ -69,27 +110,58 @@ impl GruLayer {
         self.steps
     }
 
-    fn gates(&self, x: &Blob, h: &Blob) -> (Blob, Blob, Blob) {
-        // pre = x W + h U + b (candidate's recurrent term handled separately)
+    /// Size (or re-size after a batch change) every reusable buffer; no-op
+    /// at steady state.
+    fn ensure_buffers(&mut self, batch: usize) {
         let hd = self.hidden;
-        let mut pre = ops::matmul(x, &self.w.data);
-        ops::add_row_vec(&mut pre, &self.b.data);
-        let pre_rec = ops::matmul(h, &self.u.data);
-        let batch = x.rows();
-        let mut r = Blob::zeros(&[batch, hd]);
-        let mut z = Blob::zeros(&[batch, hd]);
-        let mut cpre = Blob::zeros(&[batch, hd]);
-        for bi in 0..batch {
-            for j in 0..hd {
-                let base = bi * 3 * hd;
-                r.data_mut()[bi * hd + j] = pre.data()[base + j] + pre_rec.data()[base + j];
-                z.data_mut()[bi * hd + j] =
-                    pre.data()[base + hd + j] + pre_rec.data()[base + hd + j];
-                // candidate input projection only; recurrent part needs r⊙h
-                cpre.data_mut()[bi * hd + j] = pre.data()[base + 2 * hd + j];
-            }
+        if self.cache.len() != self.steps {
+            self.cache.clear();
+            self.cache.resize_with(self.steps, StepCache::default);
         }
-        (ops::sigmoid(&r), ops::sigmoid(&z), cpre)
+        for sc in &mut self.cache {
+            sc.x.resize(&[batch, self.in_dim]);
+            sc.r.resize(&[batch, hd]);
+            sc.z.resize(&[batch, hd]);
+            sc.c.resize(&[batch, hd]);
+            sc.h.resize(&[batch, hd]);
+        }
+        self.h0.resize(&[batch, hd]);
+        self.h0.fill(0.0);
+        let s = &mut self.scratch;
+        for b3 in [&mut s.pre, &mut s.pre_rec, &mut s.dpre, &mut s.dpre_rz] {
+            b3.resize(&[batch, 3 * hd]);
+        }
+        for b1 in [
+            &mut s.rh,
+            &mut s.rec,
+            &mut s.dh,
+            &mut s.dh_next,
+            &mut s.dh_prev,
+            &mut s.dz,
+            &mut s.dc,
+            &mut s.dcpre,
+            &mut s.drh,
+            &mut s.dr,
+            &mut s.drpre,
+            &mut s.dzpre,
+        ] {
+            b1.resize(&[batch, hd]);
+        }
+        s.duc.resize(&[hd, hd]);
+        s.dx_step.resize(&[batch, self.in_dim]);
+        self.refresh_uc();
+    }
+
+    /// Copy the candidate block `U[:, 2h..3h]` into the contiguous `uc`
+    /// scratch (the recurrent candidate GEMMs need it materialized; `u`
+    /// changes every SGD step so this runs once per forward).
+    fn refresh_uc(&mut self) {
+        let hd = self.hidden;
+        self.scratch.uc.resize(&[hd, hd]);
+        for r in 0..hd {
+            self.scratch.uc.data_mut()[r * hd..(r + 1) * hd]
+                .copy_from_slice(&self.u.data.data()[r * 3 * hd + 2 * hd..][..hd]);
+        }
     }
 }
 
@@ -120,39 +192,55 @@ impl Layer for GruLayer {
         vec![s[0], self.steps * hd]
     }
 
-    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
         let xseq = srcs[0];
         let batch = xseq.rows();
         let hd = self.hidden;
-        let mut h = Blob::zeros(&[batch, hd]);
-        self.h0 = h.clone();
-        self.cache.clear();
-        let mut out = Blob::zeros(&[batch, self.steps * hd]);
+        self.ensure_buffers(batch);
+        out.resize(&[batch, self.steps * hd]);
         for t in 0..self.steps {
-            let x = step_slice(xseq, t, self.in_dim, self.steps);
-            let (r, z, cpre_in) = self.gates(&x, &h);
-            // candidate: tanh(cpre_in + (r ⊙ h) Uc)
-            let rh = ops::zip(&r, &h, |a, b| a * b);
-            let rec = ops::matmul(&rh, &slice_u_c(&self.u.data, hd));
-            let cpre = ops::zip(&cpre_in, &rec, |a, b| a + b);
-            let c = ops::tanh(&cpre);
-            let h_new = {
-                let zh = ops::zip(&z, &h, |a, b| a * b);
-                let zc = ops::zip(&z, &c, |zv, cv| (1.0 - zv) * cv);
-                ops::zip(&zh, &zc, |a, b| a + b)
-            };
-            write_step(&mut out, &h_new, t, hd, self.steps);
-            self.cache.push(StepCache {
-                x,
-                h_prev: h.clone(),
-                r,
-                z,
-                c,
-                h: h_new.clone(),
-            });
-            h = h_new;
+            let (done, cur) = self.cache.split_at_mut(t);
+            let sc = &mut cur[0];
+            let h_prev: &Blob = if t == 0 { &self.h0 } else { &done[t - 1].h };
+            step_slice_into(xseq, t, self.in_dim, self.steps, &mut sc.x);
+            {
+                // pre = x W + b ; pre_rec = h_prev U (candidate's recurrent
+                // term handled separately through r⊙h below).
+                let GruScratch { pre, pre_rec, .. } = &mut self.scratch;
+                ops::matmul_into(&sc.x, &self.w.data, pre, 0.0);
+                ops::add_row_vec(pre, &self.b.data);
+                ops::matmul_into(h_prev, &self.u.data, pre_rec, 0.0);
+                for bi in 0..batch {
+                    let base = bi * 3 * hd;
+                    for j in 0..hd {
+                        let rv = pre.data()[base + j] + pre_rec.data()[base + j];
+                        let zv = pre.data()[base + hd + j] + pre_rec.data()[base + hd + j];
+                        sc.r.data_mut()[bi * hd + j] = ops::sigmoid_scalar(rv);
+                        sc.z.data_mut()[bi * hd + j] = ops::sigmoid_scalar(zv);
+                    }
+                }
+            }
+            {
+                // candidate: c = tanh(x Wc + (r⊙h_prev) Uc + bc)
+                let GruScratch { rh, rec, uc, pre, .. } = &mut self.scratch;
+                ops::zip_into(&sc.r, h_prev, rh, |a, b| a * b);
+                ops::matmul_into(rh, uc, rec, 0.0);
+                for bi in 0..batch {
+                    for j in 0..hd {
+                        let cpre =
+                            pre.data()[bi * 3 * hd + 2 * hd + j] + rec.data()[bi * hd + j];
+                        sc.c.data_mut()[bi * hd + j] = cpre.tanh();
+                    }
+                }
+            }
+            // h' = z⊙h_prev + (1-z)⊙c
+            for i in 0..batch * hd {
+                let zv = sc.z.data()[i];
+                sc.h.data_mut()[i] =
+                    zv * h_prev.data()[i] + (1.0 - zv) * sc.c.data()[i];
+            }
+            set_step(out, &sc.h, t, hd, self.steps);
         }
-        out
     }
 
     fn compute_gradient(
@@ -160,86 +248,93 @@ impl Layer for GruLayer {
         srcs: &[&Blob],
         _own: &Blob,
         grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
+        src_grads: &mut [Option<&mut Blob>],
+    ) {
         let dy_seq = grad_out.expect("Gru needs grad");
         let xseq = srcs[0];
         let batch = xseq.rows();
         let hd = self.hidden;
-        let mut dx_seq = Blob::zeros(xseq.shape());
-        let mut dh_next = Blob::zeros(&[batch, hd]);
+        let steps = self.steps;
+        let in_dim = self.in_dim;
+        self.scratch.dh_next.fill(0.0);
 
-        // dW/dU accumulate over steps; build locally then add to params.
-        let mut dw = Blob::zeros(self.w.data.shape());
-        let mut du = Blob::zeros(self.u.data.shape());
-        let mut db = Blob::zeros(self.b.data.shape());
-
-        for t in (0..self.steps).rev() {
-            let sc = &self.cache[t];
-            // Total gradient into h_t: from output at step t + from step t+1.
-            let mut dh = step_slice(dy_seq, t, hd, self.steps);
-            dh.add_assign(&dh_next);
-
-            // h = z⊙h_prev + (1-z)⊙c
-            let dz = ops::zip(
-                &dh,
-                &ops::zip(&sc.h_prev, &sc.c, |hp, cv| hp - cv),
-                |d, diff| d * diff,
-            );
-            let dc = ops::zip(&dh, &sc.z, |d, zv| d * (1.0 - zv));
-            let mut dh_prev = ops::zip(&dh, &sc.z, |d, zv| d * zv);
-
-            // c = tanh(cpre); dcpre = dc * (1 - c^2)
-            let dcpre = ops::zip(&dc, &sc.c, |d, cv| d * (1.0 - cv * cv));
-            // cpre = x Wc + (r⊙h_prev) Uc + bc
-            let rh = ops::zip(&sc.r, &sc.h_prev, |a, b| a * b);
-            let uc = slice_u_c(&self.u.data, hd);
-            let drh = ops::matmul_nt(&dcpre, &uc);
-            // dUc += rh^T dcpre
-            add_u_c(&mut du, &ops::matmul_tn(&rh, &dcpre), hd);
-            let dr = ops::zip(&drh, &sc.h_prev, |d, hp| d * hp);
-            dh_prev.add_assign(&ops::zip(&drh, &sc.r, |d, rv| d * rv));
-
-            // gate pre-activations
-            let drpre = ops::zip(&dr, &sc.r, |d, rv| d * rv * (1.0 - rv));
-            let dzpre = ops::zip(&dz, &sc.z, |d, zv| d * zv * (1.0 - zv));
-
-            // Assemble the stacked [batch, 3h] pre-activation gradient
-            // (r|z|c): W and U(r,z) see the same layout; Uc was handled above.
-            let mut dpre = Blob::zeros(&[batch, 3 * hd]);
-            for bi in 0..batch {
-                for j in 0..hd {
-                    dpre.data_mut()[bi * 3 * hd + j] = drpre.data()[bi * hd + j];
-                    dpre.data_mut()[bi * 3 * hd + hd + j] = dzpre.data()[bi * hd + j];
-                    dpre.data_mut()[bi * 3 * hd + 2 * hd + j] = dcpre.data()[bi * hd + j];
+        for t in (0..steps).rev() {
+            let (done, cur) = self.cache.split_at(t);
+            let sc = &cur[0];
+            let h_prev: &Blob = if t == 0 { &self.h0 } else { &done[t - 1].h };
+            {
+                let GruScratch { dh, dh_next, dh_prev, dz, dc, dcpre, .. } = &mut self.scratch;
+                // Total gradient into h_t: from output at t + from step t+1.
+                step_slice_into(dy_seq, t, hd, steps, dh);
+                dh.add_assign(dh_next);
+                // h = z⊙h_prev + (1-z)⊙c ; c = tanh(cpre)
+                for i in 0..batch * hd {
+                    let d = dh.data()[i];
+                    let zv = sc.z.data()[i];
+                    let cv = sc.c.data()[i];
+                    dz.data_mut()[i] = d * (h_prev.data()[i] - cv);
+                    dc.data_mut()[i] = d * (1.0 - zv);
+                    dh_prev.data_mut()[i] = d * zv;
+                    dcpre.data_mut()[i] = dc.data()[i] * (1.0 - cv * cv);
                 }
             }
-            // dW += x^T dpre ; db += colsum(dpre)
-            dw.add_assign(&ops::matmul_tn(&sc.x, &dpre));
-            db.add_assign(&ops::sum_rows(&dpre));
-            // dx = dpre W^T
-            let dx = ops::matmul_nt(&dpre, &self.w.data);
-            write_step(&mut dx_seq, &dx, t, self.in_dim, self.steps);
-
+            {
+                // cpre = x Wc + (r⊙h_prev) Uc + bc
+                let GruScratch { rh, uc, dcpre, drh, duc, .. } = &mut self.scratch;
+                ops::zip_into(&sc.r, h_prev, rh, |a, b| a * b);
+                ops::matmul_nt_into(dcpre, uc, drh, 0.0);
+                // dUc += rh^T dcpre
+                ops::matmul_tn_into(rh, dcpre, duc, 0.0);
+            }
+            add_u_c(&mut self.u.grad, &self.scratch.duc, hd);
+            {
+                let GruScratch { dh_prev, dz, dr, drh, drpre, dzpre, dpre, dcpre, dpre_rz, .. } =
+                    &mut self.scratch;
+                for i in 0..batch * hd {
+                    dr.data_mut()[i] = drh.data()[i] * h_prev.data()[i];
+                    dh_prev.data_mut()[i] += drh.data()[i] * sc.r.data()[i];
+                    // gate pre-activations
+                    let rv = sc.r.data()[i];
+                    let zv = sc.z.data()[i];
+                    drpre.data_mut()[i] = dr.data()[i] * rv * (1.0 - rv);
+                    dzpre.data_mut()[i] = dz.data()[i] * zv * (1.0 - zv);
+                }
+                // Assemble the stacked [batch, 3h] pre-activation gradient
+                // (r|z|c); dpre_rz zeroes the candidate block (Uc was
+                // handled above).
+                for bi in 0..batch {
+                    let base = bi * 3 * hd;
+                    for j in 0..hd {
+                        dpre.data_mut()[base + j] = drpre.data()[bi * hd + j];
+                        dpre.data_mut()[base + hd + j] = dzpre.data()[bi * hd + j];
+                        dpre.data_mut()[base + 2 * hd + j] = dcpre.data()[bi * hd + j];
+                        dpre_rz.data_mut()[base + j] = drpre.data()[bi * hd + j];
+                        dpre_rz.data_mut()[base + hd + j] = dzpre.data()[bi * hd + j];
+                        dpre_rz.data_mut()[base + 2 * hd + j] = 0.0;
+                    }
+                }
+            }
+            // dW += x^T dpre ; db += colsum(dpre) ; dx_t = dpre W^T
+            ops::matmul_tn_into(&sc.x, &self.scratch.dpre, &mut self.w.grad, 1.0);
+            ops::sum_rows_into(&self.scratch.dpre, &mut self.b.grad, true);
+            {
+                let GruScratch { dpre, dx_step, .. } = &mut self.scratch;
+                ops::matmul_nt_into(dpre, &self.w.data, dx_step, 0.0);
+            }
+            if let Some(dx) = &mut src_grads[0] {
+                add_step(dx, &self.scratch.dx_step, t, in_dim, steps);
+            }
             // dU(r,z) from recurrent terms: pre_rec = h_prev U.
-            // Only r,z columns: zero the c block of dpre first.
-            let mut dpre_rz = dpre.clone();
-            for bi in 0..batch {
-                for j in 0..hd {
-                    dpre_rz.data_mut()[bi * 3 * hd + 2 * hd + j] = 0.0;
-                }
+            ops::matmul_tn_into(h_prev, &self.scratch.dpre_rz, &mut self.u.grad, 1.0);
+            {
+                let GruScratch { dpre_rz, dh_prev, .. } = &mut self.scratch;
+                ops::matmul_nt_into(dpre_rz, &self.u.data, dh_prev, 1.0);
             }
-            du.add_assign(&ops::matmul_tn(&sc.h_prev, &dpre_rz));
-            dh_prev.add_assign(&{
-                let full = ops::matmul_nt(&dpre_rz, &self.u.data);
-                full
-            });
-
-            dh_next = dh_prev;
+            {
+                let GruScratch { dh_next, dh_prev, .. } = &mut self.scratch;
+                std::mem::swap(dh_next, dh_prev);
+            }
         }
-        self.w.grad.add_assign(&dw);
-        self.u.grad.add_assign(&du);
-        self.b.grad.add_assign(&db);
-        vec![Some(dx_seq)]
     }
 
     fn params(&self) -> Vec<&Param> {
@@ -255,19 +350,29 @@ impl Layer for GruLayer {
     }
 }
 
-/// Extract step `t` of a `[batch, steps*dim]` sequence blob → `[batch, dim]`.
-fn step_slice(seq: &Blob, t: usize, dim: usize, steps: usize) -> Blob {
+/// Gather step `t` of a `[batch, steps*dim]` sequence blob into a
+/// `[batch, dim]` buffer (resized, overwritten).
+fn step_slice_into(seq: &Blob, t: usize, dim: usize, steps: usize, out: &mut Blob) {
     let batch = seq.rows();
-    let mut out = Blob::zeros(&[batch, dim]);
+    out.resize(&[batch, dim]);
     for b in 0..batch {
-        let src = &seq.data()[b * steps * dim + t * dim..][..dim];
-        out.data_mut()[b * dim..(b + 1) * dim].copy_from_slice(src);
+        out.data_mut()[b * dim..(b + 1) * dim]
+            .copy_from_slice(&seq.data()[b * steps * dim + t * dim..][..dim]);
     }
-    out
 }
 
-/// Write step `t` of a sequence blob (accumulating assignment).
-fn write_step(seq: &mut Blob, step: &Blob, t: usize, dim: usize, steps: usize) {
+/// Overwrite step `t` of a sequence blob with `step`.
+fn set_step(seq: &mut Blob, step: &Blob, t: usize, dim: usize, steps: usize) {
+    let batch = step.rows();
+    for b in 0..batch {
+        seq.data_mut()[b * steps * dim + t * dim..][..dim]
+            .copy_from_slice(&step.data()[b * dim..(b + 1) * dim]);
+    }
+}
+
+/// Accumulate (`+=`) `step` into step `t` of a sequence blob (gradient
+/// scatter into a shared workspace slot).
+fn add_step(seq: &mut Blob, step: &Blob, t: usize, dim: usize, steps: usize) {
     let batch = step.rows();
     for b in 0..batch {
         let dst = &mut seq.data_mut()[b * steps * dim + t * dim..][..dim];
@@ -275,11 +380,6 @@ fn write_step(seq: &mut Blob, step: &Blob, t: usize, dim: usize, steps: usize) {
             *d += s;
         }
     }
-}
-
-/// View of the candidate block Uc = U[:, 2h..3h] as an owned [h, h] blob.
-fn slice_u_c(u: &Blob, hd: usize) -> Blob {
-    u.slice_cols(2 * hd, hd)
 }
 
 /// Accumulate dUc into the candidate block of dU.
@@ -321,10 +421,11 @@ impl Layer for OneHotLayer {
         vec![s[0], self.steps * self.vocab]
     }
 
-    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
         let ids = srcs[0];
         let batch = ids.rows();
-        let mut out = Blob::zeros(&[batch, self.steps * self.vocab]);
+        out.resize(&[batch, self.steps * self.vocab]);
+        out.fill(0.0);
         for b in 0..batch {
             for t in 0..self.steps {
                 let id = ids.data()[b * self.steps + t] as usize;
@@ -332,7 +433,6 @@ impl Layer for OneHotLayer {
                 out.data_mut()[b * self.steps * self.vocab + t * self.vocab + id] = 1.0;
             }
         }
-        out
     }
 
     fn compute_gradient(
@@ -340,8 +440,12 @@ impl Layer for OneHotLayer {
         _srcs: &[&Blob],
         _own: &Blob,
         _grad: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
-        vec![None]
+        _src_grads: &mut [Option<&mut Blob>],
+    ) {
+    }
+
+    fn needs_src_grad(&self, _k: usize) -> bool {
+        false // char ids are not differentiable
     }
 
     fn as_any(&mut self) -> &mut dyn Any {
@@ -352,6 +456,7 @@ impl Layer for OneHotLayer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::test_support::{backward, forward};
 
     #[test]
     fn onehot_encodes() {
@@ -359,7 +464,7 @@ mod tests {
         let out_shape = l.setup(&[&[2, 3]], &mut Rng::new(1));
         assert_eq!(out_shape, vec![2, 12]);
         let ids = Blob::from_vec(&[2, 3], vec![0., 1., 2., 3., 0., 1.]);
-        let y = l.compute_feature(Phase::Train, &[&ids]);
+        let y = forward(&mut l, Phase::Train, &[&ids]);
         assert_eq!(y.sum(), 6.0);
         assert_eq!(y.data()[0], 1.0); // b0 t0 id0
         assert_eq!(y.data()[4 + 1], 1.0); // b0 t1 id1
@@ -382,9 +487,35 @@ mod tests {
         l.setup(&[&[2, 4 * 3]], &mut Rng::new(3));
         let mut r = Rng::new(5);
         let x = Blob::from_vec(&[2, 12], r.uniform_vec(24, -1.0, 1.0));
-        let y = l.compute_feature(Phase::Train, &[&x]);
+        let y = forward(&mut l, Phase::Train, &[&x]);
         // GRU hidden state is a convex combination of tanh outputs → (-1, 1)
         assert!(y.data().iter().all(|&v| v.abs() < 1.0));
+    }
+
+    /// The steady-state unroll must not allocate: after the first forward/
+    /// backward pair sized the caches, further steps reuse them.
+    #[test]
+    fn gru_steady_state_is_allocation_free() {
+        let mut l = GruLayer::new("gru", 6, 4, 0.3);
+        l.setup(&[&[2, 4 * 3]], &mut Rng::new(3));
+        let mut r = Rng::new(5);
+        let x = Blob::from_vec(&[2, 12], r.uniform_vec(24, -1.0, 1.0));
+        let mut out = Blob::default();
+        let mut dx = Blob::zeros(&[2, 12]);
+        let dy = Blob::full(&[2, 24], 1.0);
+        // Warm-up sizes every buffer.
+        l.compute_feature(Phase::Train, &[&x], &mut out);
+        {
+            let mut slots = [Some(&mut dx)];
+            l.compute_gradient(&[&x], &out, Some(&dy), &mut slots);
+        }
+        let before = Blob::alloc_count();
+        for _ in 0..3 {
+            l.compute_feature(Phase::Train, &[&x], &mut out);
+            let mut slots = [Some(&mut dx)];
+            l.compute_gradient(&[&x], &out, Some(&dy), &mut slots);
+        }
+        assert_eq!(Blob::alloc_count(), before, "GRU unroll must reuse its buffers");
     }
 
     /// Full BPTT gradient check: dL/dx and dL/dW numerically.
@@ -399,16 +530,16 @@ mod tests {
         let mut r = Rng::new(11);
         let x = Blob::from_vec(&[batch, steps * in_dim], r.uniform_vec(batch * steps * in_dim, -1.0, 1.0));
 
-        let y = l.compute_feature(Phase::Train, &[&x]);
+        let y = forward(&mut l, Phase::Train, &[&x]);
         let dy = Blob::full(y.shape(), 1.0);
-        let gs = l.compute_gradient(&[&x], &y, Some(&dy));
+        let gs = backward(&mut l, &[&x], &y, Some(&dy));
         let dx = gs[0].clone().unwrap();
         let dw = l.w.grad.clone();
         let du = l.u.grad.clone();
         let db = l.b.grad.clone();
 
         let eps = 1e-2;
-        let f_x = |l: &mut GruLayer, x: &Blob| l.compute_feature(Phase::Train, &[x]).sum();
+        let f_x = |l: &mut GruLayer, x: &Blob| forward(l, Phase::Train, &[x]).sum();
         for i in 0..x.len() {
             let mut p = x.clone();
             p.data_mut()[i] += eps;
@@ -457,14 +588,18 @@ mod tests {
     }
 
     #[test]
-    fn step_slice_write_roundtrip() {
+    fn step_slice_set_add_roundtrip() {
         let mut r = Rng::new(1);
         let seq = Blob::from_vec(&[2, 6], r.uniform_vec(12, -1.0, 1.0));
-        let mut rebuilt = Blob::zeros(&[2, 6]);
+        let mut via_set = Blob::zeros(&[2, 6]);
+        let mut via_add = Blob::zeros(&[2, 6]);
+        let mut s = Blob::default();
         for t in 0..3 {
-            let s = step_slice(&seq, t, 2, 3);
-            write_step(&mut rebuilt, &s, t, 2, 3);
+            step_slice_into(&seq, t, 2, 3, &mut s);
+            set_step(&mut via_set, &s, t, 2, 3);
+            add_step(&mut via_add, &s, t, 2, 3);
         }
-        assert_eq!(seq.data(), rebuilt.data());
+        assert_eq!(seq.data(), via_set.data());
+        assert_eq!(seq.data(), via_add.data());
     }
 }

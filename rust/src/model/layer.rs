@@ -1,16 +1,39 @@
 //! The `Layer` abstraction (paper Fig 6) and the declarative layer
 //! configuration from which nets are built.
 //!
-//! A layer owns its `Param`s and implements two functions invoked by the
-//! `TrainOneBatch` algorithms:
+//! # Execution contract: planned, buffer-reusing, allocation-free
 //!
-//! * `compute_feature` — transform source features into this layer's feature
-//!   blob (forward propagation);
-//! * `compute_gradient` — given the gradient w.r.t. its own feature,
-//!   accumulate parameter gradients and produce gradients w.r.t. each source
-//!   feature (backward propagation).
+//! A layer owns its `Param`s and implements two functions invoked by the
+//! `TrainOneBatch` algorithms through the [`super::net::NeuralNet`]
+//! executor. Both follow a *write-into-workspace* contract rather than
+//! allocate-per-call: the net builds a [`super::net::Workspace`] once at
+//! `NetBuilder::build` time (one feature blob and one gradient blob per
+//! node, sized from the inferred shapes) and hands layers the destination
+//! buffers every step, so the steady-state training loop performs **zero**
+//! feature/gradient-blob allocations (proven by the allocation probe in
+//! [`crate::bench`]).
+//!
+//! * `compute_feature(phase, srcs, out)` — forward propagation. The layer
+//!   must **overwrite** `out` completely. `out` arrives pre-sized with the
+//!   shape `setup` returned; if the runtime batch differs from the declared
+//!   one (e.g. evaluating a larger held-out batch), the layer resizes `out`
+//!   via [`Blob::resize`], which is a no-op at steady state.
+//! * `compute_gradient(srcs, own, grad_out, src_grads)` — backward
+//!   propagation. The layer accumulates parameter gradients into
+//!   `Param::grad` (`+=`) and **accumulates** (`+=`) the gradient w.r.t.
+//!   each source into the corresponding `src_grads` slot. Slots are
+//!   pre-zeroed by the executor before the first contribution of the step,
+//!   so fan-out gradients from several consumers sum without temporaries.
+//!   A slot is `None` when that source needs no gradient (see
+//!   [`Layer::needs_src_grad`]).
+//!
+//! Per-layer scratch (im2col buffers, GRU unroll state, dropout masks,
+//! activation-chain temporaries) is owned by the layer, allocated at
+//! `setup`/first use, and reused across steps. Where producer and consumer
+//! shapes match, activations run in place on the already-written
+//! pre-activation buffer (`ops::*_inplace`).
 
-use crate::tensor::{Blob, blob::Param};
+use crate::tensor::{blob::Param, Blob};
 use crate::utils::rng::Rng;
 use std::any::Any;
 
@@ -36,14 +59,16 @@ pub trait Layer: Send {
     /// shapes of the source layers and returns this layer's output shape.
     fn setup(&mut self, src_shapes: &[&[usize]], rng: &mut Rng) -> Vec<usize>;
 
-    /// Forward propagation: compute this layer's feature blob from the
-    /// source feature blobs.
-    fn compute_feature(&mut self, phase: Phase, srcs: &[&Blob]) -> Blob;
+    /// Forward propagation: write this layer's feature into the workspace
+    /// slot `out` (see the module docs for the full contract). `out` must be
+    /// completely overwritten; resize it when the runtime batch differs.
+    fn compute_feature(&mut self, phase: Phase, srcs: &[&Blob], out: &mut Blob);
 
     /// Backward propagation: given source features, this layer's own
     /// feature, and the gradient w.r.t. that feature, accumulate parameter
-    /// gradients (into `Param::grad`) and return the gradient w.r.t. each
-    /// source (or `None` for sources that need no gradient, e.g. labels).
+    /// gradients (into `Param::grad`) and ACCUMULATE (`+=`) the gradient
+    /// w.r.t. each source into the matching pre-zeroed `src_grads` slot.
+    /// `src_grads[k]` is `None` when `needs_src_grad(k)` is false.
     ///
     /// Loss layers are invoked with `grad_out == None` and derive the
     /// gradient from their stored loss state.
@@ -52,7 +77,17 @@ pub trait Layer: Send {
         srcs: &[&Blob],
         own_feature: &Blob,
         grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>>;
+        src_grads: &mut [Option<&mut Blob>],
+    );
+
+    /// Whether backward propagation produces a gradient for source `k`
+    /// (default: every source). Layers whose sources are non-differentiable
+    /// inputs (label paths, char ids) override this so the executor neither
+    /// zeroes nor marks those slots — preserving the "no gradient reached
+    /// this node" skip exactly as in the allocate-per-call contract.
+    fn needs_src_grad(&self, _k: usize) -> bool {
+        true
+    }
 
     /// Learnable parameters (empty for most layers).
     fn params(&self) -> Vec<&Param> {

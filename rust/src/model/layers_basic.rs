@@ -8,22 +8,24 @@ use crate::tensor::{ops, Blob};
 use crate::utils::rng::Rng;
 use std::any::Any;
 
-/// Input layer: the training loop sets its mini-batch blob each iteration
-/// (the paper's data/parser layers; loading is in [`crate::data`]).
+/// Input layer: the training loop copies its mini-batch straight into the
+/// layer's workspace slot each iteration (`NeuralNet::set_input_ref`), so
+/// forward only checks the slot was actually fed (the paper's data/parser
+/// layers; loading is in [`crate::data`]).
 pub struct InputLayer {
     name: String,
     shape: Vec<usize>,
-    batch: Option<Blob>,
+    fed: bool,
 }
 
 impl InputLayer {
     pub fn new(name: &str, shape: Vec<usize>) -> InputLayer {
-        InputLayer { name: name.to_string(), shape, batch: None }
+        InputLayer { name: name.to_string(), shape, fed: false }
     }
 
-    /// Feed the next mini-batch.
-    pub fn set_batch(&mut self, b: Blob) {
-        self.batch = Some(b);
+    /// Called by `NeuralNet::set_input_ref` when a batch lands in the slot.
+    pub(crate) fn mark_fed(&mut self) {
+        self.fed = true;
     }
 }
 
@@ -40,8 +42,11 @@ impl Layer for InputLayer {
         self.shape.clone()
     }
 
-    fn compute_feature(&mut self, _phase: Phase, _srcs: &[&Blob]) -> Blob {
-        self.batch.clone().expect("InputLayer: set_batch not called")
+    fn compute_feature(&mut self, _phase: Phase, _srcs: &[&Blob], _out: &mut Blob) {
+        // The workspace slot holds the batch copied in by set_input; keep
+        // the old allocate-per-call contract's guard against running a net
+        // whose input was never fed (silent all-zeros batches otherwise).
+        assert!(self.fed, "InputLayer '{}': set_input not called", self.name);
     }
 
     fn compute_gradient(
@@ -49,8 +54,8 @@ impl Layer for InputLayer {
         _srcs: &[&Blob],
         _own: &Blob,
         _grad: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
-        Vec::new()
+        _src_grads: &mut [Option<&mut Blob>],
+    ) {
     }
 
     fn as_any(&mut self) -> &mut dyn Any {
@@ -71,6 +76,8 @@ pub struct InnerProductLayer {
     /// When dim-1 partitioned: (start, count, total) of the output columns
     /// this sub-layer owns (paper Fig 12).
     col_slice: Option<(usize, usize, usize)>,
+    /// Reusable backward scratch for the activation-chained `dy`.
+    dy_scratch: Blob,
 }
 
 impl InnerProductLayer {
@@ -83,6 +90,7 @@ impl InnerProductLayer {
             weight: Param::new(&format!("{name}/weight"), Blob::zeros(&[0])),
             bias: Param::new(&format!("{name}/bias"), Blob::zeros(&[0])),
             col_slice: None,
+            dy_scratch: Blob::default(),
         }
     }
 
@@ -117,19 +125,21 @@ impl Layer for InnerProductLayer {
         vec![batch, self.out]
     }
 
-    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
+        // The blob's matrix view already flattens trailing dims, so no
+        // reshape copy is needed: x is [batch, in_dim] as far as GEMM cares.
         let x = srcs[0];
-        let batch = x.rows();
-        let x2 = x.reshape(&[batch, x.cols()]);
-        let mut y = ops::matmul(&x2, &self.weight.data);
-        ops::add_row_vec(&mut y, &self.bias.data);
-        let out = match self.act {
-            Activation::Identity => y,
-            Activation::Sigmoid => ops::sigmoid(&y),
-            Activation::Tanh => ops::tanh(&y),
-            Activation::Relu => ops::relu(&y),
-        };
-        out
+        out.resize(&[x.rows(), self.out]);
+        ops::matmul_into(x, &self.weight.data, out, 0.0);
+        ops::add_row_vec(out, &self.bias.data);
+        // In-place fused activation: producer (pre-activation) and consumer
+        // share the workspace slot.
+        match self.act {
+            Activation::Identity => {}
+            Activation::Sigmoid => ops::sigmoid_inplace(out),
+            Activation::Tanh => ops::tanh_inplace(out),
+            Activation::Relu => ops::relu_inplace(out),
+        }
     }
 
     fn compute_gradient(
@@ -137,26 +147,33 @@ impl Layer for InnerProductLayer {
         srcs: &[&Blob],
         own: &Blob,
         grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
+        src_grads: &mut [Option<&mut Blob>],
+    ) {
         let dy_post = grad_out.expect("InnerProduct needs an output gradient");
-        // Chain through the fused activation.
-        let dy = match self.act {
-            Activation::Identity => dy_post.clone(),
-            Activation::Sigmoid => ops::sigmoid_grad(own, dy_post),
-            Activation::Tanh => ops::tanh_grad(own, dy_post),
+        // Chain through the fused activation into reusable scratch
+        // (Identity borrows the upstream gradient directly).
+        let dy: &Blob = match self.act {
+            Activation::Identity => dy_post,
+            Activation::Sigmoid => {
+                ops::zip_into(own, dy_post, &mut self.dy_scratch, ops::dsigmoid);
+                &self.dy_scratch
+            }
+            Activation::Tanh => {
+                ops::zip_into(own, dy_post, &mut self.dy_scratch, ops::dtanh);
+                &self.dy_scratch
+            }
             Activation::Relu => {
-                // own stores post-relu output; relu'(x) = 1 where output > 0.
-                ops::zip(own, dy_post, |y, d| if y > 0.0 { d } else { 0.0 })
+                ops::zip_into(own, dy_post, &mut self.dy_scratch, ops::drelu_from_out);
+                &self.dy_scratch
             }
         };
         let x = srcs[0];
-        let batch = x.rows();
-        let x2 = x.reshape(&[batch, x.cols()]);
-        // dW += x^T dy ; db += colsum(dy) ; dx = dy W^T
-        self.weight.grad.add_assign(&ops::matmul_tn(&x2, &dy));
-        self.bias.grad.add_assign(&ops::sum_rows(&dy));
-        let dx = ops::matmul_nt(&dy, &self.weight.data);
-        vec![Some(dx.reshape(x.shape()))]
+        // dW += x^T dy ; db += colsum(dy) ; dx += dy W^T
+        ops::matmul_tn_into(x, dy, &mut self.weight.grad, 1.0);
+        ops::sum_rows_into(dy, &mut self.bias.grad, true);
+        if let Some(dx) = &mut src_grads[0] {
+            ops::matmul_nt_into(dy, &self.weight.data, dx, 1.0);
+        }
     }
 
     fn params(&self) -> Vec<&Param> {
@@ -179,16 +196,18 @@ impl InnerProductLayer {
     }
 }
 
-/// Standalone activation layer.
+/// Standalone activation layer. Forward writes straight from the source
+/// slot into the output slot (identical shapes — the "in-place" elementwise
+/// family); backward derives `dx` from the stored OUTPUT, so no input cache
+/// is kept at all.
 pub struct ActivationLayer {
     name: String,
     act: Activation,
-    input_cache: Blob,
 }
 
 impl ActivationLayer {
     pub fn new(name: &str, act: Activation) -> ActivationLayer {
-        ActivationLayer { name: name.to_string(), act, input_cache: Blob::zeros(&[0]) }
+        ActivationLayer { name: name.to_string(), act }
     }
 }
 
@@ -205,13 +224,12 @@ impl Layer for ActivationLayer {
         src_shapes[0].to_vec()
     }
 
-    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
-        self.input_cache = srcs[0].clone();
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
         match self.act {
-            Activation::Identity => srcs[0].clone(),
-            Activation::Sigmoid => ops::sigmoid(srcs[0]),
-            Activation::Tanh => ops::tanh(srcs[0]),
-            Activation::Relu => ops::relu(srcs[0]),
+            Activation::Identity => out.copy_from(srcs[0]),
+            Activation::Sigmoid => ops::sigmoid_into(srcs[0], out),
+            Activation::Tanh => ops::tanh_into(srcs[0], out),
+            Activation::Relu => ops::relu_into(srcs[0], out),
         }
     }
 
@@ -220,15 +238,16 @@ impl Layer for ActivationLayer {
         _srcs: &[&Blob],
         own: &Blob,
         grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
+        src_grads: &mut [Option<&mut Blob>],
+    ) {
         let dy = grad_out.expect("Activation needs grad");
-        let dx = match self.act {
-            Activation::Identity => dy.clone(),
-            Activation::Sigmoid => ops::sigmoid_grad(own, dy),
-            Activation::Tanh => ops::tanh_grad(own, dy),
-            Activation::Relu => ops::relu_grad(&self.input_cache, dy),
-        };
-        vec![Some(dx)]
+        let dx = src_grads[0].as_mut().expect("Activation src slot");
+        match self.act {
+            Activation::Identity => dx.add_assign(dy),
+            Activation::Sigmoid => ops::zip_acc(own, dy, dx, ops::dsigmoid),
+            Activation::Tanh => ops::zip_acc(own, dy, dx, ops::dtanh),
+            Activation::Relu => ops::zip_acc(own, dy, dx, ops::drelu_from_out),
+        }
     }
 
     fn as_any(&mut self) -> &mut dyn Any {
@@ -251,7 +270,7 @@ impl DropoutLayer {
         DropoutLayer {
             name: name.to_string(),
             keep,
-            mask: Blob::zeros(&[0]),
+            mask: Blob::default(),
             rng: Rng::new(0x0d0d + name.len() as u64),
         }
     }
@@ -270,20 +289,20 @@ impl Layer for DropoutLayer {
         src_shapes[0].to_vec()
     }
 
-    fn compute_feature(&mut self, phase: Phase, srcs: &[&Blob]) -> Blob {
+    fn compute_feature(&mut self, phase: Phase, srcs: &[&Blob], out: &mut Blob) {
         if phase == Phase::Test {
-            return srcs[0].clone();
+            out.copy_from(srcs[0]);
+            return;
         }
+        // Refill the persistent mask in place (reallocates only when the
+        // batch shape changes).
         let scale = 1.0 / self.keep;
-        let mask = Blob::from_vec(
-            srcs[0].shape(),
-            (0..srcs[0].len())
-                .map(|_| if self.rng.uniform() < self.keep { scale } else { 0.0 })
-                .collect(),
-        );
-        let out = ops::zip(srcs[0], &mask, |x, m| x * m);
-        self.mask = mask;
-        out
+        self.mask.resize(srcs[0].shape());
+        let (keep, rng) = (self.keep, &mut self.rng);
+        for m in self.mask.data_mut() {
+            *m = if rng.uniform() < keep { scale } else { 0.0 };
+        }
+        ops::zip_into(srcs[0], &self.mask, out, |x, m| x * m);
     }
 
     fn compute_gradient(
@@ -291,9 +310,11 @@ impl Layer for DropoutLayer {
         _srcs: &[&Blob],
         _own: &Blob,
         grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
+        src_grads: &mut [Option<&mut Blob>],
+    ) {
         let dy = grad_out.expect("Dropout needs grad");
-        vec![Some(ops::zip(dy, &self.mask, |d, m| d * m))]
+        let dx = src_grads[0].as_mut().expect("Dropout src slot");
+        ops::zip_acc(dy, &self.mask, dx, |d, m| d * m);
     }
 
     fn as_any(&mut self) -> &mut dyn Any {
@@ -312,22 +333,20 @@ pub struct SliceLayer {
     dim: usize,
     parts: usize,
     index: usize,
-    range: (usize, usize),
-    src_shape: Vec<usize>,
 }
 
 impl SliceLayer {
     pub fn new(name: &str, dim: usize, parts: usize, index: usize) -> SliceLayer {
         assert!(dim <= 1, "slice dim must be 0 or 1");
         assert!(index < parts);
-        SliceLayer {
-            name: name.to_string(),
-            dim,
-            parts,
-            index,
-            range: (0, 0),
-            src_shape: Vec::new(),
-        }
+        SliceLayer { name: name.to_string(), dim, parts, index }
+    }
+
+    /// `(start, count)` of this part, derived from the RUNTIME source shape
+    /// so batch-size changes at evaluation time keep slicing correctly.
+    fn range_for(&self, src: &Blob) -> (usize, usize) {
+        let total = if self.dim == 0 { src.rows() } else { src.cols() };
+        Blob::split_range(total, self.parts, self.index)
     }
 }
 
@@ -342,24 +361,33 @@ impl Layer for SliceLayer {
 
     fn setup(&mut self, src_shapes: &[&[usize]], _rng: &mut Rng) -> Vec<usize> {
         let s = src_shapes[0];
-        self.src_shape = s.to_vec();
         let total = if self.dim == 0 { s[0] } else { s[1..].iter().product() };
-        self.range = Blob::split_points(total, self.parts)[self.index];
+        let range = Blob::split_range(total, self.parts, self.index);
         if self.dim == 0 {
             let mut out = s.to_vec();
-            out[0] = self.range.1;
+            out[0] = range.1;
             out
         } else {
-            vec![s[0], self.range.1]
+            vec![s[0], range.1]
         }
     }
 
-    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
-        let (start, count) = self.range;
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
+        let src = srcs[0];
+        let (start, count) = self.range_for(src);
+        let cols = src.cols();
         if self.dim == 0 {
-            srcs[0].slice_rows(start, count)
+            let mut shape = src.shape().to_vec();
+            shape[0] = count;
+            out.resize(&shape);
+            out.data_mut().copy_from_slice(&src.data()[start * cols..(start + count) * cols]);
         } else {
-            srcs[0].slice_cols(start, count)
+            out.resize(&[src.rows(), count]);
+            for r in 0..src.rows() {
+                let base = r * cols + start;
+                out.data_mut()[r * count..(r + 1) * count]
+                    .copy_from_slice(&src.data()[base..base + count]);
+            }
         }
     }
 
@@ -368,22 +396,32 @@ impl Layer for SliceLayer {
         srcs: &[&Blob],
         _own: &Blob,
         grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
+        src_grads: &mut [Option<&mut Blob>],
+    ) {
         let dy = grad_out.expect("Slice needs grad");
-        let (start, count) = self.range;
-        // Scatter the slice gradient into a zero blob of the source shape.
-        let mut dx = Blob::zeros(srcs[0].shape());
+        let (start, count) = self.range_for(srcs[0]);
+        // Accumulate the slice gradient into its range of the (pre-zeroed,
+        // possibly shared) source slot.
+        let dx = src_grads[0].as_mut().expect("Slice src slot");
+        let cols = srcs[0].cols();
         if self.dim == 0 {
-            let cols = srcs[0].cols();
-            dx.data_mut()[start * cols..(start + count) * cols].copy_from_slice(dy.data());
+            for (d, s) in dx.data_mut()[start * cols..(start + count) * cols]
+                .iter_mut()
+                .zip(dy.data())
+            {
+                *d += s;
+            }
         } else {
-            let cols = srcs[0].cols();
             for r in 0..srcs[0].rows() {
-                dx.data_mut()[r * cols + start..r * cols + start + count]
-                    .copy_from_slice(&dy.data()[r * count..(r + 1) * count]);
+                let base = r * cols + start;
+                for (d, s) in dx.data_mut()[base..base + count]
+                    .iter_mut()
+                    .zip(&dy.data()[r * count..(r + 1) * count])
+                {
+                    *d += s;
+                }
             }
         }
-        vec![Some(dx)]
     }
 
     fn is_connection(&self) -> bool {
@@ -396,18 +434,17 @@ impl Layer for SliceLayer {
 }
 
 /// ConcatLayer: concatenates all sources along `dim`; backward slices the
-/// gradient back out per source.
+/// gradient back out into each source's slot. Row/column extents come from
+/// the runtime source shapes, so no per-build state is cached.
 pub struct ConcatLayer {
     name: String,
     dim: usize,
-    src_cols: Vec<usize>,
-    src_rows: Vec<usize>,
 }
 
 impl ConcatLayer {
     pub fn new(name: &str, dim: usize) -> ConcatLayer {
         assert!(dim <= 1);
-        ConcatLayer { name: name.to_string(), dim, src_cols: Vec::new(), src_rows: Vec::new() }
+        ConcatLayer { name: name.to_string(), dim }
     }
 }
 
@@ -422,24 +459,47 @@ impl Layer for ConcatLayer {
 
     fn setup(&mut self, src_shapes: &[&[usize]], _rng: &mut Rng) -> Vec<usize> {
         assert!(!src_shapes.is_empty());
-        self.src_rows = src_shapes.iter().map(|s| s[0]).collect();
-        self.src_cols = src_shapes.iter().map(|s| s[1..].iter().product()).collect();
         if self.dim == 0 {
-            let rows: usize = self.src_rows.iter().sum();
+            let rows: usize = src_shapes.iter().map(|s| s[0]).sum();
             let mut out = src_shapes[0].to_vec();
             out[0] = rows;
             out
         } else {
-            let cols: usize = self.src_cols.iter().sum();
+            let cols: usize = src_shapes
+                .iter()
+                .map(|s| s[1..].iter().product::<usize>())
+                .sum();
             vec![src_shapes[0][0], cols]
         }
     }
 
-    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
         if self.dim == 0 {
-            Blob::concat_rows(srcs)
+            let rows: usize = srcs.iter().map(|s| s.rows()).sum();
+            let cols = srcs[0].cols();
+            let mut shape = srcs[0].shape().to_vec();
+            shape[0] = rows;
+            out.resize(&shape);
+            let mut offset = 0;
+            for src in srcs {
+                assert_eq!(src.cols(), cols, "concat_rows column mismatch");
+                out.data_mut()[offset..offset + src.len()].copy_from_slice(src.data());
+                offset += src.len();
+            }
         } else {
-            Blob::concat_cols(srcs)
+            let rows = srcs[0].rows();
+            let total_cols: usize = srcs.iter().map(|s| s.cols()).sum();
+            out.resize(&[rows, total_cols]);
+            let mut col_off = 0;
+            for src in srcs {
+                assert_eq!(src.rows(), rows, "concat_cols row mismatch");
+                let c = src.cols();
+                for r in 0..rows {
+                    out.data_mut()[r * total_cols + col_off..r * total_cols + col_off + c]
+                        .copy_from_slice(&src.data()[r * c..(r + 1) * c]);
+                }
+                col_off += c;
+            }
         }
     }
 
@@ -448,25 +508,38 @@ impl Layer for ConcatLayer {
         srcs: &[&Blob],
         _own: &Blob,
         grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
+        src_grads: &mut [Option<&mut Blob>],
+    ) {
         let dy = grad_out.expect("Concat needs grad");
-        let mut out = Vec::with_capacity(srcs.len());
-        let mut offset = 0;
-        for (i, src) in srcs.iter().enumerate() {
-            let g = if self.dim == 0 {
-                let rows = self.src_rows[i];
-                let g = dy.slice_rows(offset, rows);
-                offset += rows;
-                g.reshape(src.shape())
-            } else {
-                let cols = self.src_cols[i];
-                let g = dy.slice_cols(offset, cols);
-                offset += cols;
-                g.reshape(src.shape())
-            };
-            out.push(Some(g));
+        if self.dim == 0 {
+            let mut offset = 0;
+            for (src, slot) in srcs.iter().zip(src_grads.iter_mut()) {
+                let n = src.len();
+                if let Some(dx) = slot.as_mut() {
+                    for (d, s) in dx.data_mut().iter_mut().zip(&dy.data()[offset..offset + n]) {
+                        *d += s;
+                    }
+                }
+                offset += n;
+            }
+        } else {
+            let rows = srcs[0].rows();
+            let total_cols = dy.cols();
+            let mut col_off = 0;
+            for (src, slot) in srcs.iter().zip(src_grads.iter_mut()) {
+                let c = src.cols();
+                if let Some(dx) = slot.as_mut() {
+                    for r in 0..rows {
+                        let drow = &mut dx.data_mut()[r * c..(r + 1) * c];
+                        let srow = &dy.data()[r * total_cols + col_off..r * total_cols + col_off + c];
+                        for (d, s) in drow.iter_mut().zip(srow) {
+                            *d += s;
+                        }
+                    }
+                }
+                col_off += c;
+            }
         }
-        out
     }
 
     fn is_connection(&self) -> bool {
@@ -504,8 +577,8 @@ impl Layer for SplitLayer {
         src_shapes[0].to_vec()
     }
 
-    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
-        srcs[0].clone()
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
+        out.copy_from(srcs[0]);
     }
 
     fn compute_gradient(
@@ -513,8 +586,10 @@ impl Layer for SplitLayer {
         _srcs: &[&Blob],
         _own: &Blob,
         grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
-        vec![Some(grad_out.expect("Split needs grad").clone())]
+        src_grads: &mut [Option<&mut Blob>],
+    ) {
+        let dy = grad_out.expect("Split needs grad");
+        src_grads[0].as_mut().expect("Split src slot").add_assign(dy);
     }
 
     fn is_connection(&self) -> bool {
@@ -566,9 +641,9 @@ impl Layer for BridgeLayer {
         src_shapes[0].to_vec()
     }
 
-    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
         self.last_bytes = srcs[0].byte_size();
-        srcs[0].clone()
+        out.copy_from(srcs[0]);
     }
 
     fn compute_gradient(
@@ -576,8 +651,10 @@ impl Layer for BridgeLayer {
         _srcs: &[&Blob],
         _own: &Blob,
         grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
-        vec![Some(grad_out.expect("Bridge needs grad").clone())]
+        src_grads: &mut [Option<&mut Blob>],
+    ) {
+        let dy = grad_out.expect("Bridge needs grad");
+        src_grads[0].as_mut().expect("Bridge src slot").add_assign(dy);
     }
 
     fn is_connection(&self) -> bool {
@@ -592,6 +669,7 @@ impl Layer for BridgeLayer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::test_support::{backward, forward};
     use crate::utils::quickcheck::{forall, prop_close};
 
     fn rng() -> Rng {
@@ -600,12 +678,18 @@ mod tests {
 
     #[test]
     fn input_layer_roundtrip() {
+        // Input features flow through the net's workspace slot.
+        use crate::model::layer::{LayerConf, LayerKind};
+        use crate::model::NetBuilder;
         let mut l = InputLayer::new("data", vec![2, 3]);
         assert_eq!(l.setup(&[], &mut rng()), vec![2, 3]);
+        let mut net = NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![2, 3] }, &[]))
+            .build(&mut rng());
         let b = Blob::full(&[2, 3], 7.0);
-        l.set_batch(b.clone());
-        let out = l.compute_feature(Phase::Train, &[]);
-        assert_eq!(out, b);
+        net.set_input_ref("data", &b);
+        net.forward(Phase::Train);
+        assert_eq!(net.feature("data"), &b);
     }
 
     #[test]
@@ -626,14 +710,14 @@ mod tests {
             l.setup(&[&[3, 5]], &mut rng());
             let mut r = Rng::new(9);
             let x = Blob::from_vec(&[3, 5], r.uniform_vec(15, -1.0, 1.0));
-            let y = l.compute_feature(Phase::Train, &[&x]);
+            let y = forward(&mut l, Phase::Train, &[&x]);
             let dy = Blob::full(y.shape(), 1.0);
-            let grads = l.compute_gradient(&[&x], &y, Some(&dy));
+            let grads = backward(&mut l, &[&x], &y, Some(&dy));
             let dx = grads[0].clone().unwrap();
 
             let eps = 1e-2;
             let f = |l: &mut InnerProductLayer, x: &Blob| -> f32 {
-                l.compute_feature(Phase::Train, &[&x.clone()]).sum()
+                forward(l, Phase::Train, &[x]).sum()
             };
             for i in 0..x.len() {
                 let mut p = x.clone();
@@ -672,9 +756,9 @@ mod tests {
         l.setup(&[&[2, 3]], &mut rng());
         let mut r = Rng::new(4);
         let x = Blob::from_vec(&[2, 3], r.uniform_vec(6, -1.0, 1.0));
-        let y = l.compute_feature(Phase::Train, &[&x]);
+        let y = forward(&mut l, Phase::Train, &[&x]);
         let dy = Blob::full(y.shape(), 1.0);
-        let grads = l.compute_gradient(&[&x], &y, Some(&dy));
+        let grads = backward(&mut l, &[&x], &y, Some(&dy));
         assert!(grads[0].is_some());
         // outputs that are exactly 0 must receive zero activation grad
         for (i, &v) in y.data().iter().enumerate() {
@@ -690,9 +774,9 @@ mod tests {
         let mut l = DropoutLayer::new("drop", 0.6);
         l.setup(&[&[1, 1000]], &mut rng());
         let x = Blob::full(&[1, 1000], 1.0);
-        let test = l.compute_feature(Phase::Test, &[&x]);
+        let test = forward(&mut l, Phase::Test, &[&x]);
         assert_eq!(test, x);
-        let train = l.compute_feature(Phase::Train, &[&x]);
+        let train = forward(&mut l, Phase::Train, &[&x]);
         let kept = train.data().iter().filter(|&&v| v > 0.0).count();
         assert!((kept as f32 / 1000.0 - 0.6).abs() < 0.08, "kept {kept}");
         // kept units scaled by 1/keep
@@ -701,7 +785,7 @@ mod tests {
         }
         // backward uses the same mask
         let dy = Blob::full(&[1, 1000], 1.0);
-        let dx = l.compute_gradient(&[&x], &train, Some(&dy))[0].clone().unwrap();
+        let dx = backward(&mut l, &[&x], &train, Some(&dy))[0].clone().unwrap();
         for (a, b) in dx.data().iter().zip(train.data()) {
             assert_eq!(a, b);
         }
@@ -718,13 +802,13 @@ mod tests {
             for i in 0..parts {
                 let mut sl = SliceLayer::new(&format!("s{i}"), 0, parts, i);
                 sl.setup(&[&[rows, cols]], &mut rng());
-                outs.push(sl.compute_feature(Phase::Train, &[&x]));
+                outs.push(forward(&mut sl, Phase::Train, &[&x]));
             }
             let mut cat = ConcatLayer::new("c", 0);
             let shapes: Vec<&[usize]> = outs.iter().map(|o| o.shape()).collect();
             cat.setup(&shapes, &mut rng());
             let refs: Vec<&Blob> = outs.iter().collect();
-            let back = cat.compute_feature(Phase::Train, &refs);
+            let back = forward(&mut cat, Phase::Train, &refs);
             prop_close(back.data(), x.data(), 0.0, 0.0, "roundtrip")
         });
     }
@@ -734,10 +818,10 @@ mod tests {
         let x = Blob::from_vec(&[2, 4], (0..8).map(|v| v as f32).collect());
         let mut sl = SliceLayer::new("s", 1, 2, 1);
         sl.setup(&[&[2, 4]], &mut rng());
-        let y = sl.compute_feature(Phase::Train, &[&x]);
+        let y = forward(&mut sl, Phase::Train, &[&x]);
         assert_eq!(y.data(), &[2., 3., 6., 7.]);
         let dy = Blob::full(&[2, 2], 1.0);
-        let dx = sl.compute_gradient(&[&x], &y, Some(&dy))[0].clone().unwrap();
+        let dx = backward(&mut sl, &[&x], &y, Some(&dy))[0].clone().unwrap();
         assert_eq!(dx.data(), &[0., 0., 1., 1., 0., 0., 1., 1.]);
     }
 
@@ -747,10 +831,10 @@ mod tests {
         let b = Blob::full(&[2, 3], 2.0);
         let mut cat = ConcatLayer::new("c", 1);
         cat.setup(&[&[2, 2], &[2, 3]], &mut rng());
-        let y = cat.compute_feature(Phase::Train, &[&a, &b]);
+        let y = forward(&mut cat, Phase::Train, &[&a, &b]);
         assert_eq!(y.shape(), &[2, 5]);
         let dy = Blob::from_vec(&[2, 5], (0..10).map(|v| v as f32).collect());
-        let gs = cat.compute_gradient(&[&a, &b], &y, Some(&dy));
+        let gs = backward(&mut cat, &[&a, &b], &y, Some(&dy));
         assert_eq!(gs[0].as_ref().unwrap().data(), &[0., 1., 5., 6.]);
         assert_eq!(gs[1].as_ref().unwrap().data(), &[2., 3., 4., 7., 8., 9.]);
     }
@@ -760,9 +844,26 @@ mod tests {
         let mut b = BridgeLayer::new_src("b");
         b.setup(&[&[4, 4]], &mut rng());
         let x = Blob::zeros(&[4, 4]);
-        let y = b.compute_feature(Phase::Train, &[&x]);
+        let y = forward(&mut b, Phase::Train, &[&x]);
         assert_eq!(y, x);
         assert_eq!(b.last_bytes, 64);
         assert!(b.is_connection());
+    }
+
+    /// Direct layer-level check of the accumulate contract: two successive
+    /// backward calls into the same slot must sum.
+    #[test]
+    fn compute_gradient_accumulates_into_slot() {
+        let mut l = ActivationLayer::new("a", Activation::Identity);
+        l.setup(&[&[2, 2]], &mut rng());
+        let x = Blob::full(&[2, 2], 1.0);
+        let y = forward(&mut l, Phase::Train, &[&x]);
+        let dy = Blob::full(&[2, 2], 3.0);
+        let mut slot = Blob::full(&[2, 2], 1.0); // pre-existing contribution
+        {
+            let mut refs = [Some(&mut slot)];
+            l.compute_gradient(&[&x], &y, Some(&dy), &mut refs);
+        }
+        assert_eq!(slot.data(), &[4.0; 4], "identity backward must +=");
     }
 }

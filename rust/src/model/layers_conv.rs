@@ -4,14 +4,16 @@
 use super::layer::{Layer, Phase};
 use crate::tensor::blob::Param;
 use crate::tensor::conv::{
-    avgpool_forward, conv2d_backward, conv2d_forward, lrn_forward, maxpool_backward,
-    maxpool_forward, Conv2dGeom,
+    avgpool_forward_into, conv2d_backward_acc, conv2d_forward_into, lrn_forward_into,
+    maxpool_backward_acc, maxpool_forward_into, Conv2dGeom, ConvScratch,
 };
 use crate::tensor::Blob;
 use crate::utils::rng::Rng;
 use std::any::Any;
 
-/// 2-d convolution layer over NCHW blobs via im2col + GEMM.
+/// 2-d convolution layer over NCHW blobs via im2col + GEMM. The im2col
+/// buffers and the batched-GEMM packing scratch are owned by the layer and
+/// reused across steps.
 pub struct ConvolutionLayer {
     name: String,
     out_channels: usize,
@@ -24,7 +26,7 @@ pub struct ConvolutionLayer {
     bias: Param,
     /// im2col buffers of the last forward (reused in backward).
     cols: Vec<Vec<f32>>,
-    input_cache: Blob,
+    scratch: ConvScratch,
 }
 
 impl ConvolutionLayer {
@@ -47,7 +49,7 @@ impl ConvolutionLayer {
             weight: Param::new(&format!("{name}/weight"), Blob::zeros(&[0])),
             bias: Param::new(&format!("{name}/bias"), Blob::zeros(&[0])),
             cols: Vec::new(),
-            input_cache: Blob::zeros(&[0]),
+            scratch: ConvScratch::new(),
         }
     }
 
@@ -90,12 +92,17 @@ impl Layer for ConvolutionLayer {
         out
     }
 
-    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
         let g = self.geom.expect("setup not called");
-        let (out, cols) = conv2d_forward(srcs[0], &self.weight.data, &self.bias.data, &g);
-        self.cols = cols;
-        self.input_cache = srcs[0].clone();
-        out
+        conv2d_forward_into(
+            srcs[0],
+            &self.weight.data,
+            &self.bias.data,
+            &g,
+            out,
+            &mut self.cols,
+            &mut self.scratch,
+        );
     }
 
     fn compute_gradient(
@@ -103,13 +110,21 @@ impl Layer for ConvolutionLayer {
         srcs: &[&Blob],
         _own: &Blob,
         grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
+        src_grads: &mut [Option<&mut Blob>],
+    ) {
         let g = self.geom.expect("setup not called");
         let dy = grad_out.expect("Convolution needs grad");
-        let (dx, dw, db) = conv2d_backward(srcs[0], &self.weight.data, dy, &self.cols, &g);
-        self.weight.grad.add_assign(&dw);
-        self.bias.grad.add_assign(&db);
-        vec![Some(dx)]
+        conv2d_backward_acc(
+            srcs[0],
+            &self.weight.data,
+            dy,
+            &self.cols,
+            &g,
+            src_grads[0].as_deref_mut(),
+            &mut self.weight.grad,
+            &mut self.bias.grad,
+            &mut self.scratch,
+        );
     }
 
     fn params(&self) -> Vec<&Param> {
@@ -184,14 +199,12 @@ impl Layer for PoolingLayer {
         out
     }
 
-    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
         let g = self.geom.expect("setup not called");
         if self.max {
-            let (out, arg) = maxpool_forward(srcs[0], &g);
-            self.argmax = arg;
-            out
+            maxpool_forward_into(srcs[0], &g, out, &mut self.argmax);
         } else {
-            avgpool_forward(srcs[0], &g)
+            avgpool_forward_into(srcs[0], &g, out);
         }
     }
 
@@ -200,14 +213,15 @@ impl Layer for PoolingLayer {
         srcs: &[&Blob],
         _own: &Blob,
         grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
+        src_grads: &mut [Option<&mut Blob>],
+    ) {
         let dy = grad_out.expect("Pooling needs grad");
-        let dx = if self.max {
-            maxpool_backward(srcs[0].shape(), dy, &self.argmax)
+        let dx = src_grads[0].as_mut().expect("Pooling src slot");
+        if self.max {
+            maxpool_backward_acc(dy, &self.argmax, dx);
         } else {
             // Spread each output grad evenly over its window.
             let g = self.geom.expect("setup not called");
-            let mut dx = Blob::zeros(srcs[0].shape());
             let (oh, ow) = (g.out_h(), g.out_w());
             let k2 = (g.kernel * g.kernel) as f32;
             let img_len = g.in_c * g.in_h * g.in_w;
@@ -237,9 +251,7 @@ impl Layer for PoolingLayer {
                     }
                 }
             }
-            dx
-        };
-        vec![Some(dx)]
+        }
     }
 
     fn as_any(&mut self) -> &mut dyn Any {
@@ -255,12 +267,13 @@ pub struct LrnLayer {
     alpha: f32,
     beta: f32,
     k: f32,
-    input_cache: Blob,
+    /// Reusable per-position channel denominators for backward.
+    denom_scratch: Vec<f32>,
 }
 
 impl LrnLayer {
     pub fn new(name: &str, size: usize, alpha: f32, beta: f32, k: f32) -> LrnLayer {
-        LrnLayer { name: name.to_string(), size, alpha, beta, k, input_cache: Blob::zeros(&[0]) }
+        LrnLayer { name: name.to_string(), size, alpha, beta, k, denom_scratch: Vec::new() }
     }
 }
 
@@ -277,9 +290,8 @@ impl Layer for LrnLayer {
         src_shapes[0].to_vec()
     }
 
-    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
-        self.input_cache = srcs[0].clone();
-        lrn_forward(srcs[0], self.size, self.alpha, self.beta, self.k)
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
+        lrn_forward_into(srcs[0], self.size, self.alpha, self.beta, self.k, out);
     }
 
     fn compute_gradient(
@@ -287,18 +299,23 @@ impl Layer for LrnLayer {
         srcs: &[&Blob],
         own: &Blob,
         grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
+        src_grads: &mut [Option<&mut Blob>],
+    ) {
         let dy = grad_out.expect("Lrn needs grad");
         let x = srcs[0];
         let s = x.shape();
         let (b, c, h, w) = (s[0], s[1], s[2], s[3]);
         let plane = h * w;
-        let mut dx = Blob::zeros(s);
+        let dx = src_grads[0].as_mut().expect("Lrn src slot");
         let an = self.alpha / self.size as f32;
+        if self.denom_scratch.len() != c {
+            self.denom_scratch.clear();
+            self.denom_scratch.resize(c, 0.0);
+        }
         for i in 0..b {
             for y in 0..plane {
                 // denom_c = k + an * sum a^2 over window(c)
-                let mut denom = vec![0.0f32; c];
+                let denom = &mut self.denom_scratch;
                 for ch in 0..c {
                     let lo = ch.saturating_sub(self.size / 2);
                     let hi = (ch + self.size / 2 + 1).min(c);
@@ -323,11 +340,11 @@ impl Layer for LrnLayer {
                             / denom[cc];
                     }
                     v -= 2.0 * an * self.beta * x.data()[(i * c + ch) * plane + y] * cross;
-                    dx.data_mut()[(i * c + ch) * plane + y] = v;
+                    // Accumulate into the shared slot (+=, pre-zeroed).
+                    dx.data_mut()[(i * c + ch) * plane + y] += v;
                 }
             }
         }
-        vec![Some(dx)]
     }
 
     fn as_any(&mut self) -> &mut dyn Any {
@@ -338,6 +355,7 @@ impl Layer for LrnLayer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::test_support::{backward, forward};
 
     fn rng() -> Rng {
         Rng::new(1)
@@ -358,10 +376,10 @@ mod tests {
         l.setup(&[&[2, 3, 8, 8]], &mut rng());
         let mut r = Rng::new(7);
         let x = Blob::from_vec(&[2, 3, 8, 8], r.uniform_vec(2 * 3 * 64, -1.0, 1.0));
-        let y = l.compute_feature(Phase::Train, &[&x]);
+        let y = forward(&mut l, Phase::Train, &[&x]);
         assert_eq!(y.shape(), &[2, 4, 8, 8]);
         let dy = Blob::full(y.shape(), 0.5);
-        let gs = l.compute_gradient(&[&x], &y, Some(&dy));
+        let gs = backward(&mut l, &[&x], &y, Some(&dy));
         assert_eq!(gs[0].as_ref().unwrap().shape(), x.shape());
         // param grads accumulated
         assert!(l.params()[0].grad.norm() > 0.0);
@@ -374,10 +392,10 @@ mod tests {
         let out = l.setup(&[&[1, 1, 4, 4]], &mut rng());
         assert_eq!(out, vec![1, 1, 2, 2]);
         let x = Blob::from_vec(&[1, 1, 4, 4], (0..16).map(|v| v as f32).collect());
-        let y = l.compute_feature(Phase::Train, &[&x]);
+        let y = forward(&mut l, Phase::Train, &[&x]);
         assert_eq!(y.data(), &[5., 7., 13., 15.]);
         let dy = Blob::full(&[1, 1, 2, 2], 1.0);
-        let dx = l.compute_gradient(&[&x], &y, Some(&dy))[0].clone().unwrap();
+        let dx = backward(&mut l, &[&x], &y, Some(&dy))[0].clone().unwrap();
         assert_eq!(dx.sum(), 4.0);
     }
 
@@ -386,9 +404,9 @@ mod tests {
         let mut l = PoolingLayer::new_avg("p", 2, 2);
         l.setup(&[&[1, 2, 4, 4]], &mut rng());
         let x = Blob::full(&[1, 2, 4, 4], 1.0);
-        let y = l.compute_feature(Phase::Train, &[&x]);
+        let y = forward(&mut l, Phase::Train, &[&x]);
         let dy = Blob::full(y.shape(), 1.0);
-        let dx = l.compute_gradient(&[&x], &y, Some(&dy))[0].clone().unwrap();
+        let dx = backward(&mut l, &[&x], &y, Some(&dy))[0].clone().unwrap();
         // total gradient mass is conserved
         assert!((dx.sum() - dy.sum()).abs() < 1e-5);
     }
@@ -399,17 +417,17 @@ mod tests {
         l.setup(&[&[1, 4, 2, 2]], &mut rng());
         let mut r = Rng::new(3);
         let x = Blob::from_vec(&[1, 4, 2, 2], r.uniform_vec(16, 0.5, 1.5));
-        let y = l.compute_feature(Phase::Train, &[&x]);
+        let y = forward(&mut l, Phase::Train, &[&x]);
         let dy = Blob::full(y.shape(), 1.0);
-        let dx = l.compute_gradient(&[&x], &y, Some(&dy))[0].clone().unwrap();
+        let dx = backward(&mut l, &[&x], &y, Some(&dy))[0].clone().unwrap();
         let eps = 1e-3;
         for i in 0..16 {
             let mut p = x.clone();
             p.data_mut()[i] += eps;
             let mut m = x.clone();
             m.data_mut()[i] -= eps;
-            let fp = l.compute_feature(Phase::Train, &[&p]).sum();
-            let fm = l.compute_feature(Phase::Train, &[&m]).sum();
+            let fp = forward(&mut l, Phase::Train, &[&p]).sum();
+            let fm = forward(&mut l, Phase::Train, &[&m]).sum();
             let num = (fp - fm) / (2.0 * eps);
             assert!(
                 (num - dx.data()[i]).abs() < 1e-2,

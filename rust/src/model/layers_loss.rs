@@ -16,17 +16,27 @@ pub struct SoftmaxLossLayer {
     name: String,
     loss: f32,
     accuracy: f32,
+    /// Reused logits-gradient buffer (filled in forward, drained backward).
     grad: Blob,
+    /// Reused integer-label decode buffer.
+    labels_buf: Vec<usize>,
 }
 
 impl SoftmaxLossLayer {
     pub fn new(name: &str) -> SoftmaxLossLayer {
-        SoftmaxLossLayer { name: name.to_string(), loss: 0.0, accuracy: 0.0, grad: Blob::zeros(&[0]) }
+        SoftmaxLossLayer {
+            name: name.to_string(),
+            loss: 0.0,
+            accuracy: 0.0,
+            grad: Blob::default(),
+            labels_buf: Vec::new(),
+        }
     }
 }
 
-fn labels_of(blob: &Blob) -> Vec<usize> {
-    blob.data().iter().map(|&v| v as usize).collect()
+fn labels_into(blob: &Blob, out: &mut Vec<usize>) {
+    out.clear();
+    out.extend(blob.data().iter().map(|&v| v as usize));
 }
 
 impl Layer for SoftmaxLossLayer {
@@ -43,14 +53,12 @@ impl Layer for SoftmaxLossLayer {
         src_shapes[0].to_vec()
     }
 
-    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
         let logits = srcs[0];
-        let labels = labels_of(srcs[1]);
-        let (loss, grad) = ops::softmax_xent(logits, &labels);
-        self.loss = loss;
-        self.accuracy = ops::accuracy(logits, &labels);
-        self.grad = grad;
-        ops::softmax(logits)
+        labels_into(srcs[1], &mut self.labels_buf);
+        self.loss = ops::softmax_xent_into(logits, &self.labels_buf, &mut self.grad);
+        self.accuracy = ops::accuracy(logits, &self.labels_buf);
+        ops::softmax_into(logits, out);
     }
 
     fn compute_gradient(
@@ -58,8 +66,14 @@ impl Layer for SoftmaxLossLayer {
         _srcs: &[&Blob],
         _own: &Blob,
         _grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
-        vec![Some(self.grad.clone()), None]
+        src_grads: &mut [Option<&mut Blob>],
+    ) {
+        let dx = src_grads[0].as_mut().expect("SoftmaxLoss logits slot");
+        dx.add_assign(&self.grad);
+    }
+
+    fn needs_src_grad(&self, k: usize) -> bool {
+        k == 0 // the label path gets no gradient
     }
 
     fn is_loss(&self) -> bool {
@@ -82,19 +96,14 @@ pub struct EuclideanLossLayer {
     name: String,
     weight: f32,
     loss: f32,
+    /// Gradient w.r.t. the first source; the second source's gradient is its
+    /// negation, applied directly at backward time (no second buffer).
     grad_a: Blob,
-    grad_b: Blob,
 }
 
 impl EuclideanLossLayer {
     pub fn new(name: &str, weight: f32) -> EuclideanLossLayer {
-        EuclideanLossLayer {
-            name: name.to_string(),
-            weight,
-            loss: 0.0,
-            grad_a: Blob::zeros(&[0]),
-            grad_b: Blob::zeros(&[0]),
-        }
+        EuclideanLossLayer { name: name.to_string(), weight, loss: 0.0, grad_a: Blob::default() }
     }
 }
 
@@ -113,17 +122,13 @@ impl Layer for EuclideanLossLayer {
         src_shapes[0].to_vec()
     }
 
-    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
-        let (loss, mut grad) = ops::euclidean_loss(srcs[0], srcs[1]);
-        grad.scale(self.weight);
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
+        let loss = ops::euclidean_loss_into(srcs[0], srcs[1], &mut self.grad_a);
+        self.grad_a.scale(self.weight);
         self.loss = loss * self.weight;
-        self.grad_b = {
-            let mut g = grad.clone();
-            g.scale(-1.0);
-            g
-        };
-        self.grad_a = grad;
-        srcs[0].clone()
+        // Forward output is a pass-through of the first source so retrieval
+        // code can read the embedding.
+        out.copy_from(srcs[0]);
     }
 
     fn compute_gradient(
@@ -131,8 +136,14 @@ impl Layer for EuclideanLossLayer {
         _srcs: &[&Blob],
         _own: &Blob,
         _grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
-        vec![Some(self.grad_a.clone()), Some(self.grad_b.clone())]
+        src_grads: &mut [Option<&mut Blob>],
+    ) {
+        if let Some(da) = &mut src_grads[0] {
+            da.add_assign(&self.grad_a);
+        }
+        if let Some(db) = &mut src_grads[1] {
+            db.axpy(-1.0, &self.grad_a);
+        }
     }
 
     fn is_loss(&self) -> bool {
@@ -160,6 +171,10 @@ pub struct SeqSoftmaxLossLayer {
     loss: f32,
     accuracy: f32,
     grad: Blob,
+    /// Reused per-step scratch: gathered logits, their gradient, labels.
+    step_logits: Blob,
+    step_grad: Blob,
+    step_labels: Vec<usize>,
 }
 
 impl SeqSoftmaxLossLayer {
@@ -169,7 +184,10 @@ impl SeqSoftmaxLossLayer {
             steps,
             loss: 0.0,
             accuracy: 0.0,
-            grad: Blob::zeros(&[0]),
+            grad: Blob::default(),
+            step_logits: Blob::default(),
+            step_grad: Blob::default(),
+            step_labels: Vec::new(),
         }
     }
 }
@@ -190,36 +208,36 @@ impl Layer for SeqSoftmaxLossLayer {
         logits.to_vec()
     }
 
-    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
         let logits = srcs[0];
         let labels = srcs[1];
         let batch = logits.rows();
         let vocab = logits.cols() / self.steps;
         let mut total_loss = 0.0;
         let mut total_acc = 0.0;
-        let mut grad = Blob::zeros(logits.shape());
+        self.grad.resize(logits.shape());
+        self.step_logits.resize(&[batch, vocab]);
         for t in 0..self.steps {
             // Gather step-t logits [batch, vocab] and labels [batch].
-            let mut step_logits = Blob::zeros(&[batch, vocab]);
             for b in 0..batch {
                 let src = &logits.data()[b * self.steps * vocab + t * vocab..][..vocab];
-                step_logits.data_mut()[b * vocab..(b + 1) * vocab].copy_from_slice(src);
+                self.step_logits.data_mut()[b * vocab..(b + 1) * vocab].copy_from_slice(src);
             }
-            let step_labels: Vec<usize> =
-                (0..batch).map(|b| labels.data()[b * self.steps + t] as usize).collect();
-            let (l, g) = ops::softmax_xent(&step_logits, &step_labels);
+            self.step_labels.clear();
+            self.step_labels
+                .extend((0..batch).map(|b| labels.data()[b * self.steps + t] as usize));
+            let l = ops::softmax_xent_into(&self.step_logits, &self.step_labels, &mut self.step_grad);
             total_loss += l;
-            total_acc += ops::accuracy(&step_logits, &step_labels);
+            total_acc += ops::accuracy(&self.step_logits, &self.step_labels);
             for b in 0..batch {
-                grad.data_mut()[b * self.steps * vocab + t * vocab..][..vocab]
-                    .copy_from_slice(&g.data()[b * vocab..(b + 1) * vocab]);
+                self.grad.data_mut()[b * self.steps * vocab + t * vocab..][..vocab]
+                    .copy_from_slice(&self.step_grad.data()[b * vocab..(b + 1) * vocab]);
             }
         }
         self.loss = total_loss / self.steps as f32;
         self.accuracy = total_acc / self.steps as f32;
-        grad.scale(1.0 / self.steps as f32);
-        self.grad = grad;
-        logits.clone()
+        self.grad.scale(1.0 / self.steps as f32);
+        out.copy_from(logits);
     }
 
     fn compute_gradient(
@@ -227,8 +245,14 @@ impl Layer for SeqSoftmaxLossLayer {
         _srcs: &[&Blob],
         _own: &Blob,
         _grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
-        vec![Some(self.grad.clone()), None]
+        src_grads: &mut [Option<&mut Blob>],
+    ) {
+        let dx = src_grads[0].as_mut().expect("SeqSoftmaxLoss logits slot");
+        dx.add_assign(&self.grad);
+    }
+
+    fn needs_src_grad(&self, k: usize) -> bool {
+        k == 0
     }
 
     fn is_loss(&self) -> bool {
@@ -247,6 +271,7 @@ impl Layer for SeqSoftmaxLossLayer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::test_support::{backward, forward};
 
     fn rng() -> Rng {
         Rng::new(1)
@@ -258,10 +283,10 @@ mod tests {
         l.setup(&[&[2, 4], &[2]], &mut rng());
         let logits = Blob::zeros(&[2, 4]);
         let labels = Blob::from_vec(&[2], vec![0.0, 3.0]);
-        l.compute_feature(Phase::Train, &[&logits, &labels]);
+        forward(&mut l, Phase::Train, &[&logits, &labels]);
         let (loss, _) = l.loss().unwrap();
         assert!((loss - (4f32).ln()).abs() < 1e-5);
-        let gs = l.compute_gradient(&[&logits, &labels], &logits, None);
+        let gs = backward(&mut l, &[&logits, &labels], &logits, None);
         assert!(gs[0].is_some());
         assert!(gs[1].is_none());
     }
@@ -272,7 +297,7 @@ mod tests {
         l.setup(&[&[2, 3], &[2]], &mut rng());
         let logits = Blob::from_vec(&[2, 3], vec![10., 0., 0., 0., 0., 10.]);
         let labels = Blob::from_vec(&[2], vec![0.0, 2.0]);
-        l.compute_feature(Phase::Train, &[&logits, &labels]);
+        forward(&mut l, Phase::Train, &[&logits, &labels]);
         let (loss, acc) = l.loss().unwrap();
         assert!(loss < 1e-3);
         assert_eq!(acc, 1.0);
@@ -284,11 +309,11 @@ mod tests {
         l.setup(&[&[2, 3], &[2, 3]], &mut rng());
         let a = Blob::full(&[2, 3], 1.0);
         let b = Blob::full(&[2, 3], 0.0);
-        let out = l.compute_feature(Phase::Train, &[&a, &b]);
+        let out = forward(&mut l, Phase::Train, &[&a, &b]);
         assert_eq!(out, a);
         let (loss, _) = l.loss().unwrap();
         assert!((loss - 0.5 * 6.0 / 2.0).abs() < 1e-6);
-        let gs = l.compute_gradient(&[&a, &b], &out, None);
+        let gs = backward(&mut l, &[&a, &b], &out, None);
         let ga = gs[0].as_ref().unwrap();
         let gb = gs[1].as_ref().unwrap();
         for (x, y) in ga.data().iter().zip(gb.data()) {
@@ -306,14 +331,14 @@ mod tests {
         let logits = Blob::from_vec(&[3, 5], r.uniform_vec(15, -1.0, 1.0));
         let labels = Blob::from_vec(&[3, 1], vec![1.0, 4.0, 0.0]);
         let labels_flat = labels.reshape(&[3]);
-        seq.compute_feature(Phase::Train, &[&logits, &labels]);
-        flat.compute_feature(Phase::Train, &[&logits, &labels_flat]);
+        forward(&mut seq, Phase::Train, &[&logits, &labels]);
+        forward(&mut flat, Phase::Train, &[&logits, &labels_flat]);
         let (ls, as_) = seq.loss().unwrap();
         let (lf, af) = flat.loss().unwrap();
         assert!((ls - lf).abs() < 1e-6);
         assert!((as_ - af).abs() < 1e-6);
-        let gs = seq.compute_gradient(&[&logits, &labels], &logits, None);
-        let gf = flat.compute_gradient(&[&logits, &labels_flat], &logits, None);
+        let gs = backward(&mut seq, &[&logits, &labels], &logits, None);
+        let gf = backward(&mut flat, &[&logits, &labels_flat], &logits, None);
         for (a, b) in gs[0].as_ref().unwrap().data().iter().zip(gf[0].as_ref().unwrap().data()) {
             assert!((a - b).abs() < 1e-6);
         }
@@ -329,13 +354,13 @@ mod tests {
         let mut r = Rng::new(8);
         let logits = Blob::from_vec(&[batch, steps * vocab], r.uniform_vec(batch * steps * vocab, -1.0, 1.0));
         let labels = Blob::from_vec(&[batch, steps], vec![0., 1., 2., 3., 0., 1.]);
-        l.compute_feature(Phase::Train, &[&logits, &labels]);
-        let g = l.compute_gradient(&[&logits, &labels], &logits, None)[0].clone().unwrap();
+        forward(&mut l, Phase::Train, &[&logits, &labels]);
+        let g = backward(&mut l, &[&logits, &labels], &logits, None)[0].clone().unwrap();
         let eps = 1e-2;
         let mut probe = |ls: &Blob| -> f32 {
             let mut tmp = SeqSoftmaxLossLayer::new("t", steps);
             tmp.setup(&[&[batch, steps * vocab], &[batch, steps]], &mut rng());
-            tmp.compute_feature(Phase::Train, &[ls, &labels]);
+            forward(&mut tmp, Phase::Train, &[ls, &labels]);
             tmp.loss().unwrap().0
         };
         for i in (0..logits.len()).step_by(3) {

@@ -15,5 +15,48 @@ pub mod net;
 pub mod partition;
 
 pub use layer::{Layer, LayerConf, LayerKind, Phase};
-pub use net::{NetBuilder, NeuralNet};
+pub use net::{NetBuilder, NeuralNet, Workspace};
 pub use partition::partition_net;
+
+/// Test-only stand-in for the planned executor: drives a single layer with
+/// freshly zeroed destination buffers so unit tests can call
+/// `compute_feature` / `compute_gradient` directly under the
+/// write-into-workspace contract.
+#[cfg(test)]
+pub mod test_support {
+    use super::layer::{Layer, Phase};
+    use crate::tensor::Blob;
+
+    /// Run forward into a fresh blob (layers size their own output).
+    pub fn forward(l: &mut dyn Layer, phase: Phase, srcs: &[&Blob]) -> Blob {
+        let mut out = Blob::default();
+        l.compute_feature(phase, srcs, &mut out);
+        out
+    }
+
+    /// Run backward against zeroed source-gradient slots, returning them
+    /// (`None` where the layer declares no source gradient) — the shape the
+    /// old allocate-per-call contract returned, for easy assertions.
+    pub fn backward(
+        l: &mut dyn Layer,
+        srcs: &[&Blob],
+        own: &Blob,
+        grad_out: Option<&Blob>,
+    ) -> Vec<Option<Blob>> {
+        let mut slots: Vec<Option<Blob>> = (0..srcs.len())
+            .map(|k| {
+                if l.needs_src_grad(k) {
+                    Some(Blob::zeros(srcs[k].shape()))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        {
+            let mut refs: Vec<Option<&mut Blob>> =
+                slots.iter_mut().map(|o| o.as_mut()).collect();
+            l.compute_gradient(srcs, own, grad_out, &mut refs);
+        }
+        slots
+    }
+}

@@ -21,20 +21,59 @@ pub struct Node {
     pub srcs: Vec<usize>,
     /// Indices of consumer nodes.
     pub consumers: Vec<usize>,
-    /// Feature blob from the most recent forward pass.
-    pub feature: Blob,
-    /// Accumulated gradient w.r.t. `feature` (populated during backward).
-    pub grad: Option<Blob>,
     /// Inferred output shape.
     pub out_shape: Vec<usize>,
     /// Worker slot this node is placed on (0 when unpartitioned).
     pub location: usize,
 }
 
+/// The preallocated buffer pool backing the planned executor: one feature
+/// blob and one gradient blob per node, sized from the inferred shapes at
+/// `NetBuilder::build` time and reused every step. Gradient slots are
+/// zeroed lazily (only when a consumer is about to write) and tracked by
+/// `grad_seen`, which doubles as the "did any gradient reach this node"
+/// signal the backward pass uses to skip dead paths.
+pub struct Workspace {
+    features: Vec<Blob>,
+    grads: Vec<Blob>,
+    grad_seen: Vec<bool>,
+}
+
+impl Workspace {
+    fn for_shapes(shapes: &[&[usize]]) -> Workspace {
+        Workspace {
+            features: shapes.iter().map(|s| Blob::zeros(s)).collect(),
+            grads: shapes.iter().map(|s| Blob::zeros(s)).collect(),
+            grad_seen: vec![false; shapes.len()],
+        }
+    }
+
+    /// Feature blob of node `i` (most recent forward pass).
+    pub fn feature(&self, i: usize) -> &Blob {
+        &self.features[i]
+    }
+
+    /// Accumulated gradient w.r.t. node `i`'s feature, if any consumer
+    /// produced one during the most recent backward pass.
+    pub fn grad(&self, i: usize) -> Option<&Blob> {
+        if self.grad_seen[i] {
+            Some(&self.grads[i])
+        } else {
+            None
+        }
+    }
+
+    /// Total bytes held by the pool (capacity accounting).
+    pub fn byte_size(&self) -> usize {
+        self.features.iter().chain(&self.grads).map(|b| b.byte_size()).sum()
+    }
+}
+
 /// The neural net instance passed to `TrainOneBatch` (paper Fig 6).
 pub struct NeuralNet {
     nodes: Vec<Node>,
     by_name: HashMap<String, usize>,
+    ws: Workspace,
 }
 
 /// Builder accumulating layer configurations.
@@ -131,8 +170,6 @@ impl NetBuilder {
                 layer,
                 srcs: srcs[ci].iter().map(|&s| pos[s]).collect(),
                 consumers: consumers[ci].iter().map(|&c| pos[c]).collect(),
-                feature: Blob::zeros(&[0]),
-                grad: None,
                 out_shape: Vec::new(),
                 location: conf.location.unwrap_or(0),
             });
@@ -145,7 +182,11 @@ impl NetBuilder {
                 node.srcs.iter().map(|&s| before[s].out_shape.as_slice()).collect();
             node.out_shape = node.layer.setup(&src_shapes, rng);
         }
-        NeuralNet { nodes, by_name: final_by_name }
+        // Build the workspace from the inferred shapes: the plan's feature
+        // and gradient buffers, allocated once and reused every step.
+        let shapes: Vec<&[usize]> = nodes.iter().map(|n| n.out_shape.as_slice()).collect();
+        let ws = Workspace::for_shapes(&shapes);
+        NeuralNet { nodes, by_name: final_by_name, ws }
     }
 }
 
@@ -170,65 +211,135 @@ impl NeuralNet {
         self.by_name.get(name).copied()
     }
 
+    /// The workspace backing this net's executor.
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
+    }
+
+    /// Disjoint mutable access to the layer graph alongside shared access to
+    /// the workspace — what algorithm drivers (e.g. CD) need to run layer
+    /// internals against already-materialized features without cloning them.
+    pub fn split_mut(&mut self) -> (&mut [Node], &Workspace) {
+        (&mut self.nodes, &self.ws)
+    }
+
     /// Feed a mini-batch into the named input layer if it exists (data
     /// sources may provide fields a net does not consume, e.g. labels
     /// during unsupervised RBM pre-training). Returns whether it was set.
     pub fn try_set_input(&mut self, name: &str, batch: Blob) -> bool {
+        self.try_set_input_ref(name, &batch)
+    }
+
+    /// Borrowing variant of [`NeuralNet::try_set_input`]: copies the batch
+    /// into the input layer's workspace slot without consuming (or cloning)
+    /// the caller's blob.
+    pub fn try_set_input_ref(&mut self, name: &str, batch: &Blob) -> bool {
         if self.index_of(name).is_none() {
             return false;
         }
-        self.set_input(name, batch);
+        self.set_input_ref(name, batch);
         true
     }
 
     /// Feed a mini-batch into the named input layer.
     pub fn set_input(&mut self, name: &str, batch: Blob) {
+        self.set_input_ref(name, &batch);
+    }
+
+    /// Feed a mini-batch into the named input layer by copying it straight
+    /// into the layer's workspace slot — the zero-allocation input path
+    /// (the slot only reallocates when the batch size changes).
+    pub fn set_input_ref(&mut self, name: &str, batch: &Blob) {
         let idx = self.index_of(name).unwrap_or_else(|| panic!("no layer '{name}'"));
-        let input = self.nodes[idx]
+        self.nodes[idx]
             .layer
             .as_any()
             .downcast_mut::<InputLayer>()
-            .unwrap_or_else(|| panic!("layer '{name}' is not an Input layer"));
-        input.set_batch(batch);
+            .unwrap_or_else(|| panic!("layer '{name}' is not an Input layer"))
+            .mark_fed();
+        self.ws.features[idx].copy_from(batch);
     }
 
     /// Forward pass over all layers in topological order (first loop of the
-    /// paper's Algorithm 1).
+    /// paper's Algorithm 1). Each layer writes into its preallocated
+    /// workspace slot; sources are read from the slots of earlier nodes.
     pub fn forward(&mut self, phase: Phase) {
+        for seen in self.ws.grad_seen.iter_mut() {
+            *seen = false;
+        }
         for i in 0..self.nodes.len() {
-            let (before, rest) = self.nodes.split_at_mut(i);
-            let node = &mut rest[0];
-            let src_feats: Vec<&Blob> = node.srcs.iter().map(|&s| &before[s].feature).collect();
-            node.feature = node.layer.compute_feature(phase, &src_feats);
-            node.grad = None;
+            let node = &mut self.nodes[i];
+            let (before, rest) = self.ws.features.split_at_mut(i);
+            let out = &mut rest[0];
+            let src_feats: Vec<&Blob> = node.srcs.iter().map(|&s| &before[s]).collect();
+            node.layer.compute_feature(phase, &src_feats, out);
         }
     }
 
     /// Backward pass in reverse topological order (second loop of
-    /// Algorithm 1): each layer consumes the accumulated gradient w.r.t. its
-    /// feature and scatters gradients to its sources.
+    /// Algorithm 1): each layer accumulates into the pre-zeroed gradient
+    /// slots of its sources — no per-step gradient allocation.
     pub fn backward(&mut self) {
         for i in (0..self.nodes.len()).rev() {
-            let (before, rest) = self.nodes.split_at_mut(i);
-            let node = &mut rest[0];
+            let node = &mut self.nodes[i];
             if node.srcs.is_empty() {
                 continue; // input layers
             }
-            if node.grad.is_none() && !node.layer.is_loss() {
+            let has_grad = self.ws.grad_seen[i];
+            if !has_grad && !node.layer.is_loss() {
                 // No gradient reached this node (e.g. the label parser
                 // path); nothing to propagate.
                 continue;
             }
-            let src_feats: Vec<&Blob> = node.srcs.iter().map(|&s| &before[s].feature).collect();
-            let grads =
-                node.layer.compute_gradient(&src_feats, &node.feature, node.grad.as_ref());
-            assert_eq!(grads.len(), node.srcs.len(), "{} returned wrong grad count", node.layer.name());
-            for (k, g) in grads.into_iter().enumerate() {
-                if let Some(g) = g {
-                    let src = &mut before[node.srcs[k]];
-                    match &mut src.grad {
-                        Some(acc) => acc.add_assign(&g),
-                        None => src.grad = Some(g),
+            // Lazily zero the source slots this layer will write (first
+            // contribution of the step only), resizing if the runtime batch
+            // changed since the workspace was planned.
+            for (k, &s) in node.srcs.iter().enumerate() {
+                if node.layer.needs_src_grad(k) && !self.ws.grad_seen[s] {
+                    self.ws.grads[s].resize(self.ws.features[s].shape());
+                    self.ws.grads[s].fill(0.0);
+                    self.ws.grad_seen[s] = true;
+                }
+            }
+            // Move the writable slots out of the pool so the layer gets
+            // disjoint `&mut` access (duplicate sources — legal but rare —
+            // get a scratch accumulator merged back below).
+            let nsrc = node.srcs.len();
+            let mut slot_store: Vec<Option<Blob>> = Vec::with_capacity(nsrc);
+            let mut is_dup = vec![false; nsrc];
+            for (k, &s) in node.srcs.iter().enumerate() {
+                if !node.layer.needs_src_grad(k) {
+                    slot_store.push(None);
+                    continue;
+                }
+                let taken_before = node.srcs[..k]
+                    .iter()
+                    .enumerate()
+                    .any(|(p, &ps)| ps == s && node.layer.needs_src_grad(p));
+                if taken_before {
+                    is_dup[k] = true;
+                    slot_store.push(Some(Blob::zeros(self.ws.features[s].shape())));
+                } else {
+                    slot_store.push(Some(std::mem::take(&mut self.ws.grads[s])));
+                }
+            }
+            {
+                let src_feats: Vec<&Blob> =
+                    node.srcs.iter().map(|&s| &self.ws.features[s]).collect();
+                let own = &self.ws.features[i];
+                let grad_out = if has_grad { Some(&self.ws.grads[i]) } else { None };
+                let mut slots: Vec<Option<&mut Blob>> =
+                    slot_store.iter_mut().map(|o| o.as_mut()).collect();
+                node.layer.compute_gradient(&src_feats, own, grad_out, &mut slots);
+            }
+            // Return the slots to the pool (merging duplicate-source
+            // scratch into the canonical slot).
+            for (k, &s) in node.srcs.iter().enumerate() {
+                if let Some(blob) = slot_store[k].take() {
+                    if is_dup[k] {
+                        self.ws.grads[s].add_assign(&blob);
+                    } else {
+                        self.ws.grads[s] = blob;
                     }
                 }
             }
@@ -252,7 +363,18 @@ impl NeuralNet {
 
     /// Feature blob of a named layer (after `forward`).
     pub fn feature(&self, name: &str) -> &Blob {
-        &self.nodes[self.index_of(name).unwrap_or_else(|| panic!("no layer '{name}'"))].feature
+        self.feature_of(self.index_of(name).unwrap_or_else(|| panic!("no layer '{name}'")))
+    }
+
+    /// Feature blob of node `i` (after `forward`).
+    pub fn feature_of(&self, i: usize) -> &Blob {
+        self.ws.feature(i)
+    }
+
+    /// Accumulated gradient w.r.t. node `i`'s feature (after `backward`),
+    /// `None` when no gradient reached it.
+    pub fn grad_of(&self, i: usize) -> Option<&Blob> {
+        self.ws.grad(i)
     }
 
     /// All parameters across layers.
@@ -409,9 +531,7 @@ mod tests {
             net.forward(Phase::Train);
             net.backward();
             for p in net.params_mut() {
-                let g = p.grad.clone();
-                let lr = 0.5 * p.lr_mult;
-                p.data.axpy(-lr, &g);
+                p.sgd_step(0.5);
             }
             let (_, loss, acc) = net.losses()[0].clone();
             if first_loss.is_none() {
@@ -447,9 +567,47 @@ mod tests {
         // The split node must have received gradient contributions from both
         // consumers (accumulated), and its own source (data) gets one too.
         let split_idx = net.index_of("split").unwrap();
-        assert!(net.nodes()[split_idx].grad.is_some());
+        assert!(net.grad_of(split_idx).is_some());
         let data_idx = net.index_of("data").unwrap();
-        assert!(net.nodes()[data_idx].grad.is_some());
+        assert!(net.grad_of(data_idx).is_some());
+    }
+
+    /// The accumulated fan-out gradient must equal the SUM of both
+    /// consumers' contributions — the semantics the pre-zeroed accumulate
+    /// contract has to preserve.
+    #[test]
+    fn fanout_grad_is_sum_of_consumers() {
+        let b = NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![2, 3] }, &[]))
+            .add(LayerConf::new("split", LayerKind::Split, &["data"]))
+            .add(LayerConf::new(
+                "a",
+                LayerKind::InnerProduct { out: 4, act: Activation::Identity, init_std: 0.3 },
+                &["split"],
+            ))
+            .add(LayerConf::new(
+                "b",
+                LayerKind::InnerProduct { out: 4, act: Activation::Identity, init_std: 0.3 },
+                &["split"],
+            ))
+            .add(LayerConf::new("loss", LayerKind::EuclideanLoss { weight: 1.0 }, &["a", "b"]));
+        let mut net = b.build(&mut Rng::new(5));
+        net.set_input("data", Blob::full(&[2, 3], 0.5));
+        net.forward(Phase::Train);
+        net.backward();
+        // Recompute each consumer's dx independently and check the sum.
+        let split_idx = net.index_of("split").unwrap();
+        let accumulated = net.grad_of(split_idx).unwrap().clone();
+        let mut expect = Blob::zeros(accumulated.shape());
+        for name in ["a", "b"] {
+            let i = net.index_of(name).unwrap();
+            let dy = net.grad_of(i).unwrap().clone();
+            let w = net.nodes()[i].layer.params()[0].data.clone();
+            expect.add_assign(&crate::tensor::ops::matmul_nt(&dy, &w));
+        }
+        for (x, y) in accumulated.data().iter().zip(expect.data()) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
     }
 
     #[test]

@@ -24,6 +24,8 @@ pub struct RbmLayer {
     rng: Rng,
     /// (reconstruction error, 0) from the last CD step.
     last_loss: f32,
+    /// Reused backward scratch (feed-forward fine-tuning path).
+    dpre_scratch: Blob,
 }
 
 impl RbmLayer {
@@ -37,6 +39,7 @@ impl RbmLayer {
             hbias: Param::new(&format!("{name}/hbias"), Blob::zeros(&[0])),
             rng: Rng::new(0xb0b + name.len() as u64),
             last_loss: 0.0,
+            dpre_scratch: Blob::default(),
         }
     }
 
@@ -150,8 +153,13 @@ impl Layer for RbmLayer {
         vec![batch, self.hidden]
     }
 
-    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob]) -> Blob {
-        self.prop_up(srcs[0])
+    fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
+        // prop_up written into the workspace slot, activation in place.
+        let v = srcs[0];
+        out.resize(&[v.rows(), self.hidden]);
+        ops::matmul_into(v, &self.weight.data, out, 0.0);
+        ops::add_row_vec(out, &self.hbias.data);
+        ops::sigmoid_inplace(out);
     }
 
     fn compute_gradient(
@@ -159,16 +167,18 @@ impl Layer for RbmLayer {
         srcs: &[&Blob],
         own: &Blob,
         grad_out: Option<&Blob>,
-    ) -> Vec<Option<Blob>> {
+        src_grads: &mut [Option<&mut Blob>],
+    ) {
         // Feed-forward fine-tuning path (auto-encoder after unfolding):
         // behave like a sigmoid inner-product layer.
         let dy = grad_out.expect("Rbm backward needs grad in feed-forward mode");
-        let dpre = ops::sigmoid_grad(own, dy);
-        let x = srcs[0].reshape(&[srcs[0].rows(), srcs[0].cols()]);
-        self.weight.grad.add_assign(&ops::matmul_tn(&x, &dpre));
-        self.hbias.grad.add_assign(&ops::sum_rows(&dpre));
-        let dx = ops::matmul_nt(&dpre, &self.weight.data);
-        vec![Some(dx.reshape(srcs[0].shape()))]
+        ops::zip_into(own, dy, &mut self.dpre_scratch, ops::dsigmoid);
+        let x = srcs[0];
+        ops::matmul_tn_into(x, &self.dpre_scratch, &mut self.weight.grad, 1.0);
+        ops::sum_rows_into(&self.dpre_scratch, &mut self.hbias.grad, true);
+        if let Some(dx) = &mut src_grads[0] {
+            ops::matmul_nt_into(&self.dpre_scratch, &self.weight.data, dx, 1.0);
+        }
     }
 
     fn params(&self) -> Vec<&Param> {
@@ -191,6 +201,7 @@ impl Layer for RbmLayer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::test_support::{backward, forward};
 
     fn setup_rbm(visible: usize, hidden: usize) -> RbmLayer {
         let mut l = RbmLayer::new("rbm", hidden, 0.1);
@@ -262,8 +273,7 @@ mod tests {
             let err = l.cd_step(&batch, 1);
             // SGD update
             for p in l.params_mut() {
-                let g = p.grad.clone();
-                p.data.axpy(-0.1, &g);
+                p.sgd_step(0.1);
                 p.grad.fill(0.0);
             }
             if it == 0 {
@@ -291,8 +301,7 @@ mod tests {
             let batch = Blob::from_vec(&[8, 8], data);
             l.cd_step(&batch, 1);
             for p in l.params_mut() {
-                let g = p.grad.clone();
-                p.data.axpy(-0.1, &g);
+                p.sgd_step(0.1);
                 p.grad.fill(0.0);
             }
             let _ = rng.next_u32();
@@ -308,9 +317,9 @@ mod tests {
         let mut l = setup_rbm(5, 3);
         let mut r = Rng::new(6);
         let x = Blob::from_vec(&[2, 5], r.uniform_vec(10, 0.0, 1.0));
-        let y = l.compute_feature(Phase::Train, &[&x]);
+        let y = forward(&mut l, Phase::Train, &[&x]);
         let dy = Blob::full(y.shape(), 1.0);
-        let gs = l.compute_gradient(&[&x], &y, Some(&dy));
+        let gs = backward(&mut l, &[&x], &y, Some(&dy));
         let dx = gs[0].as_ref().unwrap();
         let eps = 1e-2;
         for i in 0..x.len() {

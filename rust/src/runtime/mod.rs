@@ -14,19 +14,68 @@ pub mod device;
 pub mod manifest;
 pub mod xla_job;
 
+#[cfg(feature = "xla-backend")]
 use crate::tensor::Blob;
+#[cfg(feature = "xla-backend")]
 use anyhow::{anyhow, Context, Result};
 pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+#[cfg(feature = "xla-backend")]
 use std::collections::HashMap;
+#[cfg(feature = "xla-backend")]
 use std::path::{Path, PathBuf};
 
+/// Stub runtime used when the crate is built without the `xla-backend`
+/// feature (the offline default: the external `xla` bindings and libxla are
+/// not available). `open` always fails with a clear message; every caller
+/// already guards on the artifact directory existing, so the native path is
+/// unaffected.
+#[cfg(not(feature = "xla-backend"))]
+mod stub {
+    use super::Manifest;
+    use crate::tensor::Blob;
+    use anyhow::Result;
+    use std::path::{Path, PathBuf};
+
+    /// PJRT client + compiled executable cache (stub).
+    pub struct XlaRuntime {
+        pub manifest: Manifest,
+    }
+
+    impl XlaRuntime {
+        pub fn open(_dir: &Path) -> Result<XlaRuntime> {
+            Err(anyhow::anyhow!(
+                "XLA backend not compiled in: rebuild with `--features xla-backend` \
+                 (requires the vendored `xla` crate and libxla; see Cargo.toml)"
+            ))
+        }
+
+        /// Default artifact directory (repo-root `artifacts/`).
+        pub fn default_dir() -> PathBuf {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        }
+
+        pub fn platform(&self) -> String {
+            "stub".to_string()
+        }
+
+        pub fn execute(&mut self, _name: &str, _inputs: &[&Blob]) -> Result<Vec<Blob>> {
+            Err(anyhow::anyhow!("XLA backend not compiled in"))
+        }
+    }
+}
+
+#[cfg(not(feature = "xla-backend"))]
+pub use stub::XlaRuntime;
+
 /// A compiled artifact ready to execute.
+#[cfg(feature = "xla-backend")]
 pub struct LoadedStep {
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
 }
 
 /// PJRT client + compiled executable cache.
+#[cfg(feature = "xla-backend")]
 pub struct XlaRuntime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -34,6 +83,7 @@ pub struct XlaRuntime {
     loaded: HashMap<String, LoadedStep>,
 }
 
+#[cfg(feature = "xla-backend")]
 impl XlaRuntime {
     /// Open the artifact directory (compiles nothing yet).
     pub fn open(dir: &Path) -> Result<XlaRuntime> {
@@ -141,7 +191,7 @@ impl XlaRuntime {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "xla-backend"))]
 mod tests {
     use super::*;
 

@@ -7,13 +7,44 @@
 //! support is expressed as row/column slice + concat (dim 0 / dim 1).
 
 use crate::utils::rng::Rng;
+use std::cell::Cell;
 use std::fmt;
 
+thread_local! {
+    /// Count of non-empty blob buffer allocations made by this thread
+    /// (constructors, clones, and growing `resize`s). The bench harness
+    /// diffs this across training steps to prove the planned executor's
+    /// steady state is allocation-free.
+    static BLOB_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn note_alloc(len: usize) {
+    if len > 0 {
+        BLOB_ALLOCS.with(|c| c.set(c.get() + 1));
+    }
+}
+
 /// Dense row-major f32 tensor.
-#[derive(Clone, PartialEq)]
+#[derive(PartialEq)]
 pub struct Blob {
     shape: Vec<usize>,
     data: Vec<f32>,
+}
+
+impl Clone for Blob {
+    fn clone(&self) -> Blob {
+        note_alloc(self.data.len());
+        Blob { shape: self.shape.clone(), data: self.data.clone() }
+    }
+}
+
+/// An empty placeholder blob (used by `std::mem::take` when the executor
+/// temporarily moves workspace slots out for disjoint mutable access).
+impl Default for Blob {
+    fn default() -> Blob {
+        Blob { shape: Vec::new(), data: Vec::new() }
+    }
 }
 
 impl fmt::Debug for Blob {
@@ -27,15 +58,23 @@ impl fmt::Debug for Blob {
 }
 
 impl Blob {
+    /// Blob buffer allocations made by the current thread so far (see the
+    /// steady-state allocation probe in [`crate::bench`]).
+    pub fn alloc_count() -> u64 {
+        BLOB_ALLOCS.with(|c| c.get())
+    }
+
     /// Zero-filled blob.
     pub fn zeros(shape: &[usize]) -> Blob {
         let n: usize = shape.iter().product();
+        note_alloc(n);
         Blob { shape: shape.to_vec(), data: vec![0.0; n] }
     }
 
     /// Constant-filled blob.
     pub fn full(shape: &[usize], v: f32) -> Blob {
         let n: usize = shape.iter().product();
+        note_alloc(n);
         Blob { shape: shape.to_vec(), data: vec![v; n] }
     }
 
@@ -48,19 +87,51 @@ impl Blob {
             shape,
             data.len()
         );
+        note_alloc(data.len());
         Blob { shape: shape.to_vec(), data }
     }
 
     /// Gaussian-initialized blob (weight init).
     pub fn gaussian(shape: &[usize], std: f32, rng: &mut Rng) -> Blob {
         let n: usize = shape.iter().product();
+        note_alloc(n);
         Blob { shape: shape.to_vec(), data: rng.gaussian_vec(n, std) }
     }
 
     /// Uniform-initialized blob.
     pub fn uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut Rng) -> Blob {
         let n: usize = shape.iter().product();
+        note_alloc(n);
         Blob { shape: shape.to_vec(), data: rng.uniform_vec(n, lo, hi) }
+    }
+
+    /// Reshape in place, reallocating only when the element count outgrows
+    /// the existing capacity (shrinks and re-grows within capacity are
+    /// allocation-free, so alternating train/eval batch sizes settle after
+    /// one cycle). Elements appended beyond the previous length are zero;
+    /// contents up to the previous length are preserved — every caller
+    /// overwrites (or zero-fills) the buffer before reading it. A no-op at
+    /// steady state.
+    pub fn resize(&mut self, shape: &[usize]) {
+        let n: usize = shape.iter().product();
+        if self.data.len() != n {
+            if n > self.data.capacity() {
+                note_alloc(n);
+            }
+            self.data.resize(n, 0.0);
+        }
+        if self.shape != shape {
+            self.shape.clear();
+            self.shape.extend_from_slice(shape);
+        }
+    }
+
+    /// Copy `other`'s contents into this blob (shapes must already agree in
+    /// element count; this blob adopts `other`'s shape). No allocation when
+    /// the length matches.
+    pub fn copy_from(&mut self, other: &Blob) {
+        self.resize(other.shape());
+        self.data.copy_from_slice(&other.data);
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -230,6 +301,16 @@ impl Blob {
         Blob { shape: vec![rows, total_cols], data }
     }
 
+    /// `(start, count)` of part `i` of `total` split into `k` even parts —
+    /// the allocation-free point query behind [`Blob::split_points`].
+    pub fn split_range(total: usize, k: usize, i: usize) -> (usize, usize) {
+        assert!(k > 0 && i < k);
+        let base = total / k;
+        let extra = total % k;
+        let start = i * base + i.min(extra);
+        (start, base + usize::from(i < extra))
+    }
+
     /// Even split points for partitioning `total` into `k` parts: the first
     /// `total % k` parts get one extra element (paper: mini-batch 256 into 2
     /// sub-layers of 128 each).
@@ -286,6 +367,16 @@ impl Param {
     /// Number of scalar parameters.
     pub fn size(&self) -> usize {
         self.data.len()
+    }
+
+    /// Plain SGD step `data -= lr * lr_mult * grad`, fused and in place.
+    /// Replaces the old aliasing workaround (`p.grad.clone()` + `axpy`) that
+    /// update loops needed because `data` and `grad` live in one struct.
+    pub fn sgd_step(&mut self, lr: f32) {
+        let step = lr * self.lr_mult;
+        for (w, g) in self.data.data_mut().iter_mut().zip(self.grad.data()) {
+            *w -= step * g;
+        }
     }
 }
 
@@ -400,6 +491,61 @@ mod tests {
         assert_eq!(pts, vec![(0, 128), (128, 128)]);
         let pts = Blob::split_points(10, 3);
         assert_eq!(pts, vec![(0, 4), (4, 3), (7, 3)]);
+    }
+
+    #[test]
+    fn split_range_matches_split_points() {
+        forall(100, |g| {
+            let total = g.usize(1, 100);
+            let k = g.usize(1, 16);
+            let pts = Blob::split_points(total, k);
+            for (i, &pt) in pts.iter().enumerate() {
+                prop_assert(Blob::split_range(total, k, i) == pt, "range == points")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn resize_reallocates_only_on_growth_beyond_capacity() {
+        let mut b = Blob::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let before = Blob::alloc_count();
+        b.resize(&[3, 2]); // same length: pure metadata change
+        assert_eq!(Blob::alloc_count(), before);
+        assert_eq!(b.shape(), &[3, 2]);
+        assert_eq!(b.data()[0], 1.0, "same-length resize preserves data");
+        b.resize(&[4, 2]); // grows past capacity: one allocation
+        assert_eq!(Blob::alloc_count(), before + 1);
+        assert_eq!(b.len(), 8);
+        assert_eq!(&b.data()[6..], &[0.0, 0.0], "appended tail is zero");
+        // Shrink and re-grow within the retained capacity: no allocation.
+        b.resize(&[2, 2]);
+        b.resize(&[4, 2]);
+        assert_eq!(Blob::alloc_count(), before + 1, "capacity reuse is free");
+    }
+
+    #[test]
+    fn copy_from_reuses_buffer() {
+        let src = Blob::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let mut dst = Blob::zeros(&[4]);
+        let before = Blob::alloc_count();
+        dst.copy_from(&src);
+        assert_eq!(Blob::alloc_count(), before);
+        assert_eq!(dst.shape(), &[2, 2]);
+        assert_eq!(dst.data(), src.data());
+    }
+
+    #[test]
+    fn sgd_step_matches_axpy_workaround() {
+        let mut p = Param::new("w", Blob::full(&[3], 1.0)).with_lr_mult(2.0);
+        p.grad = Blob::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let mut expect = p.data.clone();
+        let g = p.grad.clone();
+        expect.axpy(-0.1 * p.lr_mult, &g);
+        let before = Blob::alloc_count();
+        p.sgd_step(0.1);
+        assert_eq!(Blob::alloc_count(), before, "sgd_step must not allocate");
+        assert_eq!(p.data.data(), expect.data());
     }
 
     #[test]

@@ -72,8 +72,15 @@ pub fn im2col(img: &[f32], g: &Conv2dGeom, out: &mut [f32]) {
 /// Fold an im2col matrix back into image gradients (transpose of `im2col`,
 /// accumulating where patches overlap).
 pub fn col2im(col: &[f32], g: &Conv2dGeom, img: &mut [f32]) {
-    let (oh, ow) = (g.out_h(), g.out_w());
     img.iter_mut().for_each(|v| *v = 0.0);
+    col2im_acc(col, g, img);
+}
+
+/// `col2im` without the zero prologue: accumulates into `img`, which the
+/// planned executor hands over already zeroed (and possibly already holding
+/// sibling consumers' gradient contributions).
+pub fn col2im_acc(col: &[f32], g: &Conv2dGeom, img: &mut [f32]) {
+    let (oh, ow) = (g.out_h(), g.out_w());
     let mut row = 0;
     for c in 0..g.in_c {
         for ky in 0..g.kernel {
@@ -96,67 +103,121 @@ pub fn col2im(col: &[f32], g: &Conv2dGeom, img: &mut [f32]) {
     }
 }
 
-/// Forward convolution: input `[B,C,H,W]`, weight `[out_c, C*k*k]`, bias
-/// `[out_c]` → output `[B, out_c, out_h, out_w]`. Also returns the im2col
-/// buffers (one per image) for reuse in the backward pass.
+/// Reusable scratch for the batched-GEMM convolution path. Owned by the
+/// `ConvolutionLayer` so the big packed operands are allocated once and
+/// reused every step.
+#[derive(Default)]
+pub struct ConvScratch {
+    bigcol: Vec<f32>,
+    bigout: Vec<f32>,
+    dcol: Vec<f32>,
+}
+
+impl ConvScratch {
+    pub fn new() -> ConvScratch {
+        ConvScratch::default()
+    }
+}
+
+fn ensure_len(v: &mut Vec<f32>, n: usize) {
+    if v.len() != n {
+        v.clear();
+        v.resize(n, 0.0);
+    }
+}
+
+/// Forward convolution into a caller-provided output: input `[B,C,H,W]`,
+/// weight `[out_c, C*k*k]`, bias `[out_c]` → output `[B, out_c, oh, ow]`
+/// (resized). The per-image im2col buffers are written into `cols` for
+/// reuse in the backward pass; all buffers are reused across calls.
+pub fn conv2d_forward_into(
+    input: &Blob,
+    weight: &Blob,
+    bias: &Blob,
+    g: &Conv2dGeom,
+    out: &mut Blob,
+    cols: &mut Vec<Vec<f32>>,
+    scratch: &mut ConvScratch,
+) {
+    let b = input.shape()[0];
+    let out_c = weight.shape()[0];
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let img_len = g.in_c * g.in_h * g.in_w;
+    let (cr, cc) = (g.col_rows(), g.col_cols());
+    out.resize(&[b, out_c, oh, ow]);
+    if cols.len() != b {
+        cols.resize_with(b, Vec::new);
+    }
+    // Batch all images into ONE wide GEMM: W [out_c, cr] @ bigcol
+    // [cr, b*cc]. The weight pack is amortized across the whole batch
+    // (perf pass, EXPERIMENTS.md §Perf L3 iteration 5).
+    ensure_len(&mut scratch.bigcol, cr * b * cc);
+    for (i, col) in cols.iter_mut().enumerate() {
+        ensure_len(col, cr * cc);
+        im2col(&input.data()[i * img_len..(i + 1) * img_len], g, col);
+        for r in 0..cr {
+            scratch.bigcol[r * b * cc + i * cc..r * b * cc + (i + 1) * cc]
+                .copy_from_slice(&col[r * cc..(r + 1) * cc]);
+        }
+    }
+    ensure_len(&mut scratch.bigout, out_c * b * cc);
+    gemm(
+        Transpose::No,
+        Transpose::No,
+        out_c,
+        b * cc,
+        cr,
+        1.0,
+        weight.data(),
+        &scratch.bigcol,
+        0.0,
+        &mut scratch.bigout,
+    );
+    for i in 0..b {
+        let dst = &mut out.data_mut()[i * out_c * cc..(i + 1) * out_c * cc];
+        for oc in 0..out_c {
+            let bv = bias.data()[oc];
+            let src = &scratch.bigout[oc * b * cc + i * cc..oc * b * cc + (i + 1) * cc];
+            for (d, s) in dst[oc * cc..(oc + 1) * cc].iter_mut().zip(src) {
+                *d = s + bv;
+            }
+        }
+    }
+}
+
+/// Forward convolution (allocating wrapper over [`conv2d_forward_into`]).
 pub fn conv2d_forward(
     input: &Blob,
     weight: &Blob,
     bias: &Blob,
     g: &Conv2dGeom,
 ) -> (Blob, Vec<Vec<f32>>) {
-    let b = input.shape()[0];
-    let out_c = weight.shape()[0];
-    let (oh, ow) = (g.out_h(), g.out_w());
-    let img_len = g.in_c * g.in_h * g.in_w;
-    let mut out = Blob::zeros(&[b, out_c, oh, ow]);
-    let mut cols = Vec::with_capacity(b);
-    let (cr, cc) = (g.col_rows(), g.col_cols());
-    // Batch all images into ONE wide GEMM: W [out_c, cr] @ bigcol
-    // [cr, b*cc]. The weight pack is amortized across the whole batch
-    // (perf pass, EXPERIMENTS.md §Perf L3 iteration 5).
-    let mut bigcol = vec![0.0f32; cr * b * cc];
-    for i in 0..b {
-        let mut col = vec![0.0f32; cr * cc];
-        im2col(&input.data()[i * img_len..(i + 1) * img_len], g, &mut col);
-        for r in 0..cr {
-            bigcol[r * b * cc + i * cc..r * b * cc + (i + 1) * cc]
-                .copy_from_slice(&col[r * cc..(r + 1) * cc]);
-        }
-        cols.push(col);
-    }
-    let mut bigout = vec![0.0f32; out_c * b * cc];
-    gemm(Transpose::No, Transpose::No, out_c, b * cc, cr, 1.0, weight.data(), &bigcol, 0.0, &mut bigout);
-    for i in 0..b {
-        let dst = &mut out.data_mut()[i * out_c * cc..(i + 1) * out_c * cc];
-        for oc in 0..out_c {
-            let bv = bias.data()[oc];
-            let src = &bigout[oc * b * cc + i * cc..oc * b * cc + (i + 1) * cc];
-            for (d, s) in dst[oc * cc..(oc + 1) * cc].iter_mut().zip(src) {
-                *d = s + bv;
-            }
-        }
-    }
+    let mut out = Blob::default();
+    let mut cols = Vec::new();
+    let mut scratch = ConvScratch::new();
+    conv2d_forward_into(input, weight, bias, g, &mut out, &mut cols, &mut scratch);
     (out, cols)
 }
 
-/// Backward convolution: returns (d_input, d_weight, d_bias).
-pub fn conv2d_backward(
+/// Backward convolution, ACCUMULATING (`+=`) into the provided gradient
+/// buffers: `d_weight [out_c, cr]`, `d_bias [out_c]` and (when wanted) the
+/// input-gradient slot `d_input` (same element count as `input`).
+pub fn conv2d_backward_acc(
     input: &Blob,
     weight: &Blob,
     grad_out: &Blob,
     cols: &[Vec<f32>],
     g: &Conv2dGeom,
-) -> (Blob, Blob, Blob) {
+    mut d_input: Option<&mut Blob>,
+    d_weight: &mut Blob,
+    d_bias: &mut Blob,
+    scratch: &mut ConvScratch,
+) {
     let b = input.shape()[0];
     let out_c = weight.shape()[0];
     let (cr, cc) = (g.col_rows(), g.col_cols());
     let img_len = g.in_c * g.in_h * g.in_w;
-
-    let mut d_input = Blob::zeros(input.shape());
-    let mut d_weight = Blob::zeros(weight.shape());
-    let mut d_bias = Blob::zeros(&[out_c]);
-    let mut d_col = vec![0.0f32; cr * cc];
+    ensure_len(&mut scratch.dcol, cr * cc);
 
     for i in 0..b {
         let go = &grad_out.data()[i * out_c * cc..(i + 1) * out_c * cc];
@@ -173,23 +234,67 @@ pub fn conv2d_backward(
             1.0,
             d_weight.data_mut(),
         );
-        // d_col = W^T [cr, out_c] @ dOut [out_c, cc]
-        gemm(Transpose::Yes, Transpose::No, cr, cc, out_c, 1.0, weight.data(), go, 0.0, &mut d_col);
-        col2im(&d_col, g, &mut d_input.data_mut()[i * img_len..(i + 1) * img_len]);
+        if let Some(dx) = d_input.as_deref_mut() {
+            // d_col = W^T [cr, out_c] @ dOut [out_c, cc]
+            gemm(
+                Transpose::Yes,
+                Transpose::No,
+                cr,
+                cc,
+                out_c,
+                1.0,
+                weight.data(),
+                go,
+                0.0,
+                &mut scratch.dcol,
+            );
+            col2im_acc(&scratch.dcol, g, &mut dx.data_mut()[i * img_len..(i + 1) * img_len]);
+        }
         for oc in 0..out_c {
             d_bias.data_mut()[oc] += go[oc * cc..(oc + 1) * cc].iter().sum::<f32>();
         }
     }
+}
+
+/// Backward convolution: returns (d_input, d_weight, d_bias) — allocating
+/// wrapper over [`conv2d_backward_acc`].
+pub fn conv2d_backward(
+    input: &Blob,
+    weight: &Blob,
+    grad_out: &Blob,
+    cols: &[Vec<f32>],
+    g: &Conv2dGeom,
+) -> (Blob, Blob, Blob) {
+    let out_c = weight.shape()[0];
+    let mut d_input = Blob::zeros(input.shape());
+    let mut d_weight = Blob::zeros(weight.shape());
+    let mut d_bias = Blob::zeros(&[out_c]);
+    let mut scratch = ConvScratch::new();
+    conv2d_backward_acc(
+        input,
+        weight,
+        grad_out,
+        cols,
+        g,
+        Some(&mut d_input),
+        &mut d_weight,
+        &mut d_bias,
+        &mut scratch,
+    );
     (d_input, d_weight, d_bias)
 }
 
-/// Max-pool forward: input `[B,C,H,W]` → (output, argmax indices).
-pub fn maxpool_forward(input: &Blob, g: &Conv2dGeom) -> (Blob, Vec<usize>) {
+/// Max-pool forward into caller-provided output and argmax buffers (both
+/// resized; no allocation at steady state).
+pub fn maxpool_forward_into(input: &Blob, g: &Conv2dGeom, out: &mut Blob, arg: &mut Vec<usize>) {
     let b = input.shape()[0];
     let (oh, ow) = (g.out_h(), g.out_w());
     let img_len = g.in_c * g.in_h * g.in_w;
-    let mut out = Blob::zeros(&[b, g.in_c, oh, ow]);
-    let mut arg = vec![0usize; b * g.in_c * oh * ow];
+    out.resize(&[b, g.in_c, oh, ow]);
+    if arg.len() != b * g.in_c * oh * ow {
+        arg.clear();
+        arg.resize(b * g.in_c * oh * ow, 0);
+    }
     for i in 0..b {
         for c in 0..g.in_c {
             let plane = &input.data()[i * img_len + c * g.in_h * g.in_w..];
@@ -221,24 +326,37 @@ pub fn maxpool_forward(input: &Blob, g: &Conv2dGeom) -> (Blob, Vec<usize>) {
             }
         }
     }
+}
+
+/// Max-pool forward: input `[B,C,H,W]` → (output, argmax indices).
+pub fn maxpool_forward(input: &Blob, g: &Conv2dGeom) -> (Blob, Vec<usize>) {
+    let mut out = Blob::default();
+    let mut arg = Vec::new();
+    maxpool_forward_into(input, g, &mut out, &mut arg);
     (out, arg)
+}
+
+/// Max-pool backward, ACCUMULATING output grads onto the argmax positions
+/// of an already-initialized input-gradient slot.
+pub fn maxpool_backward_acc(grad_out: &Blob, arg: &[usize], d_input: &mut Blob) {
+    for (o, &src) in arg.iter().enumerate() {
+        d_input.data_mut()[src] += grad_out.data()[o];
+    }
 }
 
 /// Max-pool backward: scatter output grads to the argmax positions.
 pub fn maxpool_backward(input_shape: &[usize], grad_out: &Blob, arg: &[usize]) -> Blob {
     let mut d_input = Blob::zeros(input_shape);
-    for (o, &src) in arg.iter().enumerate() {
-        d_input.data_mut()[src] += grad_out.data()[o];
-    }
+    maxpool_backward_acc(grad_out, arg, &mut d_input);
     d_input
 }
 
-/// Average-pool forward.
-pub fn avgpool_forward(input: &Blob, g: &Conv2dGeom) -> Blob {
+/// Average-pool forward into a caller-provided output (resized).
+pub fn avgpool_forward_into(input: &Blob, g: &Conv2dGeom, out: &mut Blob) {
     let b = input.shape()[0];
     let (oh, ow) = (g.out_h(), g.out_w());
     let img_len = g.in_c * g.in_h * g.in_w;
-    let mut out = Blob::zeros(&[b, g.in_c, oh, ow]);
+    out.resize(&[b, g.in_c, oh, ow]);
     let k2 = (g.kernel * g.kernel) as f32;
     for i in 0..b {
         for c in 0..g.in_c {
@@ -264,14 +382,19 @@ pub fn avgpool_forward(input: &Blob, g: &Conv2dGeom) -> Blob {
             }
         }
     }
+}
+
+/// Average-pool forward.
+pub fn avgpool_forward(input: &Blob, g: &Conv2dGeom) -> Blob {
+    let mut out = Blob::default();
+    avgpool_forward_into(input, g, &mut out);
     out
 }
 
-/// Local response normalization across channels (AlexNet §3.3):
-/// `b[c] = a[c] / (k + alpha/n * sum_{c'} a[c']^2)^beta`.
-pub fn lrn_forward(input: &Blob, size: usize, alpha: f32, beta: f32, k: f32) -> Blob {
+/// Local response normalization into a caller-provided output (resized).
+pub fn lrn_forward_into(input: &Blob, size: usize, alpha: f32, beta: f32, k: f32, out: &mut Blob) {
     let (b, c, h, w) = nchw(input);
-    let mut out = input.clone();
+    out.copy_from(input);
     let plane = h * w;
     for i in 0..b {
         for y in 0..plane {
@@ -288,6 +411,13 @@ pub fn lrn_forward(input: &Blob, size: usize, alpha: f32, beta: f32, k: f32) -> 
             }
         }
     }
+}
+
+/// Local response normalization across channels (AlexNet §3.3):
+/// `b[c] = a[c] / (k + alpha/n * sum_{c'} a[c']^2)^beta`.
+pub fn lrn_forward(input: &Blob, size: usize, alpha: f32, beta: f32, k: f32) -> Blob {
+    let mut out = Blob::default();
+    lrn_forward_into(input, size, alpha, beta, k, &mut out);
     out
 }
 

@@ -316,4 +316,55 @@ mod tests {
         gemm(Transpose::No, Transpose::No, 2, 2, 0, 1.0, &[], &[], 0.5, &mut c);
         assert_eq!(c, [1.0; 4]);
     }
+
+    /// alpha == 0 must reduce to C = beta*C without touching A/B (even for
+    /// non-finite operands), for every beta class (0, 1, other).
+    #[test]
+    fn alpha_zero_is_pure_beta_scaling() {
+        let a = [f32::NAN; 4];
+        let b = [f32::INFINITY; 4];
+        let mut c = vec![3.0; 4];
+        gemm(Transpose::No, Transpose::No, 2, 2, 2, 0.0, &a, &b, 1.0, &mut c);
+        assert_eq!(c, [3.0; 4], "beta=1 keeps C");
+        gemm(Transpose::No, Transpose::No, 2, 2, 2, 0.0, &a, &b, 2.0, &mut c);
+        assert_eq!(c, [6.0; 4], "beta=2 doubles C");
+        gemm(Transpose::No, Transpose::No, 2, 2, 2, 0.0, &a, &b, 0.0, &mut c);
+        assert_eq!(c, [0.0; 4], "beta=0 zeroes C");
+    }
+
+    /// Empty-dimension cases for every (m, n, k) zero pattern: output must
+    /// still be exactly beta*C and never read out of bounds.
+    #[test]
+    fn empty_dims_apply_beta_only() {
+        for &(m, n, k) in &[(0usize, 3usize, 2usize), (3, 0, 2), (3, 3, 0), (0, 0, 5)] {
+            let a = vec![1.0f32; m * k];
+            let b = vec![1.0f32; k * n];
+            let mut c = vec![4.0f32; m * n];
+            gemm(Transpose::No, Transpose::No, m, n, k, 1.0, &a, &b, 0.25, &mut c);
+            assert!(c.iter().all(|&v| v == 1.0), "(m,n,k)=({m},{n},{k}): {c:?}");
+        }
+    }
+
+    /// Random alpha/beta (including 0, 1, negatives) and all transpose
+    /// combos must match the reference kernel.
+    #[test]
+    fn property_alpha_beta_transpose_matches_reference() {
+        forall(40, |g| {
+            let m = g.usize(1, 24);
+            let n = g.usize(1, 24);
+            let k = g.usize(1, 24);
+            let alpha = *g.choose(&[0.0f32, 1.0, -1.0, 2.5, 0.3]);
+            let beta = *g.choose(&[0.0f32, 1.0, -0.5, 2.0]);
+            let ta = if g.bool() { Transpose::Yes } else { Transpose::No };
+            let tb = if g.bool() { Transpose::Yes } else { Transpose::No };
+            let a = g.f32_vec(m * k, -1.0, 1.0);
+            let b = g.f32_vec(k * n, -1.0, 1.0);
+            let c0 = g.f32_vec(m * n, -1.0, 1.0);
+            let mut c1 = c0.clone();
+            let mut c2 = c0;
+            gemm(ta, tb, m, n, k, alpha, &a, &b, beta, &mut c1);
+            gemm_ref(ta, tb, m, n, k, alpha, &a, &b, beta, &mut c2);
+            prop_close(&c1, &c2, 1e-3, 1e-3, "gemm alpha/beta vs ref")
+        });
+    }
 }

@@ -4,37 +4,64 @@
 //! implementers (§5.1); in SINGA they dispatch to CPU or GPU — here they are
 //! the native-backend implementations, with the XLA path covering the
 //! AOT-compiled production loop.
+//!
+//! Every hot-path primitive exists in a destination-passing `_into` form
+//! (layered on [`gemm`]'s `beta`/`C` support) so the planned executor can
+//! run the steady-state training loop without allocating; the allocating
+//! versions are thin wrappers over the `_into` forms and therefore produce
+//! bit-identical results. `beta` follows BLAS: `0.0` overwrites the
+//! destination, `1.0` accumulates into it.
 
 use super::blob::Blob;
 use super::gemm::{gemm, Transpose};
 
-/// `C = A @ B` on the matrix views of the blobs.
-pub fn matmul(a: &Blob, b: &Blob) -> Blob {
+/// `C = alpha_implicit(1) * A @ B + beta * C` on the matrix views.
+/// `c` must already have `a.rows() x b.cols()` elements (any shape whose
+/// matrix view matches, e.g. an NCHW gradient slot).
+pub fn matmul_into(a: &Blob, b: &Blob, c: &mut Blob, beta: f32) {
     let (m, k) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2, "matmul inner dim: {:?} @ {:?}", a.shape(), b.shape());
-    let mut c = Blob::zeros(&[m, n]);
-    gemm(Transpose::No, Transpose::No, m, n, k, 1.0, a.data(), b.data(), 0.0, c.data_mut());
+    assert_eq!((c.rows(), c.cols()), (m, n), "matmul_into dst {:?}", c.shape());
+    gemm(Transpose::No, Transpose::No, m, n, k, 1.0, a.data(), b.data(), beta, c.data_mut());
+}
+
+/// `C = A^T @ B + beta * C`.
+pub fn matmul_tn_into(a: &Blob, b: &Blob, c: &mut Blob, beta: f32) {
+    let (k, m) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_tn inner dim");
+    assert_eq!((c.rows(), c.cols()), (m, n), "matmul_tn_into dst {:?}", c.shape());
+    gemm(Transpose::Yes, Transpose::No, m, n, k, 1.0, a.data(), b.data(), beta, c.data_mut());
+}
+
+/// `C = A @ B^T + beta * C`.
+pub fn matmul_nt_into(a: &Blob, b: &Blob, c: &mut Blob, beta: f32) {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_nt inner dim");
+    assert_eq!((c.rows(), c.cols()), (m, n), "matmul_nt_into dst {:?}", c.shape());
+    gemm(Transpose::No, Transpose::Yes, m, n, k, 1.0, a.data(), b.data(), beta, c.data_mut());
+}
+
+/// `C = A @ B` on the matrix views of the blobs.
+pub fn matmul(a: &Blob, b: &Blob) -> Blob {
+    let mut c = Blob::zeros(&[a.rows(), b.cols()]);
+    matmul_into(a, b, &mut c, 0.0);
     c
 }
 
 /// `C = A^T @ B`.
 pub fn matmul_tn(a: &Blob, b: &Blob) -> Blob {
-    let (k, m) = (a.rows(), a.cols());
-    let (k2, n) = (b.rows(), b.cols());
-    assert_eq!(k, k2, "matmul_tn inner dim");
-    let mut c = Blob::zeros(&[m, n]);
-    gemm(Transpose::Yes, Transpose::No, m, n, k, 1.0, a.data(), b.data(), 0.0, c.data_mut());
+    let mut c = Blob::zeros(&[a.cols(), b.cols()]);
+    matmul_tn_into(a, b, &mut c, 0.0);
     c
 }
 
 /// `C = A @ B^T`.
 pub fn matmul_nt(a: &Blob, b: &Blob) -> Blob {
-    let (m, k) = (a.rows(), a.cols());
-    let (n, k2) = (b.rows(), b.cols());
-    assert_eq!(k, k2, "matmul_nt inner dim");
-    let mut c = Blob::zeros(&[m, n]);
-    gemm(Transpose::No, Transpose::Yes, m, n, k, 1.0, a.data(), b.data(), 0.0, c.data_mut());
+    let mut c = Blob::zeros(&[a.rows(), b.rows()]);
+    matmul_nt_into(a, b, &mut c, 0.0);
     c
 }
 
@@ -49,47 +76,116 @@ pub fn add_row_vec(x: &mut Blob, bias: &Blob) {
     }
 }
 
-/// Column-wise sum of the matrix view → row vector (bias gradient).
-pub fn sum_rows(x: &Blob) -> Blob {
+/// Column-wise sum of the matrix view accumulated into a row vector
+/// (`out += colsum(x)` when `accumulate`, else `out = colsum(x)`).
+pub fn sum_rows_into(x: &Blob, out: &mut Blob, accumulate: bool) {
     let cols = x.cols();
-    let mut out = Blob::zeros(&[cols]);
+    assert_eq!(out.len(), cols, "sum_rows_into dst length");
+    if !accumulate {
+        out.fill(0.0);
+    }
     for row in x.data().chunks(cols) {
         for (o, v) in out.data_mut().iter_mut().zip(row) {
             *o += v;
         }
     }
+}
+
+/// Column-wise sum of the matrix view → row vector (bias gradient).
+pub fn sum_rows(x: &Blob) -> Blob {
+    let mut out = Blob::zeros(&[x.cols()]);
+    sum_rows_into(x, &mut out, false);
     out
 }
 
+/// Scalar sigmoid, shared by the blob-level forms and the GRU gate loops.
+#[inline]
+pub fn sigmoid_scalar(v: f32) -> f32 {
+    1.0 / (1.0 + (-v).exp())
+}
+
+// Scalar chain-rule steps given the activation OUTPUT `y` and the upstream
+// gradient `dy` — the single source of truth for every backward
+// implementation (inner-product, standalone activation, RBM, GRU).
+
+/// `dy * σ'` expressed through the output: `dy * y * (1 - y)`.
+#[inline]
+pub fn dsigmoid(y: f32, dy: f32) -> f32 {
+    dy * y * (1.0 - y)
+}
+
+/// `dy * tanh'` through the output: `dy * (1 - y²)`.
+#[inline]
+pub fn dtanh(y: f32, dy: f32) -> f32 {
+    dy * (1.0 - y * y)
+}
+
+/// `dy * relu'` through the output (y is 0 exactly where the input was
+/// non-positive, so the output gates the gradient).
+#[inline]
+pub fn drelu_from_out(y: f32, dy: f32) -> f32 {
+    if y > 0.0 {
+        dy
+    } else {
+        0.0
+    }
+}
+
 pub fn sigmoid(x: &Blob) -> Blob {
-    map(x, |v| 1.0 / (1.0 + (-v).exp()))
+    map(x, sigmoid_scalar)
+}
+
+pub fn sigmoid_into(x: &Blob, out: &mut Blob) {
+    map_into(x, out, sigmoid_scalar);
+}
+
+/// Apply the sigmoid in place — the in-place activation path used when the
+/// producer (pre-activation) and consumer share one workspace buffer.
+pub fn sigmoid_inplace(x: &mut Blob) {
+    x.data_mut().iter_mut().for_each(|v| *v = sigmoid_scalar(*v));
 }
 
 /// d/dx of sigmoid given the *output* y: y * (1 - y).
 pub fn sigmoid_grad(y: &Blob, dy: &Blob) -> Blob {
-    zip(y, dy, |yv, dv| dv * yv * (1.0 - yv))
+    zip(y, dy, dsigmoid)
 }
 
 pub fn tanh(x: &Blob) -> Blob {
     map(x, f32::tanh)
 }
 
+pub fn tanh_into(x: &Blob, out: &mut Blob) {
+    map_into(x, out, f32::tanh);
+}
+
+pub fn tanh_inplace(x: &mut Blob) {
+    x.data_mut().iter_mut().for_each(|v| *v = v.tanh());
+}
+
 pub fn tanh_grad(y: &Blob, dy: &Blob) -> Blob {
-    zip(y, dy, |yv, dv| dv * (1.0 - yv * yv))
+    zip(y, dy, dtanh)
 }
 
 pub fn relu(x: &Blob) -> Blob {
     map(x, |v| v.max(0.0))
 }
 
+pub fn relu_into(x: &Blob, out: &mut Blob) {
+    map_into(x, out, |v| v.max(0.0));
+}
+
+pub fn relu_inplace(x: &mut Blob) {
+    x.data_mut().iter_mut().for_each(|v| *v = v.max(0.0));
+}
+
 pub fn relu_grad(x: &Blob, dy: &Blob) -> Blob {
     zip(x, dy, |xv, dv| if xv > 0.0 { dv } else { 0.0 })
 }
 
-/// Row-wise softmax of the matrix view (numerically stabilized).
-pub fn softmax(x: &Blob) -> Blob {
+/// Row-wise softmax written into `out` (resized to `x`'s shape).
+pub fn softmax_into(x: &Blob, out: &mut Blob) {
+    out.copy_from(x);
     let cols = x.cols();
-    let mut out = x.clone();
     for row in out.data_mut().chunks_mut(cols) {
         let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut sum = 0.0;
@@ -101,26 +197,40 @@ pub fn softmax(x: &Blob) -> Blob {
             *v /= sum;
         }
     }
+}
+
+/// Row-wise softmax of the matrix view (numerically stabilized).
+pub fn softmax(x: &Blob) -> Blob {
+    let mut out = Blob::zeros(x.shape());
+    softmax_into(x, &mut out);
     out
+}
+
+/// Mean softmax cross-entropy against integer labels with the logits
+/// gradient `(p - onehot)/batch` written into `grad` (resized to the logits
+/// shape). Returns the loss.
+pub fn softmax_xent_into(logits: &Blob, labels: &[usize], grad: &mut Blob) -> f32 {
+    softmax_into(logits, grad);
+    let cols = logits.cols();
+    let rows = logits.rows();
+    assert_eq!(labels.len(), rows, "labels length");
+    let mut loss = 0.0f32;
+    for (r, &label) in labels.iter().enumerate() {
+        assert!(label < cols, "label {label} out of range {cols}");
+        let p = grad.data()[r * cols + label].max(1e-12);
+        loss -= p.ln();
+        grad.data_mut()[r * cols + label] -= 1.0;
+    }
+    grad.scale(1.0 / rows as f32);
+    loss / rows as f32
 }
 
 /// Mean cross-entropy loss of row-wise softmax probabilities `p` against
 /// integer labels, plus the gradient w.r.t. the logits (p - onehot)/batch.
 pub fn softmax_xent(logits: &Blob, labels: &[usize]) -> (f32, Blob) {
-    let probs = softmax(logits);
-    let cols = probs.cols();
-    let rows = probs.rows();
-    assert_eq!(labels.len(), rows, "labels length");
-    let mut loss = 0.0f32;
-    let mut grad = probs.clone();
-    for (r, &label) in labels.iter().enumerate() {
-        assert!(label < cols, "label {label} out of range {cols}");
-        let p = probs.data()[r * cols + label].max(1e-12);
-        loss -= p.ln();
-        grad.data_mut()[r * cols + label] -= 1.0;
-    }
-    grad.scale(1.0 / rows as f32);
-    (loss / rows as f32, grad)
+    let mut grad = Blob::zeros(logits.shape());
+    let loss = softmax_xent_into(logits, labels, &mut grad);
+    (loss, grad)
 }
 
 /// Fraction of rows whose argmax equals the label.
@@ -142,28 +252,66 @@ pub fn accuracy(logits: &Blob, labels: &[usize]) -> f32 {
     correct as f32 / labels.len().max(1) as f32
 }
 
-/// Mean squared euclidean distance between rows of a and b: loss and grad
-/// w.r.t. a ((a-b)/batch). Used by the EuclideanLoss layer in MDNN.
-pub fn euclidean_loss(a: &Blob, b: &Blob) -> (f32, Blob) {
+/// Euclidean loss with the gradient w.r.t. `a` written into `grad` (resized
+/// to `a`'s shape). Returns the loss.
+pub fn euclidean_loss_into(a: &Blob, b: &Blob, grad: &mut Blob) -> f32 {
     assert_eq!(a.shape(), b.shape(), "euclidean shapes");
     let rows = a.rows().max(1);
-    let mut grad = a.clone();
+    grad.copy_from(a);
     grad.axpy(-1.0, b);
     let loss = 0.5 * grad.data().iter().map(|v| v * v).sum::<f32>() / rows as f32;
     grad.scale(1.0 / rows as f32);
+    loss
+}
+
+/// Mean squared euclidean distance between rows of a and b: loss and grad
+/// w.r.t. a ((a-b)/batch). Used by the EuclideanLoss layer in MDNN.
+pub fn euclidean_loss(a: &Blob, b: &Blob) -> (f32, Blob) {
+    let mut grad = Blob::zeros(a.shape());
+    let loss = euclidean_loss_into(a, b, &mut grad);
     (loss, grad)
 }
 
+/// Elementwise map written into `out` (resized to `x`'s shape).
+pub fn map_into<F: Fn(f32) -> f32>(x: &Blob, out: &mut Blob, f: F) {
+    out.resize(x.shape());
+    for (o, &v) in out.data_mut().iter_mut().zip(x.data()) {
+        *o = f(v);
+    }
+}
+
 pub fn map<F: Fn(f32) -> f32>(x: &Blob, f: F) -> Blob {
-    Blob::from_vec(x.shape(), x.data().iter().map(|&v| f(v)).collect())
+    let mut out = Blob::zeros(x.shape());
+    map_into(x, &mut out, f);
+    out
+}
+
+/// Elementwise zip written into `out` (resized to `a`'s shape). `out` may
+/// not alias `a` or `b` (enforced by borrowing).
+pub fn zip_into<F: Fn(f32, f32) -> f32>(a: &Blob, b: &Blob, out: &mut Blob, f: F) {
+    assert_eq!(a.shape(), b.shape(), "zip shapes");
+    out.resize(a.shape());
+    for ((o, &x), &y) in out.data_mut().iter_mut().zip(a.data()).zip(b.data()) {
+        *o = f(x, y);
+    }
+}
+
+/// Elementwise zip ACCUMULATED into `out` (`out += f(a, b)`), the form
+/// backward passes use to add a gradient contribution into a shared
+/// workspace slot. Only element counts must agree (the slot may be NCHW
+/// while the operands are matrix views).
+pub fn zip_acc<F: Fn(f32, f32) -> f32>(a: &Blob, b: &Blob, out: &mut Blob, f: F) {
+    assert_eq!(a.len(), b.len(), "zip_acc operand lengths");
+    assert_eq!(a.len(), out.len(), "zip_acc dst length");
+    for ((o, &x), &y) in out.data_mut().iter_mut().zip(a.data()).zip(b.data()) {
+        *o += f(x, y);
+    }
 }
 
 pub fn zip<F: Fn(f32, f32) -> f32>(a: &Blob, b: &Blob, f: F) -> Blob {
-    assert_eq!(a.shape(), b.shape(), "zip shapes");
-    Blob::from_vec(
-        a.shape(),
-        a.data().iter().zip(b.data()).map(|(&x, &y)| f(x, y)).collect(),
-    )
+    let mut out = Blob::zeros(a.shape());
+    zip_into(a, b, &mut out, f);
+    out
 }
 
 #[cfg(test)]
@@ -295,6 +443,93 @@ mod tests {
         let (loss, grad) = euclidean_loss(&a, &b);
         assert!((loss - 0.5 * (1.0 + 4.0) / 2.0).abs() < 1e-6);
         assert_eq!(grad.data(), &[0.5, 0.0, 0.0, 1.0]);
+    }
+
+    /// Every `_into` op must match its allocating counterpart bit-for-bit
+    /// (the allocating versions are wrappers, but this pins the contract
+    /// against future divergence) and in-place activations must match too.
+    #[test]
+    fn into_ops_match_allocating_bit_for_bit() {
+        forall(40, |g| {
+            let m = g.usize(1, 10);
+            let k = g.usize(1, 10);
+            let n = g.usize(1, 10);
+            let a = Blob::from_vec(&[m, k], g.f32_vec(m * k, -2.0, 2.0));
+            let b = Blob::from_vec(&[k, n], g.f32_vec(k * n, -2.0, 2.0));
+            let mut c = Blob::zeros(&[m, n]);
+            matmul_into(&a, &b, &mut c, 0.0);
+            prop_close(c.data(), matmul(&a, &b).data(), 0.0, 0.0, "matmul")?;
+
+            let at = Blob::from_vec(&[k, m], g.f32_vec(k * m, -2.0, 2.0));
+            let mut c = Blob::zeros(&[m, n]);
+            matmul_tn_into(&at, &b, &mut c, 0.0);
+            prop_close(c.data(), matmul_tn(&at, &b).data(), 0.0, 0.0, "matmul_tn")?;
+
+            let bt = Blob::from_vec(&[n, k], g.f32_vec(n * k, -2.0, 2.0));
+            let mut c = Blob::zeros(&[m, n]);
+            matmul_nt_into(&a, &bt, &mut c, 0.0);
+            prop_close(c.data(), matmul_nt(&a, &bt).data(), 0.0, 0.0, "matmul_nt")?;
+
+            let x = Blob::from_vec(&[m, n], g.f32_vec(m * n, -4.0, 4.0));
+            let mut o = Blob::zeros(&[m, n]);
+            sigmoid_into(&x, &mut o);
+            prop_close(o.data(), sigmoid(&x).data(), 0.0, 0.0, "sigmoid")?;
+            tanh_into(&x, &mut o);
+            prop_close(o.data(), tanh(&x).data(), 0.0, 0.0, "tanh")?;
+            relu_into(&x, &mut o);
+            prop_close(o.data(), relu(&x).data(), 0.0, 0.0, "relu")?;
+            softmax_into(&x, &mut o);
+            prop_close(o.data(), softmax(&x).data(), 0.0, 0.0, "softmax")?;
+
+            let mut inp = x.clone();
+            sigmoid_inplace(&mut inp);
+            prop_close(inp.data(), sigmoid(&x).data(), 0.0, 0.0, "sigmoid_inplace")?;
+            let mut inp = x.clone();
+            tanh_inplace(&mut inp);
+            prop_close(inp.data(), tanh(&x).data(), 0.0, 0.0, "tanh_inplace")?;
+            let mut inp = x.clone();
+            relu_inplace(&mut inp);
+            prop_close(inp.data(), relu(&x).data(), 0.0, 0.0, "relu_inplace")?;
+
+            let mut s = Blob::zeros(&[n]);
+            sum_rows_into(&x, &mut s, false);
+            prop_close(s.data(), sum_rows(&x).data(), 0.0, 0.0, "sum_rows")?;
+
+            let labels: Vec<usize> = (0..m).map(|i| i % n).collect();
+            let mut gr = Blob::zeros(&[1]);
+            let l1 = softmax_xent_into(&x, &labels, &mut gr);
+            let (l2, gr2) = softmax_xent(&x, &labels);
+            prop_assert(l1 == l2, "xent loss")?;
+            prop_close(gr.data(), gr2.data(), 0.0, 0.0, "xent grad")?;
+
+            let y = Blob::from_vec(&[m, n], g.f32_vec(m * n, -2.0, 2.0));
+            let mut ge = Blob::zeros(&[1]);
+            let l1 = euclidean_loss_into(&x, &y, &mut ge);
+            let (l2, ge2) = euclidean_loss(&x, &y);
+            prop_assert(l1 == l2, "euclid loss")?;
+            prop_close(ge.data(), ge2.data(), 0.0, 0.0, "euclid grad")
+        });
+    }
+
+    /// `beta` semantics of the matmul `_into` ops: beta=1 accumulates.
+    #[test]
+    fn matmul_into_beta_accumulates() {
+        let a = Blob::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Blob::from_vec(&[2, 2], vec![1., 0., 0., 1.]);
+        let mut c = Blob::full(&[2, 2], 10.0);
+        matmul_into(&a, &b, &mut c, 1.0);
+        assert_eq!(c.data(), &[11., 12., 13., 14.]);
+        matmul_into(&a, &b, &mut c, 0.0);
+        assert_eq!(c.data(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn zip_acc_accumulates() {
+        let a = Blob::from_vec(&[2], vec![1., 2.]);
+        let b = Blob::from_vec(&[2], vec![3., 4.]);
+        let mut out = Blob::full(&[2], 1.0);
+        zip_acc(&a, &b, &mut out, |x, y| x * y);
+        assert_eq!(out.data(), &[4.0, 9.0]);
     }
 
     #[test]

@@ -28,7 +28,9 @@ impl TrainOneBatch for Bp {
         inputs: &HashMap<String, Blob>,
     ) -> StepStats {
         for (name, blob) in inputs {
-            net.try_set_input(name, blob.clone());
+            // Copied straight into the input layer's workspace slot — no
+            // per-step clone.
+            net.try_set_input_ref(name, blob);
         }
         net.forward(Phase::Train); // Collect + ComputeFeature loop
         net.backward(); // ComputeGradient + Update loop
@@ -80,8 +82,7 @@ mod tests {
             net.zero_grads();
             last = alg.train_one_batch(&mut net, &inputs);
             for p in net.params_mut() {
-                let g = p.grad.clone();
-                p.data.axpy(-0.5 * p.lr_mult, &g);
+                p.sgd_step(0.5);
             }
         }
         assert_eq!(last.metric(), 1.0, "XOR accuracy must reach 1.0");
@@ -128,8 +129,9 @@ mod tests {
                 first_loss = Some(last.total_loss());
             }
             for p in net.params_mut() {
-                let g = p.grad.clone();
-                p.data.axpy(-0.5, &g);
+                // GRU params all have lr_mult 1.0; the projection bias
+                // trains at its usual 2x.
+                p.sgd_step(0.5 / p.lr_mult.max(1.0));
             }
         }
         assert!(

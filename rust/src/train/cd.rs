@@ -35,37 +35,33 @@ impl TrainOneBatch for Cd {
         inputs: &HashMap<String, Blob>,
     ) -> StepStats {
         for (name, blob) in inputs {
-            net.try_set_input(name, blob.clone());
+            net.try_set_input_ref(name, blob);
         }
         // Positive-phase forward to materialize features up to each RBM.
         net.forward(Phase::Train);
         let mut losses = Vec::new();
-        // For each RBM layer, run CD-k with its source feature as v0.
-        for i in 0..net.len() {
-            let src_feature: Option<Blob> = {
-                let node = &net.nodes()[i];
-                if node.layer.type_name() == "Rbm" && !node.srcs.is_empty() {
-                    Some(net.nodes()[node.srcs[0]].feature.clone())
-                } else {
-                    None
-                }
-            };
-            if let Some(v0) = src_feature {
-                let node = &mut net.nodes_mut()[i];
-                let name = node.layer.name().to_string();
-                if let Some(only) = &self.train_only {
-                    if &name != only {
-                        continue;
-                    }
-                }
-                let rbm = node
-                    .layer
-                    .as_any()
-                    .downcast_mut::<RbmLayer>()
-                    .expect("type_name Rbm but downcast failed");
-                let err = rbm.cd_step(&v0, self.k);
-                losses.push((name, err, 0.0));
+        // For each RBM layer, run CD-k with its source feature as v0 —
+        // read straight from the workspace, no clone.
+        let (nodes, ws) = net.split_mut();
+        for i in 0..nodes.len() {
+            let node = &mut nodes[i];
+            if node.layer.type_name() != "Rbm" || node.srcs.is_empty() {
+                continue;
             }
+            let name = node.layer.name().to_string();
+            if let Some(only) = &self.train_only {
+                if &name != only {
+                    continue;
+                }
+            }
+            let v0 = ws.feature(node.srcs[0]);
+            let rbm = node
+                .layer
+                .as_any()
+                .downcast_mut::<RbmLayer>()
+                .expect("type_name Rbm but downcast failed");
+            let err = rbm.cd_step(v0, self.k);
+            losses.push((name, err, 0.0));
         }
         StepStats { losses }
     }
@@ -120,8 +116,7 @@ mod tests {
             assert_eq!(stats.losses.len(), 1);
             assert_eq!(stats.losses[0].0, "rbm1");
             for p in net.params_mut() {
-                let g = p.grad.clone();
-                p.data.axpy(-0.1, &g);
+                p.sgd_step(0.1);
             }
             if it == 0 {
                 first = stats.total_loss();
@@ -141,8 +136,7 @@ mod tests {
             let stats = alg2.train_one_batch(&mut net, &inputs);
             assert_eq!(stats.losses[0].0, "rbm2");
             for p in net.params_mut() {
-                let g = p.grad.clone();
-                p.data.axpy(-0.1, &g);
+                p.sgd_step(0.1);
             }
             if it == 0 {
                 first2 = stats.total_loss();

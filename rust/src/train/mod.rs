@@ -54,7 +54,7 @@ pub trait TrainOneBatch: Send {
 /// Evaluation pass (no gradients).
 pub fn evaluate(net: &mut NeuralNet, inputs: &HashMap<String, Blob>) -> StepStats {
     for (name, blob) in inputs {
-        net.try_set_input(name, blob.clone());
+        net.try_set_input_ref(name, blob);
     }
     net.forward(Phase::Test);
     StepStats { losses: net.losses() }

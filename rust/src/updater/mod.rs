@@ -5,6 +5,7 @@
 //! Updaters are stateful per parameter (momentum / accumulated squares), so
 //! each server shard owns one updater state entry per parameter it manages.
 
+use crate::tensor::blob::Param;
 use crate::tensor::Blob;
 use std::collections::HashMap;
 
@@ -119,15 +120,21 @@ impl Updater {
         assert_eq!(value.shape(), grad.shape(), "updater shape mismatch for {name}");
         let lr = self.conf.schedule.at(self.conf.lr, step) * lr_mult;
         let wd = self.conf.weight_decay * wd_mult;
-        // Effective gradient with L2 decay.
-        let mut g = grad.clone();
-        if wd != 0.0 {
-            g.axpy(wd, value);
-        }
+        // Effective gradient with L2 decay — only materialized when decay
+        // is actually on; the common wd == 0 path borrows `grad` directly.
+        let decayed;
+        let g: &Blob = if wd != 0.0 {
+            let mut d = grad.clone();
+            d.axpy(wd, value);
+            decayed = d;
+            &decayed
+        } else {
+            grad
+        };
         match self.conf.algo {
             Algo::Sgd { momentum } => {
                 if momentum == 0.0 {
-                    value.axpy(-lr, &g);
+                    value.axpy(-lr, g);
                 } else {
                     let buf = self
                         .state
@@ -135,7 +142,7 @@ impl Updater {
                         .or_insert_with(|| Blob::zeros(value.shape()));
                     // v = mu*v + g ; w -= lr*v
                     buf.scale(momentum);
-                    buf.add_assign(&g);
+                    buf.add_assign(g);
                     value.axpy(-lr, buf);
                 }
             }
@@ -155,12 +162,14 @@ impl Updater {
                     .state
                     .entry(name.to_string())
                     .or_insert_with(|| Blob::zeros(value.shape()));
-                // v' = mu*v - lr*g ; w += -mu*v + (1+mu)*v'
-                let prev = buf.clone();
-                buf.scale(momentum);
-                buf.axpy(-lr, &g);
-                value.axpy(-momentum, &prev);
-                value.axpy(1.0 + momentum, buf);
+                // v' = mu*v - lr*g ; w += -mu*v + (1+mu)*v', fused
+                // elementwise so no copy of the previous velocity is kept.
+                for ((w, v), gi) in value.data_mut().iter_mut().zip(buf.data_mut()).zip(g.data())
+                {
+                    let vnew = momentum * *v - lr * gi;
+                    *w += -momentum * *v + (1.0 + momentum) * vnew;
+                    *v = vnew;
+                }
             }
             Algo::RmsProp { decay, eps } => {
                 let hist = self
@@ -174,6 +183,14 @@ impl Updater {
                 }
             }
         }
+    }
+
+    /// Apply one update directly to a [`Param`], splitting its `data`/`grad`
+    /// fields internally — callers no longer clone the gradient to work
+    /// around the aliasing.
+    pub fn update_param(&mut self, p: &mut Param, step: u64) {
+        let Param { name, data, grad, lr_mult, wd_mult, .. } = p;
+        self.update(name, data, grad, *lr_mult, *wd_mult, step);
     }
 
     /// Bytes of auxiliary state held (server memory accounting).
