@@ -18,14 +18,54 @@ fn emit_alloc_probe() {
     }
 }
 
+/// Run the serial-vs-parallel GEMM scaling probe and write the
+/// `BENCH_gemm.json` artifact at the repo root. With `check`, assert the
+/// acceptance bar: bit-identical output and ≥1.5x speedup on 256^3 (the CI
+/// smoke step runs this under `PALLAS_NUM_THREADS=4`).
+fn emit_gemm_probe(check: bool) {
+    let threads = singa::runtime::threads();
+    let probes = singa::bench::gemm_scaling_probe(&[64, 128, 256], threads, 1, 5);
+    let json = singa::bench::gemm_probes_json(threads, &probes);
+    println!("==== gemm scaling probe ({threads} threads) ====");
+    print!("{json}");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_gemm.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    if check {
+        let p = probes.iter().find(|p| p.n == 256).expect("256^3 probe present");
+        assert!(p.bit_identical, "parallel gemm output must be bit-identical to serial");
+        assert!(
+            p.speedup >= 1.5,
+            "expected >=1.5x speedup at {threads} threads on 256^3, got {:.2}x \
+             (serial {:.3} ms vs parallel {:.3} ms)",
+            p.speedup,
+            p.serial_ms,
+            p.parallel_ms
+        );
+        println!(
+            "gemm smoke check passed: {:.2}x at {threads} threads on 256^3",
+            p.speedup
+        );
+    }
+}
+
 fn main() {
-    // `cargo bench --bench figures -- alloc` runs only the allocation probe
-    // (the mode CI uses); no argument runs everything.
-    let alloc_only = std::env::args().any(|a| a == "alloc");
-    emit_alloc_probe();
-    if alloc_only {
+    // `cargo bench --bench figures -- alloc` runs only the allocation probe;
+    // `-- gemm [check]` runs only the scaling probe (CI smoke adds `check`);
+    // no argument runs everything.
+    let args: Vec<String> = std::env::args().collect();
+    let has = |s: &str| args.iter().any(|a| a == s);
+    if has("gemm") {
+        emit_gemm_probe(has("check"));
         return;
     }
+    emit_alloc_probe();
+    if has("alloc") {
+        return;
+    }
+    emit_gemm_probe(false);
 
     println!("==== paper figures (quick mode) ====");
     let out = singa::bench::run_all(true);

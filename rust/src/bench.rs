@@ -23,7 +23,7 @@ use crate::tensor::Blob;
 use crate::train::{bp::Bp, TrainOneBatch};
 use crate::updater::UpdaterConf;
 use crate::utils::rng::Rng;
-use crate::utils::timer::Stopwatch;
+use crate::utils::timer::{time_iters, Stopwatch};
 use std::sync::Arc;
 
 /// The CIFAR convnet used throughout §6.2 (conv-pool-relu ×2 + fc), scaled
@@ -87,6 +87,12 @@ pub struct AllocProbe {
     /// Blob allocations per step AFTER warm-up — the zero-allocation
     /// steady-state claim; must be 0.
     pub steady_allocs_per_step: f64,
+    /// Gemm pack-scratch allocations during warm-up (pool growth; may be 0
+    /// if an earlier probe on this thread already warmed the pool).
+    pub warmup_pack_allocs: u64,
+    /// Pack-scratch allocations per step AFTER warm-up — the zero-alloc
+    /// story one level below the Blob layer; must be 0.
+    pub steady_pack_allocs_per_step: f64,
     /// Mean wall time per training step (ms) at steady state.
     pub step_ms: f64,
     pub steps: usize,
@@ -98,6 +104,7 @@ fn probe_training_loop(
     inputs: std::collections::HashMap<String, Blob>,
     steps: usize,
 ) -> AllocProbe {
+    use crate::tensor::gemm::pack_alloc_count;
     let mut alg = Bp::new();
     let mut run = |net: &mut crate::model::NeuralNet, alg: &mut Bp| {
         net.zero_grads();
@@ -107,21 +114,27 @@ fn probe_training_loop(
         }
     };
     let before_warm = Blob::alloc_count();
+    let before_warm_pack = pack_alloc_count();
     for _ in 0..2 {
         run(&mut net, &mut alg);
     }
     let warmup_allocs = Blob::alloc_count() - before_warm;
+    let warmup_pack_allocs = pack_alloc_count() - before_warm_pack;
     let before = Blob::alloc_count();
+    let before_pack = pack_alloc_count();
     let sw = Stopwatch::new();
     for _ in 0..steps {
         run(&mut net, &mut alg);
     }
     let step_ms = sw.elapsed_ms() / steps.max(1) as f64;
     let steady = Blob::alloc_count() - before;
+    let steady_pack = pack_alloc_count() - before_pack;
     AllocProbe {
         model,
         warmup_allocs,
         steady_allocs_per_step: steady as f64 / steps.max(1) as f64,
+        warmup_pack_allocs,
+        steady_pack_allocs_per_step: steady_pack as f64 / steps.max(1) as f64,
         step_ms,
         steps,
     }
@@ -174,12 +187,104 @@ pub fn alloc_probe_json(steps: usize) -> String {
     for (i, p) in probes.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"model\": \"{}\", \"warmup_allocs\": {}, \
-             \"steady_allocs_per_step\": {:.3}, \"step_ms\": {:.4}, \"steps\": {}}}{}\n",
+             \"steady_allocs_per_step\": {:.3}, \"warmup_pack_allocs\": {}, \
+             \"steady_pack_allocs_per_step\": {:.3}, \"step_ms\": {:.4}, \"steps\": {}}}{}\n",
             p.model,
             p.warmup_allocs,
             p.steady_allocs_per_step,
+            p.warmup_pack_allocs,
+            p.steady_pack_allocs_per_step,
             p.step_ms,
             p.steps,
+            if i + 1 == probes.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+// ---------------------------------------------------------------------------
+// GEMM intra-op scaling probe (Fig 18a's native-path counterpart)
+// ---------------------------------------------------------------------------
+
+/// Serial-vs-parallel throughput of one square GEMM size.
+#[derive(Debug, Clone)]
+pub struct GemmProbe {
+    pub n: usize,
+    /// Worker count used for the parallel run.
+    pub threads: usize,
+    /// Best-of-iters wall time (ms) and the derived GFLOP/s.
+    pub serial_ms: f64,
+    pub serial_gflops: f64,
+    pub parallel_ms: f64,
+    pub parallel_gflops: f64,
+    /// serial_ms / parallel_ms (best-of-iters on both sides).
+    pub speedup: f64,
+    /// Whether the parallel output was `==`-identical to serial (the
+    /// determinism guarantee; always expected true).
+    pub bit_identical: bool,
+}
+
+/// Measure `n x n x n` GEMMs serial vs `threads`-worker parallel. Uses
+/// best-of-`iters` timings so the CI smoke check tolerates noisy runners.
+pub fn gemm_scaling_probe(
+    sizes: &[usize],
+    threads: usize,
+    warmup: usize,
+    iters: usize,
+) -> Vec<GemmProbe> {
+    use crate::tensor::gemm::gemm_with_threads;
+    use crate::tensor::Transpose;
+    sizes
+        .iter()
+        .map(|&n| {
+            let mut rng = Rng::new(0x9e37 ^ n as u64);
+            let a = rng.uniform_vec(n * n, -1.0, 1.0);
+            let b = rng.uniform_vec(n * n, -1.0, 1.0);
+            let run = |t: usize, c: &mut [f32]| {
+                gemm_with_threads(Transpose::No, Transpose::No, n, n, n, 1.0, &a, &b, 0.0, c, t);
+            };
+            let mut c_serial = vec![0.0f32; n * n];
+            let mut c_par = vec![0.0f32; n * n];
+            run(1, &mut c_serial);
+            run(threads, &mut c_par);
+            let bit_identical = c_serial == c_par;
+            let st_serial = time_iters(warmup, iters, || run(1, &mut c_serial));
+            let st_par = time_iters(warmup, iters, || run(threads, &mut c_par));
+            let gflops = |ms: f64| 2.0 * (n as f64).powi(3) / (ms / 1e3) / 1e9;
+            let (serial_ms, parallel_ms) = (st_serial.min(), st_par.min());
+            GemmProbe {
+                n,
+                threads,
+                serial_ms,
+                serial_gflops: gflops(serial_ms),
+                parallel_ms,
+                parallel_gflops: gflops(parallel_ms),
+                speedup: serial_ms / parallel_ms,
+                bit_identical,
+            }
+        })
+        .collect()
+}
+
+/// Serialize probes as the `BENCH_gemm.json` artifact emitted by
+/// `cargo bench --bench figures -- gemm`.
+pub fn gemm_probes_json(threads: usize, probes: &[GemmProbe]) -> String {
+    let mut s = format!(
+        "{{\n  \"probe\": \"gemm_scaling\",\n  \"threads\": {threads},\n  \"sizes\": [\n"
+    );
+    for (i, p) in probes.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"n\": {}, \"serial_ms\": {:.4}, \"serial_gflops\": {:.3}, \
+             \"parallel_ms\": {:.4}, \"parallel_gflops\": {:.3}, \"speedup\": {:.3}, \
+             \"bit_identical\": {}}}{}\n",
+            p.n,
+            p.serial_ms,
+            p.serial_gflops,
+            p.parallel_ms,
+            p.parallel_gflops,
+            p.speedup,
+            p.bit_identical,
             if i + 1 == probes.len() { "" } else { "," }
         ));
     }
@@ -842,6 +947,11 @@ mod tests {
                 "{}: steady-state must not allocate blobs (got {} allocs/step)",
                 p.model, p.steady_allocs_per_step
             );
+            assert_eq!(
+                p.steady_pack_allocs_per_step, 0.0,
+                "{}: steady-state must not allocate gemm pack scratch (got {} allocs/step)",
+                p.model, p.steady_pack_allocs_per_step
+            );
             assert!(p.warmup_allocs > 0, "{}: warm-up sizes the workspace", p.model);
         }
     }
@@ -852,7 +962,25 @@ mod tests {
         assert!(j.contains("\"steady_state_alloc\""));
         assert!(j.contains("\"mlp\""));
         assert!(j.contains("\"cifar_convnet\""));
+        assert!(j.contains("\"steady_pack_allocs_per_step\""));
         // trivially parseable by the in-repo JSON reader
+        assert!(crate::utils::json::Json::parse(&j).is_ok());
+    }
+
+    /// The scaling probe's determinism flag must hold (parallel == serial
+    /// exactly) and its JSON artifact must parse. Speedup magnitude is
+    /// machine-dependent and asserted only by the CI smoke step.
+    #[test]
+    fn gemm_probe_is_bit_identical_and_json_parses() {
+        let probes = gemm_scaling_probe(&[64, 96], 4, 0, 1);
+        for p in &probes {
+            assert!(p.bit_identical, "n={}: parallel must equal serial", p.n);
+            assert!(p.serial_ms > 0.0 && p.parallel_ms > 0.0, "n={}", p.n);
+            assert!(p.speedup > 0.0, "n={}", p.n);
+        }
+        let j = gemm_probes_json(4, &probes);
+        assert!(j.contains("\"gemm_scaling\""));
+        assert!(j.contains("\"bit_identical\": true"));
         assert!(crate::utils::json::Json::parse(&j).is_ok());
     }
 

@@ -14,6 +14,50 @@ use crate::tensor::{ops, Blob};
 use crate::utils::rng::Rng;
 use std::any::Any;
 
+/// Reusable Gibbs-chain and gradient scratch owned by the layer, so a CD
+/// step allocates nothing at steady state — the CD counterpart of the BP
+/// path's `_into` workspace story below the Blob layer.
+#[derive(Default)]
+struct CdScratch {
+    h0: Blob,
+    hk: Blob,
+    vk: Blob,
+    hk_prob: Blob,
+    dw: Blob,
+    dneg: Blob,
+    dbv: Blob,
+    dbh: Blob,
+    dtmp: Blob,
+}
+
+/// `out = sigmoid(v W + bh)` without allocating — the body shared by
+/// [`RbmLayer::prop_up`], `compute_feature`, and the CD path. Free function
+/// (not a method) so `cd_step` can borrow the params shared and the scratch
+/// mutably at the same time.
+fn prop_up_into(weight: &Blob, hbias: &Blob, v: &Blob, out: &mut Blob) {
+    out.resize(&[v.rows(), hbias.len()]);
+    ops::matmul_into(v, weight, out, 0.0);
+    ops::add_row_vec(out, hbias);
+    ops::sigmoid_inplace(out);
+}
+
+/// `out = sigmoid(h W^T + bv)` without allocating.
+fn prop_down_into(weight: &Blob, vbias: &Blob, h: &Blob, out: &mut Blob) {
+    out.resize(&[h.rows(), vbias.len()]);
+    ops::matmul_nt_into(h, weight, out, 0.0);
+    ops::add_row_vec(out, vbias);
+    ops::sigmoid_inplace(out);
+}
+
+/// Bernoulli-sample probabilities into `out` (resized to `p`'s shape),
+/// consuming one uniform per element in storage order.
+fn sample_into(rng: &mut Rng, p: &Blob, out: &mut Blob) {
+    out.resize(p.shape());
+    for (o, &q) in out.data_mut().iter_mut().zip(p.data()) {
+        *o = if rng.uniform() < q { 1.0 } else { 0.0 };
+    }
+}
+
 pub struct RbmLayer {
     name: String,
     hidden: usize,
@@ -26,6 +70,8 @@ pub struct RbmLayer {
     last_loss: f32,
     /// Reused backward scratch (feed-forward fine-tuning path).
     dpre_scratch: Blob,
+    /// Reused CD-step scratch (Gibbs chain + gradient staging).
+    cd: CdScratch,
 }
 
 impl RbmLayer {
@@ -40,6 +86,7 @@ impl RbmLayer {
             rng: Rng::new(0xb0b + name.len() as u64),
             last_loss: 0.0,
             dpre_scratch: Blob::default(),
+            cd: CdScratch::default(),
         }
     }
 
@@ -47,65 +94,87 @@ impl RbmLayer {
         self.hidden
     }
 
-    /// `p(h=1 | v) = sigmoid(v W + bh)`.
+    /// `p(h=1 | v) = sigmoid(v W + bh)` (allocating wrapper over the
+    /// `_into` body; bit-identical to the CD path's internal calls).
     pub fn prop_up(&self, v: &Blob) -> Blob {
-        let mut h = ops::matmul(&v.reshape(&[v.rows(), v.cols()]), &self.weight.data);
-        ops::add_row_vec(&mut h, &self.hbias.data);
-        ops::sigmoid(&h)
+        let mut h = Blob::default();
+        prop_up_into(&self.weight.data, &self.hbias.data, v, &mut h);
+        h
     }
 
     /// `p(v=1 | h) = sigmoid(h W^T + bv)`.
     pub fn prop_down(&self, h: &Blob) -> Blob {
-        let mut v = ops::matmul_nt(h, &self.weight.data);
-        ops::add_row_vec(&mut v, &self.vbias.data);
-        ops::sigmoid(&v)
+        let mut v = Blob::default();
+        prop_down_into(&self.weight.data, &self.vbias.data, h, &mut v);
+        v
     }
 
     /// Bernoulli-sample a probability blob.
     pub fn sample(&mut self, p: &Blob) -> Blob {
-        Blob::from_vec(
-            p.shape(),
-            p.data().iter().map(|&q| if self.rng.uniform() < q { 1.0 } else { 0.0 }).collect(),
-        )
+        let mut s = Blob::default();
+        sample_into(&mut self.rng, p, &mut s);
+        s
     }
 
     /// One CD-k step on a visible batch: accumulates gradients into the
     /// params (positive phase minus negative phase, scaled by 1/batch) and
     /// returns the reconstruction error. This is the body the paper's CD
-    /// `TrainOneBatch` performs per iteration.
+    /// `TrainOneBatch` performs per iteration. Runs entirely in layer-owned
+    /// scratch: zero blob allocations per Gibbs step after the first call
+    /// sizes the buffers.
     pub fn cd_step(&mut self, v0: &Blob, k: usize) -> f32 {
         let batch = v0.rows() as f32;
-        let h0 = self.prop_up(v0);
-        // Gibbs chain.
-        let mut hk = self.sample(&h0);
-        let mut vk = self.prop_down(&hk);
+        let visible = v0.cols();
+        let s = &mut self.cd;
+        let w = &self.weight.data;
+
+        // Positive phase + Gibbs chain, all in reusable scratch.
+        prop_up_into(w, &self.hbias.data, v0, &mut s.h0);
+        sample_into(&mut self.rng, &s.h0, &mut s.hk);
+        prop_down_into(w, &self.vbias.data, &s.hk, &mut s.vk);
         for _ in 1..k {
-            hk = self.sample(&self.prop_up(&vk).clone());
-            vk = self.prop_down(&hk);
+            prop_up_into(w, &self.hbias.data, &s.vk, &mut s.hk_prob);
+            sample_into(&mut self.rng, &s.hk_prob, &mut s.hk);
+            prop_down_into(w, &self.vbias.data, &s.hk, &mut s.vk);
         }
-        let hk_prob = self.prop_up(&vk);
+        prop_up_into(w, &self.hbias.data, &s.vk, &mut s.hk_prob);
 
         // dW = -(v0^T h0 - vk^T hk) / batch  (negative log-likelihood grad)
-        let v0m = v0.reshape(&[v0.rows(), v0.cols()]);
-        let mut dw = ops::matmul_tn(&v0m, &h0);
-        dw.axpy(-1.0, &ops::matmul_tn(&vk, &hk_prob));
-        dw.scale(-1.0 / batch);
-        self.weight.grad.add_assign(&dw);
+        s.dw.resize(&[visible, self.hidden]);
+        s.dneg.resize(&[visible, self.hidden]);
+        ops::matmul_tn_into(v0, &s.h0, &mut s.dw, 0.0);
+        ops::matmul_tn_into(&s.vk, &s.hk_prob, &mut s.dneg, 0.0);
+        s.dw.axpy(-1.0, &s.dneg);
+        s.dw.scale(-1.0 / batch);
+        self.weight.grad.add_assign(&s.dw);
 
-        let mut dbv = ops::sum_rows(&v0m);
-        dbv.axpy(-1.0, &ops::sum_rows(&vk));
-        dbv.scale(-1.0 / batch);
-        self.vbias.grad.add_assign(&dbv);
+        s.dbv.resize(&[visible]);
+        s.dtmp.resize(&[visible]);
+        ops::sum_rows_into(v0, &mut s.dbv, false);
+        ops::sum_rows_into(&s.vk, &mut s.dtmp, false);
+        s.dbv.axpy(-1.0, &s.dtmp);
+        s.dbv.scale(-1.0 / batch);
+        self.vbias.grad.add_assign(&s.dbv);
 
-        let mut dbh = ops::sum_rows(&h0);
-        dbh.axpy(-1.0, &ops::sum_rows(&hk_prob));
-        dbh.scale(-1.0 / batch);
-        self.hbias.grad.add_assign(&dbh);
+        s.dbh.resize(&[self.hidden]);
+        s.dtmp.resize(&[self.hidden]);
+        ops::sum_rows_into(&s.h0, &mut s.dbh, false);
+        ops::sum_rows_into(&s.hk_prob, &mut s.dtmp, false);
+        s.dbh.axpy(-1.0, &s.dtmp);
+        s.dbh.scale(-1.0 / batch);
+        self.hbias.grad.add_assign(&s.dbh);
 
-        // Reconstruction error (mean squared).
-        let mut diff = v0m.clone();
-        diff.axpy(-1.0, &vk);
-        let err = diff.data().iter().map(|x| x * x).sum::<f32>() / batch;
+        // Reconstruction error (mean squared), computed pairwise.
+        let err = v0
+            .data()
+            .iter()
+            .zip(s.vk.data())
+            .map(|(&x, &y)| {
+                let d = x - y;
+                d * d
+            })
+            .sum::<f32>()
+            / batch;
         self.last_loss = err;
         err
     }
@@ -155,11 +224,7 @@ impl Layer for RbmLayer {
 
     fn compute_feature(&mut self, _phase: Phase, srcs: &[&Blob], out: &mut Blob) {
         // prop_up written into the workspace slot, activation in place.
-        let v = srcs[0];
-        out.resize(&[v.rows(), self.hidden]);
-        ops::matmul_into(v, &self.weight.data, out, 0.0);
-        ops::add_row_vec(out, &self.hbias.data);
-        ops::sigmoid_inplace(out);
+        prop_up_into(&self.weight.data, &self.hbias.data, srcs[0], out);
     }
 
     fn compute_gradient(
@@ -309,6 +374,72 @@ mod tests {
         assert!(
             l.free_energy(&pattern) < l.free_energy(&anti),
             "trained pattern should have lower free energy"
+        );
+    }
+
+    /// The scratch-buffer CD step must match the historical allocating
+    /// implementation bit-for-bit: a twin layer (same name → same RNG
+    /// stream, same init) driven through the old per-step recipe with the
+    /// public allocating helpers produces identical gradients and error.
+    #[test]
+    fn cd_step_matches_allocating_reference_bitwise() {
+        let mut fused = setup_rbm(6, 5);
+        let mut twin = setup_rbm(6, 5);
+        let mut rng = Rng::new(31);
+        for step in 0..3 {
+            let v0 = Blob::from_vec(&[4, 6], rng.uniform_vec(24, 0.0, 1.0));
+            let batch = v0.rows() as f32;
+            let err_fused = fused.cd_step(&v0, 1);
+
+            // Old two-phase recipe, allocating blobs at every stage.
+            let h0 = twin.prop_up(&v0);
+            let hk = twin.sample(&h0);
+            let vk = twin.prop_down(&hk);
+            let hk_prob = twin.prop_up(&vk);
+            let mut dw = ops::matmul_tn(&v0, &h0);
+            dw.axpy(-1.0, &ops::matmul_tn(&vk, &hk_prob));
+            dw.scale(-1.0 / batch);
+            twin.weight.grad.add_assign(&dw);
+            let mut dbv = ops::sum_rows(&v0);
+            dbv.axpy(-1.0, &ops::sum_rows(&vk));
+            dbv.scale(-1.0 / batch);
+            twin.vbias.grad.add_assign(&dbv);
+            let mut dbh = ops::sum_rows(&h0);
+            dbh.axpy(-1.0, &ops::sum_rows(&hk_prob));
+            dbh.scale(-1.0 / batch);
+            twin.hbias.grad.add_assign(&dbh);
+            let mut diff = v0.clone();
+            diff.axpy(-1.0, &vk);
+            let err_ref = diff.data().iter().map(|x| x * x).sum::<f32>() / batch;
+
+            assert_eq!(err_fused, err_ref, "step {step}: reconstruction error");
+            assert_eq!(fused.weight.grad.data(), twin.weight.grad.data(), "step {step}: dW");
+            assert_eq!(fused.vbias.grad.data(), twin.vbias.grad.data(), "step {step}: dbv");
+            assert_eq!(fused.hbias.grad.data(), twin.hbias.grad.data(), "step {step}: dbh");
+        }
+    }
+
+    /// THE zero-alloc CD acceptance probe: after warm-up sizes the layer's
+    /// scratch, a CD-k Gibbs step allocates zero blobs (and zero gemm pack
+    /// scratch).
+    #[test]
+    fn cd_step_is_allocation_free_after_warmup() {
+        let mut l = setup_rbm(8, 16);
+        let mut rng = Rng::new(12);
+        let v = Blob::from_vec(&[16, 8], rng.uniform_vec(128, 0.0, 1.0));
+        for _ in 0..2 {
+            l.cd_step(&v, 2);
+        }
+        let blobs = Blob::alloc_count();
+        let packs = crate::tensor::gemm::pack_alloc_count();
+        for _ in 0..5 {
+            l.cd_step(&v, 2);
+        }
+        assert_eq!(Blob::alloc_count(), blobs, "steady-state CD must not allocate blobs");
+        assert_eq!(
+            crate::tensor::gemm::pack_alloc_count(),
+            packs,
+            "steady-state CD must not allocate gemm pack scratch"
         );
     }
 

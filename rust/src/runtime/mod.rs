@@ -14,6 +14,64 @@ pub mod device;
 pub mod manifest;
 pub mod xla_job;
 
+use std::sync::OnceLock;
+
+/// Number of intra-op worker threads for the native backend's compute
+/// kernels (today: the tiled GEMM in [`crate::tensor::gemm`]).
+///
+/// Resolved once per process from the `PALLAS_NUM_THREADS` environment
+/// variable; unset means "use all available parallelism". `1` selects the
+/// exact serial code path (no worker threads are spawned). The knob only
+/// affects *speed*: the parallel kernels are bit-for-bit identical to
+/// serial for every thread count, so changing it never changes results.
+pub fn threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| threads_from(std::env::var("PALLAS_NUM_THREADS").ok().as_deref()))
+}
+
+/// Pure resolution of the `PALLAS_NUM_THREADS` policy (split out so tests
+/// can exercise parsing without mutating process environment):
+/// * `None` (unset) → `std::thread::available_parallelism()`, min 1;
+/// * a positive integer (whitespace tolerated) → that count;
+/// * `0` or anything unparsable → 1 (predictable serial fallback).
+pub fn threads_from(env: Option<&str>) -> usize {
+    match env {
+        Some(s) => s.trim().parse::<usize>().ok().filter(|&n| n >= 1).unwrap_or(1),
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+#[cfg(test)]
+mod thread_knob_tests {
+    use super::*;
+
+    #[test]
+    fn explicit_counts_parse() {
+        assert_eq!(threads_from(Some("4")), 4);
+        assert_eq!(threads_from(Some(" 7 ")), 7);
+        assert_eq!(threads_from(Some("1")), 1);
+    }
+
+    #[test]
+    fn zero_and_garbage_fall_back_to_serial() {
+        assert_eq!(threads_from(Some("0")), 1);
+        assert_eq!(threads_from(Some("")), 1);
+        assert_eq!(threads_from(Some("lots")), 1);
+        assert_eq!(threads_from(Some("-3")), 1);
+    }
+
+    #[test]
+    fn unset_uses_available_parallelism() {
+        assert!(threads_from(None) >= 1);
+    }
+
+    #[test]
+    fn cached_getter_is_stable_and_positive() {
+        assert!(threads() >= 1);
+        assert_eq!(threads(), threads());
+    }
+}
+
 #[cfg(feature = "xla-backend")]
 use crate::tensor::Blob;
 #[cfg(feature = "xla-backend")]

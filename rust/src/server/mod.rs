@@ -265,6 +265,28 @@ mod tests {
         assert!(max / min.max(1.0) < 2.0, "unbalanced shards: {loads:?}");
     }
 
+    /// Server-side updates with weight decay enabled cost exactly the same
+    /// blob allocations as without (the decayed gradient is no longer
+    /// materialized — it is folded into the fused updater loops).
+    #[test]
+    fn decayed_server_update_allocates_no_extra_blobs() {
+        let per_update = |conf: UpdaterConf| {
+            let g = ServerGroup::new(1, conf, Arc::new(ByteLedger::new()));
+            g.put("w", Blob::full(&[64], 1.0), 1.0, 1.0);
+            let grad = Blob::full(&[64], 0.1);
+            g.update("w", &grad, 0); // warm
+            let before = Blob::alloc_count();
+            g.update("w", &grad, 1);
+            Blob::alloc_count() - before
+        };
+        let plain = per_update(UpdaterConf::sgd(0.1));
+        let decayed = per_update(UpdaterConf::sgd(0.1).with_weight_decay(0.01));
+        assert_eq!(
+            plain, decayed,
+            "decay must not add allocations (plain {plain}, decayed {decayed})"
+        );
+    }
+
     #[test]
     fn versions_monotonic() {
         let g = group(1);

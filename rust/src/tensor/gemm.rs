@@ -2,8 +2,32 @@
 //! backend. `C = alpha * op(A) @ op(B) + beta * C` with row-major storage.
 //!
 //! The kernel packs the operands into cache-friendly tiles and accumulates
-//! with 4-wide column unrolling, which the compiler auto-vectorizes. The
+//! with 2-row register blocking, which the compiler auto-vectorizes. The
 //! perf pass (EXPERIMENTS.md §Perf) records the blocking iterations.
+//!
+//! # Intra-op parallelism
+//!
+//! [`gemm`] splits the MC-block (row-stripe) loop across
+//! `std::thread::scope` workers, each owning a disjoint row stripe of `C`
+//! (so writes need no synchronization) while sharing the packed B panel
+//! read-only per `(kk, jj)` tile. The stripe partition reuses
+//! [`Blob::split_range`] over whole MC blocks, so every row of `C` is
+//! produced by exactly the same sequence of float operations as the serial
+//! path — the output is **bit-for-bit identical for every thread count**
+//! (pinned by property tests in `tests/properties.rs`). The thread count
+//! comes from [`crate::runtime::threads()`] (`PALLAS_NUM_THREADS`); 1 runs
+//! the historical serial loop on the caller thread, spawning nothing.
+//!
+//! # Pack scratch
+//!
+//! The per-call `a_pack`/`b_pack` tile buffers live in a thread-local pool
+//! owned by the *calling* thread (workers borrow caller-owned buffers), so
+//! steady-state gemm calls perform zero pack allocations after the first
+//! call warms the pool — the counter behind [`pack_alloc_count`] mirrors
+//! the Blob allocation counter one level below the Blob layer.
+
+use super::blob::Blob;
+use std::cell::{Cell, RefCell};
 
 /// Whether an operand is logically transposed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -12,10 +36,57 @@ pub enum Transpose {
     Yes,
 }
 
+// Pack op(A) row-major (m x k) and op(B) row-major (k x n) tile by tile.
+// Tiles sized to keep the working set (~MC*KC + KC*NC floats) in L2.
+const MC: usize = 64;
+const KC: usize = 256;
+const NC: usize = 256;
+
+/// Every pool buffer is sized for the largest tile (the KC x NC B panel) so
+/// the pool can hand any buffer to any role without reallocating.
+const PACK_LEN: usize = KC * NC;
+const _: () = assert!(MC * KC <= PACK_LEN, "A tile must fit in a pool buffer");
+
+thread_local! {
+    /// Reusable pack buffers owned by this thread; buffer 0 serves the B
+    /// panel, the rest serve per-worker A tiles.
+    static PACK_POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+    /// Pack-buffer allocations made on behalf of this thread's gemm calls
+    /// (pool growth only). The alloc probe diffs this across steady-state
+    /// training steps, exactly like `Blob::alloc_count`.
+    static PACK_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Pack-scratch allocations charged to the current thread so far. Workers
+/// borrow caller-owned buffers, so a parallel gemm's allocations are all
+/// visible on the calling thread's counter.
+pub fn pack_alloc_count() -> u64 {
+    PACK_ALLOCS.with(|c| c.get())
+}
+
+/// Move the thread-local pool out, grown to at least `min_bufs` buffers
+/// (growth is the only pack allocation and is counted).
+fn take_pool(min_bufs: usize) -> Vec<Vec<f32>> {
+    let mut pool = PACK_POOL.with(|p| std::mem::take(&mut *p.borrow_mut()));
+    while pool.len() < min_bufs {
+        PACK_ALLOCS.with(|c| c.set(c.get() + 1));
+        pool.push(vec![0.0f32; PACK_LEN]);
+    }
+    pool
+}
+
+/// Return the pool for the next call on this thread.
+fn give_pool(pool: Vec<Vec<f32>>) {
+    PACK_POOL.with(|p| *p.borrow_mut() = pool);
+}
+
 /// `C[m,n] = alpha * op(A)[m,k] @ op(B)[k,n] + beta * C[m,n]`.
 ///
 /// `a` is `m x k` when `ta == No`, else `k x m` (and similarly for `b`).
-/// All matrices are dense row-major slices.
+/// All matrices are dense row-major slices. Runs on
+/// [`crate::runtime::threads()`] intra-op workers; see
+/// [`gemm_with_threads`] for the determinism contract.
+#[allow(clippy::too_many_arguments)]
 pub fn gemm(
     ta: Transpose,
     tb: Transpose,
@@ -27,6 +98,31 @@ pub fn gemm(
     b: &[f32],
     beta: f32,
     c: &mut [f32],
+) {
+    gemm_with_threads(ta, tb, m, n, k, alpha, a, b, beta, c, crate::runtime::threads());
+}
+
+/// [`gemm`] with an explicit worker count.
+///
+/// `threads == 1` is exactly the historical serial code path (no spawns).
+/// Any other count splits whole MC row blocks across scoped workers with
+/// [`Blob::split_range`]; because every `C` row still sees the identical
+/// per-element operation sequence (same blocks, same `kk` panel order, same
+/// kernel), the result is bit-for-bit identical to the serial path for
+/// every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with_threads(
+    ta: Transpose,
+    tb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+    threads: usize,
 ) {
     assert_eq!(a.len(), m * k, "A size");
     assert_eq!(b.len(), k * n, "B size");
@@ -41,14 +137,13 @@ pub fn gemm(
         return;
     }
 
-    // Pack op(A) row-major (m x k) and op(B) row-major (k x n) tile by tile.
-    // Tiles sized to keep the working set (~MC*KC + KC*NC floats) in L2.
-    const MC: usize = 64;
-    const KC: usize = 256;
-    const NC: usize = 256;
+    let mc_blocks = (m + MC - 1) / MC;
+    let t = threads.max(1).min(mc_blocks);
 
-    let mut a_pack = vec![0.0f32; MC * KC];
-    let mut b_pack = vec![0.0f32; KC * NC];
+    // Buffer 0 is the shared B panel; buffers 1..=t are per-worker A tiles.
+    let mut bufs = take_pool(t + 1);
+    let (b_slot, a_slots) = bufs.split_at_mut(1);
+    let b_pack = &mut b_slot[0];
 
     let mut kk = 0;
     while kk < k {
@@ -56,18 +151,63 @@ pub fn gemm(
         let mut jj = 0;
         while jj < n {
             let nb = NC.min(n - jj);
-            pack_b(tb, b, k, n, kk, jj, kb, nb, &mut b_pack);
-            let mut ii = 0;
-            while ii < m {
-                let mb = MC.min(m - ii);
-                pack_a(ta, a, m, k, ii, kk, mb, kb, &mut a_pack);
-                kernel(mb, nb, kb, alpha, &a_pack, &b_pack, &mut c[ii * n + jj..], n, NC);
-                ii += mb;
+            pack_b(tb, b, k, n, kk, jj, kb, nb, &mut b_pack[..]);
+            if t == 1 {
+                // Serial path: identical iteration order to the historical
+                // single-threaded kernel, run on the caller thread.
+                let a_pack = &mut a_slots[0];
+                let mut ii = 0;
+                while ii < m {
+                    let mb = MC.min(m - ii);
+                    pack_a(ta, a, m, k, ii, kk, mb, kb, &mut a_pack[..]);
+                    kernel(mb, nb, kb, alpha, &a_pack[..], &b_pack[..], &mut c[ii * n + jj..], n, NC);
+                    ii += mb;
+                }
+            } else {
+                // Parallel path: contiguous runs of whole MC blocks per
+                // worker, so stripe-local blocks coincide with the serial
+                // blocks and C stripes are disjoint row ranges.
+                let b_panel: &[f32] = &b_pack[..];
+                std::thread::scope(|s| {
+                    let mut rest: &mut [f32] = &mut c[..];
+                    let mut next_row = 0usize;
+                    let mut slots = a_slots.iter_mut();
+                    for tid in 0..t {
+                        let (bs, bc) = Blob::split_range(mc_blocks, t, tid);
+                        let rstart = bs * MC;
+                        let rcount = ((bs + bc) * MC).min(m) - rstart;
+                        debug_assert_eq!(rstart, next_row, "stripes must be contiguous");
+                        next_row += rcount;
+                        let (stripe, tail) = rest.split_at_mut(rcount * n);
+                        rest = tail;
+                        let a_pack = slots.next().expect("one A slot per worker");
+                        s.spawn(move || {
+                            let mut ii = 0;
+                            while ii < rcount {
+                                let mb = MC.min(rcount - ii);
+                                pack_a(ta, a, m, k, rstart + ii, kk, mb, kb, &mut a_pack[..]);
+                                kernel(
+                                    mb,
+                                    nb,
+                                    kb,
+                                    alpha,
+                                    &a_pack[..],
+                                    b_panel,
+                                    &mut stripe[ii * n + jj..],
+                                    n,
+                                    NC,
+                                );
+                                ii += mb;
+                            }
+                        });
+                    }
+                });
             }
             jj += nb;
         }
         kk += kb;
     }
+    give_pool(bufs);
 }
 
 /// Pack a `mb x kb` tile of op(A) starting at (ii, kk) into row-major.
@@ -343,6 +483,99 @@ mod tests {
             gemm(Transpose::No, Transpose::No, m, n, k, 1.0, &a, &b, 0.25, &mut c);
             assert!(c.iter().all(|&v| v == 1.0), "(m,n,k)=({m},{n},{k}): {c:?}");
         }
+    }
+
+    /// Thread counts {2, 4, 7} must produce output `==`-identical to the
+    /// serial path on sizes that straddle every block boundary (the full
+    /// random-matrix determinism sweep lives in `tests/properties.rs`).
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let mut rng = crate::utils::rng::Rng::new(0xdead);
+        for &(m, n, k) in &[
+            (65usize, 257usize, 300usize),
+            (129, 64, 257),
+            (191, 31, 511),
+            (256, 40, 70),
+            (64, 5, 5),
+            (1, 1, 1),
+        ] {
+            let a = rng.uniform_vec(m * k, -1.0, 1.0);
+            let b = rng.uniform_vec(k * n, -1.0, 1.0);
+            let c0 = rng.uniform_vec(m * n, -1.0, 1.0);
+            for &(alpha, beta) in &[(1.0f32, 0.0f32), (2.5, -0.5), (-1.0, 1.0)] {
+                let mut serial = c0.clone();
+                gemm_with_threads(
+                    Transpose::No, Transpose::No, m, n, k, alpha, &a, &b, beta, &mut serial, 1,
+                );
+                for &t in &[2usize, 4, 7] {
+                    let mut par = c0.clone();
+                    gemm_with_threads(
+                        Transpose::No, Transpose::No, m, n, k, alpha, &a, &b, beta, &mut par, t,
+                    );
+                    assert!(
+                        par == serial,
+                        "threads={t} differs from serial (m={m} n={n} k={k} alpha={alpha} beta={beta})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Degenerate dims and alpha == 0 short-circuit identically under any
+    /// thread count (the early-outs run before any worker is spawned).
+    #[test]
+    fn parallel_degenerate_dims_apply_beta_only() {
+        for &t in &[1usize, 2, 7] {
+            for &(m, n, k) in &[(0usize, 3usize, 2usize), (3, 0, 2), (3, 3, 0), (0, 0, 5)] {
+                let a = vec![1.0f32; m * k];
+                let b = vec![1.0f32; k * n];
+                let mut c = vec![4.0f32; m * n];
+                gemm_with_threads(Transpose::No, Transpose::No, m, n, k, 1.0, &a, &b, 0.25, &mut c, t);
+                assert!(c.iter().all(|&v| v == 1.0), "t={t} (m,n,k)=({m},{n},{k}): {c:?}");
+            }
+            let a = [f32::NAN; 4];
+            let b = [f32::INFINITY; 4];
+            let mut c = vec![3.0f32; 4];
+            gemm_with_threads(Transpose::No, Transpose::No, 2, 2, 2, 0.0, &a, &b, 1.0, &mut c, t);
+            assert_eq!(c, [3.0; 4], "t={t}: alpha=0 must not touch A/B");
+        }
+    }
+
+    /// The pack pool settles after warm-up: steady-state gemm calls (serial
+    /// and parallel, mixed sizes) perform zero pack allocations on this
+    /// thread, and shrinking the thread count never re-allocates.
+    #[test]
+    fn pack_scratch_settles_after_warmup() {
+        let mut rng = crate::utils::rng::Rng::new(0xf00d);
+        let n = 100;
+        let a = rng.uniform_vec(n * n, -1.0, 1.0);
+        let b = rng.uniform_vec(n * n, -1.0, 1.0);
+        let mut c = vec![0.0f32; n * n];
+        // Warm up at the largest thread count used below.
+        gemm_with_threads(Transpose::No, Transpose::No, n, n, n, 1.0, &a, &b, 0.0, &mut c, 4);
+        let before = pack_alloc_count();
+        for &t in &[1usize, 2, 4, 1, 4] {
+            for &sz in &[16usize, 100] {
+                gemm_with_threads(
+                    Transpose::No,
+                    Transpose::No,
+                    sz,
+                    sz,
+                    sz,
+                    1.0,
+                    &a[..sz * sz],
+                    &b[..sz * sz],
+                    0.0,
+                    &mut c[..sz * sz],
+                    t,
+                );
+            }
+        }
+        assert_eq!(
+            pack_alloc_count(),
+            before,
+            "steady-state gemm must not allocate pack scratch"
+        );
     }
 
     /// Random alpha/beta (including 0, 1, negatives) and all transpose

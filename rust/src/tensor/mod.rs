@@ -6,7 +6,10 @@
 //! runs AOT-compiled XLA executables instead (see [`crate::runtime`]); the
 //! native path is the reference implementation, the engine for partitioning
 //! experiments with configuration-dependent shapes, and the baseline for
-//! the op-level-parallelism comparisons in Fig 18(a).
+//! the op-level-parallelism comparisons in Fig 18(a) — which it now backs
+//! with real intra-op parallelism: [`gemm`] fans out over
+//! [`crate::runtime::threads()`] scoped workers with bit-identical output
+//! at every thread count.
 
 pub mod blob;
 pub mod gemm;
@@ -14,4 +17,4 @@ pub mod ops;
 pub mod conv;
 
 pub use blob::Blob;
-pub use gemm::{gemm, Transpose};
+pub use gemm::{gemm, gemm_with_threads, Transpose};

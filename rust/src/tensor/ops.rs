@@ -11,6 +11,11 @@
 //! versions are thin wrappers over the `_into` forms and therefore produce
 //! bit-identical results. `beta` follows BLAS: `0.0` overwrites the
 //! destination, `1.0` accumulates into it.
+//!
+//! All matmul forms inherit [`gemm`]'s intra-op threading
+//! (`PALLAS_NUM_THREADS`, see [`crate::runtime::threads`]) and its
+//! determinism guarantee: layer outputs are bit-for-bit identical at every
+//! thread count, so training trajectories never depend on the knob.
 
 use super::blob::Blob;
 use super::gemm::{gemm, Transpose};

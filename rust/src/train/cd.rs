@@ -146,6 +146,37 @@ mod tests {
         assert!(last2 < first2, "stage-2 reconstruction should improve");
     }
 
+    /// End-to-end CD training step (input ref + forward + CD-k + SGD) is
+    /// blob-allocation-free at steady state, matching the BP path's
+    /// planned-executor contract (ROADMAP "zero-alloc CD path").
+    #[test]
+    fn cd_train_one_batch_is_allocation_free_after_warmup() {
+        let mut net = rbm_net(16, 8, 12, 6);
+        let mut rng = Rng::new(8);
+        let mut inputs = HashMap::new();
+        inputs.insert("data".to_string(), batch_patterns(&mut rng, 16));
+        let mut alg = Cd::new(1);
+        let mut step = |net: &mut NeuralNet, alg: &mut Cd| {
+            net.zero_grads();
+            alg.train_one_batch(net, &inputs);
+            for p in net.params_mut() {
+                p.sgd_step(0.05);
+            }
+        };
+        for _ in 0..2 {
+            step(&mut net, &mut alg);
+        }
+        let before = Blob::alloc_count();
+        for _ in 0..4 {
+            step(&mut net, &mut alg);
+        }
+        assert_eq!(
+            Blob::alloc_count(),
+            before,
+            "steady-state CD training must not allocate blobs"
+        );
+    }
+
     #[test]
     fn cd_all_mode_reports_every_rbm() {
         let mut net = rbm_net(4, 8, 6, 4);

@@ -108,6 +108,13 @@ impl Updater {
     /// Apply one update: `value -= f(grad)` where `f` depends on the
     /// algorithm. `lr_mult`/`wd_mult` come from the `Param` metadata; `step`
     /// is the global iteration for the LR schedule.
+    ///
+    /// L2 weight decay is folded into every fused loop below
+    /// (`g = grad + wd * value`, each element reading its own pre-update
+    /// value), so servers never materialize a decayed-gradient blob. Because
+    /// elements are independent, this is bit-identical to the historical
+    /// two-pass `grad.clone()` + `axpy` formulation (pinned by
+    /// `fused_weight_decay_matches_two_pass_reference_bitwise`).
     pub fn update(
         &mut self,
         name: &str,
@@ -120,30 +127,29 @@ impl Updater {
         assert_eq!(value.shape(), grad.shape(), "updater shape mismatch for {name}");
         let lr = self.conf.schedule.at(self.conf.lr, step) * lr_mult;
         let wd = self.conf.weight_decay * wd_mult;
-        // Effective gradient with L2 decay — only materialized when decay
-        // is actually on; the common wd == 0 path borrows `grad` directly.
-        let decayed;
-        let g: &Blob = if wd != 0.0 {
-            let mut d = grad.clone();
-            d.axpy(wd, value);
-            decayed = d;
-            &decayed
-        } else {
-            grad
-        };
+        // The wd == 0 guard below (in every loop) is not just an optimization:
+        // it keeps the decay-off path using `gi` untouched, exactly like the
+        // historical code — `gi + 0.0 * w` would turn a non-finite weight
+        // into a NaN gradient and poison the state buffers.
         match self.conf.algo {
             Algo::Sgd { momentum } => {
                 if momentum == 0.0 {
-                    value.axpy(-lr, g);
+                    for (w, &gi) in value.data_mut().iter_mut().zip(grad.data()) {
+                        let g = if wd != 0.0 { gi + wd * *w } else { gi };
+                        *w += -lr * g;
+                    }
                 } else {
                     let buf = self
                         .state
                         .entry(name.to_string())
                         .or_insert_with(|| Blob::zeros(value.shape()));
                     // v = mu*v + g ; w -= lr*v
-                    buf.scale(momentum);
-                    buf.add_assign(g);
-                    value.axpy(-lr, buf);
+                    for ((v, w), &gi) in buf.data_mut().iter_mut().zip(value.data_mut()).zip(grad.data())
+                    {
+                        let g = if wd != 0.0 { gi + wd * *w } else { gi };
+                        *v = momentum * *v + g;
+                        *w += -lr * *v;
+                    }
                 }
             }
             Algo::AdaGrad { eps } => {
@@ -151,10 +157,11 @@ impl Updater {
                     .state
                     .entry(name.to_string())
                     .or_insert_with(|| Blob::zeros(value.shape()));
-                for ((h, w), gi) in hist.data_mut().iter_mut().zip(value.data_mut()).zip(g.data())
+                for ((h, w), &gi) in hist.data_mut().iter_mut().zip(value.data_mut()).zip(grad.data())
                 {
-                    *h += gi * gi;
-                    *w -= lr * gi / (h.sqrt() + eps);
+                    let g = if wd != 0.0 { gi + wd * *w } else { gi };
+                    *h += g * g;
+                    *w -= lr * g / (h.sqrt() + eps);
                 }
             }
             Algo::Nesterov { momentum } => {
@@ -164,9 +171,10 @@ impl Updater {
                     .or_insert_with(|| Blob::zeros(value.shape()));
                 // v' = mu*v - lr*g ; w += -mu*v + (1+mu)*v', fused
                 // elementwise so no copy of the previous velocity is kept.
-                for ((w, v), gi) in value.data_mut().iter_mut().zip(buf.data_mut()).zip(g.data())
+                for ((w, v), &gi) in value.data_mut().iter_mut().zip(buf.data_mut()).zip(grad.data())
                 {
-                    let vnew = momentum * *v - lr * gi;
+                    let g = if wd != 0.0 { gi + wd * *w } else { gi };
+                    let vnew = momentum * *v - lr * g;
                     *w += -momentum * *v + (1.0 + momentum) * vnew;
                     *v = vnew;
                 }
@@ -176,10 +184,11 @@ impl Updater {
                     .state
                     .entry(name.to_string())
                     .or_insert_with(|| Blob::zeros(value.shape()));
-                for ((h, w), gi) in hist.data_mut().iter_mut().zip(value.data_mut()).zip(g.data())
+                for ((h, w), &gi) in hist.data_mut().iter_mut().zip(value.data_mut()).zip(grad.data())
                 {
-                    *h = decay * *h + (1.0 - decay) * gi * gi;
-                    *w -= lr * gi / (h.sqrt() + eps);
+                    let g = if wd != 0.0 { gi + wd * *w } else { gi };
+                    *h = decay * *h + (1.0 - decay) * g * g;
+                    *w -= lr * g / (h.sqrt() + eps);
                 }
             }
         }
@@ -239,6 +248,80 @@ mod tests {
     #[test]
     fn rmsprop_converges() {
         assert!(quadratic_descent(UpdaterConf::rmsprop(0.05), 300) < 0.1);
+    }
+
+    /// The fused decay loops must reproduce the historical two-pass
+    /// formulation (clone the gradient, `axpy` the decay term, update with
+    /// decay off) bit-for-bit, for every algorithm and across steps that
+    /// exercise the stateful buffers.
+    #[test]
+    fn fused_weight_decay_matches_two_pass_reference_bitwise() {
+        use crate::utils::rng::Rng;
+        let confs = [
+            UpdaterConf::sgd(0.07),
+            UpdaterConf::sgd_momentum(0.05, 0.9),
+            UpdaterConf::adagrad(0.1),
+            UpdaterConf::nesterov(0.04, 0.8),
+            UpdaterConf::rmsprop(0.03),
+        ];
+        for base in confs {
+            let wd = 0.3f32;
+            let wd_mult = 0.7f32;
+            let mut fused = Updater::new(base.clone().with_weight_decay(wd));
+            let mut twopass = Updater::new(base.clone()); // decay handled manually
+            let mut rng = Rng::new(11);
+            let mut wf = Blob::from_vec(&[6], rng.uniform_vec(6, -1.0, 1.0));
+            let mut wt = wf.clone();
+            for step in 0..5u64 {
+                let g = Blob::from_vec(&[6], rng.uniform_vec(6, -0.5, 0.5));
+                fused.update("p", &mut wf, &g, 1.3, wd_mult, step);
+                let mut d = g.clone();
+                d.axpy(wd * wd_mult, &wt);
+                twopass.update("p", &mut wt, &d, 1.3, 1.0, step);
+                assert_eq!(wf.data(), wt.data(), "{:?} step {step}", base.algo);
+            }
+        }
+    }
+
+    /// With decay off, the gradient must be used untouched: `gi + 0.0 * w`
+    /// would turn a non-finite weight into a NaN update and poison the
+    /// momentum/history state (a diverged weight should stay inf, which is
+    /// diagnosable).
+    #[test]
+    fn decay_off_never_touches_nonfinite_weights() {
+        for conf in [
+            UpdaterConf::sgd(0.1),
+            UpdaterConf::sgd_momentum(0.1, 0.9),
+            UpdaterConf::adagrad(0.1),
+            UpdaterConf::nesterov(0.1, 0.9),
+            UpdaterConf::rmsprop(0.1),
+        ] {
+            let mut u = Updater::new(conf);
+            let mut w = Blob::from_vec(&[2], vec![f32::INFINITY, 1.0]);
+            let g = Blob::zeros(&[2]);
+            u.update("w", &mut w, &g, 1.0, 1.0, 0);
+            assert!(w.data()[0].is_infinite(), "diverged weight must stay inf, not NaN");
+            assert!(w.data()[1].is_finite());
+        }
+    }
+
+    /// Decay no longer allocates: an update with weight decay enabled makes
+    /// exactly as many blob allocations as one without.
+    #[test]
+    fn decayed_update_allocates_no_extra_blobs() {
+        let measure = |conf: UpdaterConf| {
+            let mut u = Updater::new(conf);
+            let mut w = Blob::full(&[32], 1.0);
+            let g = Blob::full(&[32], 0.1);
+            u.update("w", &mut w, &g, 1.0, 1.0, 0); // warm (sizes any state)
+            let before = Blob::alloc_count();
+            u.update("w", &mut w, &g, 1.0, 1.0, 1);
+            Blob::alloc_count() - before
+        };
+        let plain = measure(UpdaterConf::sgd_momentum(0.1, 0.9));
+        let decayed = measure(UpdaterConf::sgd_momentum(0.1, 0.9).with_weight_decay(0.01));
+        assert_eq!(plain, 0, "steady-state update must not allocate");
+        assert_eq!(decayed, 0, "decayed update must not allocate either");
     }
 
     #[test]

@@ -8,7 +8,7 @@ use singa::data::{DataSource, SyntheticDigits, SyntheticImages};
 use singa::model::layer::{Activation, LayerConf, LayerKind};
 use singa::model::partition::partition_net;
 use singa::model::{NetBuilder, Phase};
-use singa::tensor::{ops, Blob};
+use singa::tensor::{gemm_with_threads, ops, Blob, Transpose};
 use singa::updater::UpdaterConf;
 use singa::utils::rng::Rng;
 use std::sync::Arc;
@@ -112,6 +112,71 @@ fn downpour_matches_sync_final_accuracy() {
     let async_acc = run(ClusterTopology::downpour(4, 1, 1), 80);
     assert!(sync_acc > 0.9, "sync {sync_acc}");
     assert!(async_acc > 0.8, "async {async_acc}");
+}
+
+/// A full MLP training step (the satellite acceptance probe for the pack
+/// scratch): after two warm-up steps, further steps — including every gemm
+/// the forward/backward passes issue at whatever `PALLAS_NUM_THREADS` the
+/// process was launched with (CI runs this suite under both `=1` and `=4`)
+/// — perform zero blob allocations and zero gemm pack allocations.
+#[test]
+fn mlp_train_step_allocates_nothing_after_warmup() {
+    use singa::train::{bp::Bp, TrainOneBatch};
+    let mut net = mlp(32, 256, 128, 10).build(&mut Rng::new(7));
+    let data = SyntheticDigits::new(256, 10, 3);
+    let inputs = data.batch(1, 32);
+    let mut alg = Bp::new();
+    let mut step = |net: &mut singa::model::NeuralNet, alg: &mut Bp| {
+        net.zero_grads();
+        alg.train_one_batch(net, &inputs);
+        for p in net.params_mut() {
+            p.sgd_step(0.01);
+        }
+    };
+    for _ in 0..2 {
+        step(&mut net, &mut alg);
+    }
+    let blobs = Blob::alloc_count();
+    let packs = singa::tensor::gemm::pack_alloc_count();
+    for _ in 0..5 {
+        step(&mut net, &mut alg);
+    }
+    assert_eq!(Blob::alloc_count(), blobs, "train step must not allocate blobs");
+    assert_eq!(
+        singa::tensor::gemm::pack_alloc_count(),
+        packs,
+        "train step must not allocate gemm pack scratch"
+    );
+}
+
+/// Training-shaped GEMM sequences (fc forward, weight-grad, input-grad at
+/// batch 64, 512 features) are bit-identical between serial and 4-thread
+/// execution — the determinism contract at the shapes the executor emits.
+#[test]
+fn training_shaped_gemms_are_thread_count_invariant() {
+    let (batch, din, dout) = (64usize, 512usize, 512usize);
+    let mut rng = Rng::new(99);
+    let x = rng.uniform_vec(batch * din, -1.0, 1.0);
+    let w = rng.uniform_vec(din * dout, -0.1, 0.1);
+    let dy = rng.uniform_vec(batch * dout, -1.0, 1.0);
+    // forward: y = x @ w
+    let mut y1 = vec![0.0f32; batch * dout];
+    let mut y4 = y1.clone();
+    gemm_with_threads(Transpose::No, Transpose::No, batch, dout, din, 1.0, &x, &w, 0.0, &mut y1, 1);
+    gemm_with_threads(Transpose::No, Transpose::No, batch, dout, din, 1.0, &x, &w, 0.0, &mut y4, 4);
+    assert!(y1 == y4, "forward gemm differs across thread counts");
+    // weight grad (accumulating): dw += x^T @ dy
+    let mut dw1 = vec![0.01f32; din * dout];
+    let mut dw4 = dw1.clone();
+    gemm_with_threads(Transpose::Yes, Transpose::No, din, dout, batch, 1.0, &x, &dy, 1.0, &mut dw1, 1);
+    gemm_with_threads(Transpose::Yes, Transpose::No, din, dout, batch, 1.0, &x, &dy, 1.0, &mut dw4, 4);
+    assert!(dw1 == dw4, "weight-grad gemm differs across thread counts");
+    // input grad: dx = dy @ w^T
+    let mut dx1 = vec![0.0f32; batch * din];
+    let mut dx4 = dx1.clone();
+    gemm_with_threads(Transpose::No, Transpose::Yes, batch, din, dout, 1.0, &dy, &w, 0.0, &mut dx1, 1);
+    gemm_with_threads(Transpose::No, Transpose::Yes, batch, din, dout, 1.0, &dy, &w, 0.0, &mut dx4, 4);
+    assert!(dx1 == dx4, "input-grad gemm differs across thread counts");
 }
 
 /// Native backend vs XLA artifact: the same logical MLP forward/backward

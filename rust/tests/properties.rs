@@ -1,12 +1,14 @@
 //! Property tests over the partitioner and training stack: random model
 //! shapes × random partition assignments must always produce a runnable,
 //! gradient-complete net, and batch-dimension partitioning must preserve
-//! the full-batch loss exactly.
+//! the full-batch loss exactly — plus the intra-op parallel GEMM's
+//! determinism contract: every thread count yields bit-for-bit the serial
+//! result.
 
 use singa::model::layer::{Activation, LayerConf, LayerKind, Phase};
 use singa::model::partition::{logical_param_name, partition_net};
 use singa::model::NetBuilder;
-use singa::tensor::Blob;
+use singa::tensor::{gemm_with_threads, Blob, Transpose};
 use singa::utils::quickcheck::{forall, prop_assert, PropResult};
 use singa::utils::rng::Rng;
 
@@ -143,6 +145,79 @@ fn dim0_partitioning_preserves_mean_loss_for_random_models() {
             &format!("full {full} vs sharded mean {mean} (workers {workers}, batch {batch})"),
         )
     });
+}
+
+/// The tentpole determinism property: for random (m, n, k, alpha, beta,
+/// ta, tb), every thread count in {2, 4, 7} produces output `==`-identical
+/// (bit-for-bit, not `prop_close`) to the serial path.
+#[test]
+fn parallel_gemm_bit_identical_to_serial_for_random_shapes() {
+    forall(30, |g| {
+        let m = g.usize(1, 160); // up to 3 MC row blocks
+        let n = g.usize(1, 96);
+        let k = g.usize(1, 70);
+        let alpha = *g.choose(&[1.0f32, -1.0, 2.5, 0.0, 0.3]);
+        let beta = *g.choose(&[0.0f32, 1.0, -0.5, 2.0]);
+        let ta = if g.bool() { Transpose::Yes } else { Transpose::No };
+        let tb = if g.bool() { Transpose::Yes } else { Transpose::No };
+        let a = g.f32_vec(m * k, -1.0, 1.0);
+        let b = g.f32_vec(k * n, -1.0, 1.0);
+        let c0 = g.f32_vec(m * n, -1.0, 1.0);
+        let mut serial = c0.clone();
+        gemm_with_threads(ta, tb, m, n, k, alpha, &a, &b, beta, &mut serial, 1);
+        for &t in &[2usize, 4, 7] {
+            let mut par = c0.clone();
+            gemm_with_threads(ta, tb, m, n, k, alpha, &a, &b, beta, &mut par, t);
+            prop_assert(
+                par == serial,
+                &format!(
+                    "threads={t} differs from serial \
+                     (m={m} n={n} k={k} alpha={alpha} beta={beta} ta={ta:?} tb={tb:?})"
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Block-boundary-straddling and degenerate sizes, pinned explicitly:
+/// stripes that end mid-MC-block, panels that straddle KC/NC, empty dims.
+#[test]
+fn parallel_gemm_bit_identical_on_block_straddling_sizes() {
+    let cases = [
+        (65usize, 257usize, 40usize), // partial MC tail + NC straddle
+        (70, 130, 260),               // KC straddle with beta accumulate below
+        (129, 64, 257),               // 3rd stripe is a single row
+        (191, 31, 511),               // odd tail row exercises the 1-row kernel path
+        (256, 40, 70),                // 4 exact MC blocks
+        (1, 1, 1),
+        (64, 1, 1),
+        (3, 2, 0), // k = 0: pure beta scaling
+        (0, 4, 4), // m = 0: empty C
+        (5, 0, 9), // n = 0
+    ];
+    for &(m, n, k) in &cases {
+        let mut rng = Rng::new((m * 131 + n * 17 + k) as u64);
+        let a = rng.uniform_vec(m * k, -1.0, 1.0);
+        let b = rng.uniform_vec(k * n, -1.0, 1.0);
+        let c0 = rng.uniform_vec(m * n, -1.0, 1.0);
+        for &(alpha, beta) in &[(1.0f32, 0.0f32), (2.5, -0.5), (0.0, 2.0), (-1.0, 1.0)] {
+            let mut serial = c0.clone();
+            gemm_with_threads(
+                Transpose::No, Transpose::No, m, n, k, alpha, &a, &b, beta, &mut serial, 1,
+            );
+            for &t in &[2usize, 4, 7] {
+                let mut par = c0.clone();
+                gemm_with_threads(
+                    Transpose::No, Transpose::No, m, n, k, alpha, &a, &b, beta, &mut par, t,
+                );
+                assert_eq!(
+                    par, serial,
+                    "m={m} n={n} k={k} t={t} alpha={alpha} beta={beta}"
+                );
+            }
+        }
+    }
 }
 
 #[test]
