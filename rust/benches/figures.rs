@@ -51,14 +51,39 @@ fn emit_gemm_probe(check: bool) {
     }
 }
 
+/// Run the serial-vs-parallel conv/im2col scaling probe and write the
+/// `BENCH_conv.json` artifact at the repo root. Always asserts the
+/// determinism half of the contract (bit-identical outputs); throughput is
+/// recorded, not gated.
+fn emit_conv_probe() {
+    let threads = singa::runtime::threads();
+    let probes = singa::bench::conv_scaling_probe(threads, 1, 3);
+    let json = singa::bench::conv_probes_json(threads, &probes);
+    println!("==== conv/im2col scaling probe ({threads} threads) ====");
+    print!("{json}");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_conv.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    for p in &probes {
+        assert!(p.bit_identical, "{}: parallel conv output must equal serial", p.name);
+    }
+}
+
 fn main() {
     // `cargo bench --bench figures -- alloc` runs only the allocation probe;
-    // `-- gemm [check]` runs only the scaling probe (CI smoke adds `check`);
-    // no argument runs everything.
+    // `-- gemm [check]` runs only the gemm scaling probe (CI smoke adds
+    // `check`); `-- conv` runs only the conv/im2col scaling probe; no
+    // argument runs everything.
     let args: Vec<String> = std::env::args().collect();
     let has = |s: &str| args.iter().any(|a| a == s);
     if has("gemm") {
         emit_gemm_probe(has("check"));
+        return;
+    }
+    if has("conv") {
+        emit_conv_probe();
         return;
     }
     emit_alloc_probe();
@@ -66,6 +91,7 @@ fn main() {
         return;
     }
     emit_gemm_probe(false);
+    emit_conv_probe();
 
     println!("==== paper figures (quick mode) ====");
     let out = singa::bench::run_all(true);

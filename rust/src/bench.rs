@@ -93,6 +93,12 @@ pub struct AllocProbe {
     /// Pack-scratch allocations per step AFTER warm-up — the zero-alloc
     /// story one level below the Blob layer; must be 0.
     pub steady_pack_allocs_per_step: f64,
+    /// Executor-scratch allocations during warm-up (growth of the reused
+    /// src-ref lists, slot stores, and duplicate-source scratch).
+    pub warmup_exec_allocs: u64,
+    /// Executor-scratch allocations per step AFTER warm-up — the
+    /// micro-alloc story one level above the Blob layer; must be 0.
+    pub steady_exec_allocs_per_step: f64,
     /// Mean wall time per training step (ms) at steady state.
     pub step_ms: f64,
     pub steps: usize,
@@ -115,13 +121,16 @@ fn probe_training_loop(
     };
     let before_warm = Blob::alloc_count();
     let before_warm_pack = pack_alloc_count();
+    let before_warm_exec = crate::model::net::exec_scratch_alloc_count();
     for _ in 0..2 {
         run(&mut net, &mut alg);
     }
     let warmup_allocs = Blob::alloc_count() - before_warm;
     let warmup_pack_allocs = pack_alloc_count() - before_warm_pack;
+    let warmup_exec_allocs = crate::model::net::exec_scratch_alloc_count() - before_warm_exec;
     let before = Blob::alloc_count();
     let before_pack = pack_alloc_count();
+    let before_exec = crate::model::net::exec_scratch_alloc_count();
     let sw = Stopwatch::new();
     for _ in 0..steps {
         run(&mut net, &mut alg);
@@ -129,12 +138,15 @@ fn probe_training_loop(
     let step_ms = sw.elapsed_ms() / steps.max(1) as f64;
     let steady = Blob::alloc_count() - before;
     let steady_pack = pack_alloc_count() - before_pack;
+    let steady_exec = crate::model::net::exec_scratch_alloc_count() - before_exec;
     AllocProbe {
         model,
         warmup_allocs,
         steady_allocs_per_step: steady as f64 / steps.max(1) as f64,
         warmup_pack_allocs,
         steady_pack_allocs_per_step: steady_pack as f64 / steps.max(1) as f64,
+        warmup_exec_allocs,
+        steady_exec_allocs_per_step: steady_exec as f64 / steps.max(1) as f64,
         step_ms,
         steps,
     }
@@ -188,12 +200,15 @@ pub fn alloc_probe_json(steps: usize) -> String {
         s.push_str(&format!(
             "    {{\"model\": \"{}\", \"warmup_allocs\": {}, \
              \"steady_allocs_per_step\": {:.3}, \"warmup_pack_allocs\": {}, \
-             \"steady_pack_allocs_per_step\": {:.3}, \"step_ms\": {:.4}, \"steps\": {}}}{}\n",
+             \"steady_pack_allocs_per_step\": {:.3}, \"warmup_exec_allocs\": {}, \
+             \"steady_exec_allocs_per_step\": {:.3}, \"step_ms\": {:.4}, \"steps\": {}}}{}\n",
             p.model,
             p.warmup_allocs,
             p.steady_allocs_per_step,
             p.warmup_pack_allocs,
             p.steady_pack_allocs_per_step,
+            p.warmup_exec_allocs,
+            p.steady_exec_allocs_per_step,
             p.step_ms,
             p.steps,
             if i + 1 == probes.len() { "" } else { "," }
@@ -284,6 +299,138 @@ pub fn gemm_probes_json(threads: usize, probes: &[GemmProbe]) -> String {
             p.parallel_ms,
             p.parallel_gflops,
             p.speedup,
+            p.bit_identical,
+            if i + 1 == probes.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Conv/im2col intra-op scaling probe (the second pooled hot path)
+// ---------------------------------------------------------------------------
+
+/// Serial-vs-parallel throughput of one convolution workload: the raw
+/// im2col transform and the full batched conv2d forward (im2col + GEMM +
+/// bias), both required bit-identical across thread counts.
+#[derive(Debug, Clone)]
+pub struct ConvProbe {
+    pub name: &'static str,
+    /// Task count used for the parallel runs.
+    pub threads: usize,
+    pub im2col_serial_ms: f64,
+    pub im2col_parallel_ms: f64,
+    pub im2col_speedup: f64,
+    pub conv_serial_ms: f64,
+    pub conv_parallel_ms: f64,
+    pub conv_speedup: f64,
+    /// Whether BOTH parallel outputs were `==`-identical to serial (the
+    /// determinism guarantee; always expected true).
+    pub bit_identical: bool,
+}
+
+/// Measure im2col and conv2d forward serial vs `threads`-task parallel on
+/// convnet-shaped workloads. Best-of-`iters` timings, like the GEMM probe.
+pub fn conv_scaling_probe(threads: usize, warmup: usize, iters: usize) -> Vec<ConvProbe> {
+    use crate::tensor::conv::{
+        conv2d_forward_into_with_threads, im2col_with_threads, Conv2dGeom, ConvScratch,
+    };
+    let cases: [(&'static str, Conv2dGeom, usize, usize); 2] = [
+        (
+            "c16_32x32_k5_b16",
+            Conv2dGeom { in_c: 16, in_h: 32, in_w: 32, kernel: 5, stride: 1, pad: 2 },
+            16,
+            32,
+        ),
+        (
+            "c32_16x16_k3_b16",
+            Conv2dGeom { in_c: 32, in_h: 16, in_w: 16, kernel: 3, stride: 1, pad: 1 },
+            16,
+            64,
+        ),
+    ];
+    cases
+        .iter()
+        .map(|&(name, g, batch, out_c)| {
+            let mut rng = Rng::new(0xc07f_u64 ^ g.in_c as u64);
+            let img_len = g.in_c * g.in_h * g.in_w;
+            let img = rng.uniform_vec(img_len, -1.0, 1.0);
+            let (cr, cc) = (g.col_rows(), g.col_cols());
+            let mut col_serial = vec![0.0f32; cr * cc];
+            let mut col_par = vec![0.0f32; cr * cc];
+            im2col_with_threads(&img, &g, &mut col_serial, 1);
+            im2col_with_threads(&img, &g, &mut col_par, threads);
+            let mut bit_identical = col_serial == col_par;
+            let st_i2c_serial =
+                time_iters(warmup, iters, || im2col_with_threads(&img, &g, &mut col_serial, 1));
+            let st_i2c_par = time_iters(warmup, iters, || {
+                im2col_with_threads(&img, &g, &mut col_par, threads)
+            });
+
+            let input = Blob::from_vec(
+                &[batch, g.in_c, g.in_h, g.in_w],
+                rng.uniform_vec(batch * img_len, -1.0, 1.0),
+            );
+            let weight = Blob::from_vec(&[out_c, cr], rng.uniform_vec(out_c * cr, -0.5, 0.5));
+            let bias = Blob::from_vec(&[out_c], rng.uniform_vec(out_c, -0.1, 0.1));
+            let mut out_serial = Blob::default();
+            let mut out_par = Blob::default();
+            let mut cols = Vec::new();
+            let mut scratch = ConvScratch::new();
+            conv2d_forward_into_with_threads(
+                &input, &weight, &bias, &g, &mut out_serial, &mut cols, &mut scratch, 1,
+            );
+            conv2d_forward_into_with_threads(
+                &input, &weight, &bias, &g, &mut out_par, &mut cols, &mut scratch, threads,
+            );
+            bit_identical &= out_serial.data() == out_par.data();
+            let st_conv_serial = time_iters(warmup, iters, || {
+                conv2d_forward_into_with_threads(
+                    &input, &weight, &bias, &g, &mut out_serial, &mut cols, &mut scratch, 1,
+                )
+            });
+            let st_conv_par = time_iters(warmup, iters, || {
+                conv2d_forward_into_with_threads(
+                    &input, &weight, &bias, &g, &mut out_par, &mut cols, &mut scratch, threads,
+                )
+            });
+            let (i2c_s, i2c_p) = (st_i2c_serial.min(), st_i2c_par.min());
+            let (conv_s, conv_p) = (st_conv_serial.min(), st_conv_par.min());
+            ConvProbe {
+                name,
+                threads,
+                im2col_serial_ms: i2c_s,
+                im2col_parallel_ms: i2c_p,
+                im2col_speedup: i2c_s / i2c_p,
+                conv_serial_ms: conv_s,
+                conv_parallel_ms: conv_p,
+                conv_speedup: conv_s / conv_p,
+                bit_identical,
+            }
+        })
+        .collect()
+}
+
+/// Serialize probes as the `BENCH_conv.json` artifact emitted by
+/// `cargo bench --bench figures -- conv`.
+pub fn conv_probes_json(threads: usize, probes: &[ConvProbe]) -> String {
+    let mut s = format!(
+        "{{\n  \"probe\": \"conv_scaling\",\n  \"threads\": {threads},\n  \"cases\": [\n"
+    );
+    for (i, p) in probes.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"im2col_serial_ms\": {:.4}, \
+             \"im2col_parallel_ms\": {:.4}, \"im2col_speedup\": {:.3}, \
+             \"conv_serial_ms\": {:.4}, \"conv_parallel_ms\": {:.4}, \
+             \"conv_speedup\": {:.3}, \"bit_identical\": {}}}{}\n",
+            p.name,
+            p.im2col_serial_ms,
+            p.im2col_parallel_ms,
+            p.im2col_speedup,
+            p.conv_serial_ms,
+            p.conv_parallel_ms,
+            p.conv_speedup,
             p.bit_identical,
             if i + 1 == probes.len() { "" } else { "," }
         ));
@@ -952,6 +1099,11 @@ mod tests {
                 "{}: steady-state must not allocate gemm pack scratch (got {} allocs/step)",
                 p.model, p.steady_pack_allocs_per_step
             );
+            assert_eq!(
+                p.steady_exec_allocs_per_step, 0.0,
+                "{}: steady-state must not grow executor scratch (got {} allocs/step)",
+                p.model, p.steady_exec_allocs_per_step
+            );
             assert!(p.warmup_allocs > 0, "{}: warm-up sizes the workspace", p.model);
         }
     }
@@ -963,7 +1115,26 @@ mod tests {
         assert!(j.contains("\"mlp\""));
         assert!(j.contains("\"cifar_convnet\""));
         assert!(j.contains("\"steady_pack_allocs_per_step\""));
+        assert!(j.contains("\"steady_exec_allocs_per_step\""));
         // trivially parseable by the in-repo JSON reader
+        assert!(crate::utils::json::Json::parse(&j).is_ok());
+    }
+
+    /// The conv scaling probe's determinism flag must hold (parallel ==
+    /// serial exactly for both im2col and the full conv2d forward) and its
+    /// JSON artifact must parse. Speedup magnitude is machine-dependent and
+    /// only recorded.
+    #[test]
+    fn conv_probe_is_bit_identical_and_json_parses() {
+        let probes = conv_scaling_probe(4, 0, 1);
+        for p in &probes {
+            assert!(p.bit_identical, "{}: parallel must equal serial", p.name);
+            assert!(p.im2col_serial_ms > 0.0 && p.im2col_parallel_ms > 0.0, "{}", p.name);
+            assert!(p.conv_serial_ms > 0.0 && p.conv_parallel_ms > 0.0, "{}", p.name);
+        }
+        let j = conv_probes_json(4, &probes);
+        assert!(j.contains("\"conv_scaling\""));
+        assert!(j.contains("\"bit_identical\": true"));
         assert!(crate::utils::json::Json::parse(&j).is_ok());
     }
 

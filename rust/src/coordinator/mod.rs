@@ -108,6 +108,15 @@ pub fn run_job(conf: &JobConf, data: Arc<dyn DataSource>) -> JobReport {
     let topo = &conf.topology;
     let ledger = Arc::new(ByteLedger::new());
 
+    // Register this job's worker groups for intra-op thread budgeting
+    // BEFORE any group thread starts computing: while these guards live,
+    // the default (env-unset) `runtime::threads()` budget is divided by the
+    // active group count, so W groups × intra-op tasks never oversubscribe
+    // the machine. Budget changes never change results (the parallel
+    // kernels are bit-identical at every thread count).
+    let _intra_op_budget: Vec<crate::runtime::WorkerGroupGuard> =
+        (0..topo.nworker_groups).map(|_| crate::runtime::register_worker_group()).collect();
+
     // Build the (possibly partitioned) group-level net once to register
     // parameters, then per-group replicas in their threads.
     let (group_builder, _plan) = if conf.partition_within_group && topo.nworkers_per_group > 1 {
@@ -449,6 +458,114 @@ mod tests {
         assert!(recs.iter().filter(|r| r.group == 1).count() > 0);
         let last0 = recs.iter().filter(|r| r.group == 0).last().unwrap();
         assert!(last0.metric > 0.6, "hogwild group0 metric {}", last0.metric);
+    }
+
+    /// `DataSource` serving the same batch regardless of index (so worker
+    /// groups and a single-group baseline see identical data), recording
+    /// the largest intra-op budget any worker thread observed while the
+    /// job's group registration was active.
+    struct ConstantBatch {
+        inner: SyntheticDigits,
+        observed_threads: std::sync::atomic::AtomicUsize,
+    }
+
+    impl ConstantBatch {
+        fn new() -> ConstantBatch {
+            ConstantBatch {
+                inner: SyntheticDigits::new(64, 5, 77),
+                observed_threads: std::sync::atomic::AtomicUsize::new(0),
+            }
+        }
+    }
+
+    impl crate::data::DataSource for ConstantBatch {
+        fn input_names(&self) -> Vec<String> {
+            self.inner.input_names()
+        }
+
+        fn batch(&self, _index: u64, batch: usize) -> HashMap<String, Blob> {
+            let t = crate::runtime::threads();
+            self.observed_threads.fetch_max(t, std::sync::atomic::Ordering::Relaxed);
+            self.inner.batch(0, batch)
+        }
+    }
+
+    /// The oversubscription pin: a 2-worker-group job must (a) observe a
+    /// divided intra-op budget inside its worker threads — at most
+    /// cores/groups when `PALLAS_NUM_THREADS` is unset, exactly the
+    /// explicit value when it is set — and (b) train bit-identically to
+    /// the 1-group baseline: with per-group server groups, no group sync,
+    /// and index-independent data, each group's trajectory is the
+    /// baseline's, and no thread-budget change may perturb a single bit.
+    #[test]
+    fn two_worker_groups_divide_budget_and_match_single_group_bitwise() {
+        let run_with = |topology: ClusterTopology| {
+            let src = Arc::new(ConstantBatch::new());
+            let mut conf = JobConf::new("budget", digit_mlp(16, 64, 5));
+            conf.iters = 12;
+            conf.updater = UpdaterConf::sgd(0.2);
+            conf.topology = topology;
+            let data: Arc<dyn DataSource> = src.clone();
+            let report = run_job(&conf, data);
+            let observed =
+                src.observed_threads.load(std::sync::atomic::Ordering::Relaxed);
+            (report, observed)
+        };
+        let (base, _) = run_with(ClusterTopology::sandblaster(1, 1));
+        // hogwild(2, 1, 0): two async groups, each with its OWN server
+        // group and no neighbour sync → fully independent replicas.
+        let (multi, observed) = run_with(ClusterTopology::hogwild(2, 1, 0));
+
+        // (a) Budget: explicit env wins untouched; unset divides by >= 2
+        // groups (other tests may register more concurrently, which only
+        // shrinks the budget further — the bound stays valid).
+        assert!(observed >= 1, "worker threads must observe a budget");
+        match std::env::var("PALLAS_NUM_THREADS") {
+            Ok(v) => assert_eq!(
+                observed,
+                crate::runtime::threads_from(Some(&v)),
+                "explicit PALLAS_NUM_THREADS must not be divided by groups"
+            ),
+            Err(_) => assert!(
+                observed <= (crate::runtime::cores() / 2).max(1),
+                "2 groups must observe <= cores/2 threads, saw {observed}"
+            ),
+        }
+
+        // (b) Bit-identical trajectories: every group's logged loss/metric
+        // sequence equals the single-group baseline's, bit for bit.
+        let brecs = base.log.snapshot();
+        let mrecs = multi.log.snapshot();
+        for g in 0..2usize {
+            let grecs: Vec<_> = mrecs.iter().filter(|r| r.group == g).collect();
+            assert_eq!(grecs.len(), brecs.len(), "group {g} record count");
+            for (b, m) in brecs.iter().zip(&grecs) {
+                assert_eq!(b.step, m.step);
+                assert_eq!(
+                    b.loss.to_bits(),
+                    m.loss.to_bits(),
+                    "group {g} step {}: loss {} vs {}",
+                    b.step,
+                    b.loss,
+                    m.loss
+                );
+                assert_eq!(
+                    b.metric.to_bits(),
+                    m.metric.to_bits(),
+                    "group {g} step {}: metric diverged",
+                    b.step
+                );
+            }
+        }
+        // Final parameters (from server group 0) match bitwise too.
+        assert_eq!(base.params.len(), multi.params.len());
+        for (name, bp) in &base.params {
+            let mp = multi.params.get(name).unwrap_or_else(|| panic!("missing param {name}"));
+            assert_eq!(bp.shape(), mp.shape(), "{name}");
+            for (x, y) in bp.data().iter().zip(mp.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "param {name} diverged");
+            }
+        }
     }
 
     #[test]

@@ -11,7 +11,97 @@ use super::layers_basic::InputLayer;
 use crate::tensor::blob::Param;
 use crate::tensor::Blob;
 use crate::utils::rng::Rng;
+use std::cell::Cell;
 use std::collections::HashMap;
+
+thread_local! {
+    /// Executor-scratch allocations charged to this thread: growth of the
+    /// reused per-node ref lists, slot stores, and the duplicate-source
+    /// scratch pool. The same pattern as `Blob::alloc_count` /
+    /// `gemm::pack_alloc_count`, one level up — the steady-state alloc
+    /// probe in [`crate::bench`] asserts it stays flat after warm-up.
+    static EXEC_SCRATCH_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Executor-scratch allocations made by the current thread so far (see
+/// [`crate::bench::alloc_probe`]): grows only while the reused forward /
+/// backward scratch warms up, then stays flat.
+pub fn exec_scratch_alloc_count() -> u64 {
+    EXEC_SCRATCH_ALLOCS.with(|c| c.get())
+}
+
+fn note_exec_alloc() {
+    EXEC_SCRATCH_ALLOCS.with(|c| c.set(c.get() + 1));
+}
+
+/// Ensure `v` (assumed just cleared) can hold `n` elements, counting pool
+/// growth on the executor-scratch counter.
+fn reserve_counted<T>(v: &mut Vec<T>, n: usize) {
+    if v.capacity() < n {
+        note_exec_alloc();
+        v.reserve(n);
+    }
+}
+
+/// Reusable backing store for the per-node `&Blob` source lists the
+/// executor hands to `compute_feature` / `compute_gradient`: rebuilt in
+/// place each node, so steady-state passes allocate nothing. Between calls
+/// the vector holds stale pointers that are never dereferenced.
+#[derive(Default)]
+struct SrcRefs(Vec<*const Blob>);
+
+// SAFETY: the raw pointers are inert storage between calls; they are only
+// read through the slice `fill` returns, whose every entry was re-derived
+// from a live reference inside the same call.
+unsafe impl Send for SrcRefs {}
+
+impl SrcRefs {
+    fn fill<'a>(&mut self, feats: &'a [Blob], idxs: &[usize]) -> &[&'a Blob] {
+        self.0.clear();
+        reserve_counted(&mut self.0, idxs.len());
+        for &s in idxs {
+            self.0.push(&feats[s] as *const Blob);
+        }
+        // SAFETY: `&Blob` and `*const Blob` have identical layout, every
+        // entry was just derived from a live `&'a Blob`, and the returned
+        // slice keeps `self` borrowed (no refill) and `'a` alive while it
+        // is in use.
+        unsafe { std::slice::from_raw_parts(self.0.as_ptr() as *const &'a Blob, self.0.len()) }
+    }
+}
+
+/// Reusable backing store for the `Option<&mut Blob>` slot lists handed to
+/// `compute_gradient` (null = `None`), exploiting the guaranteed niche
+/// layout of `Option<&mut Blob>`. Same reuse story as [`SrcRefs`].
+#[derive(Default)]
+struct SlotRefs(Vec<*mut Blob>);
+
+// SAFETY: as for `SrcRefs` — stale pointers are never dereferenced.
+unsafe impl Send for SlotRefs {}
+
+impl SlotRefs {
+    fn fill<'a>(&mut self, store: &'a mut [Option<Blob>]) -> &mut [Option<&'a mut Blob>] {
+        self.0.clear();
+        reserve_counted(&mut self.0, store.len());
+        for slot in store.iter_mut() {
+            self.0.push(match slot {
+                Some(b) => b as *mut Blob,
+                None => std::ptr::null_mut(),
+            });
+        }
+        // SAFETY: `Option<&mut Blob>` is guaranteed pointer-sized with
+        // `None` ⇔ null (niche optimization); each non-null entry points at
+        // a distinct live slot of `store`, whose `&'a mut` borrow the
+        // returned slice keeps alive — so the handed-out `&mut Blob`s are
+        // disjoint and exclusive for the slice's lifetime.
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.0.as_mut_ptr() as *mut Option<&'a mut Blob>,
+                self.0.len(),
+            )
+        }
+    }
+}
 
 /// One vertex of the dataflow graph.
 pub struct Node {
@@ -37,6 +127,17 @@ pub struct Workspace {
     features: Vec<Blob>,
     grads: Vec<Blob>,
     grad_seen: Vec<bool>,
+    /// Reused per-node backward store: the gradient slots moved out of
+    /// `grads` for the duration of one `compute_gradient` call. Cleared and
+    /// refilled each node into retained capacity — no per-step allocation.
+    slot_store: Vec<Option<Blob>>,
+    /// Parallel to `slot_store`: marks slots backed by duplicate-source
+    /// scratch rather than the canonical gradient blob.
+    is_dup: Vec<bool>,
+    /// Preallocated scratch accumulators for the duplicate-source fallback
+    /// (a layer listing the same source twice): grown at first use, parked
+    /// and reused every step after.
+    dup_scratch: Vec<Blob>,
 }
 
 impl Workspace {
@@ -45,6 +146,9 @@ impl Workspace {
             features: shapes.iter().map(|s| Blob::zeros(s)).collect(),
             grads: shapes.iter().map(|s| Blob::zeros(s)).collect(),
             grad_seen: vec![false; shapes.len()],
+            slot_store: Vec::new(),
+            is_dup: Vec::new(),
+            dup_scratch: Vec::new(),
         }
     }
 
@@ -74,6 +178,9 @@ pub struct NeuralNet {
     nodes: Vec<Node>,
     by_name: HashMap<String, usize>,
     ws: Workspace,
+    /// Reused executor scratch (see [`SrcRefs`] / [`SlotRefs`]).
+    src_refs: SrcRefs,
+    slot_refs: SlotRefs,
 }
 
 /// Builder accumulating layer configurations.
@@ -186,7 +293,13 @@ impl NetBuilder {
         // and gradient buffers, allocated once and reused every step.
         let shapes: Vec<&[usize]> = nodes.iter().map(|n| n.out_shape.as_slice()).collect();
         let ws = Workspace::for_shapes(&shapes);
-        NeuralNet { nodes, by_name: final_by_name, ws }
+        NeuralNet {
+            nodes,
+            by_name: final_by_name,
+            ws,
+            src_refs: SrcRefs::default(),
+            slot_refs: SlotRefs::default(),
+        }
     }
 }
 
@@ -263,6 +376,8 @@ impl NeuralNet {
     /// Forward pass over all layers in topological order (first loop of the
     /// paper's Algorithm 1). Each layer writes into its preallocated
     /// workspace slot; sources are read from the slots of earlier nodes.
+    /// The source ref lists are rebuilt in reused scratch, so a steady-state
+    /// pass performs zero heap allocations in the executor.
     pub fn forward(&mut self, phase: Phase) {
         for seen in self.ws.grad_seen.iter_mut() {
             *seen = false;
@@ -271,8 +386,8 @@ impl NeuralNet {
             let node = &mut self.nodes[i];
             let (before, rest) = self.ws.features.split_at_mut(i);
             let out = &mut rest[0];
-            let src_feats: Vec<&Blob> = node.srcs.iter().map(|&s| &before[s]).collect();
-            node.layer.compute_feature(phase, &src_feats, out);
+            let src_feats = self.src_refs.fill(before, &node.srcs);
+            node.layer.compute_feature(phase, src_feats, out);
         }
     }
 
@@ -301,15 +416,21 @@ impl NeuralNet {
                     self.ws.grad_seen[s] = true;
                 }
             }
-            // Move the writable slots out of the pool so the layer gets
-            // disjoint `&mut` access (duplicate sources — legal but rare —
-            // get a scratch accumulator merged back below).
+            // Move the writable slots out of the pool into the REUSED store
+            // so the layer gets disjoint `&mut` access (duplicate sources —
+            // legal but rare — borrow a preallocated scratch accumulator
+            // merged back below). Everything here runs in retained
+            // capacity: zero heap allocations at steady state.
             let nsrc = node.srcs.len();
-            let mut slot_store: Vec<Option<Blob>> = Vec::with_capacity(nsrc);
-            let mut is_dup = vec![false; nsrc];
+            self.ws.slot_store.clear();
+            self.ws.is_dup.clear();
+            reserve_counted(&mut self.ws.slot_store, nsrc);
+            reserve_counted(&mut self.ws.is_dup, nsrc);
+            let mut ndup = 0usize;
             for (k, &s) in node.srcs.iter().enumerate() {
                 if !node.layer.needs_src_grad(k) {
-                    slot_store.push(None);
+                    self.ws.slot_store.push(None);
+                    self.ws.is_dup.push(false);
                     continue;
                 }
                 let taken_before = node.srcs[..k]
@@ -317,27 +438,38 @@ impl NeuralNet {
                     .enumerate()
                     .any(|(p, &ps)| ps == s && node.layer.needs_src_grad(p));
                 if taken_before {
-                    is_dup[k] = true;
-                    slot_store.push(Some(Blob::zeros(self.ws.features[s].shape())));
+                    if ndup == self.ws.dup_scratch.len() {
+                        note_exec_alloc();
+                        self.ws.dup_scratch.push(Blob::default());
+                    }
+                    let mut scratch = std::mem::take(&mut self.ws.dup_scratch[ndup]);
+                    ndup += 1;
+                    scratch.resize(self.ws.features[s].shape());
+                    scratch.fill(0.0);
+                    self.ws.slot_store.push(Some(scratch));
+                    self.ws.is_dup.push(true);
                 } else {
-                    slot_store.push(Some(std::mem::take(&mut self.ws.grads[s])));
+                    self.ws.slot_store.push(Some(std::mem::take(&mut self.ws.grads[s])));
+                    self.ws.is_dup.push(false);
                 }
             }
             {
-                let src_feats: Vec<&Blob> =
-                    node.srcs.iter().map(|&s| &self.ws.features[s]).collect();
+                let src_feats = self.src_refs.fill(&self.ws.features, &node.srcs);
                 let own = &self.ws.features[i];
                 let grad_out = if has_grad { Some(&self.ws.grads[i]) } else { None };
-                let mut slots: Vec<Option<&mut Blob>> =
-                    slot_store.iter_mut().map(|o| o.as_mut()).collect();
-                node.layer.compute_gradient(&src_feats, own, grad_out, &mut slots);
+                let slots = self.slot_refs.fill(&mut self.ws.slot_store);
+                node.layer.compute_gradient(src_feats, own, grad_out, slots);
             }
-            // Return the slots to the pool (merging duplicate-source
-            // scratch into the canonical slot).
+            // Return the slots to the pool, merging duplicate-source
+            // scratch into the canonical slot and parking the scratch blob
+            // for reuse next step.
+            let mut ndup = 0usize;
             for (k, &s) in node.srcs.iter().enumerate() {
-                if let Some(blob) = slot_store[k].take() {
-                    if is_dup[k] {
+                if let Some(blob) = self.ws.slot_store[k].take() {
+                    if self.ws.is_dup[k] {
                         self.ws.grads[s].add_assign(&blob);
+                        self.ws.dup_scratch[ndup] = blob;
+                        ndup += 1;
                     } else {
                         self.ws.grads[s] = blob;
                     }
@@ -608,6 +740,73 @@ mod tests {
         for (x, y) in accumulated.data().iter().zip(expect.data()) {
             assert!((x - y).abs() < 1e-5, "{x} vs {y}");
         }
+    }
+
+    /// A layer listing the same source twice exercises the duplicate-source
+    /// fallback: each duplicate slot accumulates into preallocated scratch
+    /// and the canonical gradient receives the SUM of both contributions.
+    #[test]
+    fn duplicate_source_grads_sum_through_reused_scratch() {
+        let build = || {
+            NetBuilder::new()
+                .add(LayerConf::new("data", LayerKind::Input { shape: vec![2, 3] }, &[]))
+                .add(LayerConf::new(
+                    "a",
+                    LayerKind::InnerProduct { out: 4, act: Activation::Identity, init_std: 0.3 },
+                    &["data"],
+                ))
+                // Concat of the same source twice: backward slices the
+                // output gradient into two slots aimed at the SAME node.
+                .add(LayerConf::new("c", LayerKind::Concat { dim: 1 }, &["a", "a"]))
+                .add(LayerConf::new("tgt", LayerKind::Input { shape: vec![2, 8] }, &[]))
+                .add(LayerConf::new(
+                    "loss",
+                    LayerKind::EuclideanLoss { weight: 1.0 },
+                    &["c", "tgt"],
+                ))
+                .build(&mut Rng::new(11))
+        };
+        let mut net = build();
+        net.set_input("data", Blob::full(&[2, 3], 0.5));
+        net.set_input("tgt", Blob::full(&[2, 8], 0.25));
+        net.forward(Phase::Train);
+        net.backward();
+        let a_idx = net.index_of("a").unwrap();
+        let c_idx = net.index_of("c").unwrap();
+        let da = net.grad_of(a_idx).unwrap().clone();
+        let dc = net.grad_of(c_idx).unwrap().clone();
+        // dc is [2, 8]; node a's gradient must be the sum of both halves.
+        assert_eq!(da.shape(), &[2, 4]);
+        for r in 0..2 {
+            for j in 0..4 {
+                let expect = dc.data()[r * 8 + j] + dc.data()[r * 8 + 4 + j];
+                let got = da.data()[r * 4 + j];
+                assert!((got - expect).abs() < 1e-6, "[{r},{j}]: {got} vs {expect}");
+            }
+        }
+        // The dup scratch and ref lists settle: repeated steps perform zero
+        // executor-scratch (and zero blob) allocations after warm-up.
+        let run = |net: &mut NeuralNet| {
+            net.zero_grads();
+            net.forward(Phase::Train);
+            net.backward();
+        };
+        run(&mut net);
+        let exec_before = exec_scratch_alloc_count();
+        let blobs_before = Blob::alloc_count();
+        for _ in 0..5 {
+            run(&mut net);
+        }
+        assert_eq!(
+            exec_scratch_alloc_count(),
+            exec_before,
+            "steady state must not grow executor scratch"
+        );
+        assert_eq!(
+            Blob::alloc_count(),
+            blobs_before,
+            "steady state must not allocate blobs (dup scratch must be reused)"
+        );
     }
 
     #[test]

@@ -1,5 +1,45 @@
-//! Runtime: load and execute the AOT-compiled XLA artifacts (L2 models with
+//! Runtime: the native backend's execution substrate — the persistent
+//! intra-op worker [`pool`], the thread-budget policy behind [`threads`] —
+//! plus the loader that executes AOT-compiled XLA artifacts (L2 models with
 //! L1 Pallas kernels lowered in) from the rust hot path via the PJRT C API.
+//!
+//! # Intra-op pool lifecycle
+//!
+//! [`pool`] owns a process-global set of parked worker threads, spawned
+//! lazily on the first parallel kernel dispatch and capped at
+//! `cores - 1` (the calling thread is always the extra compute thread).
+//! Workers park on a condvar between dispatches and are never torn down:
+//! a steady-state training loop dispatches thousands of panels without
+//! creating a single thread (the soak suite in `tests/pool.rs` pins both
+//! the stable worker count and the zero-allocation counters across mixed
+//! gemm + conv traffic).
+//!
+//! # `PALLAS_NUM_THREADS` semantics
+//!
+//! [`threads`] resolves the per-kernel *task* count:
+//!
+//! * **Explicit value wins.** `PALLAS_NUM_THREADS=N` (N ≥ 1) always yields
+//!   `N`, regardless of worker groups; `1` selects the exact serial code
+//!   path (no pool machinery touched); `0`/garbage fall back to `1`.
+//! * **Unset → divided core budget.** `available_parallelism` divided by
+//!   the number of *active coordinator worker groups* (registered via
+//!   [`register_worker_group`] for the duration of a job), min 1 — so `W`
+//!   groups × intra-op parallelism never oversubscribes the machine.
+//!
+//! The pool additionally clamps real thread usage at the OS level: task
+//! counts beyond the worker cap queue instead of spawning, so even a
+//! deliberately oversubscribed `PALLAS_NUM_THREADS` degrades gracefully.
+//!
+//! # Determinism contract
+//!
+//! The knob (and the group division) only affect *speed*: every parallel
+//! kernel partitions work by task index into regions whose per-element
+//! float-operation sequence is identical to the serial path, so results
+//! are **bit-for-bit identical at every thread count**. Changing budgets —
+//! statically via the environment or dynamically via group registration —
+//! can never change a training trajectory.
+//!
+//! # XLA artifacts
 //!
 //! `python/compile/aot.py` writes `artifacts/*.hlo.txt` plus
 //! `manifest.json`; [`XlaRuntime`] compiles each HLO module once on the
@@ -12,32 +52,83 @@
 
 pub mod device;
 pub mod manifest;
+pub mod pool;
 pub mod xla_job;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
-/// Number of intra-op worker threads for the native backend's compute
-/// kernels (today: the tiled GEMM in [`crate::tensor::gemm`]).
+/// Active coordinator worker groups (see [`register_worker_group`]).
+static ACTIVE_WORKER_GROUPS: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of intra-op tasks for the native backend's parallel kernels (the
+/// tiled GEMM in [`crate::tensor::gemm`] and the im2col/col2im stripes in
+/// [`crate::tensor::conv`]).
 ///
-/// Resolved once per process from the `PALLAS_NUM_THREADS` environment
-/// variable; unset means "use all available parallelism". `1` selects the
-/// exact serial code path (no worker threads are spawned). The knob only
-/// affects *speed*: the parallel kernels are bit-for-bit identical to
-/// serial for every thread count, so changing it never changes results.
+/// See the module docs for the full policy: an explicit
+/// `PALLAS_NUM_THREADS` value wins; unset divides the core budget by the
+/// active worker-group count. The value only affects speed — the kernels
+/// are bit-for-bit identical to serial at every count — so it is safe for
+/// this to change dynamically as groups come and go.
 pub fn threads() -> usize {
-    static THREADS: OnceLock<usize> = OnceLock::new();
-    *THREADS.get_or_init(|| threads_from(std::env::var("PALLAS_NUM_THREADS").ok().as_deref()))
+    threads_policy(explicit_env(), cores(), active_worker_groups())
 }
 
-/// Pure resolution of the `PALLAS_NUM_THREADS` policy (split out so tests
-/// can exercise parsing without mutating process environment):
-/// * `None` (unset) → `std::thread::available_parallelism()`, min 1;
-/// * a positive integer (whitespace tolerated) → that count;
-/// * `0` or anything unparsable → 1 (predictable serial fallback).
-pub fn threads_from(env: Option<&str>) -> usize {
+/// Pure resolution of the thread-budget policy (split out so tests can
+/// exercise the arithmetic without mutating process environment):
+/// * explicit positive integer (whitespace tolerated) → that count;
+/// * explicit `0` or anything unparsable → 1 (predictable serial fallback);
+/// * unset → `cores / groups` (each divisor at least 1), min 1.
+pub fn threads_policy(env: Option<&str>, cores: usize, groups: usize) -> usize {
     match env {
         Some(s) => s.trim().parse::<usize>().ok().filter(|&n| n >= 1).unwrap_or(1),
-        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        None => (cores.max(1) / groups.max(1)).max(1),
+    }
+}
+
+/// [`threads_policy`] against this machine's cores with no worker groups —
+/// the historical single-job resolution of `PALLAS_NUM_THREADS`.
+pub fn threads_from(env: Option<&str>) -> usize {
+    threads_policy(env, cores(), 1)
+}
+
+/// Cached `available_parallelism` (min 1).
+pub fn cores() -> usize {
+    static CORES: OnceLock<usize> = OnceLock::new();
+    *CORES.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Cached one-shot read of `PALLAS_NUM_THREADS` (the raw string; parsing
+/// stays in [`threads_policy`] so garbage handling is uniform).
+fn explicit_env() -> Option<&'static str> {
+    static EXPLICIT: OnceLock<Option<String>> = OnceLock::new();
+    EXPLICIT.get_or_init(|| std::env::var("PALLAS_NUM_THREADS").ok()).as_deref()
+}
+
+/// Worker groups currently registered by the coordinator.
+pub fn active_worker_groups() -> usize {
+    ACTIVE_WORKER_GROUPS.load(Ordering::Relaxed)
+}
+
+/// RAII registration of one coordinator worker group for thread budgeting:
+/// while the guard lives, the default (env-unset) intra-op budget is
+/// divided by the active group count, so `W` concurrent groups share the
+/// machine instead of each claiming every core. The coordinator registers
+/// one guard per group for the duration of a job; dropping restores the
+/// budget. An explicit `PALLAS_NUM_THREADS` is never divided.
+pub struct WorkerGroupGuard {
+    _priv: (),
+}
+
+/// Register one worker group; see [`WorkerGroupGuard`].
+pub fn register_worker_group() -> WorkerGroupGuard {
+    ACTIVE_WORKER_GROUPS.fetch_add(1, Ordering::Relaxed);
+    WorkerGroupGuard { _priv: () }
+}
+
+impl Drop for WorkerGroupGuard {
+    fn drop(&mut self) {
+        ACTIVE_WORKER_GROUPS.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -66,9 +157,43 @@ mod thread_knob_tests {
     }
 
     #[test]
-    fn cached_getter_is_stable_and_positive() {
+    fn policy_divides_cores_by_active_groups_when_unset() {
+        assert_eq!(threads_policy(None, 8, 2), 4);
+        assert_eq!(threads_policy(None, 8, 3), 2);
+        assert_eq!(threads_policy(None, 9, 2), 4);
+        assert_eq!(threads_policy(None, 4, 8), 1, "budget floors at 1");
+        assert_eq!(threads_policy(None, 8, 0), 8, "no groups = whole machine");
+        assert_eq!(threads_policy(None, 0, 0), 1);
+    }
+
+    #[test]
+    fn policy_explicit_value_wins_over_group_division() {
+        assert_eq!(threads_policy(Some("6"), 8, 4), 6);
+        assert_eq!(threads_policy(Some("1"), 64, 2), 1);
+        assert_eq!(threads_policy(Some("0"), 8, 4), 1);
+        assert_eq!(threads_policy(Some("64"), 4, 2), 64, "oversubscription is allowed explicitly");
+    }
+
+    #[test]
+    fn getter_is_positive() {
+        // Other tests register/drop groups concurrently, so only monotone
+        // facts hold here; the pure policy tests pin the arithmetic.
         assert!(threads() >= 1);
-        assert_eq!(threads(), threads());
+        assert!(cores() >= 1);
+    }
+
+    /// Saturating the registry must drive the env-unset budget to 1 while
+    /// an explicit env value stays untouched — robust against the handful
+    /// of groups concurrent coordinator tests may add or remove.
+    #[test]
+    fn many_registered_groups_shrink_the_default_budget() {
+        let guards: Vec<WorkerGroupGuard> = (0..1000).map(|_| register_worker_group()).collect();
+        assert!(active_worker_groups() >= 990);
+        match std::env::var("PALLAS_NUM_THREADS") {
+            Ok(v) => assert_eq!(threads(), threads_from(Some(&v)), "explicit value wins"),
+            Err(_) => assert_eq!(threads(), 1, "cores / ~1000 groups floors at 1"),
+        }
+        drop(guards);
     }
 }
 

@@ -1,0 +1,346 @@
+//! Persistent intra-op worker pool: a lazily-spawned set of parked worker
+//! threads shared by every parallel compute kernel in the process (today:
+//! the tiled GEMM in [`crate::tensor::gemm`] and the im2col/col2im stripes
+//! in [`crate::tensor::conv`]).
+//!
+//! # Why a pool
+//!
+//! The first parallel GEMM spawned a `std::thread::scope` per `(kk, jj)`
+//! panel — simple and provably deterministic, but thread creation costs
+//! tens of microseconds, paid hundreds of times per large GEMM. The pool
+//! keeps workers parked on a condvar between dispatches, so fanning a panel
+//! out costs two lock/notify round-trips instead of `t` thread spawns.
+//!
+//! # Execution model
+//!
+//! [`run`]`(tasks, f)` executes `f(0)`, `f(1)`, …, `f(tasks - 1)` and
+//! returns when all of them finished. The *caller* always executes task 0
+//! on its own thread; tasks `1..` are pushed onto a process-global queue
+//! drained by the parked workers. While waiting for its own tasks, the
+//! caller also helps drain the queue (it may execute other callers' tasks),
+//! so the pool is work-conserving and concurrent callers — e.g. several
+//! coordinator worker groups — share the same workers without deadlock:
+//! every queued task is eventually executed by a worker, its enqueuer, or
+//! another helping caller, and no thread ever blocks while holding work.
+//!
+//! # Determinism
+//!
+//! The pool assigns *task indices*, never thread identities: which OS
+//! thread executes task `i` is scheduling-dependent, but the work performed
+//! by task `i` is a pure function of `i` chosen by the caller. Kernels
+//! built on the pool therefore keep the bit-for-bit determinism contract —
+//! partition by task index, write disjoint output regions — regardless of
+//! how many workers actually exist.
+//!
+//! # Sizing
+//!
+//! Workers are spawned lazily up to [`max_workers`] (`cores - 1`, because
+//! the caller is the extra compute thread) and then parked forever — the
+//! pool never shrinks and never exceeds the machine, no matter how many
+//! tasks callers request. Requesting more tasks than workers is fine: the
+//! surplus queues and the available threads (including the caller) drain
+//! it. Combined with the worker-group-aware budget in
+//! [`crate::runtime::threads`], nested parallelism degrades into queueing,
+//! not OS oversubscription.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// One queued task: the erased closure, the task index to call it with,
+/// and the completion latch of the `run` call that enqueued it.
+///
+/// The `'static` lifetimes are a lie told by [`run`], which transmutes
+/// stack borrows before enqueueing; soundness rests on `run` never
+/// returning (or unwinding) until the latch reports every enqueued task
+/// finished, so the borrows outlive all uses.
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    task: usize,
+    latch: &'static Latch,
+}
+
+/// Countdown latch synchronizing a `run` call with its enqueued tasks.
+/// The mutex also provides the happens-before edge that makes task writes
+/// (e.g. GEMM output stripes) visible to the caller after the wait.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { remaining: Mutex::new(n), cv: Condvar::new(), panicked: AtomicBool::new(false) }
+    }
+
+    /// Mark one task finished. The final `done` must not touch the latch
+    /// after releasing the lock: the caller may return and free it.
+    fn done(&self) {
+        let mut remaining = self.remaining.lock().unwrap();
+        *remaining -= 1;
+        if *remaining == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        *self.remaining.lock().unwrap() == 0
+    }
+
+    fn wait(&self) {
+        let mut remaining = self.remaining.lock().unwrap();
+        while *remaining > 0 {
+            remaining = self.cv.wait(remaining).unwrap();
+        }
+    }
+}
+
+struct PoolState {
+    queue: VecDeque<Job>,
+    /// Workers spawned so far (they never exit, so this is also the live
+    /// count — asserted stable by the soak suite in `tests/pool.rs`).
+    workers: usize,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    /// Parked workers wait here for the queue to become non-empty.
+    work_cv: Condvar,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        state: Mutex::new(PoolState { queue: VecDeque::new(), workers: 0 }),
+        work_cv: Condvar::new(),
+    })
+}
+
+/// Upper bound on spawned workers: [`crate::runtime::cores`]` - 1`, because
+/// the calling thread always executes task 0 (and helps drain the queue), so
+/// `cores` compute threads exist at full fan-out without oversubscribing.
+pub fn max_workers() -> usize {
+    crate::runtime::cores().saturating_sub(1)
+}
+
+/// Workers spawned so far. Monotone, bounded by [`max_workers`]; the soak
+/// suite asserts it stays flat across thousands of steady-state dispatches.
+pub fn worker_count() -> usize {
+    pool().state.lock().unwrap().workers
+}
+
+/// Try to spawn one worker. Failure (e.g. the process is at its thread
+/// limit) is tolerated, never propagated: `run` must not unwind while Jobs
+/// holding lifetime-erased borrows sit in the queue, and a smaller pool is
+/// always safe — the caller's help loop drains whatever workers don't.
+fn spawn_worker(id: usize) -> bool {
+    std::thread::Builder::new()
+        .name(format!("pallas-pool-{id}"))
+        .spawn(worker_loop)
+        .is_ok()
+}
+
+fn worker_loop() {
+    let p = pool();
+    loop {
+        let job = {
+            let mut st = p.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.queue.pop_front() {
+                    break job;
+                }
+                st = p.work_cv.wait(st).unwrap();
+            }
+        };
+        execute(job);
+    }
+}
+
+/// Run one task, converting a panic into a latch flag so the worker thread
+/// survives and the originating caller re-raises. `done` is the last touch
+/// of the latch (see [`Latch::done`]).
+fn execute(job: Job) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.f)(job.task)));
+    if result.is_err() {
+        job.latch.panicked.store(true, Ordering::Relaxed);
+    }
+    job.latch.done();
+}
+
+/// Drain queued tasks (any caller's) until `latch` completes. Never blocks
+/// while work is available, so a caller whose tasks sit behind another
+/// caller's burst makes progress by executing the head of the queue.
+fn help_until_done(latch: &Latch) {
+    loop {
+        if latch.is_done() {
+            return;
+        }
+        let job = pool().state.lock().unwrap().queue.pop_front();
+        match job {
+            Some(job) => execute(job),
+            // Queue empty: every task of ours is held by some running
+            // thread, which will call `done` when it finishes.
+            None => {
+                latch.wait();
+                return;
+            }
+        }
+    }
+}
+
+/// Guard ensuring `run` waits for its enqueued tasks even when the caller's
+/// own `f(0)` panics — the borrows smuggled into the queue must not dangle.
+struct HelpOnDrop<'a>(&'a Latch);
+
+impl Drop for HelpOnDrop<'_> {
+    fn drop(&mut self) {
+        help_until_done(self.0);
+    }
+}
+
+/// Execute `f(0..tasks)` across the persistent pool and block until every
+/// task finished. `f` may run concurrently on several threads (it must be
+/// `Sync`); per-task mutable state is typically handed out through a
+/// `Vec<Mutex<_>>` indexed by task — each slot is locked by exactly one
+/// task, so the locks are uncontended.
+///
+/// `tasks <= 1` runs entirely on the caller thread, touching no pool
+/// machinery (the serial path of every kernel stays spawn- and lock-free).
+///
+/// Panics in any task are re-raised on the calling thread after all tasks
+/// settle.
+pub fn run<F: Fn(usize) + Sync>(tasks: usize, f: F) {
+    if tasks == 0 {
+        return;
+    }
+    if tasks == 1 {
+        f(0);
+        return;
+    }
+    let latch = Latch::new(tasks - 1);
+    // SAFETY: the `'static` borrows below never escape this call. Every
+    // enqueued Job holds `&f` and `&latch`; `run` returns (or resumes
+    // unwinding) only after `latch` counts every Job finished — enforced on
+    // the normal path AND the panic path by `HelpOnDrop` — and the final
+    // `Latch::done` releases its lock before the caller can observe
+    // completion, so no task touches either borrow afterwards.
+    let f_dyn: &(dyn Fn(usize) + Sync) = &f;
+    let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f_dyn) };
+    let latch_static: &'static Latch = unsafe { std::mem::transmute(&latch) };
+    // Armed BEFORE any Job escapes into the queue: from here on, every exit
+    // from this frame — normal return or unwind from any statement below —
+    // first drains/awaits the latch, so the erased borrows cannot dangle.
+    let complete = HelpOnDrop(&latch);
+    {
+        let p = pool();
+        let mut st = p.state.lock().unwrap();
+        for task in 1..tasks {
+            st.queue.push_back(Job { f: f_static, task, latch: latch_static });
+        }
+        let want = (tasks - 1).min(max_workers());
+        while st.workers < want && spawn_worker(st.workers) {
+            st.workers += 1;
+        }
+        drop(st);
+        p.work_cv.notify_all();
+    }
+    f(0);
+    drop(complete);
+    if latch.panicked.load(Ordering::Relaxed) {
+        panic!("intra-op pool task panicked (see worker output above)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn zero_and_one_task_run_inline() {
+        let count = AtomicUsize::new(0);
+        run(0, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 0);
+        run(1, |i| {
+            assert_eq!(i, 0);
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn every_task_index_runs_exactly_once() {
+        for &tasks in &[2usize, 3, 8, 17] {
+            let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            run(tasks, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} of {tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_is_capped_at_max_workers() {
+        // Request far more tasks than cores: the surplus queues instead of
+        // spawning threads.
+        run(max_workers() + 7, |_| {});
+        assert!(worker_count() <= max_workers());
+        for _ in 0..20 {
+            run(4, |_| {});
+        }
+        assert!(worker_count() <= max_workers());
+    }
+
+    #[test]
+    fn tasks_mutate_disjoint_slices_via_per_task_mutexes() {
+        let mut data = vec![0u32; 64];
+        let t = 4;
+        {
+            let chunk = data.len() / t;
+            let slots: Vec<Mutex<&mut [u32]>> =
+                data.chunks_mut(chunk).map(Mutex::new).collect();
+            run(t, |tid| {
+                let mut s = slots[tid].try_lock().expect("task owns its slot");
+                for v in s.iter_mut() {
+                    *v = tid as u32 + 1;
+                }
+            });
+        }
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, (i / 16) as u32 + 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool_without_deadlock() {
+        std::thread::scope(|s| {
+            for seed in 0..4u64 {
+                s.spawn(move || {
+                    for round in 0..20 {
+                        let tasks = 2 + ((seed as usize + round) % 5);
+                        let sum = AtomicUsize::new(0);
+                        run(tasks, |i| {
+                            sum.fetch_add(i + 1, Ordering::Relaxed);
+                        });
+                        assert_eq!(sum.load(Ordering::Relaxed), tasks * (tasks + 1) / 2);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "intra-op pool task panicked")]
+    fn panicking_task_propagates_to_the_caller() {
+        run(2, |i| {
+            if i == 1 {
+                panic!("boom");
+            }
+        });
+    }
+}

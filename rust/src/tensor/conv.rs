@@ -2,9 +2,26 @@
 //! adopts from Caffe (§6.2.1 "Caffe's im2col and pooling code is adopted").
 //!
 //! Layout: images are `[batch, channels, height, width]` row-major.
+//!
+//! # Intra-op parallelism
+//!
+//! With the GEMM threaded, the im2col/col2im transforms are the remaining
+//! single-threaded hot spots, so they stripe over the same persistent pool
+//! ([`crate::runtime::pool`]) under the same contract as
+//! [`super::gemm::gemm`]: work is partitioned by *task index* into regions
+//! that are disjoint on both the read-accumulate and write side —
+//! [`im2col`] by whole rows of the column matrix (pure scattered reads,
+//! disjoint output rows), [`col2im_acc`] by whole channels (each channel
+//! accumulates only into its own image plane, in the serial loop order) —
+//! so the output is **bit-for-bit identical to serial at every thread
+//! count** (pinned by property tests in `tests/properties.rs`). The task
+//! count comes from [`crate::runtime::threads()`]; the `*_with_threads`
+//! variants take it explicitly, and `1` runs the historical serial loops
+//! on the caller thread with no pool machinery touched.
 
 use super::blob::Blob;
-use super::gemm::{gemm, Transpose};
+use super::gemm::{gemm_with_threads, Transpose};
+use std::sync::Mutex;
 
 /// Static geometry of a conv/pool operation.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -37,33 +54,88 @@ impl Conv2dGeom {
     }
 }
 
+/// One-shot striped dispatch shared by the parallel conv transforms: split
+/// `out` into `tasks` contiguous chunks — chunk `i` spanning
+/// `Blob::split_range(units, tasks, i)` units of `unit_len` elements each —
+/// and run `f(unit_start, unit_count, chunk)` once per task on the
+/// persistent pool. Each chunk sits behind its own mutex locked by exactly
+/// one task, so the locks are uncontended and the writes disjoint.
+fn run_striped(
+    out: &mut [f32],
+    units: usize,
+    unit_len: usize,
+    tasks: usize,
+    f: impl Fn(usize, usize, &mut [f32]) + Sync,
+) {
+    let mut stripes: Vec<Mutex<(usize, usize, &mut [f32])>> = Vec::with_capacity(tasks);
+    let mut rest: &mut [f32] = out;
+    let mut next = 0usize;
+    for tid in 0..tasks {
+        let (u0, un) = Blob::split_range(units, tasks, tid);
+        debug_assert_eq!(u0, next, "stripes must be contiguous");
+        next = u0 + un;
+        let (chunk, tail) = rest.split_at_mut(un * unit_len);
+        rest = tail;
+        stripes.push(Mutex::new((u0, un, chunk)));
+    }
+    crate::runtime::pool::run(tasks, |tid| {
+        let mut guard = stripes[tid].try_lock().expect("each task owns its stripe");
+        let (u0, un, chunk) = &mut *guard;
+        f(*u0, *un, chunk);
+    });
+}
+
 /// Unfold one image `[C,H,W]` into the im2col matrix
-/// `[C*k*k, out_h*out_w]` (zero padding outside the image).
+/// `[C*k*k, out_h*out_w]` (zero padding outside the image). Runs on
+/// [`crate::runtime::threads()`] intra-op tasks; see the module docs for
+/// the determinism contract.
 pub fn im2col(img: &[f32], g: &Conv2dGeom, out: &mut [f32]) {
-    let (oh, ow) = (g.out_h(), g.out_w());
+    im2col_with_threads(img, g, out, crate::runtime::threads());
+}
+
+/// [`im2col`] with an explicit task count. Tasks own disjoint stripes of
+/// whole column-matrix rows; every row is a pure gather written by exactly
+/// one task in the serial order, so the result is `==`-identical to
+/// `threads == 1` for every count.
+pub fn im2col_with_threads(img: &[f32], g: &Conv2dGeom, out: &mut [f32], threads: usize) {
     assert_eq!(img.len(), g.in_c * g.in_h * g.in_w, "im2col input size");
     assert_eq!(out.len(), g.col_rows() * g.col_cols(), "im2col output size");
-    let mut row = 0;
-    for c in 0..g.in_c {
-        for ky in 0..g.kernel {
-            for kx in 0..g.kernel {
-                let base = row * oh * ow;
-                for oy in 0..oh {
-                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
-                    for ox in 0..ow {
-                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
-                        out[base + oy * ow + ox] = if iy >= 0
-                            && (iy as usize) < g.in_h
-                            && ix >= 0
-                            && (ix as usize) < g.in_w
-                        {
-                            img[c * g.in_h * g.in_w + iy as usize * g.in_w + ix as usize]
-                        } else {
-                            0.0
-                        };
-                    }
-                }
-                row += 1;
+    let rows = g.col_rows();
+    let cc = g.col_cols();
+    let t = threads.max(1).min(rows.max(1));
+    if t == 1 {
+        im2col_rows(img, g, 0, rows, out);
+        return;
+    }
+    run_striped(out, rows, cc, t, |r0, rc, chunk| im2col_rows(img, g, r0, rc, chunk));
+}
+
+/// Write rows `[row0, row0 + rows)` of the im2col matrix into `out`, whose
+/// first element corresponds to row `row0`. Row `(c*k + ky)*k + kx` gathers
+/// kernel offset `(ky, kx)` of channel `c` — the exact loop order of the
+/// historical serial transform.
+fn im2col_rows(img: &[f32], g: &Conv2dGeom, row0: usize, rows: usize, out: &mut [f32]) {
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let k = g.kernel;
+    for r in 0..rows {
+        let row = row0 + r;
+        let c = row / (k * k);
+        let rem = row % (k * k);
+        let (ky, kx) = (rem / k, rem % k);
+        let base = r * oh * ow;
+        for oy in 0..oh {
+            let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+            for ox in 0..ow {
+                let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                out[base + oy * ow + ox] = if iy >= 0
+                    && (iy as usize) < g.in_h
+                    && ix >= 0
+                    && (ix as usize) < g.in_w
+                {
+                    img[c * g.in_h * g.in_w + iy as usize * g.in_w + ix as usize]
+                } else {
+                    0.0
+                };
             }
         }
     }
@@ -72,32 +144,62 @@ pub fn im2col(img: &[f32], g: &Conv2dGeom, out: &mut [f32]) {
 /// Fold an im2col matrix back into image gradients (transpose of `im2col`,
 /// accumulating where patches overlap).
 pub fn col2im(col: &[f32], g: &Conv2dGeom, img: &mut [f32]) {
+    col2im_with_threads(col, g, img, crate::runtime::threads());
+}
+
+/// [`col2im`] with an explicit task count.
+pub fn col2im_with_threads(col: &[f32], g: &Conv2dGeom, img: &mut [f32], threads: usize) {
     img.iter_mut().for_each(|v| *v = 0.0);
-    col2im_acc(col, g, img);
+    col2im_acc_with_threads(col, g, img, threads);
 }
 
 /// `col2im` without the zero prologue: accumulates into `img`, which the
 /// planned executor hands over already zeroed (and possibly already holding
-/// sibling consumers' gradient contributions).
+/// sibling consumers' gradient contributions). Runs on
+/// [`crate::runtime::threads()`] intra-op tasks.
 pub fn col2im_acc(col: &[f32], g: &Conv2dGeom, img: &mut [f32]) {
+    col2im_acc_with_threads(col, g, img, crate::runtime::threads());
+}
+
+/// [`col2im_acc`] with an explicit task count. Tasks own disjoint stripes
+/// of whole *channels*: channel `c` reads only column rows
+/// `[c*k*k, (c+1)*k*k)` and accumulates only into its own image plane, in
+/// the serial `(ky, kx, oy, ox)` order, so every image pixel receives the
+/// identical addition sequence for every count — `==`-identical to
+/// `threads == 1`.
+pub fn col2im_acc_with_threads(col: &[f32], g: &Conv2dGeom, img: &mut [f32], threads: usize) {
+    let t = threads.max(1).min(g.in_c.max(1));
+    if t == 1 {
+        col2im_channels(col, g, 0, g.in_c, img);
+        return;
+    }
+    let plane = g.in_h * g.in_w;
+    run_striped(img, g.in_c, plane, t, |c0, cn, chunk| col2im_channels(col, g, c0, cn, chunk));
+}
+
+/// Accumulate channels `[c0, c0 + channels)` of the column matrix into
+/// `img`, whose first element is the first pixel of channel `c0`'s plane —
+/// the historical serial loop restricted to a channel range.
+fn col2im_channels(col: &[f32], g: &Conv2dGeom, c0: usize, channels: usize, img: &mut [f32]) {
     let (oh, ow) = (g.out_h(), g.out_w());
-    let mut row = 0;
-    for c in 0..g.in_c {
-        for ky in 0..g.kernel {
-            for kx in 0..g.kernel {
-                let base = row * oh * ow;
+    let k = g.kernel;
+    let plane = g.in_h * g.in_w;
+    for ci in 0..channels {
+        let c = c0 + ci;
+        for ky in 0..k {
+            for kx in 0..k {
+                let base = ((c * k + ky) * k + kx) * oh * ow;
                 for oy in 0..oh {
                     let iy = (oy * g.stride + ky) as isize - g.pad as isize;
                     for ox in 0..ow {
                         let ix = (ox * g.stride + kx) as isize - g.pad as isize;
                         if iy >= 0 && (iy as usize) < g.in_h && ix >= 0 && (ix as usize) < g.in_w
                         {
-                            img[c * g.in_h * g.in_w + iy as usize * g.in_w + ix as usize] +=
+                            img[ci * plane + iy as usize * g.in_w + ix as usize] +=
                                 col[base + oy * ow + ox];
                         }
                     }
                 }
-                row += 1;
             }
         }
     }
@@ -129,7 +231,9 @@ fn ensure_len(v: &mut Vec<f32>, n: usize) {
 /// Forward convolution into a caller-provided output: input `[B,C,H,W]`,
 /// weight `[out_c, C*k*k]`, bias `[out_c]` → output `[B, out_c, oh, ow]`
 /// (resized). The per-image im2col buffers are written into `cols` for
-/// reuse in the backward pass; all buffers are reused across calls.
+/// reuse in the backward pass; all buffers are reused across calls. The
+/// im2col transforms and the batched GEMM run on
+/// [`crate::runtime::threads()`] intra-op tasks.
 pub fn conv2d_forward_into(
     input: &Blob,
     weight: &Blob,
@@ -138,6 +242,31 @@ pub fn conv2d_forward_into(
     out: &mut Blob,
     cols: &mut Vec<Vec<f32>>,
     scratch: &mut ConvScratch,
+) {
+    conv2d_forward_into_with_threads(
+        input,
+        weight,
+        bias,
+        g,
+        out,
+        cols,
+        scratch,
+        crate::runtime::threads(),
+    );
+}
+
+/// [`conv2d_forward_into`] with an explicit task count (used by the conv
+/// scaling probe to pin serial-vs-parallel bit-identity and throughput).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_forward_into_with_threads(
+    input: &Blob,
+    weight: &Blob,
+    bias: &Blob,
+    g: &Conv2dGeom,
+    out: &mut Blob,
+    cols: &mut Vec<Vec<f32>>,
+    scratch: &mut ConvScratch,
+    threads: usize,
 ) {
     let b = input.shape()[0];
     let out_c = weight.shape()[0];
@@ -154,14 +283,14 @@ pub fn conv2d_forward_into(
     ensure_len(&mut scratch.bigcol, cr * b * cc);
     for (i, col) in cols.iter_mut().enumerate() {
         ensure_len(col, cr * cc);
-        im2col(&input.data()[i * img_len..(i + 1) * img_len], g, col);
+        im2col_with_threads(&input.data()[i * img_len..(i + 1) * img_len], g, col, threads);
         for r in 0..cr {
             scratch.bigcol[r * b * cc + i * cc..r * b * cc + (i + 1) * cc]
                 .copy_from_slice(&col[r * cc..(r + 1) * cc]);
         }
     }
     ensure_len(&mut scratch.bigout, out_c * b * cc);
-    gemm(
+    gemm_with_threads(
         Transpose::No,
         Transpose::No,
         out_c,
@@ -172,6 +301,7 @@ pub fn conv2d_forward_into(
         &scratch.bigcol,
         0.0,
         &mut scratch.bigout,
+        threads,
     );
     for i in 0..b {
         let dst = &mut out.data_mut()[i * out_c * cc..(i + 1) * out_c * cc];
@@ -217,12 +347,13 @@ pub fn conv2d_backward_acc(
     let out_c = weight.shape()[0];
     let (cr, cc) = (g.col_rows(), g.col_cols());
     let img_len = g.in_c * g.in_h * g.in_w;
+    let threads = crate::runtime::threads();
     ensure_len(&mut scratch.dcol, cr * cc);
 
     for i in 0..b {
         let go = &grad_out.data()[i * out_c * cc..(i + 1) * out_c * cc];
         // dW += dOut [out_c, cc] @ col^T [cc, cr]
-        gemm(
+        gemm_with_threads(
             Transpose::No,
             Transpose::Yes,
             out_c,
@@ -233,10 +364,11 @@ pub fn conv2d_backward_acc(
             &cols[i],
             1.0,
             d_weight.data_mut(),
+            threads,
         );
         if let Some(dx) = d_input.as_deref_mut() {
             // d_col = W^T [cr, out_c] @ dOut [out_c, cc]
-            gemm(
+            gemm_with_threads(
                 Transpose::Yes,
                 Transpose::No,
                 cr,
@@ -247,8 +379,14 @@ pub fn conv2d_backward_acc(
                 go,
                 0.0,
                 &mut scratch.dcol,
+                threads,
             );
-            col2im_acc(&scratch.dcol, g, &mut dx.data_mut()[i * img_len..(i + 1) * img_len]);
+            col2im_acc_with_threads(
+                &scratch.dcol,
+                g,
+                &mut dx.data_mut()[i * img_len..(i + 1) * img_len],
+                threads,
+            );
         }
         for oc in 0..out_c {
             d_bias.data_mut()[oc] += go[oc * cc..(oc + 1) * cc].iter().sum::<f32>();
@@ -532,6 +670,51 @@ mod tests {
         let per_c = 2.0 * (g.out_h() * g.out_w()) as f32;
         for &v in d_b.data() {
             assert!((v - per_c).abs() < 1e-3);
+        }
+    }
+
+    /// Fixed geometries straddling the stripe boundaries: every task count
+    /// must reproduce the serial im2col/col2im output bit-for-bit (the
+    /// random-geometry sweep lives in `tests/properties.rs`).
+    #[test]
+    fn parallel_im2col_and_col2im_bit_identical_to_serial() {
+        let mut rng = Rng::new(0xc0de);
+        for &(c, h, w, k, s, p) in &[
+            (3usize, 8usize, 8usize, 3usize, 1usize, 1usize),
+            (16, 7, 5, 3, 2, 0),
+            (1, 12, 12, 5, 1, 2), // single channel: col2im degenerates to serial
+            (2, 3, 3, 3, 1, 0),   // kernel == image
+        ] {
+            let g = geom(c, h, w, k, s, p);
+            let img = rng.uniform_vec(c * h * w, -1.0, 1.0);
+            let n = g.col_rows() * g.col_cols();
+            let mut col_serial = vec![0.0; n];
+            im2col_with_threads(&img, &g, &mut col_serial, 1);
+            let colm = rng.uniform_vec(n, -1.0, 1.0);
+            let img0 = rng.uniform_vec(c * h * w, -1.0, 1.0);
+            let mut acc_serial = img0.clone();
+            col2im_acc_with_threads(&colm, &g, &mut acc_serial, 1);
+            for &t in &[2usize, 4, 7] {
+                let mut col_t = vec![0.0; n];
+                im2col_with_threads(&img, &g, &mut col_t, t);
+                assert!(col_t == col_serial, "im2col t={t} differs (c={c} h={h} k={k})");
+                let mut acc_t = img0.clone();
+                col2im_acc_with_threads(&colm, &g, &mut acc_t, t);
+                assert!(acc_t == acc_serial, "col2im_acc t={t} differs (c={c} h={h} k={k})");
+            }
+        }
+    }
+
+    /// Degenerate shapes (zero channels → empty matrices) must short-circuit
+    /// identically under any task count.
+    #[test]
+    fn parallel_conv_transforms_handle_empty_shapes() {
+        let g = geom(0, 3, 3, 1, 1, 0);
+        for &t in &[1usize, 2, 7] {
+            let mut col: Vec<f32> = Vec::new();
+            im2col_with_threads(&[], &g, &mut col, t);
+            let mut img: Vec<f32> = Vec::new();
+            col2im_acc_with_threads(&[], &g, &mut img, t);
         }
     }
 

@@ -7,16 +7,19 @@
 //!
 //! # Intra-op parallelism
 //!
-//! [`gemm`] splits the MC-block (row-stripe) loop across
-//! `std::thread::scope` workers, each owning a disjoint row stripe of `C`
-//! (so writes need no synchronization) while sharing the packed B panel
-//! read-only per `(kk, jj)` tile. The stripe partition reuses
-//! [`Blob::split_range`] over whole MC blocks, so every row of `C` is
-//! produced by exactly the same sequence of float operations as the serial
-//! path — the output is **bit-for-bit identical for every thread count**
-//! (pinned by property tests in `tests/properties.rs`). The thread count
-//! comes from [`crate::runtime::threads()`] (`PALLAS_NUM_THREADS`); 1 runs
-//! the historical serial loop on the caller thread, spawning nothing.
+//! [`gemm`] splits the MC-block (row-stripe) loop across the persistent
+//! worker pool ([`crate::runtime::pool`]), each task owning a disjoint row
+//! stripe of `C` (so writes need no synchronization) while sharing the
+//! packed B panel read-only per `(kk, jj)` tile. The stripe partition
+//! reuses [`Blob::split_range`] over whole MC blocks, so every row of `C`
+//! is produced by exactly the same sequence of float operations as the
+//! serial path — the output is **bit-for-bit identical for every thread
+//! count** (pinned by property tests in `tests/properties.rs`). The task
+//! count comes from [`crate::runtime::threads()`] (`PALLAS_NUM_THREADS`,
+//! divided across active worker groups when unset); 1 runs the historical
+//! serial loop on the caller thread, touching no pool machinery. Stripes
+//! are fixed per *task index*, never per OS thread, so which pool worker
+//! executes a stripe cannot affect the result.
 //!
 //! # Pack scratch
 //!
@@ -28,6 +31,7 @@
 
 use super::blob::Blob;
 use std::cell::{Cell, RefCell};
+use std::sync::Mutex;
 
 /// Whether an operand is logically transposed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -140,72 +144,93 @@ pub fn gemm_with_threads(
     let mc_blocks = (m + MC - 1) / MC;
     let t = threads.max(1).min(mc_blocks);
 
-    // Buffer 0 is the shared B panel; buffers 1..=t are per-worker A tiles.
+    // Buffer 0 is the shared B panel; buffers 1..=t are per-task A tiles.
     let mut bufs = take_pool(t + 1);
     let (b_slot, a_slots) = bufs.split_at_mut(1);
     let b_pack = &mut b_slot[0];
 
-    let mut kk = 0;
-    while kk < k {
-        let kb = KC.min(k - kk);
-        let mut jj = 0;
-        while jj < n {
-            let nb = NC.min(n - jj);
-            pack_b(tb, b, k, n, kk, jj, kb, nb, &mut b_pack[..]);
-            if t == 1 {
-                // Serial path: identical iteration order to the historical
-                // single-threaded kernel, run on the caller thread.
-                let a_pack = &mut a_slots[0];
+    if t == 1 {
+        // Serial path: identical iteration order to the historical
+        // single-threaded kernel, run entirely on the caller thread.
+        let a_pack = &mut a_slots[0];
+        let mut kk = 0;
+        while kk < k {
+            let kb = KC.min(k - kk);
+            let mut jj = 0;
+            while jj < n {
+                let nb = NC.min(n - jj);
+                pack_b(tb, b, k, n, kk, jj, kb, nb, &mut b_pack[..]);
                 let mut ii = 0;
                 while ii < m {
                     let mb = MC.min(m - ii);
                     pack_a(ta, a, m, k, ii, kk, mb, kb, &mut a_pack[..]);
-                    kernel(mb, nb, kb, alpha, &a_pack[..], &b_pack[..], &mut c[ii * n + jj..], n, NC);
+                    let c_tile = &mut c[ii * n + jj..];
+                    kernel(mb, nb, kb, alpha, &a_pack[..], &b_pack[..], c_tile, n, NC);
                     ii += mb;
                 }
-            } else {
-                // Parallel path: contiguous runs of whole MC blocks per
-                // worker, so stripe-local blocks coincide with the serial
-                // blocks and C stripes are disjoint row ranges.
+                jj += nb;
+            }
+            kk += kb;
+        }
+    } else {
+        // Parallel path: C is pre-split ONCE into contiguous runs of whole
+        // MC blocks (one stripe + one A slot per task, each behind an
+        // uncontended per-task mutex), then every (kk, jj) panel fans the
+        // stripes out over the persistent pool. Stripe-local blocks
+        // coincide with the serial blocks, so each row of C sees the
+        // serial operation sequence exactly.
+        let mut stripes: Vec<Mutex<(usize, usize, &mut [f32], &mut Vec<f32>)>> =
+            Vec::with_capacity(t);
+        {
+            let mut rest: &mut [f32] = &mut c[..];
+            let mut next_row = 0usize;
+            let mut slots = a_slots.iter_mut();
+            for tid in 0..t {
+                let (bs, bc) = Blob::split_range(mc_blocks, t, tid);
+                let rstart = bs * MC;
+                let rcount = ((bs + bc) * MC).min(m) - rstart;
+                debug_assert_eq!(rstart, next_row, "stripes must be contiguous");
+                next_row += rcount;
+                let (stripe, tail) = rest.split_at_mut(rcount * n);
+                rest = tail;
+                let a_pack = slots.next().expect("one A slot per task");
+                stripes.push(Mutex::new((rstart, rcount, stripe, a_pack)));
+            }
+        }
+        let mut kk = 0;
+        while kk < k {
+            let kb = KC.min(k - kk);
+            let mut jj = 0;
+            while jj < n {
+                let nb = NC.min(n - jj);
+                pack_b(tb, b, k, n, kk, jj, kb, nb, &mut b_pack[..]);
                 let b_panel: &[f32] = &b_pack[..];
-                std::thread::scope(|s| {
-                    let mut rest: &mut [f32] = &mut c[..];
-                    let mut next_row = 0usize;
-                    let mut slots = a_slots.iter_mut();
-                    for tid in 0..t {
-                        let (bs, bc) = Blob::split_range(mc_blocks, t, tid);
-                        let rstart = bs * MC;
-                        let rcount = ((bs + bc) * MC).min(m) - rstart;
-                        debug_assert_eq!(rstart, next_row, "stripes must be contiguous");
-                        next_row += rcount;
-                        let (stripe, tail) = rest.split_at_mut(rcount * n);
-                        rest = tail;
-                        let a_pack = slots.next().expect("one A slot per worker");
-                        s.spawn(move || {
-                            let mut ii = 0;
-                            while ii < rcount {
-                                let mb = MC.min(rcount - ii);
-                                pack_a(ta, a, m, k, rstart + ii, kk, mb, kb, &mut a_pack[..]);
-                                kernel(
-                                    mb,
-                                    nb,
-                                    kb,
-                                    alpha,
-                                    &a_pack[..],
-                                    b_panel,
-                                    &mut stripe[ii * n + jj..],
-                                    n,
-                                    NC,
-                                );
-                                ii += mb;
-                            }
-                        });
+                crate::runtime::pool::run(t, |tid| {
+                    let mut guard =
+                        stripes[tid].try_lock().expect("each task owns its stripe");
+                    let (rstart, rcount, stripe, a_pack) = &mut *guard;
+                    let mut ii = 0;
+                    while ii < *rcount {
+                        let mb = MC.min(*rcount - ii);
+                        pack_a(ta, a, m, k, *rstart + ii, kk, mb, kb, &mut a_pack[..]);
+                        kernel(
+                            mb,
+                            nb,
+                            kb,
+                            alpha,
+                            &a_pack[..],
+                            b_panel,
+                            &mut stripe[ii * n + jj..],
+                            n,
+                            NC,
+                        );
+                        ii += mb;
                     }
                 });
+                jj += nb;
             }
-            jj += nb;
+            kk += kb;
         }
-        kk += kb;
     }
     give_pool(bufs);
 }

@@ -7,9 +7,11 @@
 //! native path is the reference implementation, the engine for partitioning
 //! experiments with configuration-dependent shapes, and the baseline for
 //! the op-level-parallelism comparisons in Fig 18(a) — which it now backs
-//! with real intra-op parallelism: [`gemm`] fans out over
-//! [`crate::runtime::threads()`] scoped workers with bit-identical output
-//! at every thread count.
+//! with real intra-op parallelism: [`gemm`] and the conv transforms
+//! ([`conv::im2col`] / [`conv::col2im_acc`]) fan out over the persistent
+//! worker pool ([`crate::runtime::pool`]) on
+//! [`crate::runtime::threads()`] tasks, with bit-identical output at every
+//! thread count.
 
 pub mod blob;
 pub mod gemm;

@@ -1,0 +1,185 @@
+//! Soak / reuse suite for the persistent intra-op worker pool: hundreds of
+//! mixed-shape gemm + conv calls through the pool must leak no threads (the
+//! worker count stays exactly flat), allocate no pack scratch and no blobs
+//! after warm-up, and keep producing bit-identical results throughout.
+
+use singa::runtime::{cores, pool};
+use singa::tensor::conv::{
+    col2im_acc_with_threads, conv2d_forward_into_with_threads, im2col_with_threads, Conv2dGeom,
+    ConvScratch,
+};
+use singa::tensor::gemm::pack_alloc_count;
+use singa::tensor::{gemm_with_threads, Blob, Transpose};
+use singa::utils::rng::Rng;
+
+/// Saturate the pool up front: after one dispatch wider than the machine,
+/// the worker count sits at its cap and can never grow again — which makes
+/// the stability assertions below robust against other tests in this binary
+/// (and proves the cap itself).
+fn saturate_pool() {
+    pool::run(cores() + 3, |_| {});
+    assert_eq!(pool::worker_count(), pool::max_workers());
+}
+
+#[test]
+fn pool_never_exceeds_its_cap() {
+    saturate_pool();
+    for t in [2usize, 9, 33, 65] {
+        pool::run(t, |_| {});
+        assert_eq!(pool::worker_count(), pool::max_workers());
+    }
+}
+
+/// The soak pin from the issue: 500 mixed-shape gemm + conv calls through
+/// the pool — pool size stable (no thread leaks), `pack_alloc_count()` and
+/// the Blob counter flat after warm-up, outputs bit-identical to serial on
+/// every iteration.
+#[test]
+fn soak_500_mixed_gemm_conv_calls_reuse_everything() {
+    saturate_pool();
+    let thread_counts = [1usize, 2, 4, 7];
+
+    // --- gemm workloads (two sizes, reused buffers) ---
+    let mut rng = Rng::new(0x50a6);
+    let gemm_sizes = [48usize, 150];
+    let max_n = 150;
+    let a = rng.uniform_vec(max_n * max_n, -1.0, 1.0);
+    let b = rng.uniform_vec(max_n * max_n, -1.0, 1.0);
+    let mut c = vec![0.0f32; max_n * max_n];
+    let mut gemm_refs: Vec<Vec<f32>> = Vec::new();
+    for &n in &gemm_sizes {
+        let mut r = vec![0.0f32; n * n];
+        gemm_with_threads(
+            Transpose::No,
+            Transpose::No,
+            n,
+            n,
+            n,
+            1.0,
+            &a[..n * n],
+            &b[..n * n],
+            0.0,
+            &mut r,
+            1,
+        );
+        gemm_refs.push(r);
+    }
+
+    // --- conv workloads (two geometries, reused out/cols/scratch) ---
+    let geoms = [
+        (Conv2dGeom { in_c: 4, in_h: 12, in_w: 12, kernel: 3, stride: 1, pad: 1 }, 4usize, 8usize),
+        (Conv2dGeom { in_c: 8, in_h: 8, in_w: 8, kernel: 5, stride: 1, pad: 2 }, 2, 16),
+    ];
+    let mut conv_state = Vec::new();
+    let mut conv_refs: Vec<Vec<f32>> = Vec::new();
+    for &(g, batch, out_c) in &geoms {
+        let img_len = g.in_c * g.in_h * g.in_w;
+        let input = Blob::from_vec(
+            &[batch, g.in_c, g.in_h, g.in_w],
+            rng.uniform_vec(batch * img_len, -1.0, 1.0),
+        );
+        let cr = g.col_rows();
+        let weight = Blob::from_vec(&[out_c, cr], rng.uniform_vec(out_c * cr, -0.5, 0.5));
+        let bias = Blob::from_vec(&[out_c], rng.uniform_vec(out_c, -0.1, 0.1));
+        let mut out = Blob::default();
+        let mut cols: Vec<Vec<f32>> = Vec::new();
+        let mut scratch = ConvScratch::new();
+        conv2d_forward_into_with_threads(
+            &input, &weight, &bias, &g, &mut out, &mut cols, &mut scratch, 1,
+        );
+        conv_refs.push(out.data().to_vec());
+        conv_state.push((g, input, weight, bias, out, cols, scratch));
+    }
+
+    // --- standalone im2col / col2im_acc buffers ---
+    let (gi, _, _) = geoms[0];
+    let img = rng.uniform_vec(gi.in_c * gi.in_h * gi.in_w, -1.0, 1.0);
+    let mut col = vec![0.0f32; gi.col_rows() * gi.col_cols()];
+    let mut fold = vec![0.0f32; img.len()];
+    let mut im2col_ref = vec![0.0f32; col.len()];
+    im2col_with_threads(&img, &gi, &mut im2col_ref, 1);
+
+    // Warm-up: touch every (workload, thread-count) combination once so
+    // the pack pool, conv scratch, and output capacities reach their
+    // steady-state sizes.
+    for &t in &thread_counts {
+        for (si, &n) in gemm_sizes.iter().enumerate() {
+            gemm_with_threads(
+                Transpose::No,
+                Transpose::No,
+                n,
+                n,
+                n,
+                1.0,
+                &a[..n * n],
+                &b[..n * n],
+                0.0,
+                &mut c[..n * n],
+                t,
+            );
+            assert!(c[..n * n] == gemm_refs[si][..], "warm-up gemm n={n} t={t}");
+        }
+        for (ci, (g, input, weight, bias, out, cols, scratch)) in
+            conv_state.iter_mut().enumerate()
+        {
+            conv2d_forward_into_with_threads(input, weight, bias, g, out, cols, scratch, t);
+            assert!(out.data() == &conv_refs[ci][..], "warm-up conv case {ci} t={t}");
+        }
+        im2col_with_threads(&img, &gi, &mut col, t);
+        col2im_acc_with_threads(&col, &gi, &mut fold, t);
+    }
+
+    // Steady state: 500 mixed calls; every counter must stay flat.
+    let workers_before = pool::worker_count();
+    let packs_before = pack_alloc_count();
+    let blobs_before = Blob::alloc_count();
+    for i in 0..500usize {
+        let t = thread_counts[i % thread_counts.len()];
+        match i % 4 {
+            0 | 1 => {
+                let si = (i / 4) % gemm_sizes.len();
+                let n = gemm_sizes[si];
+                gemm_with_threads(
+                    Transpose::No,
+                    Transpose::No,
+                    n,
+                    n,
+                    n,
+                    1.0,
+                    &a[..n * n],
+                    &b[..n * n],
+                    0.0,
+                    &mut c[..n * n],
+                    t,
+                );
+                assert!(c[..n * n] == gemm_refs[si][..], "soak iter {i}: gemm n={n} t={t}");
+            }
+            2 => {
+                let ci = (i / 4) % conv_state.len();
+                let (g, input, weight, bias, out, cols, scratch) = &mut conv_state[ci];
+                conv2d_forward_into_with_threads(input, weight, bias, g, out, cols, scratch, t);
+                assert!(out.data() == &conv_refs[ci][..], "soak iter {i}: conv case {ci} t={t}");
+            }
+            _ => {
+                im2col_with_threads(&img, &gi, &mut col, t);
+                assert!(col == im2col_ref, "soak iter {i}: im2col t={t}");
+                col2im_acc_with_threads(&col, &gi, &mut fold, t);
+            }
+        }
+    }
+    assert_eq!(
+        pool::worker_count(),
+        workers_before,
+        "pool leaked or spawned threads during steady state"
+    );
+    assert_eq!(
+        pack_alloc_count(),
+        packs_before,
+        "steady-state gemm must not allocate pack scratch"
+    );
+    assert_eq!(
+        Blob::alloc_count(),
+        blobs_before,
+        "steady-state conv must not allocate blobs"
+    );
+}

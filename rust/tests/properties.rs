@@ -1,13 +1,16 @@
 //! Property tests over the partitioner and training stack: random model
 //! shapes × random partition assignments must always produce a runnable,
 //! gradient-complete net, and batch-dimension partitioning must preserve
-//! the full-batch loss exactly — plus the intra-op parallel GEMM's
-//! determinism contract: every thread count yields bit-for-bit the serial
-//! result.
+//! the full-batch loss exactly — plus the determinism contract of every
+//! pooled intra-op kernel (GEMM, im2col, col2im): every thread count
+//! yields bit-for-bit the serial result.
 
 use singa::model::layer::{Activation, LayerConf, LayerKind, Phase};
 use singa::model::partition::{logical_param_name, partition_net};
 use singa::model::NetBuilder;
+use singa::tensor::conv::{
+    col2im_acc_with_threads, col2im_with_threads, im2col_with_threads, Conv2dGeom,
+};
 use singa::tensor::{gemm_with_threads, Blob, Transpose};
 use singa::utils::quickcheck::{forall, prop_assert, PropResult};
 use singa::utils::rng::Rng;
@@ -216,6 +219,95 @@ fn parallel_gemm_bit_identical_on_block_straddling_sizes() {
                     "m={m} n={n} k={k} t={t} alpha={alpha} beta={beta}"
                 );
             }
+        }
+    }
+}
+
+/// The conv-transform determinism property: for random geometries
+/// (channels, image size, kernel, stride, pad — including kernel == padded
+/// image and stride > kernel), parallel `im2col`, `col2im` and
+/// `col2im_acc` are `==`-identical (bit-for-bit) to the serial path at
+/// every task count in {2, 4, 7}.
+#[test]
+fn parallel_conv_transforms_bit_identical_for_random_geometries() {
+    forall(40, |q| {
+        let c = q.usize(1, 5);
+        let h = q.usize(1, 12);
+        let w = q.usize(1, 12);
+        let pad = q.usize(0, 2);
+        // Keep the geometry valid: kernel must fit the padded image.
+        let kmax = (h.min(w) + 2 * pad).min(5);
+        let k = q.usize(1, kmax.max(1));
+        let stride = q.usize(1, 3);
+        let g = Conv2dGeom { in_c: c, in_h: h, in_w: w, kernel: k, stride, pad };
+        let n = g.col_rows() * g.col_cols();
+
+        let img = q.f32_vec(c * h * w, -1.0, 1.0);
+        let mut col_serial = vec![0.0f32; n];
+        im2col_with_threads(&img, &g, &mut col_serial, 1);
+
+        let colm = q.f32_vec(n, -1.0, 1.0);
+        // col2im_acc accumulates into a randomly pre-filled image (the
+        // executor hands over slots already holding sibling gradients).
+        let img0 = q.f32_vec(c * h * w, -1.0, 1.0);
+        let mut acc_serial = img0.clone();
+        col2im_acc_with_threads(&colm, &g, &mut acc_serial, 1);
+        let mut fold_serial = vec![1.0f32; c * h * w];
+        col2im_with_threads(&colm, &g, &mut fold_serial, 1);
+
+        for &t in &[2usize, 4, 7] {
+            let mut col_t = vec![0.0f32; n];
+            im2col_with_threads(&img, &g, &mut col_t, t);
+            prop_assert(
+                col_t == col_serial,
+                &format!("im2col t={t} differs (c={c} h={h} w={w} k={k} s={stride} p={pad})"),
+            )?;
+            let mut acc_t = img0.clone();
+            col2im_acc_with_threads(&colm, &g, &mut acc_t, t);
+            prop_assert(
+                acc_t == acc_serial,
+                &format!("col2im_acc t={t} differs (c={c} h={h} w={w} k={k} s={stride} p={pad})"),
+            )?;
+            let mut fold_t = vec![1.0f32; c * h * w];
+            col2im_with_threads(&colm, &g, &mut fold_t, t);
+            prop_assert(
+                fold_t == fold_serial,
+                &format!("col2im t={t} differs (c={c} h={h} w={w} k={k} s={stride} p={pad})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Degenerate conv shapes pinned explicitly: zero channels (empty
+/// matrices), 1×1 images, kernel == padded image, stride larger than the
+/// image — all must short-circuit or stripe identically at every count.
+#[test]
+fn parallel_conv_transforms_bit_identical_on_degenerate_shapes() {
+    let cases = [
+        Conv2dGeom { in_c: 0, in_h: 3, in_w: 3, kernel: 1, stride: 1, pad: 0 },
+        Conv2dGeom { in_c: 1, in_h: 1, in_w: 1, kernel: 1, stride: 1, pad: 0 },
+        Conv2dGeom { in_c: 3, in_h: 2, in_w: 2, kernel: 4, stride: 1, pad: 1 },
+        Conv2dGeom { in_c: 2, in_h: 5, in_w: 5, kernel: 1, stride: 7, pad: 0 },
+        Conv2dGeom { in_c: 7, in_h: 4, in_w: 6, kernel: 3, stride: 2, pad: 2 },
+    ];
+    for g in &cases {
+        let mut rng = Rng::new((g.in_c * 37 + g.in_h * 5 + g.kernel) as u64);
+        let img = rng.uniform_vec(g.in_c * g.in_h * g.in_w, -1.0, 1.0);
+        let n = g.col_rows() * g.col_cols();
+        let colm = rng.uniform_vec(n, -1.0, 1.0);
+        let img0 = rng.uniform_vec(g.in_c * g.in_h * g.in_w, -1.0, 1.0);
+        let mut col_serial = vec![0.0f32; n];
+        im2col_with_threads(&img, g, &mut col_serial, 1);
+        let mut acc_serial = img0.clone();
+        col2im_acc_with_threads(&colm, g, &mut acc_serial, 1);
+        for &t in &[2usize, 4, 7] {
+            let mut col_t = vec![0.0f32; n];
+            im2col_with_threads(&img, g, &mut col_t, t);
+            assert!(col_t == col_serial, "im2col t={t} differs on {g:?}");
+            let mut acc_t = img0.clone();
+            col2im_acc_with_threads(&colm, g, &mut acc_t, t);
+            assert!(acc_t == acc_serial, "col2im_acc t={t} differs on {g:?}");
         }
     }
 }
