@@ -5,16 +5,56 @@
 
 use singa::utils::timer::time_iters;
 
-/// Run the steady-state allocation/throughput probe and write the
-/// `BENCH_alloc.json` artifact at the repo root.
-fn emit_alloc_probe() {
-    let json = singa::bench::alloc_probe_json(20);
+/// Run the steady-state allocation/throughput probes — the single-process
+/// model loops AND the distributed `run_job` loop across sandblaster/
+/// downpour/hogwild topologies — and write the `BENCH_alloc.json` artifact
+/// at the repo root. With `check`, assert the acceptance bar: zero blob /
+/// pack / executor-scratch allocations per model step and zero blob
+/// allocations per worker group per distributed step after warm-up (the CI
+/// alloc-regression job runs this under `PALLAS_NUM_THREADS=1` and `=4`).
+fn emit_alloc_probe(check: bool) {
+    let models = singa::bench::alloc_probe(20);
+    let dist = singa::bench::distributed_alloc_probe(3, 12);
+    let json = singa::bench::alloc_probe_json_from(&models, &dist);
     println!("==== steady-state allocation probe ====");
     print!("{json}");
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_alloc.json");
     match std::fs::write(&path, &json) {
         Ok(()) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    if check {
+        for p in &models {
+            assert_eq!(
+                p.steady_allocs_per_step, 0.0,
+                "{}: steady-state blob allocations must be zero",
+                p.model
+            );
+            assert_eq!(
+                p.steady_pack_allocs_per_step, 0.0,
+                "{}: steady-state pack allocations must be zero",
+                p.model
+            );
+            assert_eq!(
+                p.steady_exec_allocs_per_step, 0.0,
+                "{}: steady-state executor-scratch allocations must be zero",
+                p.model
+            );
+        }
+        for d in &dist {
+            for (g, &a) in d.steady_allocs.iter().enumerate() {
+                assert_eq!(
+                    a, 0,
+                    "{}: worker group {g} allocated {a} blobs after warm-up",
+                    d.topology
+                );
+            }
+        }
+        println!(
+            "alloc check passed: {} models and {} run_job topologies allocation-free",
+            models.len(),
+            dist.len()
+        );
     }
 }
 
@@ -72,10 +112,11 @@ fn emit_conv_probe() {
 }
 
 fn main() {
-    // `cargo bench --bench figures -- alloc` runs only the allocation probe;
-    // `-- gemm [check]` runs only the gemm scaling probe (CI smoke adds
-    // `check`); `-- conv` runs only the conv/im2col scaling probe; no
-    // argument runs everything.
+    // `cargo bench --bench figures -- alloc [check]` runs only the
+    // allocation probes (model loops + distributed run_job; the CI
+    // alloc-regression job adds `check`); `-- gemm [check]` runs only the
+    // gemm scaling probe (CI smoke adds `check`); `-- conv` runs only the
+    // conv/im2col scaling probe; no argument runs everything.
     let args: Vec<String> = std::env::args().collect();
     let has = |s: &str| args.iter().any(|a| a == s);
     if has("gemm") {
@@ -86,7 +127,7 @@ fn main() {
         emit_conv_probe();
         return;
     }
-    emit_alloc_probe();
+    emit_alloc_probe(has("check"));
     if has("alloc") {
         return;
     }

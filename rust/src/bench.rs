@@ -191,12 +191,88 @@ pub fn alloc_probe(steps: usize) -> Vec<AllocProbe> {
     out
 }
 
-/// `alloc_probe` serialized as the `BENCH_alloc.json` artifact emitted by
-/// `cargo bench --bench figures -- alloc`.
+// ---------------------------------------------------------------------------
+// Distributed steady-state allocation probe (the worker↔server plane)
+// ---------------------------------------------------------------------------
+
+/// Result of probing one topology's full `run_job` training loop: per-group
+/// Blob allocations measured INSIDE the worker threads for every step at or
+/// after the warm-up boundary.
+#[derive(Debug, Clone)]
+pub struct DistAllocProbe {
+    pub topology: &'static str,
+    pub groups: usize,
+    /// Warm-up steps excluded per group (workspace sizing, first batch,
+    /// updater state growth happen there).
+    pub warmup_steps: u64,
+    /// Steps measured per group after warm-up.
+    pub steady_steps: u64,
+    /// Blob allocations per worker group across all measured steps — the
+    /// zero-clone parameter-plane claim; every entry must be 0.
+    pub steady_allocs: Vec<u64>,
+}
+
+/// Probe a full `run_job` across the paper's frameworks: after `warmup`
+/// steps, a distributed training step — batch refill, forward/backward,
+/// gradient aggregation, server round trip, write-back, and (for hogwild)
+/// neighbour server-group syncs — must perform zero Blob allocations in
+/// every worker group.
+pub fn distributed_alloc_probe(warmup: u64, steps: u64) -> Vec<DistAllocProbe> {
+    let cases: [(&'static str, ClusterTopology); 3] = [
+        ("sandblaster(1,1)", ClusterTopology::sandblaster(1, 1)),
+        ("downpour(3,1,2)", ClusterTopology::downpour(3, 1, 2)),
+        ("hogwild(2,1,10)", ClusterTopology::hogwild(2, 1, 10)),
+    ];
+    let data: Arc<dyn DataSource> = Arc::new(SyntheticDigits::new(64, 5, 77));
+    cases
+        .iter()
+        .map(|&(name, ref topo)| {
+            let b = NetBuilder::new()
+                .add(LayerConf::new("data", LayerKind::Input { shape: vec![16, 64] }, &[]))
+                .add(LayerConf::new("label", LayerKind::Input { shape: vec![16] }, &[]))
+                .add(LayerConf::new(
+                    "h1",
+                    LayerKind::InnerProduct { out: 32, act: Activation::Relu, init_std: 0.1 },
+                    &["data"],
+                ))
+                .add(LayerConf::new(
+                    "logits",
+                    LayerKind::InnerProduct { out: 5, act: Activation::Identity, init_std: 0.1 },
+                    &["h1"],
+                ))
+                .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]));
+            let mut conf = JobConf::new("dist_alloc_probe", b);
+            conf.batch_size = 16;
+            conf.iters = warmup + steps;
+            conf.updater = UpdaterConf::sgd(0.1);
+            conf.topology = topo.clone();
+            conf.alloc_probe_from = Some(warmup);
+            let report = run_job(&conf, data.clone());
+            DistAllocProbe {
+                topology: name,
+                groups: topo.nworker_groups,
+                warmup_steps: warmup,
+                steady_steps: steps,
+                steady_allocs: report.steady_allocs,
+            }
+        })
+        .collect()
+}
+
+/// `alloc_probe` + `distributed_alloc_probe` serialized as the
+/// `BENCH_alloc.json` artifact emitted by `cargo bench --bench figures --
+/// alloc`.
 pub fn alloc_probe_json(steps: usize) -> String {
-    let probes = alloc_probe(steps);
+    let models = alloc_probe(steps);
+    let dist = distributed_alloc_probe(3, steps.max(4) as u64);
+    alloc_probe_json_from(&models, &dist)
+}
+
+/// Serialize already-run probes (lets the bench binary reuse the probe
+/// results it asserts on for the `check` gate).
+pub fn alloc_probe_json_from(models: &[AllocProbe], dist: &[DistAllocProbe]) -> String {
     let mut s = String::from("{\n  \"probe\": \"steady_state_alloc\",\n  \"models\": [\n");
-    for (i, p) in probes.iter().enumerate() {
+    for (i, p) in models.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"model\": \"{}\", \"warmup_allocs\": {}, \
              \"steady_allocs_per_step\": {:.3}, \"warmup_pack_allocs\": {}, \
@@ -211,7 +287,21 @@ pub fn alloc_probe_json(steps: usize) -> String {
             p.steady_exec_allocs_per_step,
             p.step_ms,
             p.steps,
-            if i + 1 == probes.len() { "" } else { "," }
+            if i + 1 == models.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ],\n  \"distributed\": [\n");
+    for (i, d) in dist.iter().enumerate() {
+        let allocs: Vec<String> = d.steady_allocs.iter().map(|a| a.to_string()).collect();
+        s.push_str(&format!(
+            "    {{\"topology\": \"{}\", \"groups\": {}, \"warmup_steps\": {}, \
+             \"steady_steps\": {}, \"steady_allocs_per_group\": [{}]}}{}\n",
+            d.topology,
+            d.groups,
+            d.warmup_steps,
+            d.steady_steps,
+            allocs.join(", "),
+            if i + 1 == dist.len() { "" } else { "," }
         ));
     }
     s.push_str("  ]\n}\n");
@@ -1108,6 +1198,24 @@ mod tests {
         }
     }
 
+    /// THE acceptance probe for the zero-clone parameter plane: after
+    /// warm-up, one full `run_job` training step — including the worker↔
+    /// server round trip and hogwild's neighbour syncs — performs zero Blob
+    /// allocations in every worker group, across all three frameworks.
+    #[test]
+    fn distributed_training_is_allocation_free() {
+        for d in distributed_alloc_probe(3, 12) {
+            assert_eq!(d.steady_allocs.len(), d.groups);
+            for (g, &a) in d.steady_allocs.iter().enumerate() {
+                assert_eq!(
+                    a, 0,
+                    "{}: worker group {g} allocated {a} blobs across {} post-warm-up steps",
+                    d.topology, d.steady_steps
+                );
+            }
+        }
+    }
+
     #[test]
     fn alloc_probe_json_is_well_formed() {
         let j = alloc_probe_json(2);
@@ -1116,6 +1224,12 @@ mod tests {
         assert!(j.contains("\"cifar_convnet\""));
         assert!(j.contains("\"steady_pack_allocs_per_step\""));
         assert!(j.contains("\"steady_exec_allocs_per_step\""));
+        // distributed run_job probe rides in the same artifact
+        assert!(j.contains("\"distributed\""));
+        assert!(j.contains("\"sandblaster(1,1)\""));
+        assert!(j.contains("\"downpour(3,1,2)\""));
+        assert!(j.contains("\"hogwild(2,1,10)\""));
+        assert!(j.contains("\"steady_allocs_per_group\""));
         // trivially parseable by the in-repo JSON reader
         assert!(crate::utils::json::Json::parse(&j).is_ok());
     }

@@ -10,6 +10,8 @@
 //! | Downpour   (Fig 11c) | G > 1         | W/G        | 1 (global)    |
 //! | Hogwild    (Fig 11d) | G > 1         | W/G        | G (local)     |
 
+use crate::comm::{CostModel, LinkModel};
+
 /// The four classic frameworks as presets; `Custom` covers the full design
 /// space (the paper's hybrid framework search).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -111,6 +113,20 @@ impl ClusterTopology {
     pub fn server_group_of(&self, worker_group: usize) -> usize {
         worker_group % self.nserver_groups
     }
+
+    /// The link parameter traffic travels over in this topology: a single
+    /// co-located server group shares memory with its workers, while
+    /// multi-server-group or sharded-server deployments reach their servers
+    /// across the cluster network. Single source of truth for the fetch and
+    /// push paths (previously duplicated inline conditionals that could
+    /// drift apart).
+    pub fn param_link<'a>(&self, cost: &'a CostModel) -> &'a LinkModel {
+        if self.nserver_groups > 1 || self.nservers_per_group > 1 {
+            &cost.network
+        } else {
+            &cost.intra_node
+        }
+    }
 }
 
 #[cfg(test)]
@@ -139,6 +155,20 @@ mod tests {
         assert!(ClusterTopology::sandblaster(16, 4).is_synchronous());
         assert!(ClusterTopology::allreduce(32, 4).is_synchronous());
         assert!(!ClusterTopology::downpour(2, 1, 1).is_synchronous());
+    }
+
+    #[test]
+    fn param_link_picks_network_only_for_remote_servers() {
+        let cost = CostModel::numa_server();
+        // one local server group, one shard: shared memory
+        let local = ClusterTopology::sandblaster(4, 1);
+        assert_eq!(*local.param_link(&cost), cost.intra_node);
+        // sharded servers cross the network
+        let sharded = ClusterTopology::sandblaster(4, 3);
+        assert_eq!(*sharded.param_link(&cost), cost.network);
+        // multiple server groups cross the network
+        let hogwild = ClusterTopology::hogwild(2, 1, 10);
+        assert_eq!(*hogwild.param_link(&cost), cost.network);
     }
 
     #[test]

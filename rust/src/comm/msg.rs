@@ -18,16 +18,44 @@ pub enum Msg {
 }
 
 impl Msg {
+    /// Fixed per-message header bytes (metadata, routing ids).
+    pub const HEADER: usize = 64;
+
     /// Wire size in bytes: payload + a fixed 64-byte header (metadata,
     /// routing ids). Drives the communication cost model.
     pub fn byte_size(&self) -> usize {
-        const HEADER: usize = 64;
         match self {
-            Msg::Put { param, value, .. } => HEADER + param.len() + value.byte_size(),
-            Msg::Update { param, grad, .. } => HEADER + param.len() + grad.byte_size(),
-            Msg::Get { param } => HEADER + param.len(),
-            Msg::Response { param, value, .. } => HEADER + param.len() + value.byte_size(),
+            Msg::Put { param, value, .. } => Msg::put_wire_size(param, value),
+            Msg::Update { param, grad, .. } => Msg::update_wire_size(param, grad),
+            Msg::Get { param } => Msg::get_wire_size(param),
+            Msg::Response { param, value, .. } => Msg::HEADER + param.len() + value.byte_size(),
         }
+    }
+
+    // Wire sizes computable WITHOUT materializing a message: the server's
+    // `_into` fast path charges the ledger with these instead of cloning
+    // payload blobs into `Msg`-owned fields just to measure them.
+
+    /// Wire size of a `Put` registering `value` under `param`.
+    pub fn put_wire_size(param: &str, value: &Blob) -> usize {
+        Msg::HEADER + param.len() + value.byte_size()
+    }
+
+    /// Wire size of an `Update` carrying `grad` for `param`.
+    pub fn update_wire_size(param: &str, grad: &Blob) -> usize {
+        Msg::HEADER + param.len() + grad.byte_size()
+    }
+
+    /// Wire size of a `Get` for `param`.
+    pub fn get_wire_size(param: &str) -> usize {
+        Msg::HEADER + param.len()
+    }
+
+    /// Ledger accounting for the value flowing back to the worker: payload
+    /// plus header (the name rides in the request echo, matching the
+    /// historical `value.byte_size() + 64` server arithmetic).
+    pub fn response_wire_size(value: &Blob) -> usize {
+        Msg::HEADER + value.byte_size()
     }
 
     pub fn param(&self) -> &str {
@@ -51,5 +79,26 @@ mod tests {
         let u = Msg::Update { param: "w".into(), grad: Blob::zeros(&[10]), step: 0 };
         assert_eq!(u.byte_size(), 64 + 1 + 40);
         assert_eq!(u.param(), "w");
+    }
+
+    /// The clone-free size helpers must agree with the sizes of the
+    /// materialized messages they stand in for.
+    #[test]
+    fn wire_size_helpers_match_materialized_messages() {
+        let v = Blob::zeros(&[7]);
+        assert_eq!(
+            Msg::put_wire_size("conv/w", &v),
+            Msg::Put { param: "conv/w".into(), value: v.clone(), lr_mult: 1.0, wd_mult: 1.0 }
+                .byte_size()
+        );
+        assert_eq!(
+            Msg::update_wire_size("conv/w", &v),
+            Msg::Update { param: "conv/w".into(), grad: v.clone(), step: 3 }.byte_size()
+        );
+        assert_eq!(
+            Msg::get_wire_size("conv/w"),
+            Msg::Get { param: "conv/w".into() }.byte_size()
+        );
+        assert_eq!(Msg::response_wire_size(&v), 64 + 28);
     }
 }

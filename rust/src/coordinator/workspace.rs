@@ -1,0 +1,253 @@
+//! Persistent per-worker-group parameter workspace (the ROADMAP's
+//! "partition-aware workspaces" item): aggregation sums, fresh-value slots,
+//! and per-logical-param routing resolved once at job start from the
+//! replica's parameter list, so the steady-state worker↔server exchange —
+//! aggregate dim-0 shard gradients, push, copy fresh values back into every
+//! replica — performs zero Blob allocations.
+//!
+//! The group stub of the paper (§5.1: "aggregates local messages and
+//! forwards them") previously re-materialized its aggregation state every
+//! iteration: a fresh `HashMap`, one `grad.clone()` per logical param, and
+//! 3–4 more Blob clones per value round-tripped through the server. This is
+//! the planned-executor pattern (PR 1) applied across the distributed
+//! boundary instead.
+
+use crate::model::partition::logical_slot_map;
+use crate::model::NeuralNet;
+use crate::tensor::Blob;
+
+/// One logical parameter's persistent slots.
+pub struct ParamSlot {
+    /// Logical (server-side) parameter name, e.g. `"h1/weight"`.
+    pub logical: String,
+    /// Replica gradient sum; after [`ParamWorkspace::aggregate_grads`] it
+    /// holds the mean gradient shipped to the server.
+    pub sum: Blob,
+    /// Fresh value the server writes back (via `update_into`/`get_into`).
+    pub fresh: Blob,
+    /// Number of net params (dim-0 replicas) contributing gradients.
+    /// (The lr/wd multipliers live server-side, registered at `put` time.)
+    pub replicas: usize,
+}
+
+/// Persistent aggregation + routing state for one worker group's replica
+/// net. Built once per group thread; every per-step method is Blob-
+/// allocation-free once the slots are sized.
+pub struct ParamWorkspace {
+    slots: Vec<ParamSlot>,
+    /// net param index (positional, `NeuralNet::params` order) → slot.
+    param_slot: Vec<usize>,
+    /// Per-step "slot already written" flags (reset, never reallocated).
+    seen: Vec<bool>,
+}
+
+impl ParamWorkspace {
+    /// Resolve the logical routing for `net`'s parameter list and size the
+    /// aggregation/fresh buffers. The net's param order must stay stable
+    /// for the workspace's lifetime (it is: the layer graph is fixed after
+    /// `build`).
+    pub fn new(net: &NeuralNet) -> ParamWorkspace {
+        let params = net.params();
+        let names: Vec<&str> = params.iter().map(|p| p.name.as_str()).collect();
+        let (logicals, param_slot) = logical_slot_map(&names);
+        let mut slots: Vec<ParamSlot> = logicals
+            .into_iter()
+            .map(|logical| ParamSlot {
+                logical,
+                sum: Blob::default(),
+                fresh: Blob::default(),
+                replicas: 0,
+            })
+            .collect();
+        for (j, p) in params.iter().enumerate() {
+            let s = &mut slots[param_slot[j]];
+            if s.replicas == 0 {
+                s.sum.resize(p.data.shape());
+                s.fresh.resize(p.data.shape());
+            } else {
+                assert_eq!(
+                    s.sum.shape(),
+                    p.data.shape(),
+                    "replica shape mismatch for {} (logical {})",
+                    p.name,
+                    s.logical
+                );
+            }
+            s.replicas += 1;
+        }
+        let seen = vec![false; slots.len()];
+        ParamWorkspace { slots, param_slot, seen }
+    }
+
+    /// Sum `net`'s per-replica gradients into the slots and average: after
+    /// this every slot's `sum` holds the mean gradient over its replicas —
+    /// the value the group stub forwards to the server. Zero Blob
+    /// allocations; arithmetic order matches the historical HashMap path
+    /// (first replica copied, later replicas `add_assign`ed in param order,
+    /// then one `scale(1/count)`), so trajectories are bit-identical.
+    pub fn aggregate_grads(&mut self, net: &NeuralNet) {
+        self.seen.iter_mut().for_each(|s| *s = false);
+        for (j, p) in net.params().iter().enumerate() {
+            let si = self.param_slot[j];
+            let slot = &mut self.slots[si];
+            if self.seen[si] {
+                slot.sum.add_assign(&p.grad);
+            } else {
+                slot.sum.copy_from(&p.grad);
+                self.seen[si] = true;
+            }
+        }
+        for slot in &mut self.slots {
+            slot.sum.scale(1.0 / slot.replicas as f32);
+        }
+    }
+
+    /// Copy each slot's fresh server value back into every local replica,
+    /// bumping replica versions. Zero Blob allocations.
+    pub fn write_back(&self, net: &mut NeuralNet) {
+        for (j, p) in net.params_mut().into_iter().enumerate() {
+            p.data.copy_from(&self.slots[self.param_slot[j]].fresh);
+            p.version += 1;
+        }
+    }
+
+    /// Copy each slot's fresh value into every replica WITHOUT bumping
+    /// versions (the initial fetch: replicas adopt the server state).
+    /// Asserts server/local shape agreement, like the historical fetch.
+    pub fn distribute_fresh(&self, net: &mut NeuralNet) {
+        for (j, p) in net.params_mut().into_iter().enumerate() {
+            let slot = &self.slots[self.param_slot[j]];
+            assert_eq!(
+                slot.fresh.shape(),
+                p.data.shape(),
+                "server/local shape mismatch for {} (logical {})",
+                p.name,
+                slot.logical
+            );
+            p.data.copy_from(&slot.fresh);
+        }
+    }
+
+    pub fn slots(&self) -> &[ParamSlot] {
+        &self.slots
+    }
+
+    pub fn slots_mut(&mut self) -> impl Iterator<Item = &mut ParamSlot> {
+        self.slots.iter_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::{Activation, LayerConf, LayerKind};
+    use crate::model::partition::{logical_param_name, partition_net};
+    use crate::model::NetBuilder;
+    use crate::utils::rng::Rng;
+    use std::collections::HashMap;
+
+    fn partitioned_mlp(workers: usize) -> NeuralNet {
+        let mut b = NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![8, 6] }, &[]))
+            .add(LayerConf::new("label", LayerKind::Input { shape: vec![8] }, &[]))
+            .add(LayerConf::new(
+                "h1",
+                LayerKind::InnerProduct { out: 10, act: Activation::Relu, init_std: 0.2 },
+                &["data"],
+            ))
+            .add(LayerConf::new(
+                "logits",
+                LayerKind::InnerProduct { out: 4, act: Activation::Identity, init_std: 0.2 },
+                &["h1"],
+            ))
+            .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]));
+        for c in b.confs_mut().iter_mut() {
+            if ["h1", "logits", "loss"].contains(&c.name.as_str()) {
+                c.partition_dim = Some(0);
+            }
+        }
+        let (bp, _) = partition_net(&b, workers);
+        bp.build(&mut Rng::new(11))
+    }
+
+    /// The workspace aggregation must reproduce the historical HashMap
+    /// recipe (clone-first, add_assign-later, scale by 1/count) bit for
+    /// bit, including replica counting on a dim-0 partitioned net.
+    #[test]
+    fn aggregation_matches_hashmap_reference_bitwise() {
+        let mut net = partitioned_mlp(2);
+        // Give every param a distinct, deterministic gradient.
+        let mut rng = Rng::new(5);
+        for p in net.params_mut() {
+            let n = p.grad.len();
+            p.grad = Blob::from_vec(p.data.shape(), rng.uniform_vec(n, -1.0, 1.0));
+        }
+        // Historical reference.
+        let mut agg: HashMap<String, (Blob, usize)> = HashMap::new();
+        for p in net.params() {
+            let logical = logical_param_name(&p.name);
+            match agg.get_mut(&logical) {
+                Some((sum, count)) => {
+                    sum.add_assign(&p.grad);
+                    *count += 1;
+                }
+                None => {
+                    agg.insert(logical, (p.grad.clone(), 1));
+                }
+            }
+        }
+        for (_, (sum, count)) in agg.iter_mut() {
+            sum.scale(1.0 / *count as f32);
+        }
+
+        let mut ws = ParamWorkspace::new(&net);
+        ws.aggregate_grads(&net);
+        assert_eq!(ws.slots().len(), agg.len());
+        for slot in ws.slots() {
+            let (want, count) = agg.get(&slot.logical).expect("slot has a reference entry");
+            assert_eq!(slot.replicas, *count, "{}", slot.logical);
+            assert_eq!(slot.sum.shape(), want.shape());
+            for (x, y) in slot.sum.data().iter().zip(want.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{} diverged", slot.logical);
+            }
+        }
+    }
+
+    /// Steady-state aggregate + write-back cycles allocate zero Blobs.
+    #[test]
+    fn steady_state_cycle_is_allocation_free() {
+        let mut net = partitioned_mlp(2);
+        let mut ws = ParamWorkspace::new(&net);
+        let mut cycle = |ws: &mut ParamWorkspace, net: &mut NeuralNet| {
+            ws.aggregate_grads(net);
+            for slot in ws.slots_mut() {
+                slot.fresh.copy_from(&slot.sum); // stand-in for the server reply
+            }
+            ws.write_back(net);
+        };
+        cycle(&mut ws, &mut net); // warm (nothing to size — already sized at new)
+        let before = Blob::alloc_count();
+        for _ in 0..5 {
+            cycle(&mut ws, &mut net);
+        }
+        assert_eq!(Blob::alloc_count(), before, "workspace cycle must not allocate");
+    }
+
+    /// Write-back copies one slot value into every replica and bumps each
+    /// replica's version; the unpartitioned case is one replica per slot.
+    #[test]
+    fn write_back_updates_all_replicas() {
+        let mut net = partitioned_mlp(3);
+        let mut ws = ParamWorkspace::new(&net);
+        for (i, slot) in ws.slots.iter_mut().enumerate() {
+            slot.fresh.fill(i as f32 + 1.0);
+        }
+        let versions_before: Vec<u64> = net.params().iter().map(|p| p.version).collect();
+        ws.write_back(&mut net);
+        for (j, p) in net.params().iter().enumerate() {
+            let slot = &ws.slots()[ws.param_slot[j]];
+            assert_eq!(p.data.data(), slot.fresh.data(), "{}", p.name);
+            assert_eq!(p.version, versions_before[j] + 1);
+        }
+    }
+}

@@ -21,6 +21,39 @@ pub trait DataSource: Send + Sync {
     /// The `index`-th mini-batch of `batch` examples. Deterministic:
     /// `(index, batch)` fully determines the content.
     fn batch(&self, index: u64, batch: usize) -> HashMap<String, Blob>;
+
+    /// Fill `out` with the `index`-th mini-batch, reusing its existing blob
+    /// buffers. Must produce exactly the values [`DataSource::batch`] would
+    /// (the coordinator's trajectories may not depend on which entry point
+    /// the caller used). The default materializes a fresh batch; sources on
+    /// the coordinator's hot path override it allocation-free so the
+    /// steady-state training step allocates no Blobs.
+    fn batch_into(&self, index: u64, batch: usize, out: &mut HashMap<String, Blob>) {
+        *out = self.batch(index, batch);
+    }
+}
+
+/// Move two named slots out of `out` for in-place refilling (inserting
+/// empty defaults on first use), returning owned blobs whose buffers are
+/// reused across calls. Pair with [`restore_slots`].
+fn take_slots(out: &mut HashMap<String, Blob>, a: &str, b: &str) -> (Blob, Blob) {
+    if out.is_empty() {
+        out.insert(a.to_string(), Blob::default());
+        out.insert(b.to_string(), Blob::default());
+    }
+    let first = std::mem::take(
+        out.get_mut(a).unwrap_or_else(|| panic!("batch_into: missing '{a}' slot")),
+    );
+    let second = std::mem::take(
+        out.get_mut(b).unwrap_or_else(|| panic!("batch_into: missing '{b}' slot")),
+    );
+    (first, second)
+}
+
+/// Move refilled blobs back into their slots (no rehash, no Blob clones).
+fn restore_slots(out: &mut HashMap<String, Blob>, a: &str, va: Blob, b: &str, vb: Blob) {
+    *out.get_mut(a).unwrap() = va;
+    *out.get_mut(b).unwrap() = vb;
 }
 
 /// CIFAR-like image classification: `[b, 3, h, w]` images in 10 classes.
@@ -79,6 +112,24 @@ impl SyntheticImages {
     pub fn image_dim(&self) -> usize {
         self.channels * self.h * self.w
     }
+
+    /// The single batch recipe behind both entry points: resize the slots
+    /// and write the deterministic sample stream in place.
+    fn fill(&self, index: u64, batch: usize, data: &mut Blob, label: &mut Blob) {
+        let mut rng = Rng::with_stream(self.seed ^ index.wrapping_mul(0x9e3779b9), 7);
+        let dim = self.image_dim();
+        data.resize(&[batch, self.channels, self.h, self.w]);
+        label.resize(&[batch]);
+        let xs = data.data_mut();
+        let ys = label.data_mut();
+        for i in 0..batch {
+            let c = rng.below(self.classes);
+            ys[i] = c as f32;
+            for (j, &p) in self.prototypes[c].iter().enumerate() {
+                xs[i * dim + j] = p + self.noise * rng.gaussian();
+            }
+        }
+    }
 }
 
 impl DataSource for SyntheticImages {
@@ -87,24 +138,15 @@ impl DataSource for SyntheticImages {
     }
 
     fn batch(&self, index: u64, batch: usize) -> HashMap<String, Blob> {
-        let mut rng = Rng::with_stream(self.seed ^ index.wrapping_mul(0x9e3779b9), 7);
-        let dim = self.image_dim();
-        let mut xs = Vec::with_capacity(batch * dim);
-        let mut ys = Vec::with_capacity(batch);
-        for _ in 0..batch {
-            let c = rng.below(self.classes);
-            ys.push(c as f32);
-            for &p in &self.prototypes[c] {
-                xs.push(p + self.noise * rng.gaussian());
-            }
-        }
         let mut m = HashMap::new();
-        m.insert(
-            "data".to_string(),
-            Blob::from_vec(&[batch, self.channels, self.h, self.w], xs),
-        );
-        m.insert("label".to_string(), Blob::from_vec(&[batch], ys));
+        self.batch_into(index, batch, &mut m);
         m
+    }
+
+    fn batch_into(&self, index: u64, batch: usize, out: &mut HashMap<String, Blob>) {
+        let (mut data, mut label) = take_slots(out, "data", "label");
+        self.fill(index, batch, &mut data, &mut label);
+        restore_slots(out, "data", data, "label", label);
     }
 }
 
@@ -129,6 +171,24 @@ impl SyntheticDigits {
             .collect();
         SyntheticDigits { dim, classes, prototypes, seed }
     }
+
+    /// The single batch recipe behind both entry points: resize the slots
+    /// and write the deterministic sample stream in place.
+    fn fill(&self, index: u64, batch: usize, data: &mut Blob, label: &mut Blob) {
+        let mut rng = Rng::with_stream(self.seed ^ index.wrapping_mul(0x51ed), 11);
+        data.resize(&[batch, self.dim]);
+        label.resize(&[batch]);
+        let xs = data.data_mut();
+        let ys = label.data_mut();
+        for i in 0..batch {
+            let c = rng.below(self.classes);
+            ys[i] = c as f32;
+            for (j, &p) in self.prototypes[c].iter().enumerate() {
+                // flip 3% of pixels
+                xs[i * self.dim + j] = if rng.uniform() < 0.03 { 1.0 - p } else { p };
+            }
+        }
+    }
 }
 
 impl DataSource for SyntheticDigits {
@@ -137,22 +197,15 @@ impl DataSource for SyntheticDigits {
     }
 
     fn batch(&self, index: u64, batch: usize) -> HashMap<String, Blob> {
-        let mut rng = Rng::with_stream(self.seed ^ index.wrapping_mul(0x51ed), 11);
-        let mut xs = Vec::with_capacity(batch * self.dim);
-        let mut ys = Vec::with_capacity(batch);
-        for _ in 0..batch {
-            let c = rng.below(self.classes);
-            ys.push(c as f32);
-            for &p in &self.prototypes[c] {
-                // flip 3% of pixels
-                let v = if rng.uniform() < 0.03 { 1.0 - p } else { p };
-                xs.push(v);
-            }
-        }
         let mut m = HashMap::new();
-        m.insert("data".to_string(), Blob::from_vec(&[batch, self.dim], xs));
-        m.insert("label".to_string(), Blob::from_vec(&[batch], ys));
+        self.batch_into(index, batch, &mut m);
         m
+    }
+
+    fn batch_into(&self, index: u64, batch: usize, out: &mut HashMap<String, Blob>) {
+        let (mut data, mut label) = take_slots(out, "data", "label");
+        self.fill(index, batch, &mut data, &mut label);
+        restore_slots(out, "data", data, "label", label);
     }
 }
 
@@ -407,6 +460,37 @@ mod tests {
         assert_eq!(b["text"].shape(), &[8, 16]);
         assert_eq!(b["label"].shape(), &[8]);
         assert!(b["text"].data().iter().all(|&v| v >= 0.0));
+    }
+
+    /// `batch_into` must produce exactly the blobs `batch` would (the
+    /// coordinator's trajectories may not depend on the entry point), and
+    /// refills after the first must allocate nothing.
+    #[test]
+    fn batch_into_matches_batch_and_reuses_buffers() {
+        let digits = SyntheticDigits::new(64, 5, 77);
+        let images = SyntheticImages::new(4, 3, 8, 8, 0.2, 42);
+        let sources: [&dyn DataSource; 2] = [&digits, &images];
+        for src in sources {
+            let mut reused = HashMap::new();
+            for index in [0u64, 3, 9] {
+                src.batch_into(index, 6, &mut reused);
+                let fresh = src.batch(index, 6);
+                assert_eq!(fresh.len(), reused.len());
+                for (name, want) in &fresh {
+                    let got = &reused[name];
+                    assert_eq!(got.shape(), want.shape(), "{name}");
+                    for (x, y) in got.data().iter().zip(want.data()) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{name} @ index {index}");
+                    }
+                }
+            }
+            // Steady state: same-size refills perform zero Blob allocations.
+            let before = Blob::alloc_count();
+            for index in 10..15u64 {
+                src.batch_into(index, 6, &mut reused);
+            }
+            assert_eq!(Blob::alloc_count(), before, "refills must not allocate");
+        }
     }
 
     #[test]

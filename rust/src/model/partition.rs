@@ -53,6 +53,28 @@ pub fn logical_param_name(name: &str) -> String {
     }
 }
 
+/// Stable logical-name → slot resolution for a replica's parameter list:
+/// returns `(slots, param_slot)` where `slots[s]` is the s-th distinct
+/// logical name in first-appearance order and `param_slot[j]` is the slot
+/// of the j-th parameter. Worker groups resolve this once at job start and
+/// index by position every step afterwards (the zero-clone aggregation
+/// path), so the mapping must be deterministic for a given name sequence —
+/// first-appearance order is, HashMap iteration order is not.
+pub fn logical_slot_map(param_names: &[&str]) -> (Vec<String>, Vec<usize>) {
+    let mut slots: Vec<String> = Vec::new();
+    let mut index: HashMap<String, usize> = HashMap::new();
+    let mut param_slot = Vec::with_capacity(param_names.len());
+    for name in param_names {
+        let logical = logical_param_name(name);
+        let slot = *index.entry(logical).or_insert_with_key(|l| {
+            slots.push(l.clone());
+            slots.len() - 1
+        });
+        param_slot.push(slot);
+    }
+    (slots, param_slot)
+}
+
 /// Partition a net across `num_workers` workers. Layers with
 /// `partition_dim = Some(d)` are split into `num_workers` sub-layers along
 /// `d`; unsplit layers stay at their configured location (default 0).
@@ -408,6 +430,28 @@ mod tests {
         assert_eq!(logical_param_name("fc1#f1/weight"), "fc1#f1/weight");
         assert_eq!(logical_param_name("fc1/weight"), "fc1/weight");
         assert_eq!(logical_param_name("conv#b10"), "conv");
+    }
+
+    #[test]
+    fn logical_slot_map_is_stable_and_dedups_replicas() {
+        let names = [
+            "h1#b0/weight",
+            "h1#b0/bias",
+            "h1#b1/weight",
+            "h1#b1/bias",
+            "logits#f0/weight",
+            "logits#f1/weight",
+        ];
+        let (slots, param_slot) = logical_slot_map(&names);
+        // First-appearance order; dim-0 replicas share a slot, dim-1
+        // slices keep their own.
+        assert_eq!(
+            slots,
+            vec!["h1/weight", "h1/bias", "logits#f0/weight", "logits#f1/weight"]
+        );
+        assert_eq!(param_slot, vec![0, 1, 0, 1, 2, 3]);
+        // Deterministic across calls (positional contract).
+        assert_eq!(logical_slot_map(&names), (slots, param_slot));
     }
 
     #[test]

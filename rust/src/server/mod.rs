@@ -16,7 +16,12 @@ use crate::comm::{ByteLedger, Msg};
 use crate::tensor::Blob;
 use crate::updater::{Updater, UpdaterConf};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Global creation counter giving every [`ServerGroup`] a unique id — the
+/// fixed total order [`ServerGroup::sync_with`] acquires shard locks in.
+static GROUP_IDS: AtomicU64 = AtomicU64::new(0);
 
 /// One parameter's server-side record.
 struct ParamEntry {
@@ -37,7 +42,9 @@ impl ServerShard {
         ServerShard { params: HashMap::new(), updater: Updater::new(conf) }
     }
 
-    /// Handle one message; returns a response for `Get`/`Update`.
+    /// Handle one message; returns a response for `Get`/`Update`. Allocating
+    /// wrapper over the `_into` cores below, preserved for tests and any
+    /// caller that wants message-owned values.
     pub fn handle(&mut self, msg: Msg) -> Option<Msg> {
         match msg {
             Msg::Put { param, value, lr_mult, wd_mult } => {
@@ -48,23 +55,42 @@ impl ServerShard {
                 None
             }
             Msg::Update { param, grad, step } => {
-                let e = self
-                    .params
-                    .get_mut(&param)
-                    .unwrap_or_else(|| panic!("update for unregistered param '{param}'"));
-                self.updater.update(&param, &mut e.value, &grad, e.lr_mult, e.wd_mult, step);
-                e.version += 1;
-                Some(Msg::Response { param, value: e.value.clone(), version: e.version })
+                let mut value = Blob::default();
+                let version = self.update_into(&param, &grad, step, &mut value);
+                Some(Msg::Response { param, value, version })
             }
             Msg::Get { param } => {
-                let e = self
-                    .params
-                    .get(&param)
-                    .unwrap_or_else(|| panic!("get for unregistered param '{param}'"));
-                Some(Msg::Response { param, value: e.value.clone(), version: e.version })
+                let mut value = Blob::default();
+                let version = self.get_into(&param, &mut value);
+                Some(Msg::Response { param, value, version })
             }
             Msg::Response { .. } => None,
         }
+    }
+
+    /// Apply `grad` through the fused updater and copy the fresh value into
+    /// `out` (resized to fit; allocation-free once sized); returns the new
+    /// version. The zero-clone core behind `handle(Msg::Update)`.
+    pub fn update_into(&mut self, name: &str, grad: &Blob, step: u64, out: &mut Blob) -> u64 {
+        let e = self
+            .params
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("update for unregistered param '{name}'"));
+        self.updater.update(name, &mut e.value, grad, e.lr_mult, e.wd_mult, step);
+        e.version += 1;
+        out.copy_from(&e.value);
+        e.version
+    }
+
+    /// Copy the current value into `out`; returns the version. The
+    /// zero-clone core behind `handle(Msg::Get)`.
+    pub fn get_into(&self, name: &str, out: &mut Blob) -> u64 {
+        let e = self
+            .params
+            .get(name)
+            .unwrap_or_else(|| panic!("get for unregistered param '{name}'"));
+        out.copy_from(&e.value);
+        e.version
     }
 
     pub fn param_names(&self) -> Vec<String> {
@@ -74,21 +100,26 @@ impl ServerShard {
     pub fn value(&self, name: &str) -> Option<(&Blob, u64)> {
         self.params.get(name).map(|e| (&e.value, e.version))
     }
+}
 
-    /// Overwrite a value (used by inter-group synchronization).
-    pub fn set_value(&mut self, name: &str, value: Blob) {
-        if let Some(e) = self.params.get_mut(name) {
-            e.value = value;
-            e.version += 1;
-        }
-    }
+/// The routing table: shard assignment per param plus a running byte tally
+/// per shard, maintained at registration time so `put` never re-walks every
+/// shard's parameter map under the route lock.
+#[derive(Default)]
+struct RouteTable {
+    /// param name → (shard index, registered value bytes).
+    by_name: HashMap<String, (usize, usize)>,
+    /// Running registered-byte tally per shard.
+    shard_bytes: Vec<usize>,
 }
 
 /// A server group: `size` shards plus the routing table.
 pub struct ServerGroup {
+    /// Global creation-order id; `sync_with` locks groups in ascending id
+    /// order so concurrent neighbour syncs can never deadlock.
+    id: u64,
     shards: Vec<Mutex<ServerShard>>,
-    /// param name → shard index.
-    route: Mutex<HashMap<String, usize>>,
+    route: Mutex<RouteTable>,
     /// bytes by plane, shared with the workers' ledger.
     pub ledger: Arc<ByteLedger>,
 }
@@ -97,8 +128,12 @@ impl ServerGroup {
     pub fn new(size: usize, conf: UpdaterConf, ledger: Arc<ByteLedger>) -> ServerGroup {
         assert!(size >= 1);
         ServerGroup {
+            id: GROUP_IDS.fetch_add(1, Ordering::Relaxed),
             shards: (0..size).map(|_| Mutex::new(ServerShard::new(conf.clone()))).collect(),
-            route: Mutex::new(HashMap::new()),
+            route: Mutex::new(RouteTable {
+                by_name: HashMap::new(),
+                shard_bytes: vec![0; size],
+            }),
             ledger,
         }
     }
@@ -107,102 +142,156 @@ impl ServerGroup {
         self.shards.len()
     }
 
-    /// Register a parameter, assigning it to the shard with the least bytes
-    /// so far (size-balanced sharding).
+    /// Register a parameter, assigning it to the shard with the least
+    /// registered bytes so far (size-balanced sharding). Re-registering a
+    /// name keeps its shard and adjusts the byte tally.
     pub fn put(&self, name: &str, value: Blob, lr_mult: f32, wd_mult: f32) {
+        let bytes = value.byte_size();
         let mut route = self.route.lock().unwrap();
-        let shard = if let Some(&s) = route.get(name) {
+        let RouteTable { by_name, shard_bytes } = &mut *route;
+        let shard = if let Some(entry) = by_name.get_mut(name) {
+            let (s, old) = *entry;
+            shard_bytes[s] = shard_bytes[s] - old + bytes;
+            entry.1 = bytes;
             s
         } else {
-            // least-loaded shard by registered parameter bytes
-            let mut loads = vec![0usize; self.shards.len()];
-            for (p, &s) in route.iter() {
-                let _ = p;
-                loads[s] += 1;
-            }
-            // count bytes precisely
-            let mut byte_loads = vec![0usize; self.shards.len()];
-            for (i, sh) in self.shards.iter().enumerate() {
-                let sh = sh.lock().unwrap();
-                byte_loads[i] = sh
-                    .params
-                    .values()
-                    .map(|e| e.value.byte_size())
-                    .sum();
-            }
-            let s = byte_loads
+            let s = shard_bytes
                 .iter()
                 .enumerate()
                 .min_by_key(|(_, &b)| b)
                 .map(|(i, _)| i)
                 .unwrap();
-            route.insert(name.to_string(), s);
+            shard_bytes[s] += bytes;
+            by_name.insert(name.to_string(), (s, bytes));
             s
         };
         drop(route);
+        self.ledger.add_param(Msg::put_wire_size(name, &value));
         let msg = Msg::Put { param: name.to_string(), value, lr_mult, wd_mult };
-        self.ledger.add_param(msg.byte_size());
         self.shards[shard].lock().unwrap().handle(msg);
     }
 
     fn shard_of(&self, name: &str) -> usize {
-        *self
-            .route
+        self.route
             .lock()
             .unwrap()
+            .by_name
             .get(name)
             .unwrap_or_else(|| panic!("param '{name}' not registered"))
+            .0
     }
 
-    /// Apply a gradient; returns the fresh value and version.
+    /// Apply a gradient; returns the fresh value and version. Allocating
+    /// wrapper over [`ServerGroup::update_into`].
     pub fn update(&self, name: &str, grad: &Blob, step: u64) -> (Blob, u64) {
-        let msg = Msg::Update { param: name.to_string(), grad: grad.clone(), step };
-        self.ledger.add_param(msg.byte_size());
-        let resp = self.shards[self.shard_of(name)].lock().unwrap().handle(msg).unwrap();
-        match resp {
-            Msg::Response { value, version, .. } => {
-                self.ledger.add_param(value.byte_size() + 64);
-                (value, version)
-            }
-            _ => unreachable!(),
-        }
+        let mut value = Blob::default();
+        let version = self.update_into(name, grad, step, &mut value);
+        (value, version)
     }
 
-    /// Fetch the current value and version.
+    /// Apply a gradient and copy the fresh value into `value_out` — no
+    /// message-owned clones on either direction of the round trip; returns
+    /// the new version. Byte accounting is identical to the allocating path.
+    pub fn update_into(&self, name: &str, grad: &Blob, step: u64, value_out: &mut Blob) -> u64 {
+        self.ledger.add_param(Msg::update_wire_size(name, grad));
+        let version = self.shards[self.shard_of(name)]
+            .lock()
+            .unwrap()
+            .update_into(name, grad, step, value_out);
+        self.ledger.add_param(Msg::response_wire_size(value_out));
+        version
+    }
+
+    /// Fetch the current value and version. Allocating wrapper over
+    /// [`ServerGroup::get_into`].
     pub fn get(&self, name: &str) -> (Blob, u64) {
-        let msg = Msg::Get { param: name.to_string() };
-        self.ledger.add_param(msg.byte_size());
-        let resp = self.shards[self.shard_of(name)].lock().unwrap().handle(msg).unwrap();
-        match resp {
-            Msg::Response { value, version, .. } => {
-                self.ledger.add_param(value.byte_size() + 64);
-                (value, version)
-            }
-            _ => unreachable!(),
-        }
+        let mut value = Blob::default();
+        let version = self.get_into(name, &mut value);
+        (value, version)
+    }
+
+    /// Copy the current value into `value_out`; returns the version.
+    pub fn get_into(&self, name: &str, value_out: &mut Blob) -> u64 {
+        self.ledger.add_param(Msg::get_wire_size(name));
+        let version =
+            self.shards[self.shard_of(name)].lock().unwrap().get_into(name, value_out);
+        self.ledger.add_param(Msg::response_wire_size(value_out));
+        version
     }
 
     pub fn param_names(&self) -> Vec<String> {
-        self.route.lock().unwrap().keys().cloned().collect()
+        self.route.lock().unwrap().by_name.keys().cloned().collect()
     }
 
     /// Pairwise synchronization with a neighbouring server group
     /// (distributed Hogwild, Fig 11d): both groups converge to the mean of
-    /// their replicas. Returns bytes exchanged (both directions).
+    /// their replicas, averaged in place over the server buffers (no value
+    /// clones). Returns bytes exchanged (both directions).
+    ///
+    /// Every shard of both groups is locked for the whole exchange, in a
+    /// fixed global order (ascending group id, then shard index). Concurrent
+    /// neighbour syncs — including the reversed `b.sync_with(a)` and chains
+    /// like `a↔b` with `b↔c` — therefore serialize instead of deadlocking,
+    /// and no worker or neighbour can interleave an update between the read
+    /// and the write-back of a half-synced replica (a torn average).
     pub fn sync_with(&self, other: &ServerGroup) -> usize {
+        assert!(
+            !std::ptr::eq(self, other),
+            "sync_with requires two distinct server groups"
+        );
+        // Resolve routes before taking shard locks (route locks are never
+        // held together with shard locks in this module).
+        let pairs: Vec<(String, usize, usize)> = self
+            .param_names()
+            .into_iter()
+            .map(|n| {
+                let a = self.shard_of(&n);
+                let b = other.shard_of(&n);
+                (n, a, b)
+            })
+            .collect();
+        let (first, second) = if self.id < other.id { (self, other) } else { (other, self) };
+        let mut first_guards: Vec<_> = first.shards.iter().map(|s| s.lock().unwrap()).collect();
+        let mut second_guards: Vec<_> = second.shards.iter().map(|s| s.lock().unwrap()).collect();
+        let (self_guards, other_guards) = if std::ptr::eq(first, self) {
+            (&mut first_guards, &mut second_guards)
+        } else {
+            (&mut second_guards, &mut first_guards)
+        };
         let mut bytes = 0;
-        for name in self.param_names() {
-            let (a, _) = self.get(&name);
-            let (b, _) = other.get(&name);
-            let mut mean = a.clone();
-            mean.add_assign(&b);
-            mean.scale(0.5);
-            bytes += 2 * mean.byte_size();
-            self.shards[self.shard_of(&name)].lock().unwrap().set_value(&name, mean.clone());
-            other.shards[other.shard_of(&name)].lock().unwrap().set_value(&name, mean);
+        for (name, sa, sb) in &pairs {
+            let ea = self_guards[*sa]
+                .params
+                .get_mut(name)
+                .unwrap_or_else(|| panic!("sync_with: param '{name}' missing from own shard"));
+            let eb = other_guards[*sb]
+                .params
+                .get_mut(name)
+                .unwrap_or_else(|| panic!("sync_with: param '{name}' missing from neighbour"));
+            assert_eq!(
+                ea.value.shape(),
+                eb.value.shape(),
+                "sync_with shape mismatch for {name}"
+            );
+            // In-place mean, same arithmetic as the historical
+            // clone + add_assign + scale(0.5): (a + b) * 0.5 per element.
+            for (x, y) in ea.value.data_mut().iter_mut().zip(eb.value.data_mut()) {
+                let m = (*x + *y) * 0.5;
+                *x = m;
+                *y = m;
+            }
+            ea.version += 1;
+            eb.version += 1;
+            bytes += 2 * ea.value.byte_size();
         }
         self.ledger.add_param(bytes);
         bytes
+    }
+
+    /// Registered-byte tally per shard from the route table (the running
+    /// counterpart of the [`ServerGroup::shard_loads`] walk).
+    pub fn registered_shard_bytes(&self) -> Vec<usize> {
+        self.route.lock().unwrap().shard_bytes.clone()
     }
 
     /// Distribution of parameter bytes across shards (for balance tests and
@@ -320,5 +409,117 @@ mod tests {
         assert!(bytes > 0);
         assert_eq!(a.get("w").0.data(), &[1.0, 1.0]);
         assert_eq!(b.get("w").0.data(), &[1.0, 1.0]);
+    }
+
+    /// The `_into` fast path must be bit-identical to the allocating
+    /// message wrappers: same values, same versions, same ledger bytes.
+    #[test]
+    fn update_into_matches_allocating_update_bitwise() {
+        let mk = || {
+            let g = ServerGroup::new(2, UpdaterConf::sgd_momentum(0.1, 0.9), Arc::new(ByteLedger::new()));
+            g.put("w", Blob::full(&[16], 1.0), 1.0, 1.0);
+            g.put("b", Blob::full(&[4], -0.5), 2.0, 0.0);
+            g
+        };
+        let (a, b) = (mk(), mk());
+        let mut out = Blob::default();
+        for step in 0..5u64 {
+            for name in ["w", "b"] {
+                let grad = Blob::full(if name == "w" { &[16] } else { &[4] }, 0.25);
+                let (v1, ver1) = a.update(name, &grad, step);
+                let ver2 = b.update_into(name, &grad, step, &mut out);
+                assert_eq!(ver1, ver2);
+                assert_eq!(v1.shape(), out.shape());
+                for (x, y) in v1.data().iter().zip(out.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{name} step {step}");
+                }
+            }
+        }
+        assert_eq!(a.ledger.param_bytes(), b.ledger.param_bytes(), "ledger accounting drifted");
+        // get_into agrees with get too.
+        let (v, ver) = a.get("w");
+        let mut out2 = Blob::default();
+        let ver2 = a.get_into("w", &mut out2);
+        assert_eq!(ver, ver2);
+        assert_eq!(v.data(), out2.data());
+    }
+
+    /// After the first call sized the caller's buffer, `update_into` and
+    /// `get_into` perform zero Blob allocations per round trip.
+    #[test]
+    fn into_roundtrips_allocate_nothing_after_warmup() {
+        let g = group(2);
+        g.put("w", Blob::full(&[64], 1.0), 1.0, 1.0);
+        let grad = Blob::full(&[64], 0.1);
+        let mut fresh = Blob::default();
+        g.update_into("w", &grad, 0, &mut fresh); // sizes the buffer
+        g.get_into("w", &mut fresh);
+        let before = Blob::alloc_count();
+        for step in 1..6 {
+            g.update_into("w", &grad, step, &mut fresh);
+            g.get_into("w", &mut fresh);
+        }
+        assert_eq!(Blob::alloc_count(), before, "steady-state round trips must not allocate");
+    }
+
+    /// The running route-table byte tally must match the ground-truth shard
+    /// walk, including after a re-registration that changes a value's size.
+    #[test]
+    fn registered_shard_bytes_tracks_actual_loads() {
+        let g = group(3);
+        for i in 0..10 {
+            g.put(&format!("p{i}"), Blob::zeros(&[50 + i * 30]), 1.0, 1.0);
+        }
+        assert_eq!(g.registered_shard_bytes(), g.shard_loads());
+        // Re-register p3 with a different size: same shard, adjusted tally.
+        g.put("p3", Blob::zeros(&[500]), 1.0, 1.0);
+        assert_eq!(g.registered_shard_bytes(), g.shard_loads());
+        assert_eq!(
+            g.registered_shard_bytes().iter().sum::<usize>(),
+            (0..10).map(|i| if i == 3 { 500 * 4 } else { (50 + i * 30) * 4 }).sum::<usize>()
+        );
+    }
+
+    /// Concurrent opposing neighbour syncs must neither deadlock nor tear:
+    /// with replicas at constant 0 and constant 2, every serialization of
+    /// whole-group syncs yields exactly 1.0 everywhere. The historical
+    /// per-name get/set interleaving could average a half-synced replica
+    /// (e.g. reading 1 and 2 → 1.5) or deadlock under a lock-per-side
+    /// scheme; the fixed global lock order forbids both.
+    #[test]
+    fn concurrent_neighbour_syncs_do_not_deadlock_or_tear() {
+        let a = Arc::new(group(2));
+        let b = Arc::new(group(2));
+        for i in 0..6 {
+            a.put(&format!("p{i}"), Blob::full(&[128], 0.0), 1.0, 1.0);
+            b.put(&format!("p{i}"), Blob::full(&[128], 2.0), 1.0, 1.0);
+        }
+        let t1 = {
+            let (a, b) = (a.clone(), b.clone());
+            std::thread::spawn(move || {
+                for _ in 0..50 {
+                    a.sync_with(&b);
+                }
+            })
+        };
+        let t2 = {
+            let (a, b) = (a.clone(), b.clone());
+            std::thread::spawn(move || {
+                for _ in 0..50 {
+                    b.sync_with(&a);
+                }
+            })
+        };
+        t1.join().unwrap();
+        t2.join().unwrap();
+        for i in 0..6 {
+            for g in [&a, &b] {
+                let (v, _) = g.get(&format!("p{i}"));
+                assert!(
+                    v.data().iter().all(|&x| x == 1.0),
+                    "torn average detected in p{i}"
+                );
+            }
+        }
     }
 }
