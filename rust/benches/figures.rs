@@ -111,12 +111,50 @@ fn emit_conv_probe() {
     }
 }
 
+/// Run the sequential-vs-overlapped exchange probe (MLP + convnet jobs ×
+/// cluster/lan/local cost models) and write the `BENCH_overlap.json`
+/// artifact at the repo root. With `check`, assert the acceptance bar: the
+/// convnet job's overlapped virtual step time beats sequential on the
+/// cluster link model (ratio < 1.0) — the CI overlap step runs this under
+/// `PALLAS_NUM_THREADS=1` and `=4`.
+fn emit_overlap_probe(check: bool) {
+    let probes = singa::bench::overlap_probe(6);
+    let json = singa::bench::overlap_probes_json(&probes);
+    println!("==== overlapped-exchange probe ====");
+    print!("{json}");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_overlap.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    if check {
+        let conv = probes
+            .iter()
+            .find(|p| p.job == "convnet" && p.cost == "cluster")
+            .expect("convnet/cluster probe present");
+        assert!(
+            conv.virt_ratio < 1.0,
+            "overlap must beat sequential for convnet on cluster: ratio {:.4} \
+             (seq {:.4} ms vs overlap {:.4} ms per step)",
+            conv.virt_ratio,
+            conv.seq_virt_step_ms,
+            conv.overlap_virt_step_ms
+        );
+        println!(
+            "overlap smoke check passed: convnet/cluster ratio {:.4} ({} buckets)",
+            conv.virt_ratio, conv.buckets
+        );
+    }
+}
+
 fn main() {
     // `cargo bench --bench figures -- alloc [check]` runs only the
     // allocation probes (model loops + distributed run_job; the CI
     // alloc-regression job adds `check`); `-- gemm [check]` runs only the
     // gemm scaling probe (CI smoke adds `check`); `-- conv` runs only the
-    // conv/im2col scaling probe; no argument runs everything.
+    // conv/im2col scaling probe; `-- overlap [check]` runs only the
+    // sequential-vs-overlapped exchange probe (CI adds `check`); no
+    // argument runs everything.
     let args: Vec<String> = std::env::args().collect();
     let has = |s: &str| args.iter().any(|a| a == s);
     if has("gemm") {
@@ -127,12 +165,17 @@ fn main() {
         emit_conv_probe();
         return;
     }
+    if has("overlap") {
+        emit_overlap_probe(has("check"));
+        return;
+    }
     emit_alloc_probe(has("check"));
     if has("alloc") {
         return;
     }
     emit_gemm_probe(false);
     emit_conv_probe();
+    emit_overlap_probe(false);
 
     println!("==== paper figures (quick mode) ====");
     let out = singa::bench::run_all(true);

@@ -12,4 +12,4 @@ pub mod msg;
 pub mod simnet;
 
 pub use msg::Msg;
-pub use simnet::{ByteLedger, CostModel, LinkModel, VirtualClock};
+pub use simnet::{ByteLedger, CostModel, LinkModel, LinkTimeline, VirtualClock};

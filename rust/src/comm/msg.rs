@@ -58,6 +58,15 @@ impl Msg {
         Msg::HEADER + value.byte_size()
     }
 
+    /// Wire bytes of one steady-state exchange round trip for a parameter
+    /// of `payload_bytes`: gradient up + fresh value down, one header each
+    /// (the historical `2 * bytes + 128` virtual-clock charge). Bucketed
+    /// flushes sum this over their slots, so sequential and overlapped
+    /// exchanges move identical byte totals and differ only in timing.
+    pub fn exchange_wire_size(payload_bytes: usize) -> usize {
+        2 * payload_bytes + 2 * Msg::HEADER
+    }
+
     pub fn param(&self) -> &str {
         match self {
             Msg::Put { param, .. }
@@ -100,5 +109,14 @@ mod tests {
             Msg::Get { param: "conv/w".into() }.byte_size()
         );
         assert_eq!(Msg::response_wire_size(&v), 64 + 28);
+    }
+
+    /// One exchange round trip = grad payload up + value payload down with
+    /// a header each — the historical per-slot virtual-clock charge.
+    #[test]
+    fn exchange_wire_size_is_roundtrip_payload_plus_headers() {
+        let v = Blob::zeros(&[10]); // 40 payload bytes
+        assert_eq!(Msg::exchange_wire_size(v.byte_size()), 2 * 40 + 128);
+        assert_eq!(Msg::exchange_wire_size(0), 128);
     }
 }

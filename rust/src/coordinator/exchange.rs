@@ -1,0 +1,587 @@
+//! The per-worker-group parameter exchange: bucketed gradient flush during
+//! backward plus fresh-value prefetch, overlapping communication with
+//! computation (paper §5: a layer's gradients are transferred as soon as
+//! its `ComputeGradient` finishes, so network time hides behind the
+//! remaining backward work and step time approaches `max(compute, comm)`).
+//!
+//! One [`GroupExchange`] per worker group owns the persistent
+//! [`ParamWorkspace`] (routing + bucket buffers) and, in overlap mode, a
+//! *comm driver* thread. The worker thread implements [`GradObserver`]:
+//! when the backward hook completes a bucket's last contributing layer, it
+//! aggregates the replica gradients into the bucket's persistent sum slots
+//! (historical order — bit-identical) and enqueues the bucket; the comm
+//! driver drains the queue FIFO, pushing each slot through the server's
+//! fused updater into the bucket's fresh slots and publishing a new epoch.
+//! The next step's forward adopts fresh values bucket by bucket, blocking
+//! per-bucket on its epoch's condvar — never on the whole exchange — and
+//! the initial fetch is just a prefetch of the first forward's buckets.
+//!
+//! On the simnet clock, each bucket's wire bytes are charged to a
+//! [`LinkTimeline`] at the virtual instant the bucket was flushed;
+//! consumers max-merge the finish times instead of summing transfer costs,
+//! so overlapped virtual step time is honestly `max`-composed (see
+//! [`crate::bench::overlap_probe`] for the sequential-vs-overlapped
+//! comparison). Sequential mode (`JobConf::overlap_exchange = false`)
+//! keeps the PR 4 blocking exchange, bit-identical in values and in
+//! virtual-clock accounting to the historical code.
+
+use super::workspace::{self, BucketStore, ExchangePlan, ParamWorkspace};
+use super::JobConf;
+use crate::comm::{LinkModel, LinkTimeline, VirtualClock};
+use crate::model::net::GradObserver;
+use crate::model::NeuralNet;
+use crate::server::ServerGroup;
+use crate::tensor::Blob;
+use crate::utils::timer::Stopwatch;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// Work items handed to the comm driver over its mpsc channel, processed
+/// FIFO. Dropping the sender retires the driver (its `recv` errors out),
+/// so shutdown needs no dedicated message.
+enum CommJob {
+    /// Fill the bucket's fresh slots from the server (initial prefetch).
+    Prefetch { bucket: usize },
+    /// Push the bucket's aggregated sums through the server's updater and
+    /// receive fresh values (the steady-state flush of step `step`).
+    Flush { bucket: usize, step: u64 },
+}
+
+/// Body of the comm-driver thread: drain bucket jobs against the server
+/// group, publishing epochs as buckets complete; exits when the worker
+/// drops its sender. Blob allocations made while processing flushes of
+/// probed steps (`>= probe_from`) are tallied into `allocs` — the comm
+/// driver is part of the worker group's zero-alloc steady-state claim.
+fn comm_driver_loop(
+    plan: &ExchangePlan,
+    store: &BucketStore,
+    sg: &ServerGroup,
+    jobs: mpsc::Receiver<CommJob>,
+    allocs: &AtomicU64,
+    probe_from: Option<u64>,
+) {
+    while let Ok(job) = jobs.recv() {
+        match job {
+            CommJob::Prefetch { bucket } => {
+                workspace::fill_fresh(plan, store, sg, bucket);
+            }
+            CommJob::Flush { bucket, step } => {
+                let probed = probe_from.is_some_and(|from| step >= from);
+                let before = if probed { Blob::alloc_count() } else { 0 };
+                workspace::apply_flush(plan, store, sg, bucket, step);
+                if probed {
+                    allocs.fetch_add(Blob::alloc_count() - before, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+/// Runs when the comm-driver thread exits — cleanly or by panic: marks
+/// the driver dead and wakes every bucket condvar (holding each bucket's
+/// lock around the notify so the wakeup cannot be lost), so a worker
+/// waiting on an epoch the dead driver will never publish panics visibly
+/// instead of hanging the job. Sequential mode never mirrors the server
+/// panic this guards against — the same panic would surface inline — so
+/// overlap mode must not trade it for a silent deadlock.
+struct DriverExitGuard {
+    store: Arc<BucketStore>,
+    dead: Arc<AtomicBool>,
+}
+
+impl Drop for DriverExitGuard {
+    fn drop(&mut self) {
+        self.dead.store(true, Ordering::SeqCst);
+        for (mx, cv) in &self.store.bufs {
+            // Acquire the bucket lock (poisoned or not) around the notify:
+            // a waiter is either inside `cv.wait` (woken) or holds the lock
+            // checking the dead flag (sees it) — never in between.
+            let guard = mx.lock();
+            cv.notify_all();
+            drop(guard);
+        }
+    }
+}
+
+/// One worker group's parameter-exchange pipeline (see module docs).
+pub struct GroupExchange {
+    ws: ParamWorkspace,
+    overlap: bool,
+    link: LinkModel,
+    /// Ideal intra-group compute split (workers per group) — flush
+    /// timestamps scale by it exactly like the step's compute charge.
+    k: f64,
+    /// Serialized virtual timeline of the group's parameter link.
+    timeline: LinkTimeline,
+    /// Job channel to the comm driver; dropped to retire it.
+    tx: Option<mpsc::Sender<CommJob>>,
+    comm: Option<std::thread::JoinHandle<()>>,
+    /// Set by [`DriverExitGuard`] when the comm driver exits; epoch waits
+    /// check it so a dead driver fails fast instead of hanging.
+    driver_dead: Arc<AtomicBool>,
+    comm_allocs: Arc<AtomicU64>,
+    /// Per-bucket countdown of contributing nodes for the current step.
+    outstanding: Vec<usize>,
+    step: u64,
+    step_start_virt_us: f64,
+    sw: Stopwatch,
+}
+
+impl GroupExchange {
+    /// Resolve the workspace for `net` and, in overlap mode, start the
+    /// comm driver against `servers[server_group]`.
+    pub fn new(
+        net: &NeuralNet,
+        conf: &JobConf,
+        servers: &Arc<Vec<ServerGroup>>,
+        server_group: usize,
+        link: LinkModel,
+        workers: usize,
+    ) -> GroupExchange {
+        let ws = ParamWorkspace::new(net, conf.bucket_coalesce_bytes);
+        let outstanding = vec![0usize; ws.nbuckets()];
+        let comm_allocs = Arc::new(AtomicU64::new(0));
+        let driver_dead = Arc::new(AtomicBool::new(false));
+        let (tx, comm) = if conf.overlap_exchange {
+            let (tx, rx) = mpsc::channel();
+            let plan = ws.plan().clone();
+            let store = ws.store().clone();
+            let servers = servers.clone();
+            let allocs = comm_allocs.clone();
+            let dead = driver_dead.clone();
+            let probe_from = conf.alloc_probe_from;
+            let handle = std::thread::Builder::new()
+                .name(format!("comm-sg{server_group}"))
+                .spawn(move || {
+                    let _wake_on_exit =
+                        DriverExitGuard { store: store.clone(), dead: dead.clone() };
+                    comm_driver_loop(
+                        &plan,
+                        &store,
+                        &servers[server_group],
+                        rx,
+                        &allocs,
+                        probe_from,
+                    )
+                })
+                .expect("spawn comm driver");
+            (Some(tx), Some(handle))
+        } else {
+            (None, None)
+        };
+        GroupExchange {
+            ws,
+            overlap: conf.overlap_exchange,
+            link,
+            k: workers.max(1) as f64,
+            timeline: LinkTimeline::new(),
+            tx,
+            comm,
+            driver_dead,
+            comm_allocs,
+            outstanding,
+            step: 0,
+            step_start_virt_us: 0.0,
+            sw: Stopwatch::new(),
+        }
+    }
+
+    pub fn workspace(&self) -> &ParamWorkspace {
+        &self.ws
+    }
+
+    /// Initial parameter fetch. Overlap mode enqueues one prefetch per
+    /// bucket (the comm driver fills fresh slots while the worker loads
+    /// its first batch) with pipelined per-bucket transfer charges;
+    /// sequential mode fetches inline and charges one bulk transfer — the
+    /// historical accounting, bit for bit.
+    pub fn prefetch(&mut self, sg: &ServerGroup, clock: &mut VirtualClock) {
+        if self.overlap {
+            for b in 0..self.ws.nbuckets() {
+                let bytes = self.ws.plan().buckets[b].fetch_bytes;
+                let finish = self.timeline.flush(&self.link, clock.us, bytes);
+                self.ws.store().bufs[b].0.lock().unwrap().finish_virt_us = finish;
+                self.send(CommJob::Prefetch { bucket: b });
+            }
+            return;
+        }
+        let plan = self.ws.plan();
+        let store = self.ws.store();
+        let mut bytes = 0usize;
+        for b in 0..plan.buckets.len() {
+            workspace::fill_fresh(plan, store, sg, b);
+            store.bufs[b].0.lock().unwrap().finish_virt_us = clock.us;
+            bytes += plan.buckets[b].fetch_bytes;
+        }
+        clock.transfer(&self.link, bytes);
+    }
+
+    /// Adopt the fresh values every bucket produced for `step`, waiting
+    /// per-bucket on its epoch (the paper's per-param blocking — bottom
+    /// buckets, needed first by the forward pass, are waited on first) and
+    /// max-merging each bucket's virtual finish time into the clock.
+    /// Step 0 adopts the prefetched server state without a version bump
+    /// (the historical initial distribute); later steps bump versions like
+    /// the historical write-back.
+    pub fn consume_fresh(&self, net: &mut NeuralNet, step: u64, clock: &mut VirtualClock) {
+        let plan = self.ws.plan();
+        let store = self.ws.store();
+        let mut params = net.params_mut();
+        for (spec, (mx, cv)) in plan.buckets.iter().zip(&store.bufs) {
+            let mut buf = mx.lock().unwrap();
+            while buf.epoch < step + 1 {
+                assert!(
+                    !self.driver_dead.load(Ordering::SeqCst),
+                    "comm driver died before publishing a bucket epoch"
+                );
+                buf = cv.wait(buf).unwrap();
+            }
+            clock.merge_us(buf.finish_virt_us);
+            for (i, &s) in spec.slots.iter().enumerate() {
+                for &j in &plan.slots[s].params {
+                    let p = &mut params[j];
+                    if step == 0 {
+                        assert_eq!(
+                            buf.fresh[i].shape(),
+                            p.data.shape(),
+                            "server/local shape mismatch for {} (logical {})",
+                            p.name,
+                            plan.slots[s].logical
+                        );
+                    }
+                    p.data.copy_from(&buf.fresh[i]);
+                    if step > 0 {
+                        p.version += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Arm the per-step flush state: reset each bucket's contributing-node
+    /// countdown and start the step's compute stopwatch (flush timestamps
+    /// are measured against it).
+    pub fn begin_step(&mut self, step: u64, clock_us: f64) {
+        self.step = step;
+        self.step_start_virt_us = clock_us;
+        self.sw = Stopwatch::new();
+        for (o, spec) in self.outstanding.iter_mut().zip(&self.ws.plan().buckets) {
+            *o = spec.node_list.len();
+        }
+    }
+
+    /// Real µs since [`GroupExchange::begin_step`] — the step's measured
+    /// compute time (the same stopwatch the flush timestamps use, so a
+    /// flush can never appear later than the compute it overlapped).
+    pub fn step_elapsed_us(&self) -> f64 {
+        self.sw.elapsed_us()
+    }
+
+    /// Sequential-mode exchange (no-op under overlap): aggregate every
+    /// bucket, push each slot through the server's updater, receive fresh
+    /// values, and charge one bulk transfer — the historical blocking
+    /// recipe, preserved bit for bit for comparison and fallback.
+    pub fn flush_sequential(
+        &self,
+        net: &NeuralNet,
+        sg: &ServerGroup,
+        step: u64,
+        clock: &mut VirtualClock,
+    ) {
+        if self.overlap {
+            return;
+        }
+        let plan = self.ws.plan();
+        let store = self.ws.store();
+        let mut total = 0usize;
+        for b in 0..plan.buckets.len() {
+            self.ws.aggregate_bucket(net, b);
+            workspace::apply_flush(plan, store, sg, b, step);
+            store.bufs[b].0.lock().unwrap().finish_virt_us = clock.us;
+            total += plan.buckets[b].flush_bytes;
+        }
+        clock.transfer(&self.link, total);
+    }
+
+    /// Block until every bucket's flush for `step` has been applied,
+    /// merging the finish times into the clock. Called before neighbour
+    /// server-group syncs (averaging half-flushed replicas would diverge
+    /// from the sequential semantics), before releasing the warm-up gate,
+    /// and at job end. No-op in sequential mode.
+    pub fn drain(&self, step: u64, clock: &mut VirtualClock) {
+        if !self.overlap {
+            return;
+        }
+        for (mx, cv) in &self.ws.store().bufs {
+            let mut buf = mx.lock().unwrap();
+            while buf.epoch < step + 2 {
+                assert!(
+                    !self.driver_dead.load(Ordering::SeqCst),
+                    "comm driver died before publishing a bucket epoch"
+                );
+                buf = cv.wait(buf).unwrap();
+            }
+            clock.merge_us(buf.finish_virt_us);
+        }
+    }
+
+    /// Hand a job to the comm driver. A dead driver (panicked) would
+    /// otherwise strand the worker on a never-published epoch, so a failed
+    /// send surfaces immediately.
+    fn send(&self, job: CommJob) {
+        self.tx
+            .as_ref()
+            .expect("overlap mode must have a comm channel")
+            .send(job)
+            .expect("comm driver died");
+    }
+
+    /// Retire the comm driver: dropping the channel sender ends its recv
+    /// loop after any in-flight flushes, so all server effects land before
+    /// this returns. Propagates a comm-driver panic.
+    pub fn shutdown(&mut self) {
+        self.tx = None;
+        if let Some(handle) = self.comm.take() {
+            handle.join().expect("comm driver panicked");
+        }
+    }
+
+    /// Blob allocations the comm driver performed while processing probed
+    /// steps (see `JobConf::alloc_probe_from`) — charged to the worker
+    /// group's steady-state tally.
+    pub fn comm_steady_allocs(&self) -> u64 {
+        self.comm_allocs.load(Ordering::Relaxed)
+    }
+}
+
+/// Every exit path retires the comm driver — a worker panic (a shape
+/// assert, a poisoned layer) must not leak a thread parked on the channel.
+/// Unlike [`GroupExchange::shutdown`], a driver panic is swallowed here:
+/// panicking during unwind would abort the process.
+impl Drop for GroupExchange {
+    fn drop(&mut self) {
+        self.tx = None;
+        if let Some(handle) = self.comm.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl GradObserver for GroupExchange {
+    /// The backward hook: count down the completed node's bucket; when the
+    /// bucket's last contributing layer lands, aggregate its replica
+    /// gradients (historical order) into the persistent sums, stamp the
+    /// flush on the virtual link timeline, and hand the bucket to the comm
+    /// driver — all while the backward pass continues below.
+    fn grads_ready(&mut self, net: &NeuralNet, node: usize) {
+        if !self.overlap {
+            return;
+        }
+        let b = self.ws.plan().node_bucket[node];
+        if b == usize::MAX || self.outstanding[b] == 0 {
+            return;
+        }
+        self.outstanding[b] -= 1;
+        if self.outstanding[b] > 0 {
+            return;
+        }
+        self.ws.aggregate_bucket(net, b);
+        let flush_us = self.step_start_virt_us + self.sw.elapsed_us() / self.k;
+        let bytes = self.ws.plan().buckets[b].flush_bytes;
+        let finish = self.timeline.flush(&self.link, flush_us, bytes);
+        self.ws.store().bufs[b].0.lock().unwrap().finish_virt_us = finish;
+        self.send(CommJob::Flush { bucket: b, step: self.step });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterTopology;
+    use crate::comm::ByteLedger;
+    use crate::data::{shard_index, DataSource, SyntheticDigits};
+    use crate::model::layer::{Activation, LayerConf, LayerKind};
+    use crate::model::partition::logical_param_name;
+    use crate::model::NetBuilder;
+    use crate::train::{bp::Bp, TrainOneBatch};
+    use crate::updater::UpdaterConf;
+    use crate::utils::rng::Rng;
+    use std::collections::HashMap;
+
+    fn digit_mlp() -> NetBuilder {
+        NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![16, 64] }, &[]))
+            .add(LayerConf::new("label", LayerKind::Input { shape: vec![16] }, &[]))
+            .add(LayerConf::new(
+                "h1",
+                LayerKind::InnerProduct { out: 32, act: Activation::Relu, init_std: 0.1 },
+                &["data"],
+            ))
+            .add(LayerConf::new(
+                "logits",
+                LayerKind::InnerProduct { out: 5, act: Activation::Identity, init_std: 0.1 },
+                &["h1"],
+            ))
+            .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]))
+    }
+
+    /// Deterministic lockstep driver over the REAL exchange machinery:
+    /// worker groups execute their steps round-robin on this one thread,
+    /// draining the comm channel after every group-step, so the cross-
+    /// group order of server operations is fixed. That makes overlapped
+    /// and sequential runs bitwise comparable even on topologies whose
+    /// free-running threads race (shared-server downpour, syncing
+    /// hogwild) — within a group-step the overlapped driver still runs
+    /// for real: observer flushes mid-backward, comm thread applies them
+    /// concurrently.
+    fn lockstep_run(
+        topo: &ClusterTopology,
+        overlap: bool,
+        iters: u64,
+    ) -> (Vec<Vec<(u32, u32)>>, Vec<HashMap<String, Blob>>) {
+        let mut conf = JobConf::new("lockstep", digit_mlp());
+        conf.updater = UpdaterConf::sgd(0.1);
+        conf.topology = topo.clone();
+        conf.overlap_exchange = overlap;
+        conf.bucket_coalesce_bytes = 0; // per-layer buckets
+        let ledger = Arc::new(ByteLedger::new());
+        let servers: Arc<Vec<ServerGroup>> = Arc::new(
+            (0..topo.nserver_groups)
+                .map(|_| {
+                    ServerGroup::new(
+                        topo.nservers_per_group,
+                        conf.updater.clone(),
+                        ledger.clone(),
+                    )
+                })
+                .collect(),
+        );
+        {
+            let probe = conf.net.clone().build(&mut Rng::new(conf.seed));
+            let mut seen = std::collections::HashSet::new();
+            for p in probe.params() {
+                let logical = logical_param_name(&p.name);
+                if seen.insert(logical.clone()) {
+                    for sg in servers.iter() {
+                        sg.put(&logical, p.data.clone(), p.lr_mult, p.wd_mult);
+                    }
+                }
+            }
+        }
+        let groups = topo.nworker_groups;
+        let data = SyntheticDigits::new(64, 5, 77);
+        let mut nets: Vec<NeuralNet> =
+            (0..groups).map(|_| conf.net.clone().build(&mut Rng::new(conf.seed))).collect();
+        let mut exs: Vec<GroupExchange> = (0..groups)
+            .map(|g| {
+                let link = *topo.param_link(&conf.cost);
+                GroupExchange::new(&nets[g], &conf, &servers, topo.server_group_of(g), link, 1)
+            })
+            .collect();
+        let mut algs: Vec<Bp> = (0..groups).map(|_| Bp::new()).collect();
+        let mut clocks: Vec<crate::comm::VirtualClock> =
+            (0..groups).map(|_| crate::comm::VirtualClock::new()).collect();
+        for g in 0..groups {
+            exs[g].prefetch(&servers[topo.server_group_of(g)], &mut clocks[g]);
+        }
+        let mut losses: Vec<Vec<(u32, u32)>> = vec![Vec::new(); groups];
+        for step in 0..iters {
+            for g in 0..groups {
+                let sg_idx = topo.server_group_of(g);
+                let sg = &servers[sg_idx];
+                let inputs = data.batch(shard_index(step, g, groups), 16);
+                exs[g].consume_fresh(&mut nets[g], step, &mut clocks[g]);
+                nets[g].zero_grads();
+                exs[g].begin_step(step, clocks[g].us);
+                let stats =
+                    algs[g].train_one_batch_observed(&mut nets[g], &inputs, &mut exs[g]);
+                losses[g].push((stats.total_loss().to_bits(), stats.metric().to_bits()));
+                exs[g].flush_sequential(&nets[g], sg, step, &mut clocks[g]);
+                // Lockstep barrier: all of this group-step's server effects
+                // land before the next group steps.
+                exs[g].drain(step, &mut clocks[g]);
+                // Hogwild neighbour sync, on the run_job schedule (after
+                // the drain — the mid-flush sync contract).
+                if topo.group_sync_interval > 0
+                    && step > 0
+                    && step % topo.group_sync_interval == 0
+                    && topo.nserver_groups > 1
+                {
+                    let neighbour = (sg_idx + 1) % servers.len();
+                    if neighbour != sg_idx {
+                        sg.sync_with(&servers[neighbour]);
+                    }
+                }
+            }
+        }
+        for ex in &mut exs {
+            ex.shutdown();
+        }
+        let group_params: Vec<HashMap<String, Blob>> = servers
+            .iter()
+            .map(|sg| {
+                sg.param_names()
+                    .into_iter()
+                    .map(|name| {
+                        let (v, _) = sg.get(&name);
+                        (name, v)
+                    })
+                    .collect()
+            })
+            .collect();
+        (losses, group_params)
+    }
+
+    fn assert_bitwise_equal(
+        seq: &(Vec<Vec<(u32, u32)>>, Vec<HashMap<String, Blob>>),
+        ovl: &(Vec<Vec<(u32, u32)>>, Vec<HashMap<String, Blob>>),
+    ) {
+        assert_eq!(seq.0, ovl.0, "loss/metric trajectories diverged");
+        assert_eq!(seq.1.len(), ovl.1.len());
+        for (sp, op) in seq.1.iter().zip(&ovl.1) {
+            assert_eq!(sp.len(), op.len());
+            for (name, sv) in sp {
+                let ov = op.get(name).unwrap_or_else(|| panic!("missing param {name}"));
+                assert_eq!(sv.shape(), ov.shape(), "{name}");
+                for (x, y) in sv.data().iter().zip(ov.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "param {name} diverged");
+                }
+            }
+        }
+    }
+
+    /// Downpour(3,1,2): three worker groups hammering one shared, sharded
+    /// server group. Under the deterministic lockstep schedule the
+    /// overlapped exchange must reproduce the sequential exchange bit for
+    /// bit — same per-step losses, same final server replicas.
+    #[test]
+    fn downpour_3_1_2_overlap_matches_sequential_bitwise() {
+        let topo = ClusterTopology::downpour(3, 1, 2);
+        let seq = lockstep_run(&topo, false, 12);
+        let ovl = lockstep_run(&topo, true, 12);
+        assert_bitwise_equal(&seq, &ovl);
+    }
+
+    /// Hogwild(2,1,3) with syncs firing every 3 steps — in overlap mode
+    /// the sync request lands while that step's flushes are still in the
+    /// comm channel, so the drain-before-sync contract is what keeps the
+    /// averaged replicas bit-identical to the sequential exchange.
+    #[test]
+    fn hogwild_sync_mid_flush_overlap_matches_sequential_bitwise() {
+        let topo = ClusterTopology::hogwild(2, 1, 3);
+        let seq = lockstep_run(&topo, false, 10);
+        let ovl = lockstep_run(&topo, true, 10);
+        assert_bitwise_equal(&seq, &ovl);
+    }
+
+    /// The lockstep harness itself is deterministic in overlap mode (two
+    /// identical runs agree) — a guard on the harness, so the equivalence
+    /// asserts above can't pass vacuously on noisy trajectories.
+    #[test]
+    fn lockstep_overlap_is_deterministic() {
+        let topo = ClusterTopology::downpour(3, 1, 2);
+        let a = lockstep_run(&topo, true, 6);
+        let b = lockstep_run(&topo, true, 6);
+        assert_bitwise_equal(&a, &b);
+    }
+}

@@ -12,6 +12,7 @@
 //! §Hardware-Adaptation.
 
 pub mod copyqueue;
+pub mod exchange;
 pub mod workspace;
 
 use crate::cluster::ClusterTopology;
@@ -19,7 +20,7 @@ use crate::comm::{ByteLedger, CostModel, VirtualClock};
 use crate::data::DataSource;
 use crate::metrics::{Record, TrainingLog};
 use crate::model::partition::{logical_param_name, partition_net};
-use crate::model::{NetBuilder, NeuralNet};
+use crate::model::NetBuilder;
 use crate::server::ServerGroup;
 use crate::train::{bp::Bp, cd::Cd, TrainOneBatch};
 use crate::tensor::Blob;
@@ -28,7 +29,7 @@ use crate::utils::rng::Rng;
 use crate::utils::timer::Stopwatch;
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
-use self::workspace::ParamWorkspace;
+use self::exchange::GroupExchange;
 
 /// Which `TrainOneBatch` algorithm the job uses (paper §4.1.3).
 #[derive(Debug, Clone, PartialEq)]
@@ -66,7 +67,20 @@ pub struct JobConf {
     pub partition_within_group: bool,
     /// Cost model for the simulated deployment's virtual clock.
     pub cost: CostModel,
-    /// Log every n-th iteration.
+    /// Overlap the parameter exchange with computation: flush gradient
+    /// buckets to the servers during the backward pass and prefetch fresh
+    /// values for the next forward (paper §5's overlap claim). `false`
+    /// restores the strictly sequential post-step exchange; trajectories
+    /// are bit-identical either way — only the timing (and the virtual
+    /// clock's accounting of it) changes.
+    pub overlap_exchange: bool,
+    /// Flush buckets default to one per owning layer; consecutive layers
+    /// coalesce into one bucket while its payload stays below this many
+    /// bytes (tiny params ride along instead of paying a message each).
+    /// 0 = pure per-layer buckets; `usize::MAX` = a single bucket (the
+    /// sequential degenerate case).
+    pub bucket_coalesce_bytes: usize,
+    /// Log every n-th iteration; 0 logs only the final step.
     pub log_every: u64,
     /// Warm-up: group 0 trains alone for this many iterations before the
     /// other groups start (paper §6.2.3: "a warm-up stage, which trains the
@@ -94,6 +108,8 @@ impl JobConf {
             seed: 0x51464a,
             partition_within_group: false,
             cost: CostModel::numa_server(),
+            overlap_exchange: true,
+            bucket_coalesce_bytes: 4096,
             log_every: 1,
             warmup_iters: 0,
             alloc_probe_from: None,
@@ -292,38 +308,50 @@ fn worker_group_loop(
     conf: &JobConf,
     group_builder: NetBuilder,
     topo: &ClusterTopology,
-    servers: &[ServerGroup],
+    servers: &Arc<Vec<ServerGroup>>,
     data: &dyn DataSource,
     log: &TrainingLog,
     job_sw: &Stopwatch,
     warmup_gate: &WarmupGate,
 ) -> (f64, u64) {
     let mut net = group_builder.build(&mut Rng::new(conf.seed));
-    // Persistent parameter-plane state: aggregation sums, fresh-value
-    // slots, and logical routing resolved once — the steady-state loop
-    // below performs zero Blob allocations against it.
-    let mut ws = ParamWorkspace::new(&net);
-    let mut alg = conf.algorithm.instantiate();
-    let sg = &servers[topo.server_group_of(g)];
-    let mut clock = VirtualClock::new();
-    let k = topo.nworkers_per_group.max(1);
+    let sg_idx = topo.server_group_of(g);
     let link = *topo.param_link(&conf.cost);
+    let k = topo.nworkers_per_group.max(1);
+    // Persistent parameter-plane state — routing, bucket layout, and
+    // sum/fresh buffers resolved once — plus (overlap mode) the comm
+    // driver thread that drains flushed buckets while backward continues.
+    // The steady-state loop below performs zero Blob allocations.
+    let mut ex = GroupExchange::new(&net, conf, servers, sg_idx, link, k);
+    let mut alg = conf.algorithm.instantiate();
+    let sg = &servers[sg_idx];
+    let mut clock = VirtualClock::new();
     // Reused input slots: `batch_into` refills the same blobs every step.
     let mut inputs: HashMap<String, Blob> = HashMap::new();
     let mut steady_allocs = 0u64;
+    let warmup_target = conf.warmup_iters.min(conf.iters);
 
-    // Initial fetch: all replicas start from the server values.
-    fetch_params(&mut net, &mut ws, sg, &mut clock, &link);
+    // Initial fetch: overlap mode prefetches the first forward's buckets
+    // through the comm channel; sequential mode fetches inline.
+    ex.prefetch(sg, &mut clock);
 
     for step in 0..conf.iters {
         let allocs_before = Blob::alloc_count();
         let batch_index = crate::data::shard_index(step, g, topo.nworker_groups);
         data.batch_into(batch_index, conf.batch_size, &mut inputs);
 
+        // Adopt this step's fresh parameter values bucket by bucket — each
+        // bucket blocks only on its own ready epoch, not on the whole
+        // exchange, and merges its transfer's virtual finish time.
+        ex.consume_fresh(&mut net, step, &mut clock);
+
         net.zero_grads();
-        let sw = Stopwatch::new();
-        let stats = alg.train_one_batch(&mut net, &inputs);
-        let compute_us = sw.elapsed_us();
+        ex.begin_step(step, clock.us);
+        // Overlap mode: the exchange observer flushes each gradient bucket
+        // the moment its last layer's ComputeGradient finishes, while the
+        // backward pass continues on the layers below.
+        let stats = alg.train_one_batch_observed(&mut net, &inputs, &mut ex);
+        let compute_us = ex.step_elapsed_us();
         // Within-group workers split the compute ideally on the virtual
         // clock; bridge traffic is charged on the feature plane.
         clock.advance(compute_us / k as f64);
@@ -333,35 +361,32 @@ fn worker_group_loop(
             clock.transfer(&conf.cost.intra_node, bridge_bytes);
         }
 
-        // The group stub's aggregation: mean dim-0 replica gradients into
-        // the persistent slots, push each through the server's fused
-        // updater, and receive the fresh value into the slot buffer — no
-        // per-step HashMap, no gradient clones, no message-owned values.
-        ws.aggregate_grads(&net);
-        let mut param_bytes = 0usize;
-        for slot in ws.slots_mut() {
-            param_bytes += 2 * slot.sum.byte_size() + 128;
-            sg.update_into(&slot.logical, &slot.sum, step, &mut slot.fresh);
-        }
-        clock.transfer(&link, param_bytes);
+        // Sequential mode: the whole aggregate → update → receive exchange
+        // happens here, blocking (the historical PR 4 recipe, bit for bit).
+        ex.flush_sequential(&net, sg, step, &mut clock);
 
-        // Write fresh values back into all local replicas.
-        ws.write_back(&mut net);
-
-        // Distributed Hogwild: neighbour server-group sync.
+        // Distributed Hogwild: neighbour server-group sync. In-flight
+        // flushes must land first — averaging a half-flushed replica would
+        // diverge from the sequential semantics.
         if topo.group_sync_interval > 0
             && step > 0
             && step % topo.group_sync_interval == 0
             && topo.nserver_groups > 1
         {
-            let neighbour = (topo.server_group_of(g) + 1) % servers.len();
-            if neighbour != topo.server_group_of(g) {
+            let neighbour = (sg_idx + 1) % servers.len();
+            if neighbour != sg_idx {
+                ex.drain(step, &mut clock);
                 let bytes = sg.sync_with(&servers[neighbour]);
                 clock.transfer(&conf.cost.network, bytes);
             }
         }
 
         if g == 0 {
+            if conf.warmup_iters > 0 && step + 1 == warmup_target {
+                // Groups released from warm-up must see the fully warmed
+                // server state, not a half-flushed one.
+                ex.drain(step, &mut clock);
+            }
             warmup_gate.advance(step + 1);
         }
         if let Some(from) = conf.alloc_probe_from {
@@ -369,7 +394,8 @@ fn worker_group_loop(
                 steady_allocs += Blob::alloc_count() - allocs_before;
             }
         }
-        if step % conf.log_every == 0 || step + 1 == conf.iters {
+        let final_step = step + 1 == conf.iters;
+        if final_step || (conf.log_every > 0 && step % conf.log_every == 0) {
             log.push(Record {
                 group: g,
                 step,
@@ -380,26 +406,15 @@ fn worker_group_loop(
             });
         }
     }
-    (clock.ms(), steady_allocs)
-}
-
-/// Pull every logical parameter from the server group into the workspace's
-/// fresh slots and distribute to the local replicas.
-fn fetch_params(
-    net: &mut NeuralNet,
-    ws: &mut ParamWorkspace,
-    sg: &ServerGroup,
-    clock: &mut VirtualClock,
-    link: &crate::comm::LinkModel,
-) {
-    let mut bytes = 0usize;
-    for slot in ws.slots_mut() {
-        sg.get_into(&slot.logical, &mut slot.fresh);
-        // Charged once per replica, like the historical per-param fetch.
-        bytes += slot.fresh.byte_size() * slot.replicas;
+    // Wait out the final step's flushes (merging their virtual finish
+    // times into the group clock) and retire the comm driver; its
+    // post-warm-up Blob allocations count against this group's tally.
+    if conf.iters > 0 {
+        ex.drain(conf.iters - 1, &mut clock);
     }
-    ws.distribute_fresh(net);
-    clock.transfer(link, bytes);
+    ex.shutdown();
+    steady_allocs += ex.comm_steady_allocs();
+    (clock.ms(), steady_allocs)
 }
 
 #[cfg(test)]
@@ -550,6 +565,24 @@ mod tests {
             d_synced < d_unsynced,
             "neighbour syncs must pull replicas together: synced {d_synced} vs unsynced {d_unsynced}"
         );
+    }
+
+    /// Regression: `log_every == 0` used to panic with a mod-by-zero in
+    /// the logging check. It now means "log only the final step".
+    #[test]
+    fn log_every_zero_logs_only_final_step() {
+        let mut conf = JobConf::new("quiet", digit_mlp(8, 64, 5));
+        conf.iters = 7;
+        conf.log_every = 0;
+        conf.updater = UpdaterConf::sgd(0.1);
+        conf.topology = ClusterTopology::downpour(2, 1, 1);
+        let report = run_job(&conf, digits());
+        let recs = report.log.snapshot();
+        for g in 0..2 {
+            let grecs: Vec<_> = recs.iter().filter(|r| r.group == g).collect();
+            assert_eq!(grecs.len(), 1, "group {g} must log exactly the final step");
+            assert_eq!(grecs[0].step, 6);
+        }
     }
 
     /// Regression: `warmup_iters >= iters` used to deadlock — group 0

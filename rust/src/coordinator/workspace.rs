@@ -1,72 +1,169 @@
-//! Persistent per-worker-group parameter workspace (the ROADMAP's
-//! "partition-aware workspaces" item): aggregation sums, fresh-value slots,
-//! and per-logical-param routing resolved once at job start from the
-//! replica's parameter list, so the steady-state worker↔server exchange —
-//! aggregate dim-0 shard gradients, push, copy fresh values back into every
-//! replica — performs zero Blob allocations.
+//! Persistent per-worker-group parameter workspace: aggregation sums,
+//! fresh-value slots, logical routing, AND the fixed-order flush-bucket
+//! layout — all resolved once at job start from the replica's parameter
+//! list, so the steady-state worker↔server exchange (sequential or
+//! overlapped) performs zero Blob allocations.
 //!
-//! The group stub of the paper (§5.1: "aggregates local messages and
-//! forwards them") previously re-materialized its aggregation state every
-//! iteration: a fresh `HashMap`, one `grad.clone()` per logical param, and
-//! 3–4 more Blob clones per value round-tripped through the server. This is
-//! the planned-executor pattern (PR 1) applied across the distributed
-//! boundary instead.
+//! PR 4 made the exchange zero-clone but kept it strictly sequential:
+//! aggregate everything, push everything, fetch everything, blocking. This
+//! revision splits the state into *buckets* (default: one per owning
+//! layer, coalescing tiny layers up to a byte threshold — see
+//! [`crate::model::partition::bucket_slots`]) whose buffers live behind
+//! per-bucket locks with ready *epochs*, so a comm driver can drain
+//! completed buckets while the backward pass is still producing the rest
+//! (paper §5: transfer each layer's gradients as soon as its
+//! `ComputeGradient` finishes). Within a bucket the aggregation order
+//! (first replica copied, later replicas added in ascending param order,
+//! one scale) and the per-slot updater application are exactly the
+//! historical recipe, so sequential and overlapped exchanges are
+//! bit-identical.
 
-use crate::model::partition::logical_slot_map;
+use crate::comm::Msg;
+use crate::model::partition::{bucket_slots, logical_slot_map};
 use crate::model::NeuralNet;
+use crate::server::ServerGroup;
 use crate::tensor::Blob;
+use std::sync::{Arc, Condvar, Mutex};
 
-/// One logical parameter's persistent slots.
-pub struct ParamSlot {
+/// One logical parameter's routing record.
+pub struct SlotInfo {
     /// Logical (server-side) parameter name, e.g. `"h1/weight"`.
     pub logical: String,
-    /// Replica gradient sum; after [`ParamWorkspace::aggregate_grads`] it
-    /// holds the mean gradient shipped to the server.
-    pub sum: Blob,
-    /// Fresh value the server writes back (via `update_into`/`get_into`).
-    pub fresh: Blob,
     /// Number of net params (dim-0 replicas) contributing gradients.
-    /// (The lr/wd multipliers live server-side, registered at `put` time.)
     pub replicas: usize,
+    /// Global param indices (`NeuralNet::params` order) of those replicas,
+    /// ascending — the fixed aggregation order.
+    pub params: Vec<usize>,
+    /// Payload bytes of one value (all replicas share the shape).
+    pub byte_size: usize,
 }
 
-/// Persistent aggregation + routing state for one worker group's replica
-/// net. Built once per group thread; every per-step method is Blob-
-/// allocation-free once the slots are sized.
-pub struct ParamWorkspace {
-    slots: Vec<ParamSlot>,
+/// One flush bucket's static layout.
+pub struct BucketSpec {
+    /// Slot indices covered, ascending (a contiguous range).
+    pub slots: Vec<usize>,
+    /// Update+response wire bytes of one steady-state flush
+    /// ([`Msg::exchange_wire_size`] summed over the slots).
+    pub flush_bytes: usize,
+    /// Initial-fetch wire bytes (value × replicas, the historical
+    /// per-replica fetch charge).
+    pub fetch_bytes: usize,
+    /// Param-bearing nodes contributing gradients, ascending — their
+    /// count is the per-step completion target for the backward hook, and
+    /// walking them in order reproduces the global param order without
+    /// materializing the whole net's param list.
+    pub node_list: Vec<usize>,
+}
+
+/// One bucket's shared buffers, guarded by its mutex in
+/// [`BucketStore::bufs`]. The worker writes `sums` (aggregation) and reads
+/// `fresh` (write-back); the comm driver reads `sums` and writes `fresh`
+/// (`update_into` / `get_into`); `epoch` orders the hand-offs.
+pub struct BucketBuf {
+    pub sums: Vec<Blob>,
+    pub fresh: Vec<Blob>,
+    /// Completed exchanges: the initial prefetch publishes epoch 1, the
+    /// flush of step `s` publishes `s + 2`. A consumer of step `s` waits
+    /// for `epoch >= s + 1`.
+    pub epoch: u64,
+    /// Absolute virtual time (µs) at which the exchange that produced
+    /// `epoch` finished on the modeled link (what the consumer's clock
+    /// max-merges with).
+    pub finish_virt_us: f64,
+}
+
+/// The immutable routing + bucket layout, shared between the worker thread
+/// and its comm driver.
+pub struct ExchangePlan {
+    pub slots: Vec<SlotInfo>,
     /// net param index (positional, `NeuralNet::params` order) → slot.
-    param_slot: Vec<usize>,
-    /// Per-step "slot already written" flags (reset, never reallocated).
-    seen: Vec<bool>,
+    pub param_slot: Vec<usize>,
+    /// node index → bucket (`usize::MAX` for parameter-less nodes).
+    pub node_bucket: Vec<usize>,
+    /// node index → per-param aggregation action, in the node's own param
+    /// order: (position of the param's slot within its bucket, whether
+    /// this param is the slot's FIRST contributor — copy vs add). Lets
+    /// aggregation walk only a bucket's contributing nodes instead of
+    /// collecting the whole net's param list per flush.
+    pub node_actions: Vec<Vec<(usize, bool)>>,
+    pub buckets: Vec<BucketSpec>,
+}
+
+/// The mutable bucket buffers, shared between the worker thread and its
+/// comm driver. One `(Mutex, Condvar)` pair per bucket: the next step's
+/// forward blocks per-bucket on the condvar, not on the whole exchange.
+pub struct BucketStore {
+    pub bufs: Vec<(Mutex<BucketBuf>, Condvar)>,
+}
+
+/// THE prefetch recipe for one bucket — fill its fresh slots from the
+/// server and publish epoch 1. The single definition shared by the comm
+/// driver (overlap mode) and the inline sequential fetch, so the two modes
+/// cannot drift apart.
+pub fn fill_fresh(plan: &ExchangePlan, store: &BucketStore, sg: &ServerGroup, b: usize) {
+    let (mx, cv) = &store.bufs[b];
+    let mut buf = mx.lock().unwrap();
+    for (i, &s) in plan.buckets[b].slots.iter().enumerate() {
+        sg.get_into(&plan.slots[s].logical, &mut buf.fresh[i]);
+    }
+    buf.epoch = 1;
+    cv.notify_all();
+}
+
+/// THE flush recipe for one bucket — push its aggregated sums through the
+/// server's updater (slot order, the historical per-slot application),
+/// receive fresh values, and publish epoch `step + 2`. The single
+/// definition shared by the comm driver and the sequential exchange: the
+/// bit-identity contract between the two modes reduces to "same
+/// aggregation + same `apply_flush`".
+pub fn apply_flush(
+    plan: &ExchangePlan,
+    store: &BucketStore,
+    sg: &ServerGroup,
+    b: usize,
+    step: u64,
+) {
+    let (mx, cv) = &store.bufs[b];
+    let mut buf = mx.lock().unwrap();
+    let BucketBuf { sums, fresh, epoch, .. } = &mut *buf;
+    for (i, &s) in plan.buckets[b].slots.iter().enumerate() {
+        sg.update_into(&plan.slots[s].logical, &sums[i], step, &mut fresh[i]);
+    }
+    *epoch = step + 2;
+    cv.notify_all();
+}
+
+/// Persistent parameter-plane state for one worker group's replica net.
+/// Built once per group thread; every per-step method is Blob-allocation-
+/// free once the slots are sized.
+pub struct ParamWorkspace {
+    plan: Arc<ExchangePlan>,
+    store: Arc<BucketStore>,
 }
 
 impl ParamWorkspace {
-    /// Resolve the logical routing for `net`'s parameter list and size the
-    /// aggregation/fresh buffers. The net's param order must stay stable
-    /// for the workspace's lifetime (it is: the layer graph is fixed after
-    /// `build`).
-    pub fn new(net: &NeuralNet) -> ParamWorkspace {
+    /// Resolve the logical routing and bucket layout for `net`'s parameter
+    /// list and size the aggregation/fresh buffers. The net's param order
+    /// must stay stable for the workspace's lifetime (it is: the layer
+    /// graph is fixed after `build`). `coalesce_bytes` is the bucket
+    /// coalescing threshold (see [`bucket_slots`]).
+    pub fn new(net: &NeuralNet, coalesce_bytes: usize) -> ParamWorkspace {
         let params = net.params();
         let names: Vec<&str> = params.iter().map(|p| p.name.as_str()).collect();
         let (logicals, param_slot) = logical_slot_map(&names);
-        let mut slots: Vec<ParamSlot> = logicals
+        let mut slots: Vec<SlotInfo> = logicals
             .into_iter()
-            .map(|logical| ParamSlot {
-                logical,
-                sum: Blob::default(),
-                fresh: Blob::default(),
-                replicas: 0,
-            })
+            .map(|logical| SlotInfo { logical, replicas: 0, params: Vec::new(), byte_size: 0 })
             .collect();
+        let mut shapes: Vec<&[usize]> = vec![&[]; slots.len()];
         for (j, p) in params.iter().enumerate() {
             let s = &mut slots[param_slot[j]];
             if s.replicas == 0 {
-                s.sum.resize(p.data.shape());
-                s.fresh.resize(p.data.shape());
+                s.byte_size = p.data.byte_size();
+                shapes[param_slot[j]] = p.data.shape();
             } else {
                 assert_eq!(
-                    s.sum.shape(),
+                    shapes[param_slot[j]],
                     p.data.shape(),
                     "replica shape mismatch for {} (logical {})",
                     p.name,
@@ -74,66 +171,117 @@ impl ParamWorkspace {
                 );
             }
             s.replicas += 1;
+            s.params.push(j);
         }
-        let seen = vec![false; slots.len()];
-        ParamWorkspace { slots, param_slot, seen }
+
+        // Fixed-order flush buckets over the slot list.
+        let keyed: Vec<(String, usize)> =
+            slots.iter().map(|s| (s.logical.clone(), s.byte_size)).collect();
+        let layout = bucket_slots(&keyed, coalesce_bytes);
+        let mut slot_bucket = vec![0usize; slots.len()];
+        let mut slot_pos = vec![0usize; slots.len()];
+        let mut buckets: Vec<BucketSpec> = Vec::with_capacity(layout.len());
+        for (b, bucket) in layout.into_iter().enumerate() {
+            let mut spec = BucketSpec {
+                slots: bucket,
+                flush_bytes: 0,
+                fetch_bytes: 0,
+                node_list: Vec::new(),
+            };
+            for (pos, &s) in spec.slots.iter().enumerate() {
+                slot_bucket[s] = b;
+                slot_pos[s] = pos;
+                spec.flush_bytes += Msg::exchange_wire_size(slots[s].byte_size);
+                spec.fetch_bytes += slots[s].byte_size * slots[s].replicas;
+            }
+            buckets.push(spec);
+        }
+
+        // Node → bucket + per-param aggregation actions. A node's params
+        // all share one owning layer, hence one bucket.
+        let mut node_bucket = vec![usize::MAX; net.len()];
+        let mut node_actions: Vec<Vec<(usize, bool)>> = vec![Vec::new(); net.len()];
+        let mut j = 0usize;
+        for (i, node) in net.nodes().iter().enumerate() {
+            let nparams = node.layer.params().len();
+            if nparams == 0 {
+                continue;
+            }
+            let b = slot_bucket[param_slot[j]];
+            for jj in j..j + nparams {
+                let s = param_slot[jj];
+                assert_eq!(
+                    slot_bucket[s],
+                    b,
+                    "params of node '{}' span buckets",
+                    node.layer.name()
+                );
+                node_actions[i].push((slot_pos[s], slots[s].params[0] == jj));
+            }
+            node_bucket[i] = b;
+            buckets[b].node_list.push(i);
+            j += nparams;
+        }
+
+        let bufs = buckets
+            .iter()
+            .map(|spec| {
+                let mut sums: Vec<Blob> = spec.slots.iter().map(|_| Blob::default()).collect();
+                let mut fresh: Vec<Blob> = spec.slots.iter().map(|_| Blob::default()).collect();
+                for (i, &s) in spec.slots.iter().enumerate() {
+                    sums[i].resize(shapes[s]);
+                    fresh[i].resize(shapes[s]);
+                }
+                let buf = BucketBuf { sums, fresh, epoch: 0, finish_virt_us: 0.0 };
+                (Mutex::new(buf), Condvar::new())
+            })
+            .collect();
+
+        ParamWorkspace {
+            plan: Arc::new(ExchangePlan { slots, param_slot, node_bucket, node_actions, buckets }),
+            store: Arc::new(BucketStore { bufs }),
+        }
     }
 
-    /// Sum `net`'s per-replica gradients into the slots and average: after
-    /// this every slot's `sum` holds the mean gradient over its replicas —
-    /// the value the group stub forwards to the server. Zero Blob
-    /// allocations; arithmetic order matches the historical HashMap path
-    /// (first replica copied, later replicas `add_assign`ed in param order,
-    /// then one `scale(1/count)`), so trajectories are bit-identical.
-    pub fn aggregate_grads(&mut self, net: &NeuralNet) {
-        self.seen.iter_mut().for_each(|s| *s = false);
-        for (j, p) in net.params().iter().enumerate() {
-            let si = self.param_slot[j];
-            let slot = &mut self.slots[si];
-            if self.seen[si] {
-                slot.sum.add_assign(&p.grad);
-            } else {
-                slot.sum.copy_from(&p.grad);
-                self.seen[si] = true;
+    pub fn plan(&self) -> &Arc<ExchangePlan> {
+        &self.plan
+    }
+
+    pub fn store(&self) -> &Arc<BucketStore> {
+        &self.store
+    }
+
+    pub fn nbuckets(&self) -> usize {
+        self.plan.buckets.len()
+    }
+
+    pub fn slots(&self) -> &[SlotInfo] {
+        &self.plan.slots
+    }
+
+    /// Aggregate bucket `b`'s replica gradients from `net` into its
+    /// persistent sum slots: walking the bucket's contributing nodes in
+    /// ascending order (= ascending global param order), the first replica
+    /// of each slot is copied, later replicas `add_assign`ed, then one
+    /// `scale(1/replicas)` per slot — bit-identical to the historical
+    /// whole-net HashMap recipe, restricted to this bucket, without ever
+    /// materializing the full param list. Zero Blob allocations.
+    pub fn aggregate_bucket(&self, net: &NeuralNet, b: usize) {
+        let spec = &self.plan.buckets[b];
+        let mut buf = self.store.bufs[b].0.lock().unwrap();
+        for &ni in &spec.node_list {
+            let nparams = net.nodes()[ni].layer.params();
+            for (p, &(i, first)) in nparams.iter().zip(&self.plan.node_actions[ni]) {
+                if first {
+                    buf.sums[i].copy_from(&p.grad);
+                } else {
+                    buf.sums[i].add_assign(&p.grad);
+                }
             }
         }
-        for slot in &mut self.slots {
-            slot.sum.scale(1.0 / slot.replicas as f32);
+        for (i, &s) in spec.slots.iter().enumerate() {
+            buf.sums[i].scale(1.0 / self.plan.slots[s].replicas as f32);
         }
-    }
-
-    /// Copy each slot's fresh server value back into every local replica,
-    /// bumping replica versions. Zero Blob allocations.
-    pub fn write_back(&self, net: &mut NeuralNet) {
-        for (j, p) in net.params_mut().into_iter().enumerate() {
-            p.data.copy_from(&self.slots[self.param_slot[j]].fresh);
-            p.version += 1;
-        }
-    }
-
-    /// Copy each slot's fresh value into every replica WITHOUT bumping
-    /// versions (the initial fetch: replicas adopt the server state).
-    /// Asserts server/local shape agreement, like the historical fetch.
-    pub fn distribute_fresh(&self, net: &mut NeuralNet) {
-        for (j, p) in net.params_mut().into_iter().enumerate() {
-            let slot = &self.slots[self.param_slot[j]];
-            assert_eq!(
-                slot.fresh.shape(),
-                p.data.shape(),
-                "server/local shape mismatch for {} (logical {})",
-                p.name,
-                slot.logical
-            );
-            p.data.copy_from(&slot.fresh);
-        }
-    }
-
-    pub fn slots(&self) -> &[ParamSlot] {
-        &self.slots
-    }
-
-    pub fn slots_mut(&mut self) -> impl Iterator<Item = &mut ParamSlot> {
-        self.slots.iter_mut()
     }
 }
 
@@ -170,7 +318,7 @@ mod tests {
         bp.build(&mut Rng::new(11))
     }
 
-    /// The workspace aggregation must reproduce the historical HashMap
+    /// The bucketed aggregation must reproduce the historical HashMap
     /// recipe (clone-first, add_assign-later, scale by 1/count) bit for
     /// bit, including replica counting on a dim-0 partitioned net.
     #[test]
@@ -200,54 +348,91 @@ mod tests {
             sum.scale(1.0 / *count as f32);
         }
 
-        let mut ws = ParamWorkspace::new(&net);
-        ws.aggregate_grads(&net);
+        let ws = ParamWorkspace::new(&net, 0);
+        for b in 0..ws.nbuckets() {
+            ws.aggregate_bucket(&net, b);
+        }
         assert_eq!(ws.slots().len(), agg.len());
-        for slot in ws.slots() {
-            let (want, count) = agg.get(&slot.logical).expect("slot has a reference entry");
-            assert_eq!(slot.replicas, *count, "{}", slot.logical);
-            assert_eq!(slot.sum.shape(), want.shape());
-            for (x, y) in slot.sum.data().iter().zip(want.data()) {
-                assert_eq!(x.to_bits(), y.to_bits(), "{} diverged", slot.logical);
+        for b in 0..ws.nbuckets() {
+            let buf = ws.store().bufs[b].0.lock().unwrap();
+            for (i, &s) in ws.plan().buckets[b].slots.iter().enumerate() {
+                let info = &ws.slots()[s];
+                let (want, count) =
+                    agg.get(&info.logical).expect("slot has a reference entry");
+                assert_eq!(info.replicas, *count, "{}", info.logical);
+                assert_eq!(buf.sums[i].shape(), want.shape());
+                for (x, y) in buf.sums[i].data().iter().zip(want.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{} diverged", info.logical);
+                }
             }
         }
     }
 
-    /// Steady-state aggregate + write-back cycles allocate zero Blobs.
+    /// Steady-state aggregation cycles allocate zero Blobs: the sums were
+    /// sized at construction and reused every step.
     #[test]
-    fn steady_state_cycle_is_allocation_free() {
-        let mut net = partitioned_mlp(2);
-        let mut ws = ParamWorkspace::new(&net);
-        let mut cycle = |ws: &mut ParamWorkspace, net: &mut NeuralNet| {
-            ws.aggregate_grads(net);
-            for slot in ws.slots_mut() {
-                slot.fresh.copy_from(&slot.sum); // stand-in for the server reply
-            }
-            ws.write_back(net);
-        };
-        cycle(&mut ws, &mut net); // warm (nothing to size — already sized at new)
+    fn steady_state_aggregation_is_allocation_free() {
+        let net = partitioned_mlp(2);
+        let ws = ParamWorkspace::new(&net, 0);
+        for b in 0..ws.nbuckets() {
+            ws.aggregate_bucket(&net, b); // warm (already sized)
+        }
         let before = Blob::alloc_count();
         for _ in 0..5 {
-            cycle(&mut ws, &mut net);
+            for b in 0..ws.nbuckets() {
+                ws.aggregate_bucket(&net, b);
+            }
         }
-        assert_eq!(Blob::alloc_count(), before, "workspace cycle must not allocate");
+        assert_eq!(Blob::alloc_count(), before, "aggregation must not allocate");
     }
 
-    /// Write-back copies one slot value into every replica and bumps each
-    /// replica's version; the unpartitioned case is one replica per slot.
+    /// Bucket layout over a replicated (dim-0) net: replicas share slots,
+    /// each layer's slots land in one bucket at threshold 0, the node →
+    /// bucket map covers every param-bearing node, and per-bucket node
+    /// counts equal the replica fan-in.
     #[test]
-    fn write_back_updates_all_replicas() {
-        let mut net = partitioned_mlp(3);
-        let mut ws = ParamWorkspace::new(&net);
-        for (i, slot) in ws.slots.iter_mut().enumerate() {
-            slot.fresh.fill(i as f32 + 1.0);
+    fn bucket_layout_on_partitioned_net() {
+        let net = partitioned_mlp(3);
+        let ws = ParamWorkspace::new(&net, 0);
+        let plan = ws.plan();
+        // Two logical layers with params (h1, logits) → two buckets.
+        assert_eq!(ws.nbuckets(), 2);
+        for spec in &plan.buckets {
+            // 3 replica sub-layers contribute to every bucket, ascending.
+            assert_eq!(spec.node_list.len(), 3);
+            assert!(spec.node_list.windows(2).all(|w| w[0] < w[1]));
+            for &s in &spec.slots {
+                assert_eq!(plan.slots[s].replicas, 3);
+                assert_eq!(plan.slots[s].params.len(), 3);
+            }
+            assert!(spec.flush_bytes > 0 && spec.fetch_bytes > 0);
         }
-        let versions_before: Vec<u64> = net.params().iter().map(|p| p.version).collect();
-        ws.write_back(&mut net);
-        for (j, p) in net.params().iter().enumerate() {
-            let slot = &ws.slots()[ws.param_slot[j]];
-            assert_eq!(p.data.data(), slot.fresh.data(), "{}", p.name);
-            assert_eq!(p.version, versions_before[j] + 1);
+        // Every param-bearing node maps to a bucket (with one action per
+        // param); others to MAX.
+        for (i, node) in net.nodes().iter().enumerate() {
+            let nparams = node.layer.params().len();
+            assert_eq!(plan.node_bucket[i] != usize::MAX, nparams > 0);
+            assert_eq!(plan.node_actions[i].len(), nparams);
         }
+        // Coalescing everything yields the single-bucket degenerate case.
+        let one = ParamWorkspace::new(&net, usize::MAX);
+        assert_eq!(one.nbuckets(), 1);
+        assert_eq!(one.plan().buckets[0].node_list.len(), 6);
+    }
+
+    /// Flush wire accounting matches the historical per-slot formula
+    /// (`2 * payload + 128`) summed over the bucket, and fetch accounting
+    /// matches the per-replica value charge.
+    #[test]
+    fn bucket_wire_bytes_match_historical_formulas() {
+        let net = partitioned_mlp(2);
+        let ws = ParamWorkspace::new(&net, usize::MAX);
+        let spec = &ws.plan().buckets[0];
+        let want_flush: usize =
+            ws.slots().iter().map(|s| 2 * s.byte_size + 128).sum();
+        let want_fetch: usize =
+            ws.slots().iter().map(|s| s.byte_size * s.replicas).sum();
+        assert_eq!(spec.flush_bytes, want_flush);
+        assert_eq!(spec.fetch_bytes, want_fetch);
     }
 }

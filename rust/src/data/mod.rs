@@ -33,27 +33,31 @@ pub trait DataSource: Send + Sync {
     }
 }
 
-/// Move two named slots out of `out` for in-place refilling (inserting
+/// Move the named slots out of `out` for in-place refilling (inserting
 /// empty defaults on first use), returning owned blobs whose buffers are
 /// reused across calls. Pair with [`restore_slots`].
-fn take_slots(out: &mut HashMap<String, Blob>, a: &str, b: &str) -> (Blob, Blob) {
+fn take_slots<const N: usize>(out: &mut HashMap<String, Blob>, names: [&str; N]) -> [Blob; N] {
     if out.is_empty() {
-        out.insert(a.to_string(), Blob::default());
-        out.insert(b.to_string(), Blob::default());
+        for name in names {
+            out.insert(name.to_string(), Blob::default());
+        }
     }
-    let first = std::mem::take(
-        out.get_mut(a).unwrap_or_else(|| panic!("batch_into: missing '{a}' slot")),
-    );
-    let second = std::mem::take(
-        out.get_mut(b).unwrap_or_else(|| panic!("batch_into: missing '{b}' slot")),
-    );
-    (first, second)
+    names.map(|name| {
+        std::mem::take(
+            out.get_mut(name).unwrap_or_else(|| panic!("batch_into: missing '{name}' slot")),
+        )
+    })
 }
 
 /// Move refilled blobs back into their slots (no rehash, no Blob clones).
-fn restore_slots(out: &mut HashMap<String, Blob>, a: &str, va: Blob, b: &str, vb: Blob) {
-    *out.get_mut(a).unwrap() = va;
-    *out.get_mut(b).unwrap() = vb;
+fn restore_slots<const N: usize>(
+    out: &mut HashMap<String, Blob>,
+    names: [&str; N],
+    values: [Blob; N],
+) {
+    for (name, value) in names.into_iter().zip(values) {
+        *out.get_mut(name).unwrap() = value;
+    }
 }
 
 /// CIFAR-like image classification: `[b, 3, h, w]` images in 10 classes.
@@ -144,9 +148,9 @@ impl DataSource for SyntheticImages {
     }
 
     fn batch_into(&self, index: u64, batch: usize, out: &mut HashMap<String, Blob>) {
-        let (mut data, mut label) = take_slots(out, "data", "label");
+        let [mut data, mut label] = take_slots(out, ["data", "label"]);
         self.fill(index, batch, &mut data, &mut label);
-        restore_slots(out, "data", data, "label", label);
+        restore_slots(out, ["data", "label"], [data, label]);
     }
 }
 
@@ -203,9 +207,9 @@ impl DataSource for SyntheticDigits {
     }
 
     fn batch_into(&self, index: u64, batch: usize, out: &mut HashMap<String, Blob>) {
-        let (mut data, mut label) = take_slots(out, "data", "label");
+        let [mut data, mut label] = take_slots(out, ["data", "label"]);
         self.fill(index, batch, &mut data, &mut label);
-        restore_slots(out, "data", data, "label", label);
+        restore_slots(out, ["data", "label"], [data, label]);
     }
 }
 
@@ -278,6 +282,26 @@ impl CharCorpus {
     pub fn decode(&self, id: usize) -> char {
         self.vocab[id] as char
     }
+
+    /// The single batch recipe behind both entry points: resize the slots
+    /// and write the deterministic sample stream in place. Reads
+    /// `steps + 1` successive characters per example (paper §4.2.3): the
+    /// first `steps` are inputs, the last `steps` are next-char labels.
+    fn fill(&self, index: u64, batch: usize, chars: &mut Blob, labels: &mut Blob) {
+        let mut rng = Rng::with_stream(0xc4a2 ^ index.wrapping_mul(31), 3);
+        let span = self.steps + 1;
+        chars.resize(&[batch, self.steps]);
+        labels.resize(&[batch, self.steps]);
+        let cs = chars.data_mut();
+        let ls = labels.data_mut();
+        for i in 0..batch {
+            let start = rng.below(self.text.len() - span);
+            for t in 0..self.steps {
+                cs[i * self.steps + t] = self.index_of[self.text[start + t] as usize] as f32;
+                ls[i * self.steps + t] = self.index_of[self.text[start + t + 1] as usize] as f32;
+            }
+        }
+    }
 }
 
 impl DataSource for CharCorpus {
@@ -285,24 +309,16 @@ impl DataSource for CharCorpus {
         vec!["chars".to_string(), "labels".to_string()]
     }
 
-    /// Reads `steps + 1` successive characters per example (paper §4.2.3):
-    /// the first `steps` are inputs, the last `steps` are next-char labels.
     fn batch(&self, index: u64, batch: usize) -> HashMap<String, Blob> {
-        let mut rng = Rng::with_stream(0xc4a2 ^ index.wrapping_mul(31), 3);
-        let span = self.steps + 1;
-        let mut chars = Vec::with_capacity(batch * self.steps);
-        let mut labels = Vec::with_capacity(batch * self.steps);
-        for _ in 0..batch {
-            let start = rng.below(self.text.len() - span);
-            for t in 0..self.steps {
-                chars.push(self.index_of[self.text[start + t] as usize] as f32);
-                labels.push(self.index_of[self.text[start + t + 1] as usize] as f32);
-            }
-        }
         let mut m = HashMap::new();
-        m.insert("chars".to_string(), Blob::from_vec(&[batch, self.steps], chars));
-        m.insert("labels".to_string(), Blob::from_vec(&[batch, self.steps], labels));
+        self.batch_into(index, batch, &mut m);
         m
+    }
+
+    fn batch_into(&self, index: u64, batch: usize, out: &mut HashMap<String, Blob>) {
+        let [mut chars, mut labels] = take_slots(out, ["chars", "labels"]);
+        self.fill(index, batch, &mut chars, &mut labels);
+        restore_slots(out, ["chars", "labels"], [chars, labels]);
     }
 }
 
@@ -343,6 +359,29 @@ impl MultiModalPairs {
             .collect();
         MultiModalPairs { classes, channels, h, w, text_dim, images, text_protos, seed }
     }
+
+    /// The single batch recipe behind both entry points: resize the slots
+    /// and write the deterministic sample stream in place.
+    fn fill(&self, index: u64, batch: usize, image: &mut Blob, text: &mut Blob, label: &mut Blob) {
+        let mut rng = Rng::with_stream(self.seed ^ index.wrapping_mul(0xabcd), 13);
+        let img_dim = self.channels * self.h * self.w;
+        image.resize(&[batch, self.channels, self.h, self.w]);
+        text.resize(&[batch, self.text_dim]);
+        label.resize(&[batch]);
+        let imgs = image.data_mut();
+        let texts = text.data_mut();
+        let ys = label.data_mut();
+        for i in 0..batch {
+            let c = rng.below(self.classes);
+            ys[i] = c as f32;
+            for (j, &p) in self.images.prototypes[c].iter().enumerate() {
+                imgs[i * img_dim + j] = p + 0.3 * rng.gaussian();
+            }
+            for (j, &p) in self.text_protos[c].iter().enumerate() {
+                texts[i * self.text_dim + j] = (p + 0.1 * rng.gaussian()).max(0.0);
+            }
+        }
+    }
 }
 
 impl DataSource for MultiModalPairs {
@@ -351,29 +390,15 @@ impl DataSource for MultiModalPairs {
     }
 
     fn batch(&self, index: u64, batch: usize) -> HashMap<String, Blob> {
-        let mut rng = Rng::with_stream(self.seed ^ index.wrapping_mul(0xabcd), 13);
-        let img_dim = self.channels * self.h * self.w;
-        let mut imgs = Vec::with_capacity(batch * img_dim);
-        let mut texts = Vec::with_capacity(batch * self.text_dim);
-        let mut ys = Vec::with_capacity(batch);
-        for _ in 0..batch {
-            let c = rng.below(self.classes);
-            ys.push(c as f32);
-            for &p in &self.images.prototypes[c] {
-                imgs.push(p + 0.3 * rng.gaussian());
-            }
-            for &p in &self.text_protos[c] {
-                texts.push((p + 0.1 * rng.gaussian()).max(0.0));
-            }
-        }
         let mut m = HashMap::new();
-        m.insert(
-            "image".to_string(),
-            Blob::from_vec(&[batch, self.channels, self.h, self.w], imgs),
-        );
-        m.insert("text".to_string(), Blob::from_vec(&[batch, self.text_dim], texts));
-        m.insert("label".to_string(), Blob::from_vec(&[batch], ys));
+        self.batch_into(index, batch, &mut m);
         m
+    }
+
+    fn batch_into(&self, index: u64, batch: usize, out: &mut HashMap<String, Blob>) {
+        let [mut image, mut text, mut label] = take_slots(out, ["image", "text", "label"]);
+        self.fill(index, batch, &mut image, &mut text, &mut label);
+        restore_slots(out, ["image", "text", "label"], [image, text, label]);
     }
 }
 
@@ -464,12 +489,16 @@ mod tests {
 
     /// `batch_into` must produce exactly the blobs `batch` would (the
     /// coordinator's trajectories may not depend on the entry point), and
-    /// refills after the first must allocate nothing.
+    /// refills after the first must allocate nothing — for ALL four
+    /// sources, including the Char-RNN corpus (2 slots) and the
+    /// multi-modal pairs (3 slots).
     #[test]
     fn batch_into_matches_batch_and_reuses_buffers() {
         let digits = SyntheticDigits::new(64, 5, 77);
         let images = SyntheticImages::new(4, 3, 8, 8, 0.2, 42);
-        let sources: [&dyn DataSource; 2] = [&digits, &images];
+        let corpus = CharCorpus::pseudo_c(4096, 8, 1);
+        let pairs = MultiModalPairs::new(4, 1, 4, 4, 16, 9);
+        let sources: [&dyn DataSource; 4] = [&digits, &images, &corpus, &pairs];
         for src in sources {
             let mut reused = HashMap::new();
             for index in [0u64, 3, 9] {

@@ -15,7 +15,7 @@ pub mod net;
 pub mod partition;
 
 pub use layer::{Layer, LayerConf, LayerKind, Phase};
-pub use net::{NetBuilder, NeuralNet, Workspace};
+pub use net::{GradObserver, NetBuilder, NeuralNet, NoopObserver, Workspace};
 pub use partition::partition_net;
 
 /// Test-only stand-in for the planned executor: drives a single layer with

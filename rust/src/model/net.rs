@@ -173,6 +173,26 @@ impl Workspace {
     }
 }
 
+/// Observer of backward-pass progress: [`GradObserver::grads_ready`] fires
+/// once per node and step, at the moment that node's *parameter* gradients
+/// are final — for BP, in reverse-topological order right after its
+/// `compute_gradient` returns (the paper's per-layer transfer hook: "the
+/// gradients are sent as soon as the layer finishes its ComputeGradient").
+/// Parameter-less and skipped nodes fire too, so an observer counting
+/// completions always reaches its target. The net is borrowed shared
+/// during the callback: observers may read features, gradients, and params
+/// but not mutate the net.
+pub trait GradObserver {
+    fn grads_ready(&mut self, net: &NeuralNet, node: usize);
+}
+
+/// No-op observer backing the plain [`NeuralNet::backward`] entry point.
+pub struct NoopObserver;
+
+impl GradObserver for NoopObserver {
+    fn grads_ready(&mut self, _net: &NeuralNet, _node: usize) {}
+}
+
 /// The neural net instance passed to `TrainOneBatch` (paper Fig 6).
 pub struct NeuralNet {
     nodes: Vec<Node>,
@@ -395,84 +415,101 @@ impl NeuralNet {
     /// Algorithm 1): each layer accumulates into the pre-zeroed gradient
     /// slots of its sources — no per-step gradient allocation.
     pub fn backward(&mut self) {
+        self.backward_observed(&mut NoopObserver);
+    }
+
+    /// [`NeuralNet::backward`] with completion hooks: after each node's
+    /// gradients are final (its `compute_gradient` returned, or it was
+    /// skipped — inputs and dead paths), `obs.grads_ready(net, i)` fires.
+    /// This is what lets the coordinator flush a layer's parameter
+    /// gradients to the servers while backward continues on the layers
+    /// below (the overlapped exchange pipeline).
+    pub fn backward_observed(&mut self, obs: &mut dyn GradObserver) {
         for i in (0..self.nodes.len()).rev() {
-            let node = &mut self.nodes[i];
-            if node.srcs.is_empty() {
-                continue; // input layers
+            self.backward_node(i);
+            obs.grads_ready(self, i);
+        }
+    }
+
+    /// Run one node's slice of the backward pass (no-op for input layers
+    /// and nodes no gradient reached).
+    fn backward_node(&mut self, i: usize) {
+        let node = &mut self.nodes[i];
+        if node.srcs.is_empty() {
+            return; // input layers
+        }
+        let has_grad = self.ws.grad_seen[i];
+        if !has_grad && !node.layer.is_loss() {
+            // No gradient reached this node (e.g. the label parser
+            // path); nothing to propagate.
+            return;
+        }
+        // Lazily zero the source slots this layer will write (first
+        // contribution of the step only), resizing if the runtime batch
+        // changed since the workspace was planned.
+        for (k, &s) in node.srcs.iter().enumerate() {
+            if node.layer.needs_src_grad(k) && !self.ws.grad_seen[s] {
+                self.ws.grads[s].resize(self.ws.features[s].shape());
+                self.ws.grads[s].fill(0.0);
+                self.ws.grad_seen[s] = true;
             }
-            let has_grad = self.ws.grad_seen[i];
-            if !has_grad && !node.layer.is_loss() {
-                // No gradient reached this node (e.g. the label parser
-                // path); nothing to propagate.
+        }
+        // Move the writable slots out of the pool into the REUSED store
+        // so the layer gets disjoint `&mut` access (duplicate sources —
+        // legal but rare — borrow a preallocated scratch accumulator
+        // merged back below). Everything here runs in retained
+        // capacity: zero heap allocations at steady state.
+        let nsrc = node.srcs.len();
+        self.ws.slot_store.clear();
+        self.ws.is_dup.clear();
+        reserve_counted(&mut self.ws.slot_store, nsrc);
+        reserve_counted(&mut self.ws.is_dup, nsrc);
+        let mut ndup = 0usize;
+        for (k, &s) in node.srcs.iter().enumerate() {
+            if !node.layer.needs_src_grad(k) {
+                self.ws.slot_store.push(None);
+                self.ws.is_dup.push(false);
                 continue;
             }
-            // Lazily zero the source slots this layer will write (first
-            // contribution of the step only), resizing if the runtime batch
-            // changed since the workspace was planned.
-            for (k, &s) in node.srcs.iter().enumerate() {
-                if node.layer.needs_src_grad(k) && !self.ws.grad_seen[s] {
-                    self.ws.grads[s].resize(self.ws.features[s].shape());
-                    self.ws.grads[s].fill(0.0);
-                    self.ws.grad_seen[s] = true;
+            let taken_before = node.srcs[..k]
+                .iter()
+                .enumerate()
+                .any(|(p, &ps)| ps == s && node.layer.needs_src_grad(p));
+            if taken_before {
+                if ndup == self.ws.dup_scratch.len() {
+                    note_exec_alloc();
+                    self.ws.dup_scratch.push(Blob::default());
                 }
+                let mut scratch = std::mem::take(&mut self.ws.dup_scratch[ndup]);
+                ndup += 1;
+                scratch.resize(self.ws.features[s].shape());
+                scratch.fill(0.0);
+                self.ws.slot_store.push(Some(scratch));
+                self.ws.is_dup.push(true);
+            } else {
+                self.ws.slot_store.push(Some(std::mem::take(&mut self.ws.grads[s])));
+                self.ws.is_dup.push(false);
             }
-            // Move the writable slots out of the pool into the REUSED store
-            // so the layer gets disjoint `&mut` access (duplicate sources —
-            // legal but rare — borrow a preallocated scratch accumulator
-            // merged back below). Everything here runs in retained
-            // capacity: zero heap allocations at steady state.
-            let nsrc = node.srcs.len();
-            self.ws.slot_store.clear();
-            self.ws.is_dup.clear();
-            reserve_counted(&mut self.ws.slot_store, nsrc);
-            reserve_counted(&mut self.ws.is_dup, nsrc);
-            let mut ndup = 0usize;
-            for (k, &s) in node.srcs.iter().enumerate() {
-                if !node.layer.needs_src_grad(k) {
-                    self.ws.slot_store.push(None);
-                    self.ws.is_dup.push(false);
-                    continue;
-                }
-                let taken_before = node.srcs[..k]
-                    .iter()
-                    .enumerate()
-                    .any(|(p, &ps)| ps == s && node.layer.needs_src_grad(p));
-                if taken_before {
-                    if ndup == self.ws.dup_scratch.len() {
-                        note_exec_alloc();
-                        self.ws.dup_scratch.push(Blob::default());
-                    }
-                    let mut scratch = std::mem::take(&mut self.ws.dup_scratch[ndup]);
+        }
+        {
+            let src_feats = self.src_refs.fill(&self.ws.features, &node.srcs);
+            let own = &self.ws.features[i];
+            let grad_out = if has_grad { Some(&self.ws.grads[i]) } else { None };
+            let slots = self.slot_refs.fill(&mut self.ws.slot_store);
+            node.layer.compute_gradient(src_feats, own, grad_out, slots);
+        }
+        // Return the slots to the pool, merging duplicate-source
+        // scratch into the canonical slot and parking the scratch blob
+        // for reuse next step.
+        let mut ndup = 0usize;
+        for (k, &s) in node.srcs.iter().enumerate() {
+            if let Some(blob) = self.ws.slot_store[k].take() {
+                if self.ws.is_dup[k] {
+                    self.ws.grads[s].add_assign(&blob);
+                    self.ws.dup_scratch[ndup] = blob;
                     ndup += 1;
-                    scratch.resize(self.ws.features[s].shape());
-                    scratch.fill(0.0);
-                    self.ws.slot_store.push(Some(scratch));
-                    self.ws.is_dup.push(true);
                 } else {
-                    self.ws.slot_store.push(Some(std::mem::take(&mut self.ws.grads[s])));
-                    self.ws.is_dup.push(false);
-                }
-            }
-            {
-                let src_feats = self.src_refs.fill(&self.ws.features, &node.srcs);
-                let own = &self.ws.features[i];
-                let grad_out = if has_grad { Some(&self.ws.grads[i]) } else { None };
-                let slots = self.slot_refs.fill(&mut self.ws.slot_store);
-                node.layer.compute_gradient(src_feats, own, grad_out, slots);
-            }
-            // Return the slots to the pool, merging duplicate-source
-            // scratch into the canonical slot and parking the scratch blob
-            // for reuse next step.
-            let mut ndup = 0usize;
-            for (k, &s) in node.srcs.iter().enumerate() {
-                if let Some(blob) = self.ws.slot_store[k].take() {
-                    if self.ws.is_dup[k] {
-                        self.ws.grads[s].add_assign(&blob);
-                        self.ws.dup_scratch[ndup] = blob;
-                        ndup += 1;
-                    } else {
-                        self.ws.grads[s] = blob;
-                    }
+                    self.ws.grads[s] = blob;
                 }
             }
         }
@@ -807,6 +844,65 @@ mod tests {
             blobs_before,
             "steady state must not allocate blobs (dup scratch must be reused)"
         );
+    }
+
+    /// The backward hook fires once per node, in reverse topological
+    /// order, including parameter-less and skipped nodes — the completion
+    /// contract the overlapped exchange's bucket counting relies on.
+    #[test]
+    fn backward_observer_fires_reverse_topo_for_every_node() {
+        struct RecObs(Vec<usize>);
+        impl GradObserver for RecObs {
+            fn grads_ready(&mut self, _net: &NeuralNet, node: usize) {
+                self.0.push(node);
+            }
+        }
+        let mut net = mlp_builder(4, 6, 8, 3).build(&mut Rng::new(1));
+        net.set_input("data", Blob::zeros(&[4, 6]));
+        net.set_input("label", Blob::zeros(&[4]));
+        net.forward(Phase::Train);
+        let mut obs = RecObs(Vec::new());
+        net.backward_observed(&mut obs);
+        let want: Vec<usize> = (0..net.len()).rev().collect();
+        assert_eq!(obs.0, want);
+    }
+
+    /// At fire time a node's parameter gradients are already final: the
+    /// bits captured in the callback equal the post-backward bits.
+    #[test]
+    fn observer_sees_final_param_grads_at_fire_time() {
+        struct CaptureObs {
+            target: usize,
+            bits: Vec<u32>,
+        }
+        impl GradObserver for CaptureObs {
+            fn grads_ready(&mut self, net: &NeuralNet, node: usize) {
+                if node == self.target {
+                    self.bits = net.nodes()[node].layer.params()[0]
+                        .grad
+                        .data()
+                        .iter()
+                        .map(|v| v.to_bits())
+                        .collect();
+                }
+            }
+        }
+        let mut net = mlp_builder(4, 6, 8, 3).build(&mut Rng::new(2));
+        net.set_input("data", Blob::full(&[4, 6], 0.3));
+        net.set_input("label", Blob::zeros(&[4]));
+        net.zero_grads();
+        net.forward(Phase::Train);
+        let target = net.index_of("hidden").unwrap();
+        let mut obs = CaptureObs { target, bits: Vec::new() };
+        net.backward_observed(&mut obs);
+        let after: Vec<u32> = net.nodes()[target].layer.params()[0]
+            .grad
+            .data()
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        assert!(!obs.bits.is_empty());
+        assert_eq!(obs.bits, after, "hidden layer grads must be final when its hook fires");
     }
 
     #[test]

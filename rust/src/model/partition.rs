@@ -75,6 +75,49 @@ pub fn logical_slot_map(param_names: &[&str]) -> (Vec<String>, Vec<usize>) {
     (slots, param_slot)
 }
 
+/// Owning layer of a logical parameter name: `"h1/weight"` → `"h1"`,
+/// `"logits#f0/bias"` → `"logits#f0"` (dim-1 slices are distinct owners —
+/// their values live on different workers), a name without a `/` owns
+/// itself. This is the grouping key for flush buckets: all of a layer's
+/// parameters become exchangeable at the same backward instant, so they
+/// ship together.
+pub fn logical_layer_name(logical: &str) -> &str {
+    match logical.rsplit_once('/') {
+        Some((layer, _)) => layer,
+        None => logical,
+    }
+}
+
+/// Group a slot list (logical parameter names with their payload byte
+/// sizes, in stable slot order) into fixed-order flush buckets: one bucket
+/// per owning layer, coalescing consecutive layers while the open bucket's
+/// payload is still below `coalesce_bytes` (so tiny params — biases, small
+/// heads — ride along with a neighbour instead of paying a whole message
+/// each). `coalesce_bytes == 0` yields pure per-layer buckets;
+/// `usize::MAX` yields a single bucket (the sequential degenerate case).
+/// Returns each bucket's slot indices; concatenated they are `0..n` in
+/// order, so the bucket layout is deterministic for a given slot list.
+pub fn bucket_slots(slots: &[(String, usize)], coalesce_bytes: usize) -> Vec<Vec<usize>> {
+    let mut buckets: Vec<Vec<usize>> = Vec::new();
+    let mut cur: Vec<usize> = Vec::new();
+    let mut cur_bytes = 0usize;
+    let mut cur_layer: Option<&str> = None;
+    for (s, (logical, bytes)) in slots.iter().enumerate() {
+        let layer = logical_layer_name(logical);
+        if cur_layer.is_some_and(|l| l != layer) && cur_bytes >= coalesce_bytes {
+            buckets.push(std::mem::take(&mut cur));
+            cur_bytes = 0;
+        }
+        cur_layer = Some(layer);
+        cur.push(s);
+        cur_bytes += bytes;
+    }
+    if !cur.is_empty() {
+        buckets.push(cur);
+    }
+    buckets
+}
+
 /// Partition a net across `num_workers` workers. Layers with
 /// `partition_dim = Some(d)` are split into `num_workers` sub-layers along
 /// `d`; unsplit layers stay at their configured location (default 0).
@@ -430,6 +473,43 @@ mod tests {
         assert_eq!(logical_param_name("fc1#f1/weight"), "fc1#f1/weight");
         assert_eq!(logical_param_name("fc1/weight"), "fc1/weight");
         assert_eq!(logical_param_name("conv#b10"), "conv");
+    }
+
+    #[test]
+    fn logical_layer_names() {
+        assert_eq!(logical_layer_name("h1/weight"), "h1");
+        assert_eq!(logical_layer_name("logits#f0/bias"), "logits#f0");
+        assert_eq!(logical_layer_name("conv"), "conv");
+        assert_eq!(logical_layer_name("a/b/weight"), "a/b");
+    }
+
+    /// Bucket layout: per-layer at threshold 0, tiny layers coalesce under
+    /// a byte threshold, everything merges at `usize::MAX`, and the layout
+    /// is a fixed-order partition of the slot indices.
+    #[test]
+    fn bucket_slots_layouts() {
+        let slots: Vec<(String, usize)> = vec![
+            ("h1/weight".into(), 8192),
+            ("h1/bias".into(), 128),
+            ("logits/weight".into(), 640),
+            ("logits/bias".into(), 20),
+            ("head/weight".into(), 40),
+        ];
+        // Threshold 0: one bucket per owning layer.
+        assert_eq!(
+            bucket_slots(&slots, 0),
+            vec![vec![0, 1], vec![2, 3], vec![4]]
+        );
+        // 4 KiB threshold: h1 alone exceeds it and closes at the layer
+        // boundary; the tiny logits + head layers coalesce.
+        assert_eq!(bucket_slots(&slots, 4096), vec![vec![0, 1], vec![2, 3, 4]]);
+        // Single-bucket degenerate case.
+        assert_eq!(bucket_slots(&slots, usize::MAX), vec![vec![0, 1, 2, 3, 4]]);
+        // Empty slot list: no buckets.
+        assert!(bucket_slots(&[], 0).is_empty());
+        // The layout always partitions 0..n in order.
+        let flat: Vec<usize> = bucket_slots(&slots, 4096).concat();
+        assert_eq!(flat, (0..slots.len()).collect::<Vec<_>>());
     }
 
     #[test]

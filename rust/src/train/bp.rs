@@ -6,7 +6,7 @@
 //! so the same driver realizes BPTT (paper §4.1.3: "for feed-forward and
 //! recurrent models, the BP algorithm is provided").
 
-use super::{StepStats, TrainOneBatch};
+use super::{GradObserver, NoopObserver, StepStats, TrainOneBatch};
 use crate::model::{NeuralNet, Phase};
 use crate::tensor::Blob;
 use std::collections::HashMap;
@@ -27,13 +27,26 @@ impl TrainOneBatch for Bp {
         net: &mut NeuralNet,
         inputs: &HashMap<String, Blob>,
     ) -> StepStats {
+        self.train_one_batch_observed(net, inputs, &mut NoopObserver)
+    }
+
+    /// BP plumbs the observer straight into the backward pass: each layer's
+    /// hook fires right after its `ComputeGradient`, in reverse-topological
+    /// order, while the layers below are still computing — the overlap
+    /// window the bucketed exchange drains.
+    fn train_one_batch_observed(
+        &mut self,
+        net: &mut NeuralNet,
+        inputs: &HashMap<String, Blob>,
+        obs: &mut dyn GradObserver,
+    ) -> StepStats {
         for (name, blob) in inputs {
             // Copied straight into the input layer's workspace slot — no
             // per-step clone.
             net.try_set_input_ref(name, blob);
         }
         net.forward(Phase::Train); // Collect + ComputeFeature loop
-        net.backward(); // ComputeGradient + Update loop
+        net.backward_observed(obs); // ComputeGradient + Update loop
         StepStats { losses: net.losses() }
     }
 

@@ -4,7 +4,7 @@
 //! pre-training scheme of Hinton & Salakhutdinov used by the deep
 //! auto-encoder application (paper §4.2.2, Fig 8).
 
-use super::{StepStats, TrainOneBatch};
+use super::{GradObserver, NoopObserver, StepStats, TrainOneBatch};
 use crate::model::rbm::RbmLayer;
 use crate::model::{NeuralNet, Phase};
 use crate::tensor::Blob;
@@ -34,6 +34,20 @@ impl TrainOneBatch for Cd {
         net: &mut NeuralNet,
         inputs: &HashMap<String, Blob>,
     ) -> StepStats {
+        self.train_one_batch_observed(net, inputs, &mut NoopObserver)
+    }
+
+    /// CD's completion order is the forward node order: each RBM's param
+    /// gradients are final right after its `cd_step`, so its hook fires
+    /// there (stage-filtered RBMs and non-RBM nodes fire with their grads
+    /// still zero — final for this step by definition), letting the
+    /// overlapped exchange flush each RBM while later RBMs keep sampling.
+    fn train_one_batch_observed(
+        &mut self,
+        net: &mut NeuralNet,
+        inputs: &HashMap<String, Blob>,
+        obs: &mut dyn GradObserver,
+    ) -> StepStats {
         for (name, blob) in inputs {
             net.try_set_input_ref(name, blob);
         }
@@ -42,26 +56,27 @@ impl TrainOneBatch for Cd {
         let mut losses = Vec::new();
         // For each RBM layer, run CD-k with its source feature as v0 —
         // read straight from the workspace, no clone.
-        let (nodes, ws) = net.split_mut();
-        for i in 0..nodes.len() {
-            let node = &mut nodes[i];
-            if node.layer.type_name() != "Rbm" || node.srcs.is_empty() {
-                continue;
-            }
-            let name = node.layer.name().to_string();
-            if let Some(only) = &self.train_only {
-                if &name != only {
-                    continue;
+        for i in 0..net.len() {
+            {
+                let (nodes, ws) = net.split_mut();
+                let node = &mut nodes[i];
+                if node.layer.type_name() == "Rbm" && !node.srcs.is_empty() {
+                    let name = node.layer.name().to_string();
+                    let in_stage =
+                        self.train_only.as_ref().map_or(true, |only| only == &name);
+                    if in_stage {
+                        let v0 = ws.feature(node.srcs[0]);
+                        let rbm = node
+                            .layer
+                            .as_any()
+                            .downcast_mut::<RbmLayer>()
+                            .expect("type_name Rbm but downcast failed");
+                        let err = rbm.cd_step(v0, self.k);
+                        losses.push((name, err, 0.0));
+                    }
                 }
             }
-            let v0 = ws.feature(node.srcs[0]);
-            let rbm = node
-                .layer
-                .as_any()
-                .downcast_mut::<RbmLayer>()
-                .expect("type_name Rbm but downcast failed");
-            let err = rbm.cd_step(v0, self.k);
-            losses.push((name, err, 0.0));
+            obs.grads_ready(net, i);
         }
         StepStats { losses }
     }

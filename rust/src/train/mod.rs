@@ -16,6 +16,8 @@ use crate::model::{NeuralNet, Phase};
 use crate::tensor::Blob;
 use std::collections::HashMap;
 
+pub use crate::model::net::{GradObserver, NoopObserver};
+
 /// Result of one training iteration.
 #[derive(Debug, Clone, Default)]
 pub struct StepStats {
@@ -46,6 +48,28 @@ pub trait TrainOneBatch: Send {
         net: &mut NeuralNet,
         inputs: &HashMap<String, Blob>,
     ) -> StepStats;
+
+    /// [`TrainOneBatch::train_one_batch`] with gradient-completion hooks:
+    /// `obs.grads_ready(net, i)` fires once per node the moment that node's
+    /// parameter gradients are final — for BP, in reverse-topological order
+    /// as each `ComputeGradient` returns (paper §5: a layer's gradients are
+    /// transferred as soon as they are computed, overlapping the exchange
+    /// with the remaining backward pass). The default runs the plain
+    /// algorithm and fires every node afterwards in reverse order: always
+    /// correct for custom algorithms, but it gives the observer no overlap
+    /// window — drivers on the hot path override it.
+    fn train_one_batch_observed(
+        &mut self,
+        net: &mut NeuralNet,
+        inputs: &HashMap<String, Blob>,
+        obs: &mut dyn GradObserver,
+    ) -> StepStats {
+        let stats = self.train_one_batch(net, inputs);
+        for i in (0..net.len()).rev() {
+            obs.grads_ready(net, i);
+        }
+        stats
+    }
 
     /// Algorithm name for logs/configs.
     fn name(&self) -> &'static str;

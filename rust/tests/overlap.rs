@@ -1,0 +1,232 @@
+//! Bit-identity suite for the overlapped parameter exchange: bucketed
+//! gradient flush during backward + prefetch must train bit-for-bit
+//! identically to the strictly sequential exchange — same per-step losses
+//! and metrics, same final server replicas — across frameworks, with and
+//! without intra-group partitioning, for BP and CD, at every
+//! `PALLAS_NUM_THREADS` (CI runs this suite under `=1` and `=4`). The
+//! shared-server lockstep variants (downpour(3,1,2), hogwild with syncs
+//! mid-flush) live next to the exchange internals in
+//! `coordinator::exchange::tests`.
+
+use singa::cluster::ClusterTopology;
+use singa::coordinator::workspace::ParamWorkspace;
+use singa::coordinator::{run_job, Algorithm, JobConf, JobReport};
+use singa::data::{DataSource, SyntheticDigits};
+use singa::model::layer::{Activation, LayerConf, LayerKind};
+use singa::model::NetBuilder;
+use singa::tensor::Blob;
+use singa::updater::UpdaterConf;
+use singa::utils::rng::Rng;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn mlp(batch: usize, dim: usize, hidden: usize, classes: usize) -> NetBuilder {
+    NetBuilder::new()
+        .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, dim] }, &[]))
+        .add(LayerConf::new("label", LayerKind::Input { shape: vec![batch] }, &[]))
+        .add(LayerConf::new(
+            "h1",
+            LayerKind::InnerProduct { out: hidden, act: Activation::Relu, init_std: 0.1 },
+            &["data"],
+        ))
+        .add(LayerConf::new(
+            "logits",
+            LayerKind::InnerProduct { out: classes, act: Activation::Identity, init_std: 0.1 },
+            &["h1"],
+        ))
+        .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]))
+}
+
+fn digits() -> Arc<dyn DataSource> {
+    Arc::new(SyntheticDigits::new(64, 5, 77))
+}
+
+/// Compare two runs bit for bit: per-group (step, loss, metric) sequences
+/// and every server group's final replica.
+fn assert_reports_bitwise_equal(groups: usize, a: &JobReport, b: &JobReport) {
+    let (ra, rb) = (a.log.snapshot(), b.log.snapshot());
+    for g in 0..groups {
+        let ga: Vec<_> = ra.iter().filter(|r| r.group == g).collect();
+        let gb: Vec<_> = rb.iter().filter(|r| r.group == g).collect();
+        assert_eq!(ga.len(), gb.len(), "group {g} record count");
+        for (x, y) in ga.iter().zip(&gb) {
+            assert_eq!(x.step, y.step, "group {g}");
+            assert_eq!(
+                x.loss.to_bits(),
+                y.loss.to_bits(),
+                "group {g} step {}: loss {} vs {}",
+                x.step,
+                x.loss,
+                y.loss
+            );
+            assert_eq!(
+                x.metric.to_bits(),
+                y.metric.to_bits(),
+                "group {g} step {}: metric diverged",
+                x.step
+            );
+        }
+    }
+    assert_eq!(a.group_params.len(), b.group_params.len());
+    for (sg, (pa, pb)) in a.group_params.iter().zip(&b.group_params).enumerate() {
+        assert_eq!(pa.len(), pb.len(), "server group {sg}");
+        for (name, va) in pa {
+            let vb = pb.get(name).unwrap_or_else(|| panic!("missing param {name}"));
+            assert_eq!(va.shape(), vb.shape(), "{name}");
+            for (x, y) in va.data().iter().zip(vb.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "server group {sg} param {name}");
+            }
+        }
+    }
+}
+
+fn run_with(conf: &JobConf, overlap: bool, data: Arc<dyn DataSource>) -> JobReport {
+    let mut conf = conf.clone();
+    conf.overlap_exchange = overlap;
+    run_job(&conf, data)
+}
+
+/// Sandblaster(1,1): the synchronous baseline, full-job bitwise, with the
+/// distributed alloc probe armed in both modes.
+#[test]
+fn sandblaster_overlap_matches_sequential_bitwise() {
+    let mut conf = JobConf::new("ovl-sand", mlp(16, 64, 32, 5));
+    conf.iters = 15;
+    conf.updater = UpdaterConf::sgd(0.2);
+    conf.alloc_probe_from = Some(3);
+    let seq = run_with(&conf, false, digits());
+    let ovl = run_with(&conf, true, digits());
+    assert_reports_bitwise_equal(1, &seq, &ovl);
+    assert_eq!(seq.steady_allocs, vec![0], "sequential steady state must not allocate");
+    assert_eq!(ovl.steady_allocs, vec![0], "overlapped steady state must not allocate");
+}
+
+/// A net whose layers share logical params across partitions (dim-0
+/// sub-layer replicas): bucket completion must wait for EVERY replica's
+/// backward, and the replica aggregation order must match the sequential
+/// recipe bit for bit.
+#[test]
+fn partitioned_replicas_overlap_matches_sequential_bitwise() {
+    let mut b = mlp(16, 64, 32, 5);
+    for c in b.confs_mut().iter_mut() {
+        if ["h1", "logits", "loss"].contains(&c.name.as_str()) {
+            c.partition_dim = Some(0);
+        }
+    }
+    let mut conf = JobConf::new("ovl-part", b);
+    conf.iters = 12;
+    conf.updater = UpdaterConf::sgd(0.2);
+    conf.topology = ClusterTopology::sandblaster(2, 1);
+    conf.partition_within_group = true;
+    conf.alloc_probe_from = Some(3);
+    let seq = run_with(&conf, false, digits());
+    let ovl = run_with(&conf, true, digits());
+    assert_reports_bitwise_equal(1, &seq, &ovl);
+    assert_eq!(ovl.steady_allocs, vec![0]);
+}
+
+/// Hogwild(2,1,10) over 10 iters: two free-running groups with their own
+/// server groups (no sync fires before step 10), so each group's full
+/// trajectory is deterministic and comparable bitwise.
+#[test]
+fn hogwild_overlap_matches_sequential_bitwise() {
+    let mut conf = JobConf::new("ovl-hog", mlp(8, 64, 16, 5));
+    conf.iters = 10;
+    conf.updater = UpdaterConf::sgd(0.1);
+    conf.topology = ClusterTopology::hogwild(2, 1, 10);
+    conf.alloc_probe_from = Some(3);
+    let seq = run_with(&conf, false, digits());
+    let ovl = run_with(&conf, true, digits());
+    assert_reports_bitwise_equal(2, &seq, &ovl);
+    assert_eq!(ovl.steady_allocs, vec![0, 0]);
+}
+
+/// Coalescing everything into ONE bucket degenerates overlap to a single
+/// post-backward flush — still bit-identical, still allocation-free.
+#[test]
+fn single_bucket_overlap_degenerates_to_sequential() {
+    let builder = mlp(16, 64, 32, 5);
+    {
+        let net = builder.clone().build(&mut Rng::new(1));
+        assert_eq!(ParamWorkspace::new(&net, usize::MAX).nbuckets(), 1);
+        // Threshold 0: one bucket per param-bearing layer (h1, logits).
+        assert_eq!(ParamWorkspace::new(&net, 0).nbuckets(), 2);
+    }
+    let mut conf = JobConf::new("ovl-one", builder);
+    conf.iters = 12;
+    conf.updater = UpdaterConf::sgd(0.2);
+    conf.bucket_coalesce_bytes = usize::MAX;
+    conf.alloc_probe_from = Some(3);
+    let seq = run_with(&conf, false, digits());
+    let ovl = run_with(&conf, true, digits());
+    assert_reports_bitwise_equal(1, &seq, &ovl);
+    assert_eq!(ovl.steady_allocs, vec![0]);
+}
+
+/// The CD algorithm under the overlapped exchange: completion hooks fire
+/// in forward order from the CD driver; trajectories must still match the
+/// sequential exchange bit for bit.
+#[test]
+fn cd_overlap_matches_sequential_bitwise() {
+    let b = NetBuilder::new()
+        .add(LayerConf::new("data", LayerKind::Input { shape: vec![16, 64] }, &[]))
+        .add(LayerConf::new("rbm1", LayerKind::Rbm { hidden: 24, init_std: 0.1 }, &["data"]))
+        .add(LayerConf::new("rbm2", LayerKind::Rbm { hidden: 8, init_std: 0.1 }, &["rbm1"]));
+    let mut conf = JobConf::new("ovl-cd", b);
+    conf.iters = 10;
+    conf.algorithm = Algorithm::Cd { k: 1, stage: None };
+    conf.updater = UpdaterConf::sgd(0.05);
+    let seq = run_with(&conf, false, digits());
+    let ovl = run_with(&conf, true, digits());
+    assert_reports_bitwise_equal(1, &seq, &ovl);
+}
+
+/// L2 distance between two server replicas, summed over shared params.
+fn replica_distance(a: &HashMap<String, Blob>, b: &HashMap<String, Blob>) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut dist = 0.0f64;
+    for (name, va) in a {
+        let vb = b.get(name).unwrap_or_else(|| panic!("replica missing {name}"));
+        dist += va
+            .data()
+            .iter()
+            .zip(vb.data())
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>();
+    }
+    dist.sqrt()
+}
+
+/// `group_sync_interval` firing mid-flush: with a 3-step interval the sync
+/// request arrives while the overlapped channel may still hold that
+/// step's flushes. The drain-before-sync contract must keep the job
+/// deadlock-free and the neighbour averaging effective (synced replicas
+/// end closer than unsynced ones). The bitwise pin for this schedule
+/// lives in the lockstep harness (`coordinator::exchange::tests`).
+#[test]
+fn group_sync_mid_flush_completes_and_averages() {
+    let run = |interval: u64| {
+        let mut conf = JobConf::new("ovl-sync", mlp(8, 64, 16, 5));
+        conf.iters = 9;
+        conf.updater = UpdaterConf::sgd(0.1);
+        conf.topology = ClusterTopology::hogwild(2, 1, interval);
+        conf.overlap_exchange = true;
+        run_job(&conf, digits())
+    };
+    let synced = run(3); // syncs at steps 3 and 6, mid-flush
+    let recs = synced.log.snapshot();
+    for g in 0..2 {
+        assert_eq!(
+            recs.iter().filter(|r| r.group == g).count(),
+            9,
+            "group {g} must complete all steps"
+        );
+    }
+    let unsynced = run(0);
+    let d_synced = replica_distance(&synced.group_params[0], &synced.group_params[1]);
+    let d_unsynced = replica_distance(&unsynced.group_params[0], &unsynced.group_params[1]);
+    assert!(
+        d_synced < d_unsynced,
+        "mid-flush syncs must still pull replicas together: {d_synced} vs {d_unsynced}"
+    );
+}
