@@ -60,10 +60,13 @@ fn emit_alloc_probe(check: bool) {
 
 /// Run the serial-vs-parallel GEMM scaling probe and write the
 /// `BENCH_gemm.json` artifact at the repo root. With `check`, assert the
-/// acceptance bar: bit-identical output and ≥1.5x speedup on 256^3 (the CI
-/// smoke step runs this under `PALLAS_NUM_THREADS=4`).
+/// acceptance bars: bit-identical output and ≥1.5x thread speedup on 256^3
+/// (the CI smoke step runs this under `PALLAS_NUM_THREADS=4`), plus — on
+/// AVX2+FMA hosts — ≥1.5x single-threaded simd-over-scalar GFLOP/s on
+/// 256^3 (the kernel-dispatch gate; skipped with a notice elsewhere).
 fn emit_gemm_probe(check: bool) {
     let threads = singa::runtime::threads();
+    println!("[bench] {}", singa::runtime::manifest::kernel_line(singa::runtime::kernel_choice()));
     let probes = singa::bench::gemm_scaling_probe(&[64, 128, 256], threads, 1, 5);
     let json = singa::bench::gemm_probes_json(threads, &probes);
     println!("==== gemm scaling probe ({threads} threads) ====");
@@ -84,19 +87,47 @@ fn emit_gemm_probe(check: bool) {
             p.serial_ms,
             p.parallel_ms
         );
-        println!(
-            "gemm smoke check passed: {:.2}x at {threads} threads on 256^3",
-            p.speedup
-        );
+        for p in &probes {
+            assert!(p.simd_close, "n={}: simd gemm must approximate the scalar oracle", p.n);
+        }
+        if singa::tensor::kernel::simd_supported() {
+            assert!(
+                p.simd_speedup >= 1.5,
+                "expected >=1.5x simd-over-scalar on 256^3 single-threaded, got {:.2}x \
+                 (scalar {:.3} ms / {:.2} GFLOP/s vs simd {:.3} ms / {:.2} GFLOP/s)",
+                p.simd_speedup,
+                p.scalar_ms,
+                p.scalar_gflops,
+                p.simd_ms,
+                p.simd_gflops
+            );
+            println!(
+                "gemm smoke check passed: {:.2}x at {threads} threads, \
+                 simd {:.2}x over scalar on 256^3",
+                p.speedup, p.simd_speedup
+            );
+        } else {
+            println!(
+                "NOTICE: AVX2+FMA not detected on this runner; simd >=1.5x gate skipped \
+                 (scalar fallback in effect, simd_speedup recorded as {:.2}x)",
+                p.simd_speedup
+            );
+            println!(
+                "gemm smoke check passed: {:.2}x at {threads} threads on 256^3",
+                p.speedup
+            );
+        }
     }
 }
 
 /// Run the serial-vs-parallel conv/im2col scaling probe and write the
 /// `BENCH_conv.json` artifact at the repo root. Always asserts the
-/// determinism half of the contract (bit-identical outputs); throughput is
-/// recorded, not gated.
+/// correctness half of the contract — bit-identical parallel outputs,
+/// bit-identical simd transforms, simd conv within FMA tolerance;
+/// throughput is recorded, not gated.
 fn emit_conv_probe() {
     let threads = singa::runtime::threads();
+    println!("[bench] {}", singa::runtime::manifest::kernel_line(singa::runtime::kernel_choice()));
     let probes = singa::bench::conv_scaling_probe(threads, 1, 3);
     let json = singa::bench::conv_probes_json(threads, &probes);
     println!("==== conv/im2col scaling probe ({threads} threads) ====");
@@ -108,6 +139,12 @@ fn emit_conv_probe() {
     }
     for p in &probes {
         assert!(p.bit_identical, "{}: parallel conv output must equal serial", p.name);
+        assert!(
+            p.transforms_simd_exact,
+            "{}: simd im2col/col2im must be bit-identical to scalar",
+            p.name
+        );
+        assert!(p.conv_simd_close, "{}: simd conv must approximate scalar", p.name);
     }
 }
 

@@ -152,42 +152,57 @@ fn probe_training_loop(
     }
 }
 
+fn mlp_alloc_probe(model: &'static str, steps: usize) -> AllocProbe {
+    let batch = 32;
+    let b = NetBuilder::new()
+        .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, 256] }, &[]))
+        .add(LayerConf::new("label", LayerKind::Input { shape: vec![batch] }, &[]))
+        .add(LayerConf::new(
+            "h1",
+            LayerKind::InnerProduct { out: 128, act: Activation::Relu, init_std: 0.05 },
+            &["data"],
+        ))
+        .add(LayerConf::new(
+            "h2",
+            LayerKind::InnerProduct { out: 64, act: Activation::Tanh, init_std: 0.05 },
+            &["h1"],
+        ))
+        .add(LayerConf::new(
+            "logits",
+            LayerKind::InnerProduct { out: 10, act: Activation::Identity, init_std: 0.05 },
+            &["h2"],
+        ))
+        .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]));
+    let net = b.build(&mut Rng::new(7));
+    let data = SyntheticDigits::new(256, 10, 3);
+    probe_training_loop(model, net, data.batch(1, batch), steps)
+}
+
+fn convnet_alloc_probe(model: &'static str, steps: usize) -> AllocProbe {
+    let batch = 16;
+    let net = cifar_convnet(batch).build(&mut Rng::new(9));
+    let data = SyntheticImages::cifar_like(4);
+    probe_training_loop(model, net, data.batch(1, batch), steps)
+}
+
 /// Probe the MLP and CIFAR-convnet training loops: Blob allocations per
 /// steady-state step (must be zero after the first iteration sized the
-/// workspace) plus per-step wall time.
+/// workspace) plus per-step wall time. Both models run twice — once under
+/// the process's resolved kernel and once forced onto the simd path (the
+/// `+simd` entries; scalar fallback off-AVX2 keeps labels stable) — so the
+/// zero-allocation steady state is pinned for both microkernel families.
 pub fn alloc_probe(steps: usize) -> Vec<AllocProbe> {
-    let mut out = Vec::new();
-    {
-        let batch = 32;
-        let b = NetBuilder::new()
-            .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, 256] }, &[]))
-            .add(LayerConf::new("label", LayerKind::Input { shape: vec![batch] }, &[]))
-            .add(LayerConf::new(
-                "h1",
-                LayerKind::InnerProduct { out: 128, act: Activation::Relu, init_std: 0.05 },
-                &["data"],
-            ))
-            .add(LayerConf::new(
-                "h2",
-                LayerKind::InnerProduct { out: 64, act: Activation::Tanh, init_std: 0.05 },
-                &["h1"],
-            ))
-            .add(LayerConf::new(
-                "logits",
-                LayerKind::InnerProduct { out: 10, act: Activation::Identity, init_std: 0.05 },
-                &["h2"],
-            ))
-            .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]));
-        let net = b.build(&mut Rng::new(7));
-        let data = SyntheticDigits::new(256, 10, 3);
-        out.push(probe_training_loop("mlp", net, data.batch(1, batch), steps));
-    }
-    {
-        let batch = 16;
-        let net = cifar_convnet(batch).build(&mut Rng::new(9));
-        let data = SyntheticImages::cifar_like(4);
-        out.push(probe_training_loop("cifar_convnet", net, data.batch(1, batch), steps));
-    }
+    let mut out =
+        vec![mlp_alloc_probe("mlp", steps), convnet_alloc_probe("cifar_convnet", steps)];
+    let simd = crate::tensor::kernel::resolve(
+        Some("simd"),
+        crate::tensor::kernel::simd_supported(),
+    )
+    .chosen;
+    crate::runtime::with_kernel(simd, || {
+        out.push(mlp_alloc_probe("mlp+simd", steps));
+        out.push(convnet_alloc_probe("cifar_convnet+simd", steps));
+    });
     out
 }
 
@@ -468,6 +483,19 @@ pub struct GemmProbe {
     /// Whether the parallel output was `==`-identical to serial (the
     /// determinism guarantee; always expected true).
     pub bit_identical: bool,
+    /// Explicit-kind single-threaded runs pinning scalar vs simd against
+    /// each other regardless of the process-wide `PALLAS_KERNEL`
+    /// resolution. On hosts without AVX2+FMA the simd request degrades to
+    /// scalar, so `simd_speedup` hovers around 1 there.
+    pub scalar_ms: f64,
+    pub scalar_gflops: f64,
+    pub simd_ms: f64,
+    pub simd_gflops: f64,
+    /// scalar_ms / simd_ms — the CI gate's >= 1.5x input on AVX2 runners.
+    pub simd_speedup: f64,
+    /// Whether the simd output matched the scalar oracle within the FMA
+    /// reordering tolerance (1e-3 + 1e-3|y|); always expected true.
+    pub simd_close: bool,
 }
 
 /// Measure `n x n x n` GEMMs serial vs `threads`-worker parallel. Uses
@@ -478,8 +506,10 @@ pub fn gemm_scaling_probe(
     warmup: usize,
     iters: usize,
 ) -> Vec<GemmProbe> {
-    use crate::tensor::gemm::gemm_with_threads;
-    use crate::tensor::Transpose;
+    use crate::tensor::gemm::{gemm_with_kernel, gemm_with_threads};
+    use crate::tensor::kernel::{resolve, simd_supported};
+    use crate::tensor::{KernelKind, Transpose};
+    let simd_kind = resolve(Some("simd"), simd_supported()).chosen;
     sizes
         .iter()
         .map(|&n| {
@@ -489,15 +519,32 @@ pub fn gemm_scaling_probe(
             let run = |t: usize, c: &mut [f32]| {
                 gemm_with_threads(Transpose::No, Transpose::No, n, n, n, 1.0, &a, &b, 0.0, c, t);
             };
+            let run_kind = |kind: KernelKind, c: &mut [f32]| {
+                gemm_with_kernel(
+                    Transpose::No, Transpose::No, n, n, n, 1.0, &a, &b, 0.0, c, 1, kind,
+                );
+            };
             let mut c_serial = vec![0.0f32; n * n];
             let mut c_par = vec![0.0f32; n * n];
             run(1, &mut c_serial);
             run(threads, &mut c_par);
             let bit_identical = c_serial == c_par;
+            let mut c_scalar = vec![0.0f32; n * n];
+            let mut c_simd = vec![0.0f32; n * n];
+            run_kind(KernelKind::Scalar, &mut c_scalar);
+            run_kind(simd_kind, &mut c_simd);
+            let simd_close = c_scalar
+                .iter()
+                .zip(&c_simd)
+                .all(|(y, x)| (x - y).abs() <= 1e-3 + 1e-3 * y.abs());
             let st_serial = time_iters(warmup, iters, || run(1, &mut c_serial));
             let st_par = time_iters(warmup, iters, || run(threads, &mut c_par));
+            let st_scalar =
+                time_iters(warmup, iters, || run_kind(KernelKind::Scalar, &mut c_scalar));
+            let st_simd = time_iters(warmup, iters, || run_kind(simd_kind, &mut c_simd));
             let gflops = |ms: f64| 2.0 * (n as f64).powi(3) / (ms / 1e3) / 1e9;
             let (serial_ms, parallel_ms) = (st_serial.min(), st_par.min());
+            let (scalar_ms, simd_ms) = (st_scalar.min(), st_simd.min());
             GemmProbe {
                 n,
                 threads,
@@ -507,22 +554,66 @@ pub fn gemm_scaling_probe(
                 parallel_gflops: gflops(parallel_ms),
                 speedup: serial_ms / parallel_ms,
                 bit_identical,
+                scalar_ms,
+                scalar_gflops: gflops(scalar_ms),
+                simd_ms,
+                simd_gflops: gflops(simd_ms),
+                simd_speedup: scalar_ms / simd_ms,
+                simd_close,
             }
         })
         .collect()
 }
 
+/// Shared `{name, value, unit, direction}` records carried by every entry
+/// in `BENCH_gemm.json` / `BENCH_conv.json`, so downstream tooling can
+/// plot or gate any metric without knowing per-probe field names.
+/// `direction` is `higher_is_better` or `lower_is_better`.
+fn metrics_json(indent: &str, metrics: &[(&str, f64, &str, &str)]) -> String {
+    let mut s = String::from("[\n");
+    for (i, &(name, value, unit, direction)) in metrics.iter().enumerate() {
+        s.push_str(&format!(
+            "{indent}  {{\"name\": \"{name}\", \"value\": {value:.4}, \"unit\": \"{unit}\", \
+             \"direction\": \"{direction}\"}}{}\n",
+            if i + 1 == metrics.len() { "" } else { "," }
+        ));
+    }
+    s.push_str(indent);
+    s.push(']');
+    s
+}
+
 /// Serialize probes as the `BENCH_gemm.json` artifact emitted by
-/// `cargo bench --bench figures -- gemm`.
+/// `cargo bench --bench figures -- gemm`. The header embeds the process's
+/// kernel resolution so recorded numbers stay attributable to a path.
 pub fn gemm_probes_json(threads: usize, probes: &[GemmProbe]) -> String {
+    let kernel = crate::runtime::manifest::kernel_json(crate::runtime::kernel_choice());
     let mut s = format!(
-        "{{\n  \"probe\": \"gemm_scaling\",\n  \"threads\": {threads},\n  \"sizes\": [\n"
+        "{{\n  \"probe\": \"gemm_scaling\",\n  \"threads\": {threads},\n  \
+         \"kernel\": {kernel},\n  \"sizes\": [\n"
     );
     for (i, p) in probes.iter().enumerate() {
+        let metrics = metrics_json(
+            "     ",
+            &[
+                ("serial_ms", p.serial_ms, "ms", "lower_is_better"),
+                ("serial_gflops", p.serial_gflops, "GFLOP/s", "higher_is_better"),
+                ("parallel_ms", p.parallel_ms, "ms", "lower_is_better"),
+                ("parallel_gflops", p.parallel_gflops, "GFLOP/s", "higher_is_better"),
+                ("speedup", p.speedup, "x", "higher_is_better"),
+                ("scalar_ms", p.scalar_ms, "ms", "lower_is_better"),
+                ("scalar_gflops", p.scalar_gflops, "GFLOP/s", "higher_is_better"),
+                ("simd_ms", p.simd_ms, "ms", "lower_is_better"),
+                ("simd_gflops", p.simd_gflops, "GFLOP/s", "higher_is_better"),
+                ("simd_speedup", p.simd_speedup, "x", "higher_is_better"),
+            ],
+        );
         s.push_str(&format!(
             "    {{\"n\": {}, \"serial_ms\": {:.4}, \"serial_gflops\": {:.3}, \
              \"parallel_ms\": {:.4}, \"parallel_gflops\": {:.3}, \"speedup\": {:.3}, \
-             \"bit_identical\": {}}}{}\n",
+             \"bit_identical\": {}, \"scalar_ms\": {:.4}, \"scalar_gflops\": {:.3}, \
+             \"simd_ms\": {:.4}, \"simd_gflops\": {:.3}, \"simd_speedup\": {:.3}, \
+             \"simd_close\": {},\n     \"metrics\": {}}}{}\n",
             p.n,
             p.serial_ms,
             p.serial_gflops,
@@ -530,6 +621,13 @@ pub fn gemm_probes_json(threads: usize, probes: &[GemmProbe]) -> String {
             p.parallel_gflops,
             p.speedup,
             p.bit_identical,
+            p.scalar_ms,
+            p.scalar_gflops,
+            p.simd_ms,
+            p.simd_gflops,
+            p.simd_speedup,
+            p.simd_close,
+            metrics,
             if i + 1 == probes.len() { "" } else { "," }
         ));
     }
@@ -558,14 +656,33 @@ pub struct ConvProbe {
     /// Whether BOTH parallel outputs were `==`-identical to serial (the
     /// determinism guarantee; always expected true).
     pub bit_identical: bool,
+    /// Explicit-kind serial runs pinning scalar vs simd regardless of the
+    /// process-wide `PALLAS_KERNEL` resolution (simd degrades to scalar on
+    /// hosts without AVX2+FMA, so the speedups hover around 1 there).
+    pub im2col_scalar_ms: f64,
+    pub im2col_simd_ms: f64,
+    pub im2col_simd_speedup: f64,
+    pub conv_scalar_ms: f64,
+    pub conv_simd_ms: f64,
+    pub conv_simd_speedup: f64,
+    /// simd im2col AND col2im outputs were `==`-identical to scalar (the
+    /// span kernels reorder no arithmetic; always expected true).
+    pub transforms_simd_exact: bool,
+    /// simd conv forward matched scalar within the FMA reordering
+    /// tolerance (the GEMM inside accumulates in a different order).
+    pub conv_simd_close: bool,
 }
 
 /// Measure im2col and conv2d forward serial vs `threads`-task parallel on
 /// convnet-shaped workloads. Best-of-`iters` timings, like the GEMM probe.
 pub fn conv_scaling_probe(threads: usize, warmup: usize, iters: usize) -> Vec<ConvProbe> {
     use crate::tensor::conv::{
-        conv2d_forward_into_with_threads, im2col_with_threads, Conv2dGeom, ConvScratch,
+        col2im_acc_with_kernel, conv2d_forward_into_with_threads, im2col_with_kernel,
+        im2col_with_threads, Conv2dGeom, ConvScratch,
     };
+    use crate::tensor::kernel::{resolve, simd_supported};
+    use crate::tensor::KernelKind;
+    let simd_kind = resolve(Some("simd"), simd_supported()).chosen;
     let cases: [(&'static str, Conv2dGeom, usize, usize); 2] = [
         (
             "c16_32x32_k5_b16",
@@ -625,8 +742,63 @@ pub fn conv_scaling_probe(threads: usize, warmup: usize, iters: usize) -> Vec<Co
                     &input, &weight, &bias, &g, &mut out_par, &mut cols, &mut scratch, threads,
                 )
             });
+
+            // Explicit-kind runs: transforms directly, the full forward
+            // through the thread-local kernel override (its GEMM resolves
+            // the kind on this thread before fanning out).
+            let mut col_scalar = vec![0.0f32; cr * cc];
+            let mut col_simd = vec![0.0f32; cr * cc];
+            im2col_with_kernel(&img, &g, &mut col_scalar, 1, KernelKind::Scalar);
+            im2col_with_kernel(&img, &g, &mut col_simd, 1, simd_kind);
+            let mut transforms_simd_exact = col_simd == col_scalar;
+            let colm = rng.uniform_vec(cr * cc, -1.0, 1.0);
+            let mut acc_scalar = rng.uniform_vec(img_len, -1.0, 1.0);
+            let mut acc_simd = acc_scalar.clone();
+            col2im_acc_with_kernel(&colm, &g, &mut acc_scalar, 1, KernelKind::Scalar);
+            col2im_acc_with_kernel(&colm, &g, &mut acc_simd, 1, simd_kind);
+            transforms_simd_exact &= acc_simd == acc_scalar;
+            let st_i2c_scalar = time_iters(warmup, iters, || {
+                im2col_with_kernel(&img, &g, &mut col_scalar, 1, KernelKind::Scalar)
+            });
+            let st_i2c_simd = time_iters(warmup, iters, || {
+                im2col_with_kernel(&img, &g, &mut col_simd, 1, simd_kind)
+            });
+            let mut out_scalar = Blob::default();
+            let mut out_simd = Blob::default();
+            crate::runtime::with_kernel(KernelKind::Scalar, || {
+                conv2d_forward_into_with_threads(
+                    &input, &weight, &bias, &g, &mut out_scalar, &mut cols, &mut scratch, 1,
+                )
+            });
+            crate::runtime::with_kernel(simd_kind, || {
+                conv2d_forward_into_with_threads(
+                    &input, &weight, &bias, &g, &mut out_simd, &mut cols, &mut scratch, 1,
+                )
+            });
+            let conv_simd_close = out_scalar
+                .data()
+                .iter()
+                .zip(out_simd.data())
+                .all(|(y, x)| (x - y).abs() <= 1e-3 + 1e-3 * y.abs());
+            let st_conv_scalar = time_iters(warmup, iters, || {
+                crate::runtime::with_kernel(KernelKind::Scalar, || {
+                    conv2d_forward_into_with_threads(
+                        &input, &weight, &bias, &g, &mut out_scalar, &mut cols, &mut scratch, 1,
+                    )
+                })
+            });
+            let st_conv_simd = time_iters(warmup, iters, || {
+                crate::runtime::with_kernel(simd_kind, || {
+                    conv2d_forward_into_with_threads(
+                        &input, &weight, &bias, &g, &mut out_simd, &mut cols, &mut scratch, 1,
+                    )
+                })
+            });
+
             let (i2c_s, i2c_p) = (st_i2c_serial.min(), st_i2c_par.min());
             let (conv_s, conv_p) = (st_conv_serial.min(), st_conv_par.min());
+            let (i2c_sc, i2c_v) = (st_i2c_scalar.min(), st_i2c_simd.min());
+            let (conv_sc, conv_v) = (st_conv_scalar.min(), st_conv_simd.min());
             ConvProbe {
                 name,
                 threads,
@@ -637,23 +809,56 @@ pub fn conv_scaling_probe(threads: usize, warmup: usize, iters: usize) -> Vec<Co
                 conv_parallel_ms: conv_p,
                 conv_speedup: conv_s / conv_p,
                 bit_identical,
+                im2col_scalar_ms: i2c_sc,
+                im2col_simd_ms: i2c_v,
+                im2col_simd_speedup: i2c_sc / i2c_v,
+                conv_scalar_ms: conv_sc,
+                conv_simd_ms: conv_v,
+                conv_simd_speedup: conv_sc / conv_v,
+                transforms_simd_exact,
+                conv_simd_close,
             }
         })
         .collect()
 }
 
 /// Serialize probes as the `BENCH_conv.json` artifact emitted by
-/// `cargo bench --bench figures -- conv`.
+/// `cargo bench --bench figures -- conv`. The header embeds the process's
+/// kernel resolution, mirroring `BENCH_gemm.json`.
 pub fn conv_probes_json(threads: usize, probes: &[ConvProbe]) -> String {
+    let kernel = crate::runtime::manifest::kernel_json(crate::runtime::kernel_choice());
     let mut s = format!(
-        "{{\n  \"probe\": \"conv_scaling\",\n  \"threads\": {threads},\n  \"cases\": [\n"
+        "{{\n  \"probe\": \"conv_scaling\",\n  \"threads\": {threads},\n  \
+         \"kernel\": {kernel},\n  \"cases\": [\n"
     );
     for (i, p) in probes.iter().enumerate() {
+        let metrics = metrics_json(
+            "     ",
+            &[
+                ("im2col_serial_ms", p.im2col_serial_ms, "ms", "lower_is_better"),
+                ("im2col_parallel_ms", p.im2col_parallel_ms, "ms", "lower_is_better"),
+                ("im2col_speedup", p.im2col_speedup, "x", "higher_is_better"),
+                ("conv_serial_ms", p.conv_serial_ms, "ms", "lower_is_better"),
+                ("conv_parallel_ms", p.conv_parallel_ms, "ms", "lower_is_better"),
+                ("conv_speedup", p.conv_speedup, "x", "higher_is_better"),
+                ("im2col_scalar_ms", p.im2col_scalar_ms, "ms", "lower_is_better"),
+                ("im2col_simd_ms", p.im2col_simd_ms, "ms", "lower_is_better"),
+                ("im2col_simd_speedup", p.im2col_simd_speedup, "x", "higher_is_better"),
+                ("conv_scalar_ms", p.conv_scalar_ms, "ms", "lower_is_better"),
+                ("conv_simd_ms", p.conv_simd_ms, "ms", "lower_is_better"),
+                ("conv_simd_speedup", p.conv_simd_speedup, "x", "higher_is_better"),
+            ],
+        );
         s.push_str(&format!(
             "    {{\"name\": \"{}\", \"im2col_serial_ms\": {:.4}, \
              \"im2col_parallel_ms\": {:.4}, \"im2col_speedup\": {:.3}, \
              \"conv_serial_ms\": {:.4}, \"conv_parallel_ms\": {:.4}, \
-             \"conv_speedup\": {:.3}, \"bit_identical\": {}}}{}\n",
+             \"conv_speedup\": {:.3}, \"bit_identical\": {}, \
+             \"im2col_scalar_ms\": {:.4}, \"im2col_simd_ms\": {:.4}, \
+             \"im2col_simd_speedup\": {:.3}, \"conv_scalar_ms\": {:.4}, \
+             \"conv_simd_ms\": {:.4}, \"conv_simd_speedup\": {:.3}, \
+             \"transforms_simd_exact\": {}, \"conv_simd_close\": {},\n     \
+             \"metrics\": {}}}{}\n",
             p.name,
             p.im2col_serial_ms,
             p.im2col_parallel_ms,
@@ -662,6 +867,15 @@ pub fn conv_probes_json(threads: usize, probes: &[ConvProbe]) -> String {
             p.conv_parallel_ms,
             p.conv_speedup,
             p.bit_identical,
+            p.im2col_scalar_ms,
+            p.im2col_simd_ms,
+            p.im2col_simd_speedup,
+            p.conv_scalar_ms,
+            p.conv_simd_ms,
+            p.conv_simd_speedup,
+            p.transforms_simd_exact,
+            p.conv_simd_close,
+            metrics,
             if i + 1 == probes.len() { "" } else { "," }
         ));
     }
@@ -1394,6 +1608,10 @@ mod tests {
         assert!(j.contains("\"steady_state_alloc\""));
         assert!(j.contains("\"mlp\""));
         assert!(j.contains("\"cifar_convnet\""));
+        // simd reruns ride in the same artifact (satellite of the kernel
+        // dispatch work): both models again, forced onto the simd path
+        assert!(j.contains("\"mlp+simd\""));
+        assert!(j.contains("\"cifar_convnet+simd\""));
         assert!(j.contains("\"steady_pack_allocs_per_step\""));
         assert!(j.contains("\"steady_exec_allocs_per_step\""));
         // distributed run_job probe rides in the same artifact
@@ -1417,10 +1635,17 @@ mod tests {
             assert!(p.bit_identical, "{}: parallel must equal serial", p.name);
             assert!(p.im2col_serial_ms > 0.0 && p.im2col_parallel_ms > 0.0, "{}", p.name);
             assert!(p.conv_serial_ms > 0.0 && p.conv_parallel_ms > 0.0, "{}", p.name);
+            assert!(p.transforms_simd_exact, "{}: simd transforms must be exact", p.name);
+            assert!(p.conv_simd_close, "{}: simd conv must approximate scalar", p.name);
+            assert!(p.im2col_simd_ms > 0.0 && p.conv_simd_ms > 0.0, "{}", p.name);
         }
         let j = conv_probes_json(4, &probes);
         assert!(j.contains("\"conv_scaling\""));
         assert!(j.contains("\"bit_identical\": true"));
+        assert!(j.contains("\"kernel\""));
+        assert!(j.contains("\"transforms_simd_exact\": true"));
+        assert!(j.contains("\"metrics\""));
+        assert!(j.contains("\"direction\": \"higher_is_better\""));
         assert!(crate::utils::json::Json::parse(&j).is_ok());
     }
 
@@ -1434,10 +1659,17 @@ mod tests {
             assert!(p.bit_identical, "n={}: parallel must equal serial", p.n);
             assert!(p.serial_ms > 0.0 && p.parallel_ms > 0.0, "n={}", p.n);
             assert!(p.speedup > 0.0, "n={}", p.n);
+            assert!(p.simd_close, "n={}: simd must approximate scalar", p.n);
+            assert!(p.scalar_ms > 0.0 && p.simd_ms > 0.0, "n={}", p.n);
+            assert!(p.simd_speedup > 0.0, "n={}", p.n);
         }
         let j = gemm_probes_json(4, &probes);
         assert!(j.contains("\"gemm_scaling\""));
         assert!(j.contains("\"bit_identical\": true"));
+        assert!(j.contains("\"kernel\""));
+        assert!(j.contains("\"simd_close\": true"));
+        assert!(j.contains("\"metrics\""));
+        assert!(j.contains("\"unit\": \"GFLOP/s\""));
         assert!(crate::utils::json::Json::parse(&j).is_ok());
     }
 

@@ -1,11 +1,55 @@
 //! Artifact manifest: the contract between `python/compile/aot.py` and the
 //! rust runtime — which HLO file implements which step function, and the
 //! names/shapes/dtypes of its inputs and outputs.
+//!
+//! Also the home of the *kernel provenance* line: which microkernel family
+//! (`PALLAS_KERNEL` request, detected CPU features, chosen path) produced
+//! a process's numbers. [`log_kernel_once`] emits it once at kernel
+//! resolution, and the bench writers embed [`kernel_json`] in every
+//! `BENCH_*.json` artifact so recorded figures stay attributable.
 
+use crate::tensor::kernel::KernelChoice;
 use crate::utils::json::Json;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Once;
+
+/// Human-readable one-liner describing a kernel resolution.
+pub fn kernel_line(c: &KernelChoice) -> String {
+    let mut s = format!(
+        "kernel dispatch: requested={} avx2_fma={} chosen={}",
+        c.requested,
+        c.avx2_fma,
+        c.chosen.name()
+    );
+    if let Some(note) = &c.note {
+        s.push_str(" (");
+        s.push_str(note);
+        s.push(')');
+    }
+    s
+}
+
+/// JSON object fragment recording a kernel resolution in bench artifacts.
+/// All fields are closed-vocabulary strings/bools (sanitized in
+/// [`crate::tensor::kernel::resolve`]), so no escaping is needed.
+pub fn kernel_json(c: &KernelChoice) -> String {
+    format!(
+        "{{\"requested\": \"{}\", \"avx2_fma\": {}, \"chosen\": \"{}\"}}",
+        c.requested,
+        c.avx2_fma,
+        c.chosen.name()
+    )
+}
+
+/// Log the resolved kernel once per process (stderr, like the pool's
+/// diagnostics) — called by [`crate::runtime::kernel_choice`] at first
+/// resolution so every bench/CI log records which kernel ran.
+pub fn log_kernel_once(c: &KernelChoice) {
+    static LOGGED: Once = Once::new();
+    LOGGED.call_once(|| eprintln!("[runtime] {}", kernel_line(c)));
+}
 
 /// One input or output tensor.
 #[derive(Debug, Clone, PartialEq)]
@@ -165,5 +209,25 @@ mod tests {
         assert!(Manifest::parse("{}").is_err());
         assert!(Manifest::parse("{\"artifacts\": {\"x\": {}}}").is_err());
         assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn kernel_line_and_json_record_the_resolution() {
+        let c = crate::tensor::kernel::resolve(Some("simd"), true);
+        let line = kernel_line(&c);
+        assert!(line.contains("requested=simd"), "{line}");
+        assert!(line.contains("avx2_fma=true"), "{line}");
+        assert!(line.contains("chosen=simd"), "{line}");
+        let j = kernel_json(&c);
+        let doc = Json::parse(&j).expect("kernel json parses");
+        assert_eq!(doc.get("requested").and_then(Json::as_str), Some("simd"));
+        assert_eq!(doc.get("chosen").and_then(Json::as_str), Some("simd"));
+
+        let fallback = crate::tensor::kernel::resolve(Some("simd"), false);
+        let line = kernel_line(&fallback);
+        assert!(line.contains("chosen=scalar"), "{line}");
+        assert!(line.contains("falling back"), "{line}");
+        let doc = Json::parse(&kernel_json(&fallback)).unwrap();
+        assert_eq!(doc.get("chosen").and_then(Json::as_str), Some("scalar"));
     }
 }

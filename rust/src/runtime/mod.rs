@@ -30,6 +30,26 @@
 //! counts beyond the worker cap queue instead of spawning, so even a
 //! deliberately oversubscribed `PALLAS_NUM_THREADS` degrades gracefully.
 //!
+//! # `PALLAS_KERNEL` semantics
+//!
+//! [`kernel`] resolves which microkernel family the tensor hot loops
+//! dispatch on ([`crate::tensor::kernel`]):
+//!
+//! * **`scalar` / unset** — the portable autovectorized oracle (default;
+//!   preserves today's bit patterns exactly).
+//! * **`simd`** — explicit AVX2/FMA microkernels when the CPU has them,
+//!   otherwise a logged fallback to scalar.
+//! * **`auto`** — simd iff detected, silently.
+//!
+//! The choice is resolved once per process ([`kernel_choice`]) and logged
+//! through [`manifest::log_kernel_once`] so bench artifacts and CI logs
+//! record which kernel produced each number. [`with_kernel`] scopes a
+//! per-thread override for in-process probes (the env knob resolves only
+//! once). GEMM under simd trades the scalar bit pattern for FMA register
+//! tiles (approximately equal, pinned by property tests); the conv
+//! transforms stay bitwise identical under either kind, and the
+//! per-thread-count determinism contract holds within each kind.
+//!
 //! # Determinism contract
 //!
 //! The knob (and the group division) only affect *speed*: every parallel
@@ -55,6 +75,8 @@ pub mod manifest;
 pub mod pool;
 pub mod xla_job;
 
+use crate::tensor::kernel::{simd_supported, KernelChoice, KernelKind};
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
@@ -108,6 +130,61 @@ fn explicit_env() -> Option<&'static str> {
 /// Worker groups currently registered by the coordinator.
 pub fn active_worker_groups() -> usize {
     ACTIVE_WORKER_GROUPS.load(Ordering::Relaxed)
+}
+
+/// The process-wide kernel resolution: `PALLAS_KERNEL` (read once) against
+/// runtime CPU detection, logged on first use through
+/// [`manifest::log_kernel_once`].
+pub fn kernel_choice() -> &'static KernelChoice {
+    static CHOICE: OnceLock<KernelChoice> = OnceLock::new();
+    CHOICE.get_or_init(|| {
+        let choice = crate::tensor::kernel::resolve(kernel_env(), simd_supported());
+        manifest::log_kernel_once(&choice);
+        choice
+    })
+}
+
+/// Cached one-shot read of `PALLAS_KERNEL` (raw string; parsing stays in
+/// [`crate::tensor::kernel::resolve`] so garbage handling is uniform).
+fn kernel_env() -> Option<&'static str> {
+    static EXPLICIT: OnceLock<Option<String>> = OnceLock::new();
+    EXPLICIT.get_or_init(|| std::env::var("PALLAS_KERNEL").ok()).as_deref()
+}
+
+thread_local! {
+    /// Scoped per-thread override installed by [`with_kernel`].
+    static KERNEL_OVERRIDE: Cell<Option<KernelKind>> = const { Cell::new(None) };
+}
+
+/// The microkernel kind for tensor hot loops on the *calling* thread:
+/// a [`with_kernel`] override if one is active, else the process-wide
+/// [`kernel_choice`]. Kernels resolve this once per call on the caller
+/// thread and hand the kind to their workers, so one call never mixes
+/// families.
+pub fn kernel() -> KernelKind {
+    KERNEL_OVERRIDE.with(|o| o.get()).unwrap_or_else(|| kernel_choice().chosen)
+}
+
+/// Run `f` with this thread's kernel dispatch forced to `kind` (restored
+/// on exit, panic-safe). `Simd` is sanitized back to `Scalar` when the
+/// host lacks AVX2+FMA, mirroring the env-knob fallback, so probes can
+/// request simd unconditionally. Used by the alloc/scaling probes to
+/// exercise both families in one process — the env knob resolves only
+/// once.
+pub fn with_kernel<R>(kind: KernelKind, f: impl FnOnce() -> R) -> R {
+    let kind = if kind == KernelKind::Simd && !simd_supported() {
+        KernelKind::Scalar
+    } else {
+        kind
+    };
+    struct Restore(Option<KernelKind>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            KERNEL_OVERRIDE.with(|o| o.set(self.0));
+        }
+    }
+    let _restore = Restore(KERNEL_OVERRIDE.with(|o| o.replace(Some(kind))));
+    f()
 }
 
 /// RAII registration of one coordinator worker group for thread budgeting:
@@ -194,6 +271,47 @@ mod thread_knob_tests {
             Err(_) => assert_eq!(threads(), 1, "cores / ~1000 groups floors at 1"),
         }
         drop(guards);
+    }
+}
+
+#[cfg(test)]
+mod kernel_knob_tests {
+    use super::*;
+
+    #[test]
+    fn with_kernel_overrides_and_restores() {
+        let ambient = kernel();
+        assert_eq!(with_kernel(KernelKind::Scalar, kernel), KernelKind::Scalar);
+        let forced = with_kernel(KernelKind::Simd, kernel);
+        if simd_supported() {
+            assert_eq!(forced, KernelKind::Simd);
+        } else {
+            assert_eq!(forced, KernelKind::Scalar, "sanitized on non-AVX2 hosts");
+        }
+        assert_eq!(kernel(), ambient, "override restored on exit");
+    }
+
+    #[test]
+    fn with_kernel_restores_on_panic() {
+        let ambient = kernel();
+        let r = std::panic::catch_unwind(|| {
+            with_kernel(KernelKind::Scalar, || {
+                panic!("probe failed");
+            })
+        });
+        assert!(r.is_err());
+        assert_eq!(kernel(), ambient, "override restored by the drop guard");
+    }
+
+    #[test]
+    fn choice_matches_env_and_detection() {
+        let c = kernel_choice();
+        let expect = match std::env::var("PALLAS_KERNEL") {
+            Ok(v) => crate::tensor::kernel::resolve(Some(&v), simd_supported()),
+            Err(_) => crate::tensor::kernel::resolve(None, simd_supported()),
+        };
+        assert_eq!(*c, expect);
+        assert!(c.chosen == KernelKind::Scalar || simd_supported(), "simd only when detected");
     }
 }
 

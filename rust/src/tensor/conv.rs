@@ -18,9 +18,21 @@
 //! count comes from [`crate::runtime::threads()`]; the `*_with_threads`
 //! variants take it explicitly, and `1` runs the historical serial loops
 //! on the caller thread with no pool machinery touched.
+//!
+//! # Kernel dispatch
+//!
+//! Under `PALLAS_KERNEL=simd` ([`crate::runtime::kernel`]) the transforms
+//! take a span-structured fast path: per output row the valid `ox` range
+//! is one contiguous source span (stride 1 copies/accumulates it through
+//! the AVX2 span kernels in [`super::kernel`]; larger strides use a
+//! branch-free gather), zeros elsewhere. Copies and lane-independent adds
+//! reorder no floating-point arithmetic, so the simd transforms stay
+//! **bitwise identical** to the scalar oracle — pinned by exact-equality
+//! tests here and in `tests/properties.rs`.
 
 use super::blob::Blob;
 use super::gemm::{gemm_with_threads, Transpose};
+use super::kernel::{add_span, copy_span, KernelKind};
 use std::sync::Mutex;
 
 /// Static geometry of a conv/pool operation.
@@ -98,23 +110,47 @@ pub fn im2col(img: &[f32], g: &Conv2dGeom, out: &mut [f32]) {
 /// one task in the serial order, so the result is `==`-identical to
 /// `threads == 1` for every count.
 pub fn im2col_with_threads(img: &[f32], g: &Conv2dGeom, out: &mut [f32], threads: usize) {
+    im2col_with_kernel(img, g, out, threads, crate::runtime::kernel());
+}
+
+/// [`im2col_with_threads`] with an explicit microkernel kind (probes and
+/// scalar-vs-simd equality tests). Both kinds produce bitwise-identical
+/// output; the kind only selects the execution strategy.
+pub fn im2col_with_kernel(
+    img: &[f32],
+    g: &Conv2dGeom,
+    out: &mut [f32],
+    threads: usize,
+    kind: KernelKind,
+) {
     assert_eq!(img.len(), g.in_c * g.in_h * g.in_w, "im2col input size");
     assert_eq!(out.len(), g.col_rows() * g.col_cols(), "im2col output size");
     let rows = g.col_rows();
     let cc = g.col_cols();
     let t = threads.max(1).min(rows.max(1));
     if t == 1 {
-        im2col_rows(img, g, 0, rows, out);
+        im2col_rows(img, g, 0, rows, out, kind);
         return;
     }
-    run_striped(out, rows, cc, t, |r0, rc, chunk| im2col_rows(img, g, r0, rc, chunk));
+    run_striped(out, rows, cc, t, |r0, rc, chunk| im2col_rows(img, g, r0, rc, chunk, kind));
 }
 
 /// Write rows `[row0, row0 + rows)` of the im2col matrix into `out`, whose
 /// first element corresponds to row `row0`. Row `(c*k + ky)*k + kx` gathers
 /// kernel offset `(ky, kx)` of channel `c` — the exact loop order of the
 /// historical serial transform.
-fn im2col_rows(img: &[f32], g: &Conv2dGeom, row0: usize, rows: usize, out: &mut [f32]) {
+fn im2col_rows(
+    img: &[f32],
+    g: &Conv2dGeom,
+    row0: usize,
+    rows: usize,
+    out: &mut [f32],
+    kind: KernelKind,
+) {
+    if kind == KernelKind::Simd {
+        im2col_rows_spans(img, g, row0, rows, out);
+        return;
+    }
     let (oh, ow) = (g.out_h(), g.out_w());
     let k = g.kernel;
     for r in 0..rows {
@@ -136,6 +172,58 @@ fn im2col_rows(img: &[f32], g: &Conv2dGeom, row0: usize, rows: usize, out: &mut 
                 } else {
                     0.0
                 };
+            }
+        }
+    }
+}
+
+/// Valid output-x range `[lo, hi)` for kernel offset `kx`: the `ox` whose
+/// source column `ix = ox*stride + kx - pad` lands inside `[0, in_w)`,
+/// clamped to `[0, ow)`. Returns `(lo, hi, shift)` with `shift = kx - pad`
+/// so `ix = ox*stride + shift`.
+fn ox_span(g: &Conv2dGeom, kx: usize, ow: usize) -> (usize, usize, isize) {
+    let s = g.stride as isize;
+    let shift = kx as isize - g.pad as isize;
+    let lo = if shift >= 0 { 0 } else { ((-shift + s - 1) / s) as usize };
+    let last = g.in_w as isize - 1 - shift;
+    let hi = if last < 0 { 0 } else { (last / s + 1) as usize };
+    let lo = lo.min(ow);
+    (lo, hi.clamp(lo, ow), shift)
+}
+
+/// Span-structured [`im2col_rows`] for the simd path: zeros outside the
+/// valid span, one contiguous copy (stride 1) or branch-free gather
+/// inside it. Values are exactly the scalar gather's, written in the same
+/// left-to-right order per row.
+fn im2col_rows_spans(img: &[f32], g: &Conv2dGeom, row0: usize, rows: usize, out: &mut [f32]) {
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let k = g.kernel;
+    let s = g.stride as isize;
+    for r in 0..rows {
+        let row = row0 + r;
+        let c = row / (k * k);
+        let rem = row % (k * k);
+        let (ky, kx) = (rem / k, rem % k);
+        let (lo, hi, shift) = ox_span(g, kx, ow);
+        let plane = &img[c * g.in_h * g.in_w..(c + 1) * g.in_h * g.in_w];
+        let base = r * oh * ow;
+        for oy in 0..oh {
+            let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+            let dst = &mut out[base + oy * ow..base + oy * ow + ow];
+            if iy < 0 || iy as usize >= g.in_h || hi <= lo {
+                dst.fill(0.0);
+                continue;
+            }
+            let src = &plane[iy as usize * g.in_w..(iy as usize + 1) * g.in_w];
+            dst[..lo].fill(0.0);
+            dst[hi..].fill(0.0);
+            if g.stride == 1 {
+                let i0 = (lo as isize + shift) as usize;
+                copy_span(KernelKind::Simd, &src[i0..i0 + (hi - lo)], &mut dst[lo..hi]);
+            } else {
+                for (d, ox) in dst[lo..hi].iter_mut().zip(lo..hi) {
+                    *d = src[(ox as isize * s + shift) as usize];
+                }
             }
         }
     }
@@ -168,19 +256,45 @@ pub fn col2im_acc(col: &[f32], g: &Conv2dGeom, img: &mut [f32]) {
 /// identical addition sequence for every count — `==`-identical to
 /// `threads == 1`.
 pub fn col2im_acc_with_threads(col: &[f32], g: &Conv2dGeom, img: &mut [f32], threads: usize) {
+    col2im_acc_with_kernel(col, g, img, threads, crate::runtime::kernel());
+}
+
+/// [`col2im_acc_with_threads`] with an explicit microkernel kind. Both
+/// kinds accumulate in the identical `(ky, kx, oy, ox)` order, so the
+/// output is bitwise the same.
+pub fn col2im_acc_with_kernel(
+    col: &[f32],
+    g: &Conv2dGeom,
+    img: &mut [f32],
+    threads: usize,
+    kind: KernelKind,
+) {
     let t = threads.max(1).min(g.in_c.max(1));
     if t == 1 {
-        col2im_channels(col, g, 0, g.in_c, img);
+        col2im_channels(col, g, 0, g.in_c, img, kind);
         return;
     }
     let plane = g.in_h * g.in_w;
-    run_striped(img, g.in_c, plane, t, |c0, cn, chunk| col2im_channels(col, g, c0, cn, chunk));
+    run_striped(img, g.in_c, plane, t, |c0, cn, chunk| {
+        col2im_channels(col, g, c0, cn, chunk, kind)
+    });
 }
 
 /// Accumulate channels `[c0, c0 + channels)` of the column matrix into
 /// `img`, whose first element is the first pixel of channel `c0`'s plane —
 /// the historical serial loop restricted to a channel range.
-fn col2im_channels(col: &[f32], g: &Conv2dGeom, c0: usize, channels: usize, img: &mut [f32]) {
+fn col2im_channels(
+    col: &[f32],
+    g: &Conv2dGeom,
+    c0: usize,
+    channels: usize,
+    img: &mut [f32],
+    kind: KernelKind,
+) {
+    if kind == KernelKind::Simd {
+        col2im_channels_spans(col, g, c0, channels, img);
+        return;
+    }
     let (oh, ow) = (g.out_h(), g.out_w());
     let k = g.kernel;
     let plane = g.in_h * g.in_w;
@@ -197,6 +311,46 @@ fn col2im_channels(col: &[f32], g: &Conv2dGeom, c0: usize, channels: usize, img:
                         {
                             img[ci * plane + iy as usize * g.in_w + ix as usize] +=
                                 col[base + oy * ow + ox];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Span-structured [`col2im_channels`] for the simd path. Every image
+/// pixel receives the same additions in the same `(ky, kx, oy, ox)` order
+/// as the scalar loop (within one row each destination is touched at most
+/// once, so the 8-wide lane adds reorder nothing) — bitwise identical.
+fn col2im_channels_spans(col: &[f32], g: &Conv2dGeom, c0: usize, channels: usize, img: &mut [f32]) {
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let k = g.kernel;
+    let s = g.stride as isize;
+    let plane = g.in_h * g.in_w;
+    for ci in 0..channels {
+        let c = c0 + ci;
+        let dst = &mut img[ci * plane..(ci + 1) * plane];
+        for ky in 0..k {
+            for kx in 0..k {
+                let base = ((c * k + ky) * k + kx) * oh * ow;
+                let (lo, hi, shift) = ox_span(g, kx, ow);
+                if hi <= lo {
+                    continue;
+                }
+                for oy in 0..oh {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    if iy < 0 || iy as usize >= g.in_h {
+                        continue;
+                    }
+                    let srow = &col[base + oy * ow + lo..base + oy * ow + hi];
+                    let drow = &mut dst[iy as usize * g.in_w..(iy as usize + 1) * g.in_w];
+                    if g.stride == 1 {
+                        let i0 = (lo as isize + shift) as usize;
+                        add_span(KernelKind::Simd, srow, &mut drow[i0..i0 + (hi - lo)]);
+                    } else {
+                        for (v, ox) in srow.iter().zip(lo..hi) {
+                            drow[(ox as isize * s + shift) as usize] += v;
                         }
                     }
                 }
@@ -701,6 +855,77 @@ mod tests {
                 let mut acc_t = img0.clone();
                 col2im_acc_with_threads(&colm, &g, &mut acc_t, t);
                 assert!(acc_t == acc_serial, "col2im_acc t={t} differs (c={c} h={h} k={k})");
+            }
+        }
+    }
+
+    /// The simd span transforms must reproduce the scalar oracle bitwise
+    /// (copies and lane-independent adds reorder no arithmetic), across
+    /// strides, pads, kernel-larger-than-pad, and task counts.
+    #[test]
+    fn simd_transforms_bit_identical_to_scalar() {
+        if !crate::tensor::kernel::simd_supported() {
+            eprintln!("NOTICE: AVX2+FMA not detected; exercising the span path via scalar spans");
+        }
+        // The span path runs either way: the span kernels re-check
+        // detection and degrade to scalar lanes, staying bitwise equal.
+        let kind = KernelKind::Simd;
+        let mut rng = Rng::new(0x51dc);
+        for &(c, h, w, k, s, p) in &[
+            (3usize, 8usize, 8usize, 3usize, 1usize, 1usize),
+            (2, 9, 13, 5, 1, 2),
+            (16, 7, 5, 3, 2, 0),
+            (4, 11, 6, 3, 2, 1),
+            (1, 12, 12, 5, 1, 4), // pad close to kernel: wide zero borders
+            (2, 3, 3, 3, 1, 0),   // kernel == image
+            (3, 6, 40, 5, 1, 2),  // wide rows: full 8-lane spans
+        ] {
+            let g = geom(c, h, w, k, s, p);
+            let img = rng.uniform_vec(c * h * w, -1.0, 1.0);
+            let n = g.col_rows() * g.col_cols();
+            let mut col_scalar = vec![0.0; n];
+            im2col_with_kernel(&img, &g, &mut col_scalar, 1, KernelKind::Scalar);
+            let colm = rng.uniform_vec(n, -1.0, 1.0);
+            let img0 = rng.uniform_vec(c * h * w, -1.0, 1.0);
+            let mut acc_scalar = img0.clone();
+            col2im_acc_with_kernel(&colm, &g, &mut acc_scalar, 1, KernelKind::Scalar);
+            for &t in &[1usize, 2, 4, 7] {
+                let mut col_v = vec![0.0; n];
+                im2col_with_kernel(&img, &g, &mut col_v, t, kind);
+                assert!(col_v == col_scalar, "im2col simd t={t} differs (c={c} h={h} k={k} s={s})");
+                let mut acc_v = img0.clone();
+                col2im_acc_with_kernel(&colm, &g, &mut acc_v, t, kind);
+                assert!(acc_v == acc_scalar, "col2im simd t={t} differs (c={c} h={h} k={k} s={s})");
+            }
+        }
+    }
+
+    /// The span bounds must agree with the per-element predicate for every
+    /// kernel offset, including spans clamped empty.
+    #[test]
+    fn ox_span_matches_predicate() {
+        for &(h, w, k, s, p) in &[
+            (8usize, 8usize, 3usize, 1usize, 1usize),
+            (7, 5, 3, 2, 0),
+            (9, 4, 3, 2, 2),
+            (12, 12, 5, 1, 4),
+            (5, 3, 3, 1, 0),
+            (6, 2, 1, 3, 0),
+        ] {
+            let g = geom(1, h, w, k, s, p);
+            let ow = g.out_w();
+            for kx in 0..k {
+                let (lo, hi, shift) = ox_span(&g, kx, ow);
+                assert!(lo <= hi && hi <= ow, "span bounds (k={k} s={s} p={p} kx={kx})");
+                for ox in 0..ow {
+                    let ix = (ox * s + kx) as isize - p as isize;
+                    let valid = ix >= 0 && (ix as usize) < w;
+                    assert_eq!(
+                        valid,
+                        ox >= lo && ox < hi,
+                        "kx={kx} ox={ox} (k={k} s={s} p={p} shift={shift})"
+                    );
+                }
             }
         }
     }

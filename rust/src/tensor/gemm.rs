@@ -1,9 +1,12 @@
 //! Blocked single-precision GEMM — the OpenBLAS stand-in for the native
 //! backend. `C = alpha * op(A) @ op(B) + beta * C` with row-major storage.
 //!
-//! The kernel packs the operands into cache-friendly tiles and accumulates
-//! with 2-row register blocking, which the compiler auto-vectorizes. The
-//! perf pass (EXPERIMENTS.md §Perf) records the blocking iterations.
+//! The kernel packs the operands into cache-friendly tiles and hands the
+//! inner loop to the dispatching microkernel in [`super::kernel`]: the
+//! scalar oracle (2-row register blocking the compiler auto-vectorizes —
+//! the historical bit pattern) or, under `PALLAS_KERNEL=simd`, the
+//! explicit AVX2/FMA register-tile kernel. The perf pass (EXPERIMENTS.md
+//! §Perf) records the blocking iterations.
 //!
 //! # Intra-op parallelism
 //!
@@ -30,6 +33,7 @@
 //! the Blob allocation counter one level below the Blob layer.
 
 use super::blob::Blob;
+use super::kernel::{microkernel, scale8, KernelKind};
 use std::cell::{Cell, RefCell};
 use std::sync::Mutex;
 
@@ -113,7 +117,9 @@ pub fn gemm(
 /// [`Blob::split_range`]; because every `C` row still sees the identical
 /// per-element operation sequence (same blocks, same `kk` panel order, same
 /// kernel), the result is bit-for-bit identical to the serial path for
-/// every thread count.
+/// every thread count. The microkernel kind is resolved once on the
+/// calling thread ([`crate::runtime::kernel`]) and shared by all workers,
+/// so a single call never mixes kernel families.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_with_threads(
     ta: Transpose,
@@ -128,6 +134,28 @@ pub fn gemm_with_threads(
     c: &mut [f32],
     threads: usize,
 ) {
+    let kind = crate::runtime::kernel();
+    gemm_with_kernel(ta, tb, m, n, k, alpha, a, b, beta, c, threads, kind);
+}
+
+/// [`gemm_with_threads`] with an explicit microkernel kind — used by the
+/// scalar-vs-simd probes and property tests to pin both families against
+/// each other regardless of the process-wide `PALLAS_KERNEL` resolution.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with_kernel(
+    ta: Transpose,
+    tb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+    threads: usize,
+    kind: KernelKind,
+) {
     assert_eq!(a.len(), m * k, "A size");
     assert_eq!(b.len(), k * n, "B size");
     assert_eq!(c.len(), m * n, "C size");
@@ -135,7 +163,7 @@ pub fn gemm_with_threads(
     if beta == 0.0 {
         c.iter_mut().for_each(|x| *x = 0.0);
     } else if beta != 1.0 {
-        c.iter_mut().for_each(|x| *x *= beta);
+        scale8(beta, c);
     }
     if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
         return;
@@ -165,7 +193,7 @@ pub fn gemm_with_threads(
                     let mb = MC.min(m - ii);
                     pack_a(ta, a, m, k, ii, kk, mb, kb, &mut a_pack[..]);
                     let c_tile = &mut c[ii * n + jj..];
-                    kernel(mb, nb, kb, alpha, &a_pack[..], &b_pack[..], c_tile, n, NC);
+                    microkernel(kind, mb, nb, kb, alpha, &a_pack[..], &b_pack[..], nb, c_tile, n);
                     ii += mb;
                 }
                 jj += nb;
@@ -213,16 +241,17 @@ pub fn gemm_with_threads(
                     while ii < *rcount {
                         let mb = MC.min(*rcount - ii);
                         pack_a(ta, a, m, k, *rstart + ii, kk, mb, kb, &mut a_pack[..]);
-                        kernel(
+                        microkernel(
+                            kind,
                             mb,
                             nb,
                             kb,
                             alpha,
                             &a_pack[..],
                             b_panel,
+                            nb,
                             &mut stripe[ii * n + jj..],
                             n,
-                            NC,
                         );
                         ii += mb;
                     }
@@ -294,75 +323,6 @@ fn pack_b(
                 for c in 0..nb {
                     out[r * nb + c] = b[(jj + c) * k + (kk + r)];
                 }
-            }
-        }
-    }
-}
-
-/// Micro-kernel over packed tiles: C_tile += alpha * Apack @ Bpack.
-/// `c` points at C[ii*n + jj]; rows of the C tile are `ldc` apart.
-#[inline]
-fn kernel(
-    mb: usize,
-    nb: usize,
-    kb: usize,
-    alpha: f32,
-    a_pack: &[f32],
-    b_pack: &[f32],
-    c: &mut [f32],
-    ldc: usize,
-    nc: usize,
-) {
-    let _ = nc;
-    // 2-row register blocking: each pass streams one B row against two A
-    // scalars, halving B-pack traffic. chunks_exact elides bounds checks so
-    // LLVM emits SIMD FMA over the 8-wide lanes.
-    let mut r = 0;
-    while r + 2 <= mb {
-        let (arow0, arow1) = (&a_pack[r * kb..r * kb + kb], &a_pack[(r + 1) * kb..(r + 1) * kb + kb]);
-        let (c0, c1) = c[r * ldc..].split_at_mut(ldc);
-        let c0 = &mut c0[..nb];
-        let c1 = &mut c1[..nb];
-        for p in 0..kb {
-            let av0 = arow0[p] * alpha;
-            let av1 = arow1[p] * alpha;
-            let brow = &b_pack[p * nb..p * nb + nb];
-            let mut b8 = brow.chunks_exact(8);
-            let mut c08 = c0.chunks_exact_mut(8);
-            let mut c18 = c1.chunks_exact_mut(8);
-            for ((bv, cv0), cv1) in (&mut b8).zip(&mut c08).zip(&mut c18) {
-                for i in 0..8 {
-                    cv0[i] += av0 * bv[i];
-                    cv1[i] += av1 * bv[i];
-                }
-            }
-            let rem = b8.remainder();
-            let c0r = c08.into_remainder();
-            let c1r = c18.into_remainder();
-            for i in 0..rem.len() {
-                c0r[i] += av0 * rem[i];
-                c1r[i] += av1 * rem[i];
-            }
-        }
-        r += 2;
-    }
-    if r < mb {
-        let arow = &a_pack[r * kb..r * kb + kb];
-        let crow = &mut c[r * ldc..r * ldc + nb];
-        for (p, &av) in arow.iter().enumerate() {
-            let av = av * alpha;
-            let brow = &b_pack[p * nb..p * nb + nb];
-            let mut b8 = brow.chunks_exact(8);
-            let mut c8 = crow.chunks_exact_mut(8);
-            for (bv, cv) in (&mut b8).zip(&mut c8) {
-                for i in 0..8 {
-                    cv[i] += av * bv[i];
-                }
-            }
-            let rem = b8.remainder();
-            let cr = c8.into_remainder();
-            for i in 0..rem.len() {
-                cr[i] += av * rem[i];
             }
         }
     }
@@ -601,6 +561,78 @@ mod tests {
             before,
             "steady-state gemm must not allocate pack scratch"
         );
+    }
+
+    /// The simd kernel family must approximate the scalar oracle across
+    /// block-straddling sizes, transposes, and alpha/beta classes. Skips
+    /// (with a notice) when the host lacks AVX2+FMA — the knob degrades to
+    /// scalar there and equality is trivial.
+    #[test]
+    fn simd_matches_scalar_oracle() {
+        if !crate::tensor::kernel::simd_supported() {
+            eprintln!("NOTICE: AVX2+FMA not detected; skipping simd-vs-scalar gemm test");
+            return;
+        }
+        let mut rng = crate::utils::rng::Rng::new(0x51d);
+        for &(ta, tb) in &[
+            (Transpose::No, Transpose::No),
+            (Transpose::No, Transpose::Yes),
+            (Transpose::Yes, Transpose::No),
+            (Transpose::Yes, Transpose::Yes),
+        ] {
+            for &(m, n, k) in &[(5usize, 7usize, 3usize), (64, 64, 64), (65, 257, 300), (33, 9, 70)]
+            {
+                let a = rng.uniform_vec(m * k, -1.0, 1.0);
+                let b = rng.uniform_vec(k * n, -1.0, 1.0);
+                let c0 = rng.uniform_vec(m * n, -1.0, 1.0);
+                for &(alpha, beta) in &[(1.0f32, 0.0f32), (2.5, -0.5), (-1.0, 1.0)] {
+                    let mut cs = c0.clone();
+                    gemm_with_kernel(
+                        ta, tb, m, n, k, alpha, &a, &b, beta, &mut cs, 1, KernelKind::Scalar,
+                    );
+                    let mut cv = c0.clone();
+                    gemm_with_kernel(
+                        ta, tb, m, n, k, alpha, &a, &b, beta, &mut cv, 1, KernelKind::Simd,
+                    );
+                    for (i, (x, y)) in cv.iter().zip(&cs).enumerate() {
+                        assert!(
+                            (x - y).abs() <= 1e-3 + 1e-3 * y.abs(),
+                            "idx={i}: {x} vs {y} (m={m} n={n} k={k} ta={ta:?} tb={tb:?})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Within the simd family the thread-count determinism contract holds
+    /// just like for scalar: stripes see the same per-element op sequence,
+    /// so every count reproduces the serial simd output bit-for-bit.
+    #[test]
+    fn simd_parallel_is_bit_identical_to_simd_serial() {
+        if !crate::tensor::kernel::simd_supported() {
+            eprintln!("NOTICE: AVX2+FMA not detected; skipping simd determinism test");
+            return;
+        }
+        let mut rng = crate::utils::rng::Rng::new(0x51d2);
+        for &(m, n, k) in &[(65usize, 257usize, 300usize), (129, 64, 257), (256, 40, 70)] {
+            let a = rng.uniform_vec(m * k, -1.0, 1.0);
+            let b = rng.uniform_vec(k * n, -1.0, 1.0);
+            let c0 = rng.uniform_vec(m * n, -1.0, 1.0);
+            let mut serial = c0.clone();
+            gemm_with_kernel(
+                Transpose::No, Transpose::No, m, n, k, 1.0, &a, &b, 0.5, &mut serial, 1,
+                KernelKind::Simd,
+            );
+            for &t in &[2usize, 4, 7] {
+                let mut par = c0.clone();
+                gemm_with_kernel(
+                    Transpose::No, Transpose::No, m, n, k, 1.0, &a, &b, 0.5, &mut par, t,
+                    KernelKind::Simd,
+                );
+                assert!(par == serial, "simd threads={t} differs (m={m} n={n} k={k})");
+            }
+        }
     }
 
     /// Random alpha/beta (including 0, 1, negatives) and all transpose

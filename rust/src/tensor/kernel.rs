@@ -1,0 +1,634 @@
+//! Kernel dispatch layer — scalar oracle vs explicit AVX2/FMA microkernels.
+//!
+//! The blocked GEMM in [`super::gemm`] and the conv transforms in
+//! [`super::conv`] route their inner loops through this module. Two
+//! implementations exist per hot loop:
+//!
+//! * **scalar** — the portable path, written so LLVM auto-vectorizes the
+//!   8-wide lanes. It is the test oracle and the default: its per-element
+//!   operation sequence is the historical one, so the bit-identical-at-
+//!   every-thread-count contract is untouched.
+//! * **simd** — explicit `std::arch` AVX2/FMA kernels (x86_64 only). The
+//!   GEMM microkernel holds an MR x NR register tile across the whole `kb`
+//!   loop, so its FMA accumulation order differs from the scalar oracle:
+//!   results are approximately equal (pinned by property tests), not
+//!   bitwise. The conv span kernels are pure lane-independent copies/adds
+//!   and stay bitwise identical to scalar.
+//!
+//! The active kind is resolved **once** per process from `PALLAS_KERNEL`
+//! (`scalar` | `simd` | `auto`) plus CPU feature detection — see
+//! [`crate::runtime::kernel`] — and logged through
+//! [`crate::runtime::manifest::log_kernel_once`]. `simd` silently degrades
+//! to scalar (with a note in the log line) when the host lacks AVX2+FMA,
+//! so the knob is safe to set unconditionally in CI.
+
+/// Which microkernel family executes the tensor hot loops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable autovectorized loops — default, test oracle.
+    Scalar,
+    /// Explicit AVX2/FMA microkernels (x86_64 with runtime detection).
+    Simd,
+}
+
+impl KernelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Simd => "simd",
+        }
+    }
+}
+
+/// Outcome of resolving the `PALLAS_KERNEL` knob against the host CPU.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelChoice {
+    /// Sanitized form of the request: `scalar` | `simd` | `auto` |
+    /// `(unset)` | `(invalid)`.
+    pub requested: String,
+    /// Whether runtime detection found AVX2 and FMA on this host.
+    pub avx2_fma: bool,
+    /// The kind every kernel call dispatches on.
+    pub chosen: KernelKind,
+    /// Present when the choice differs from the request (fallbacks).
+    pub note: Option<String>,
+}
+
+/// Pure resolution policy: knob value x detected features -> choice.
+/// Unset and `scalar` keep the oracle; `simd` and `auto` take the AVX2
+/// path only when the host supports it; anything else falls back to
+/// scalar with a note.
+pub fn resolve(env: Option<&str>, avx2_fma: bool) -> KernelChoice {
+    let token = env.map(|s| s.trim().to_ascii_lowercase());
+    match token.as_deref() {
+        None | Some("") => KernelChoice {
+            requested: "(unset)".to_string(),
+            avx2_fma,
+            chosen: KernelKind::Scalar,
+            note: None,
+        },
+        Some("scalar") => KernelChoice {
+            requested: "scalar".to_string(),
+            avx2_fma,
+            chosen: KernelKind::Scalar,
+            note: None,
+        },
+        Some("simd") => {
+            if avx2_fma {
+                KernelChoice {
+                    requested: "simd".to_string(),
+                    avx2_fma,
+                    chosen: KernelKind::Simd,
+                    note: None,
+                }
+            } else {
+                KernelChoice {
+                    requested: "simd".to_string(),
+                    avx2_fma,
+                    chosen: KernelKind::Scalar,
+                    note: Some("AVX2+FMA not detected; falling back to scalar".to_string()),
+                }
+            }
+        }
+        Some("auto") => KernelChoice {
+            requested: "auto".to_string(),
+            avx2_fma,
+            chosen: if avx2_fma { KernelKind::Simd } else { KernelKind::Scalar },
+            note: None,
+        },
+        Some(_) => KernelChoice {
+            requested: "(invalid)".to_string(),
+            avx2_fma,
+            chosen: KernelKind::Scalar,
+            note: Some("unrecognized PALLAS_KERNEL value; using scalar".to_string()),
+        },
+    }
+}
+
+/// Runtime CPU check for the simd path (AVX2 and FMA both present).
+pub fn simd_supported() -> bool {
+    simd_supported_impl()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn simd_supported_impl() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn simd_supported_impl() -> bool {
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Shared lane helpers — the one place the chunks_exact(8) + remainder edge
+// pattern is written. Both kernel families use these for their scalar
+// edges, so tails behave identically everywhere.
+// ---------------------------------------------------------------------------
+
+/// `c[i] += av * b[i]` over full 8-wide lanes plus the remainder tail.
+/// One multiply + one add per element, in index order — the historical
+/// per-element operation sequence of the gemm accumulate loops.
+#[inline]
+pub fn axpy8(av: f32, b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(b.len(), c.len());
+    let mut b8 = b.chunks_exact(8);
+    let mut c8 = c.chunks_exact_mut(8);
+    for (bv, cv) in (&mut b8).zip(&mut c8) {
+        for i in 0..8 {
+            cv[i] += av * bv[i];
+        }
+    }
+    for (bv, cv) in b8.remainder().iter().zip(c8.into_remainder()) {
+        *cv += av * bv;
+    }
+}
+
+/// `c[i] *= beta` over full 8-wide lanes plus the remainder tail — the
+/// gemm beta prologue, one multiply per element in index order.
+#[inline]
+pub fn scale8(beta: f32, c: &mut [f32]) {
+    let mut c8 = c.chunks_exact_mut(8);
+    for cv in &mut c8 {
+        for v in cv.iter_mut() {
+            *v *= beta;
+        }
+    }
+    for v in c8.into_remainder() {
+        *v *= beta;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GEMM microkernel: C_tile += alpha * Apack @ Bpack over packed tiles.
+// ---------------------------------------------------------------------------
+
+/// Dispatching microkernel over packed tiles. `a_pack` is `mb x kb`
+/// row-major, `b_pack` is `kb x nb` with rows `ldb` apart, and `c` points
+/// at the top-left of the C tile with rows `ldc` apart.
+#[allow(clippy::too_many_arguments)]
+pub fn microkernel(
+    kind: KernelKind,
+    mb: usize,
+    nb: usize,
+    kb: usize,
+    alpha: f32,
+    a_pack: &[f32],
+    b_pack: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    debug_assert!(a_pack.len() >= mb * kb, "A pack too small");
+    debug_assert!(nb <= ldb && b_pack.len() + ldb >= kb * ldb + nb, "B pack too small");
+    // The detection re-check makes `Simd` total on every host (std caches
+    // the cpuid result, so this is one relaxed atomic load per tile):
+    // callers may pass Simd unconditionally and still get defined
+    // behaviour — it degrades to the scalar oracle without AVX2+FMA.
+    if kind == KernelKind::Simd && simd_supported() {
+        microkernel_simd(mb, nb, kb, alpha, a_pack, b_pack, ldb, c, ldc);
+        return;
+    }
+    microkernel_scalar(mb, nb, kb, alpha, a_pack, b_pack, ldb, c, ldc);
+}
+
+/// Portable microkernel: 2-row register blocking over [`axpy8`] lanes.
+/// Each C element still sees exactly one `+= (a*alpha) * b` per `p`, in
+/// `p` order — the historical bit pattern.
+#[allow(clippy::too_many_arguments)]
+fn microkernel_scalar(
+    mb: usize,
+    nb: usize,
+    kb: usize,
+    alpha: f32,
+    a_pack: &[f32],
+    b_pack: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let mut r = 0;
+    while r + 2 <= mb {
+        let arow0 = &a_pack[r * kb..r * kb + kb];
+        let arow1 = &a_pack[(r + 1) * kb..(r + 1) * kb + kb];
+        let (c0, c1) = c[r * ldc..].split_at_mut(ldc);
+        let c0 = &mut c0[..nb];
+        let c1 = &mut c1[..nb];
+        for p in 0..kb {
+            let brow = &b_pack[p * ldb..p * ldb + nb];
+            axpy8(arow0[p] * alpha, brow, c0);
+            axpy8(arow1[p] * alpha, brow, c1);
+        }
+        r += 2;
+    }
+    if r < mb {
+        let arow = &a_pack[r * kb..r * kb + kb];
+        let crow = &mut c[r * ldc..r * ldc + nb];
+        for (p, &av) in arow.iter().enumerate() {
+            axpy8(av * alpha, &b_pack[p * ldb..p * ldb + nb], crow);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+fn microkernel_simd(
+    mb: usize,
+    nb: usize,
+    kb: usize,
+    alpha: f32,
+    a_pack: &[f32],
+    b_pack: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    if mb == 0 || nb == 0 || kb == 0 {
+        return;
+    }
+    // SAFETY: the dispatcher re-checked `simd_supported()` (AVX2+FMA
+    // detected at runtime) before calling here, and the asserted
+    // pack/tile bounds keep every pointer inside its slice: B reads stop
+    // at `(kb-1)*ldb + nb <= b_pack.len()`, A at `mb*kb <= a_pack.len()`,
+    // C at `(mb-1)*ldc + nb <= c.len()`.
+    let done = unsafe {
+        avx2::microkernel(
+            mb, nb, kb, alpha, a_pack.as_ptr(), b_pack.as_ptr(), ldb, c.as_mut_ptr(), ldc,
+        )
+    };
+    if done < nb {
+        // Sub-8-column edge: shared scalar tail over the same lane helper.
+        microkernel_scalar(
+            mb, nb - done, kb, alpha, a_pack, &b_pack[done..], ldb, &mut c[done..], ldc,
+        );
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+fn microkernel_simd(
+    mb: usize,
+    nb: usize,
+    kb: usize,
+    alpha: f32,
+    a_pack: &[f32],
+    b_pack: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    // `resolve` never picks Simd without detection, but stay total.
+    microkernel_scalar(mb, nb, kb, alpha, a_pack, b_pack, ldb, c, ldc);
+}
+
+// ---------------------------------------------------------------------------
+// Conv span kernels: contiguous copy / accumulate used by the stride-1
+// im2col/col2im fast paths. Lane-independent, so bitwise equal to scalar.
+// ---------------------------------------------------------------------------
+
+/// `dst[i] = src[i]`.
+pub fn copy_span(kind: KernelKind, src: &[f32], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    if kind == KernelKind::Simd && simd_supported() {
+        copy_span_simd(src, dst);
+        return;
+    }
+    dst.copy_from_slice(src);
+}
+
+/// `dst[i] += src[i]`.
+pub fn add_span(kind: KernelKind, src: &[f32], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    if kind == KernelKind::Simd && simd_supported() {
+        add_span_simd(src, dst);
+        return;
+    }
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn copy_span_simd(src: &[f32], dst: &mut [f32]) {
+    // SAFETY: the dispatcher re-checked `simd_supported()` before calling
+    // here; the lengths were asserted equal by the caller.
+    unsafe { avx2::copy_span(src.as_ptr(), dst.as_mut_ptr(), dst.len()) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn add_span_simd(src: &[f32], dst: &mut [f32]) {
+    // SAFETY: as for `copy_span_simd`.
+    unsafe { avx2::add_span(src.as_ptr(), dst.as_mut_ptr(), dst.len()) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn copy_span_simd(src: &[f32], dst: &mut [f32]) {
+    dst.copy_from_slice(src);
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn add_span_simd(src: &[f32], dst: &mut [f32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Explicit AVX2/FMA kernels. Every function carries `#[target_feature]`
+/// and must only be called after runtime detection ([`simd_supported`]).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Rows per register tile (4 x 16 block = 8 accumulator vectors).
+    const MR: usize = 4;
+    /// Columns per register tile (two 8-wide lanes).
+    const NR: usize = 16;
+
+    // One monomorphic tile kernel per row count, generated by macro so the
+    // accumulator array length is a literal and stays in registers.
+    macro_rules! tile16 {
+        ($name:ident, $mr:expr) => {
+            /// `C[0..mr, 0..16] += alpha * A[0..mr, 0..kb] @ B[0..kb, 0..16]`
+            /// with the whole accumulator block held in ymm registers for
+            /// the `kb` loop — the FMA-ordering difference vs the scalar
+            /// oracle.
+            #[target_feature(enable = "avx2", enable = "fma")]
+            unsafe fn $name(
+                kb: usize,
+                alpha: f32,
+                a: *const f32,
+                lda: usize,
+                b: *const f32,
+                ldb: usize,
+                c: *mut f32,
+                ldc: usize,
+            ) {
+                let mut lo = [_mm256_setzero_ps(); $mr];
+                let mut hi = [_mm256_setzero_ps(); $mr];
+                for p in 0..kb {
+                    let bp = b.add(p * ldb);
+                    let b0 = _mm256_loadu_ps(bp);
+                    let b1 = _mm256_loadu_ps(bp.add(8));
+                    for r in 0..$mr {
+                        let av = _mm256_set1_ps(*a.add(r * lda + p));
+                        lo[r] = _mm256_fmadd_ps(av, b0, lo[r]);
+                        hi[r] = _mm256_fmadd_ps(av, b1, hi[r]);
+                    }
+                }
+                let al = _mm256_set1_ps(alpha);
+                for r in 0..$mr {
+                    let cp = c.add(r * ldc);
+                    _mm256_storeu_ps(cp, _mm256_fmadd_ps(al, lo[r], _mm256_loadu_ps(cp)));
+                    let cq = cp.add(8);
+                    _mm256_storeu_ps(cq, _mm256_fmadd_ps(al, hi[r], _mm256_loadu_ps(cq)));
+                }
+            }
+        };
+    }
+
+    tile16!(tile16x4, 4);
+    tile16!(tile16x2, 2);
+    tile16!(tile16x1, 1);
+
+    macro_rules! tile8 {
+        ($name:ident, $mr:expr) => {
+            /// 8-column variant of the register tile.
+            #[target_feature(enable = "avx2", enable = "fma")]
+            unsafe fn $name(
+                kb: usize,
+                alpha: f32,
+                a: *const f32,
+                lda: usize,
+                b: *const f32,
+                ldb: usize,
+                c: *mut f32,
+                ldc: usize,
+            ) {
+                let mut acc = [_mm256_setzero_ps(); $mr];
+                for p in 0..kb {
+                    let b0 = _mm256_loadu_ps(b.add(p * ldb));
+                    for r in 0..$mr {
+                        let av = _mm256_set1_ps(*a.add(r * lda + p));
+                        acc[r] = _mm256_fmadd_ps(av, b0, acc[r]);
+                    }
+                }
+                let al = _mm256_set1_ps(alpha);
+                for r in 0..$mr {
+                    let cp = c.add(r * ldc);
+                    _mm256_storeu_ps(cp, _mm256_fmadd_ps(al, acc[r], _mm256_loadu_ps(cp)));
+                }
+            }
+        };
+    }
+
+    tile8!(tile8x4, 4);
+    tile8!(tile8x2, 2);
+    tile8!(tile8x1, 1);
+
+    // One column strip (16 or 8 wide) over all mb rows: MR-row tiles with
+    // 2-row and 1-row edge tiles.
+    macro_rules! col_strip {
+        ($name:ident, $t4:ident, $t2:ident, $t1:ident) => {
+            #[target_feature(enable = "avx2", enable = "fma")]
+            unsafe fn $name(
+                mb: usize,
+                kb: usize,
+                alpha: f32,
+                a: *const f32,
+                b: *const f32,
+                ldb: usize,
+                c: *mut f32,
+                ldc: usize,
+            ) {
+                let mut r = 0;
+                while r + MR <= mb {
+                    $t4(kb, alpha, a.add(r * kb), kb, b, ldb, c.add(r * ldc), ldc);
+                    r += MR;
+                }
+                if r + 2 <= mb {
+                    $t2(kb, alpha, a.add(r * kb), kb, b, ldb, c.add(r * ldc), ldc);
+                    r += 2;
+                }
+                if r < mb {
+                    $t1(kb, alpha, a.add(r * kb), kb, b, ldb, c.add(r * ldc), ldc);
+                }
+            }
+        };
+    }
+
+    col_strip!(col_strip16, tile16x4, tile16x2, tile16x1);
+    col_strip!(col_strip8, tile8x4, tile8x2, tile8x1);
+
+    /// Register-blocked microkernel body: 16-wide column strips, then one
+    /// 8-wide strip. Returns the number of columns processed; the caller
+    /// handles the `nb % 8` edge with the shared scalar tail.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn microkernel(
+        mb: usize,
+        nb: usize,
+        kb: usize,
+        alpha: f32,
+        a: *const f32,
+        b: *const f32,
+        ldb: usize,
+        c: *mut f32,
+        ldc: usize,
+    ) -> usize {
+        let mut j = 0;
+        while j + NR <= nb {
+            col_strip16(mb, kb, alpha, a, b.add(j), ldb, c.add(j), ldc);
+            j += NR;
+        }
+        if j + 8 <= nb {
+            col_strip8(mb, kb, alpha, a, b.add(j), ldb, c.add(j), ldc);
+            j += 8;
+        }
+        j
+    }
+
+    /// `dst[0..n] = src[0..n]` with 8-wide unaligned loads/stores.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn copy_span(src: *const f32, dst: *mut f32, n: usize) {
+        let mut i = 0;
+        while i + 8 <= n {
+            _mm256_storeu_ps(dst.add(i), _mm256_loadu_ps(src.add(i)));
+            i += 8;
+        }
+        while i < n {
+            *dst.add(i) = *src.add(i);
+            i += 1;
+        }
+    }
+
+    /// `dst[0..n] += src[0..n]` — independent lane adds, bitwise equal to
+    /// the scalar accumulate.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_span(src: *const f32, dst: *mut f32, n: usize) {
+        let mut i = 0;
+        while i + 8 <= n {
+            let s = _mm256_loadu_ps(src.add(i));
+            let d = _mm256_loadu_ps(dst.add(i));
+            _mm256_storeu_ps(dst.add(i), _mm256_add_ps(d, s));
+            i += 8;
+        }
+        while i < n {
+            *dst.add(i) += *src.add(i);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::rng::Rng;
+
+    #[test]
+    fn resolve_policy_table() {
+        // (env, detected) -> (requested, chosen, has_note)
+        let cases: &[(Option<&str>, bool, &str, KernelKind, bool)] = &[
+            (None, true, "(unset)", KernelKind::Scalar, false),
+            (None, false, "(unset)", KernelKind::Scalar, false),
+            (Some(""), true, "(unset)", KernelKind::Scalar, false),
+            (Some("scalar"), true, "scalar", KernelKind::Scalar, false),
+            (Some("SIMD"), true, "simd", KernelKind::Simd, false),
+            (Some("simd"), false, "simd", KernelKind::Scalar, true),
+            (Some("auto"), true, "auto", KernelKind::Simd, false),
+            (Some("auto"), false, "auto", KernelKind::Scalar, false),
+            (Some("fast"), true, "(invalid)", KernelKind::Scalar, true),
+        ];
+        for &(env, det, req, chosen, noted) in cases {
+            let c = resolve(env, det);
+            assert_eq!(c.requested, req, "env={env:?}");
+            assert_eq!(c.avx2_fma, det, "env={env:?}");
+            assert_eq!(c.chosen, chosen, "env={env:?}");
+            assert_eq!(c.note.is_some(), noted, "env={env:?}");
+        }
+    }
+
+    #[test]
+    fn axpy8_and_scale8_match_naive() {
+        let mut rng = Rng::new(11);
+        for n in [0usize, 1, 7, 8, 9, 16, 23, 64] {
+            let b = rng.uniform_vec(n, -1.0, 1.0);
+            let c0 = rng.uniform_vec(n, -1.0, 1.0);
+            let av = 0.37f32;
+            let mut c1 = c0.clone();
+            axpy8(av, &b, &mut c1);
+            let mut c2 = c0.clone();
+            for i in 0..n {
+                c2[i] += av * b[i];
+            }
+            assert_eq!(c1, c2, "axpy8 n={n}");
+            let mut s1 = c0.clone();
+            scale8(-2.5, &mut s1);
+            let mut s2 = c0.clone();
+            for v in s2.iter_mut() {
+                *v *= -2.5;
+            }
+            assert_eq!(s1, s2, "scale8 n={n}");
+        }
+    }
+
+    #[test]
+    fn spans_match_scalar_exactly() {
+        if !simd_supported() {
+            eprintln!("NOTICE: AVX2+FMA not detected; span kernels degrade to scalar");
+        }
+        let kind = if simd_supported() { KernelKind::Simd } else { KernelKind::Scalar };
+        let mut rng = Rng::new(21);
+        for n in [0usize, 1, 5, 8, 13, 16, 31, 100] {
+            let src = rng.uniform_vec(n, -2.0, 2.0);
+            let d0 = rng.uniform_vec(n, -2.0, 2.0);
+            let mut d1 = d0.clone();
+            copy_span(kind, &src, &mut d1);
+            assert_eq!(d1, src, "copy_span n={n}");
+            let mut a1 = d0.clone();
+            add_span(kind, &src, &mut a1);
+            let mut a2 = d0.clone();
+            for (d, s) in a2.iter_mut().zip(&src) {
+                *d += s;
+            }
+            assert_eq!(a1, a2, "add_span n={n}");
+        }
+    }
+
+    /// The simd microkernel must approximate the scalar oracle over tiles
+    /// covering every row/column edge combination (mb % 4, nb % 16 / % 8,
+    /// sub-8 tails, ldb > nb).
+    #[test]
+    fn simd_microkernel_matches_scalar_on_edges() {
+        if !simd_supported() {
+            eprintln!("NOTICE: AVX2+FMA not detected; skipping simd microkernel test");
+            return;
+        }
+        let mut rng = Rng::new(31);
+        for &mb in &[1usize, 2, 3, 4, 5, 6, 7, 8, 11] {
+            for &nb in &[1usize, 2, 7, 8, 9, 15, 16, 17, 24, 25, 40] {
+                for &kb in &[1usize, 2, 8, 33] {
+                    let ldb = nb + 3;
+                    let ldc = nb + 5;
+                    let a = rng.uniform_vec(mb * kb, -1.0, 1.0);
+                    let b = rng.uniform_vec(kb * ldb, -1.0, 1.0);
+                    let c0 = rng.uniform_vec(mb * ldc, -1.0, 1.0);
+                    let mut cs = c0.clone();
+                    microkernel(KernelKind::Scalar, mb, nb, kb, 1.3, &a, &b, ldb, &mut cs, ldc);
+                    let mut cv = c0.clone();
+                    microkernel(KernelKind::Simd, mb, nb, kb, 1.3, &a, &b, ldb, &mut cv, ldc);
+                    for (i, (x, y)) in cv.iter().zip(&cs).enumerate() {
+                        assert!(
+                            (x - y).abs() <= 1e-4 + 1e-4 * y.abs(),
+                            "mb={mb} nb={nb} kb={kb} idx={i}: {x} vs {y}"
+                        );
+                    }
+                    // Columns past nb (and rows past mb) must be untouched.
+                    for r in 0..mb {
+                        let (lo, hi) = (r * ldc + nb, r * ldc + ldc);
+                        assert_eq!(cv[lo..hi], c0[lo..hi]);
+                    }
+                }
+            }
+        }
+    }
+}

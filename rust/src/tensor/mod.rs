@@ -11,12 +11,16 @@
 //! ([`conv::im2col`] / [`conv::col2im_acc`]) fan out over the persistent
 //! worker pool ([`crate::runtime::pool`]) on
 //! [`crate::runtime::threads()`] tasks, with bit-identical output at every
-//! thread count.
+//! thread count. Their inner loops dispatch through [`kernel`] — scalar
+//! oracle by default, explicit AVX2/FMA microkernels under
+//! `PALLAS_KERNEL=simd` (see [`crate::runtime::kernel`]).
 
 pub mod blob;
 pub mod gemm;
+pub mod kernel;
 pub mod ops;
 pub mod conv;
 
 pub use blob::Blob;
 pub use gemm::{gemm, gemm_with_threads, Transpose};
+pub use kernel::KernelKind;

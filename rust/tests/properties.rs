@@ -3,7 +3,10 @@
 //! gradient-complete net, and batch-dimension partitioning must preserve
 //! the full-batch loss exactly — plus the determinism contract of every
 //! pooled intra-op kernel (GEMM, im2col, col2im): every thread count
-//! yields bit-for-bit the serial result.
+//! yields bit-for-bit the serial result — and the kernel-dispatch
+//! contract: the simd gemm approximates the scalar oracle within FMA
+//! tolerance (bit-identical across thread counts within the family), and
+//! the simd conv transforms reproduce the scalar path exactly.
 
 use singa::model::layer::{Activation, LayerConf, LayerKind, Phase};
 use singa::model::partition::{logical_param_name, partition_net};
@@ -310,6 +313,101 @@ fn parallel_conv_transforms_bit_identical_on_degenerate_shapes() {
             assert!(acc_t == acc_serial, "col2im_acc t={t} differs on {g:?}");
         }
     }
+}
+
+/// The kernel-dispatch property: for random (m, n, k, alpha, beta, ta,
+/// tb), the simd gemm approximates the scalar oracle within the FMA
+/// reordering tolerance, and within the simd family every thread count is
+/// bit-identical to simd serial. Skipped (with a notice) off AVX2+FMA.
+#[test]
+fn simd_gemm_matches_scalar_oracle_for_random_shapes() {
+    use singa::tensor::gemm::gemm_with_kernel;
+    use singa::tensor::KernelKind;
+    if !singa::tensor::kernel::simd_supported() {
+        eprintln!("NOTICE: AVX2+FMA not detected; skipping simd gemm property test");
+        return;
+    }
+    forall(30, |g| {
+        let m = g.usize(1, 160);
+        let n = g.usize(1, 96);
+        let k = g.usize(1, 70);
+        let alpha = *g.choose(&[1.0f32, -1.0, 2.5, 0.0, 0.3]);
+        let beta = *g.choose(&[0.0f32, 1.0, -0.5, 2.0]);
+        let ta = if g.bool() { Transpose::Yes } else { Transpose::No };
+        let tb = if g.bool() { Transpose::Yes } else { Transpose::No };
+        let a = g.f32_vec(m * k, -1.0, 1.0);
+        let b = g.f32_vec(k * n, -1.0, 1.0);
+        let c0 = g.f32_vec(m * n, -1.0, 1.0);
+        let mut scalar = c0.clone();
+        gemm_with_kernel(ta, tb, m, n, k, alpha, &a, &b, beta, &mut scalar, 1, KernelKind::Scalar);
+        let mut simd = c0.clone();
+        gemm_with_kernel(ta, tb, m, n, k, alpha, &a, &b, beta, &mut simd, 1, KernelKind::Simd);
+        for (i, (x, y)) in simd.iter().zip(&scalar).enumerate() {
+            prop_assert(
+                (x - y).abs() <= 1e-3 + 1e-3 * y.abs(),
+                &format!(
+                    "idx={i}: simd {x} vs scalar {y} \
+                     (m={m} n={n} k={k} alpha={alpha} beta={beta} ta={ta:?} tb={tb:?})"
+                ),
+            )?;
+        }
+        for &t in &[2usize, 4, 7] {
+            let mut par = c0.clone();
+            gemm_with_kernel(ta, tb, m, n, k, alpha, &a, &b, beta, &mut par, t, KernelKind::Simd);
+            prop_assert(
+                par == simd,
+                &format!("simd threads={t} differs from simd serial (m={m} n={n} k={k})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// The simd conv transforms reorder no arithmetic, so — unlike the gemm
+/// microkernel — they must reproduce the scalar path bit-for-bit on random
+/// geometries, at every task count. Runs everywhere: off AVX2+FMA the span
+/// kernels degrade to scalar lanes and the property still holds.
+#[test]
+fn simd_conv_transforms_bit_identical_to_scalar_for_random_geometries() {
+    use singa::tensor::conv::{col2im_acc_with_kernel, im2col_with_kernel};
+    use singa::tensor::KernelKind;
+    forall(40, |q| {
+        let c = q.usize(1, 5);
+        let h = q.usize(1, 12);
+        let w = q.usize(1, 12);
+        let pad = q.usize(0, 2);
+        let kmax = (h.min(w) + 2 * pad).min(5);
+        let k = q.usize(1, kmax.max(1));
+        let stride = q.usize(1, 3);
+        let g = Conv2dGeom { in_c: c, in_h: h, in_w: w, kernel: k, stride, pad };
+        let n = g.col_rows() * g.col_cols();
+
+        let img = q.f32_vec(c * h * w, -1.0, 1.0);
+        let mut col_scalar = vec![0.0f32; n];
+        im2col_with_kernel(&img, &g, &mut col_scalar, 1, KernelKind::Scalar);
+        let colm = q.f32_vec(n, -1.0, 1.0);
+        let img0 = q.f32_vec(c * h * w, -1.0, 1.0);
+        let mut acc_scalar = img0.clone();
+        col2im_acc_with_kernel(&colm, &g, &mut acc_scalar, 1, KernelKind::Scalar);
+
+        for &t in &[1usize, 2, 4, 7] {
+            let mut col_v = vec![0.0f32; n];
+            im2col_with_kernel(&img, &g, &mut col_v, t, KernelKind::Simd);
+            prop_assert(
+                col_v == col_scalar,
+                &format!("simd im2col t={t} differs (c={c} h={h} w={w} k={k} s={stride} p={pad})"),
+            )?;
+            let mut acc_v = img0.clone();
+            col2im_acc_with_kernel(&colm, &g, &mut acc_v, t, KernelKind::Simd);
+            prop_assert(
+                acc_v == acc_scalar,
+                &format!(
+                    "simd col2im_acc t={t} differs (c={c} h={h} w={w} k={k} s={stride} p={pad})"
+                ),
+            )?;
+        }
+        Ok(())
+    });
 }
 
 #[test]
