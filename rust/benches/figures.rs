@@ -184,14 +184,59 @@ fn emit_overlap_probe(check: bool) {
     }
 }
 
+/// Run the fault-recovery probe (MLP + convnet jobs × cluster/lan cost
+/// models × {baseline, checkpoint cadence, checkpoint + mid-run kill,
+/// straggler, straggler + backup}) and write the `BENCH_faults.json`
+/// artifact at the repo root. With `check`, assert the acceptance bar: no
+/// scenario perturbs training values (bitwise), the kill scenario recovers
+/// through the checkpoint with a strictly positive virtual recovery
+/// charge, and backups rescue every delayed step — the CI faults job runs
+/// this under `PALLAS_NUM_THREADS=1` and `=4`.
+fn emit_faults_probe(check: bool) {
+    let probes = singa::bench::faults_probe(24);
+    let json = singa::bench::faults_probes_json(&probes);
+    println!("==== fault-recovery probe ====");
+    print!("{json}");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_faults.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    if check {
+        for p in &probes {
+            let tag = format!("{}/{}/{}", p.job, p.cost, p.scenario);
+            assert!(p.values_bitwise, "{tag}: faults must never perturb training values");
+            match p.scenario {
+                "ckpt+kill" => {
+                    assert_eq!(p.fault_events, 1, "{tag}: the kill must be recovered");
+                    assert!(p.checkpoints >= 1, "{tag}: recovery needs a checkpoint");
+                    assert!(
+                        p.recovery_virt_ms > 0.0 && p.overhead_ratio > 1.0,
+                        "{tag}: recovery must cost virtual time \
+                         (recovery {:.4} ms, ratio {:.4})",
+                        p.recovery_virt_ms,
+                        p.overhead_ratio
+                    );
+                }
+                "straggler+backup" => {
+                    assert!(p.backup_rescues >= 1, "{tag}: backups must rescue delayed steps");
+                }
+                _ => {}
+            }
+        }
+        println!("faults check passed: {} scenarios, values bitwise-stable", probes.len());
+    }
+}
+
 fn main() {
     // `cargo bench --bench figures -- alloc [check]` runs only the
     // allocation probes (model loops + distributed run_job; the CI
     // alloc-regression job adds `check`); `-- gemm [check]` runs only the
     // gemm scaling probe (CI smoke adds `check`); `-- conv` runs only the
     // conv/im2col scaling probe; `-- overlap [check]` runs only the
-    // sequential-vs-overlapped exchange probe (CI adds `check`); no
-    // argument runs everything.
+    // sequential-vs-overlapped exchange probe (CI adds `check`);
+    // `-- faults [check]` runs only the fault-recovery probe (CI adds
+    // `check`); no argument runs everything.
     let args: Vec<String> = std::env::args().collect();
     let has = |s: &str| args.iter().any(|a| a == s);
     if has("gemm") {
@@ -206,6 +251,10 @@ fn main() {
         emit_overlap_probe(has("check"));
         return;
     }
+    if has("faults") {
+        emit_faults_probe(has("check"));
+        return;
+    }
     emit_alloc_probe(has("check"));
     if has("alloc") {
         return;
@@ -213,6 +262,7 @@ fn main() {
     emit_gemm_probe(false);
     emit_conv_probe();
     emit_overlap_probe(false);
+    emit_faults_probe(false);
 
     println!("==== paper figures (quick mode) ====");
     let out = singa::bench::run_all(true);

@@ -11,11 +11,11 @@ use crate::baselines::{
     SystemPolicy,
 };
 use crate::cluster::ClusterTopology;
-use crate::comm::{CostModel, LinkModel};
+use crate::comm::{CostModel, FaultPlan, LinkModel};
 use crate::coordinator::copyqueue::{
     alexnet_like_profiles, iteration_time_us, CopyMode, UpdateRates,
 };
-use crate::coordinator::{run_job, Algorithm, JobConf};
+use crate::coordinator::{run_job, Algorithm, CheckpointConf, JobConf};
 use crate::data::{CharCorpus, DataSource, SyntheticDigits, SyntheticImages};
 use crate::model::layer::{Activation, LayerConf, LayerKind};
 use crate::model::{NetBuilder, Phase};
@@ -233,15 +233,20 @@ pub struct DistAllocProbe {
 /// neighbour server-group syncs — must perform zero Blob allocations in
 /// every worker group.
 pub fn distributed_alloc_probe(warmup: u64, steps: u64) -> Vec<DistAllocProbe> {
-    let cases: [(&'static str, ClusterTopology); 3] = [
-        ("sandblaster(1,1)", ClusterTopology::sandblaster(1, 1)),
-        ("downpour(3,1,2)", ClusterTopology::downpour(3, 1, 2)),
-        ("hogwild(2,1,10)", ClusterTopology::hogwild(2, 1, 10)),
+    // The `ckpt` flag arms the asynchronous checkpoint plane (snapshot
+    // every 4 steps): cadence requests are one channel send and the export
+    // clones on the checkpointer thread, so the worker tally must stay 0
+    // with checkpointing enabled too.
+    let cases: [(&'static str, ClusterTopology, bool); 4] = [
+        ("sandblaster(1,1)", ClusterTopology::sandblaster(1, 1), false),
+        ("sandblaster(1,1)+ckpt", ClusterTopology::sandblaster(1, 1), true),
+        ("downpour(3,1,2)", ClusterTopology::downpour(3, 1, 2), false),
+        ("hogwild(2,1,10)", ClusterTopology::hogwild(2, 1, 10), false),
     ];
     let data: Arc<dyn DataSource> = Arc::new(SyntheticDigits::new(64, 5, 77));
     cases
         .iter()
-        .map(|&(name, ref topo)| {
+        .map(|&(name, ref topo, ckpt)| {
             let b = NetBuilder::new()
                 .add(LayerConf::new("data", LayerKind::Input { shape: vec![16, 64] }, &[]))
                 .add(LayerConf::new("label", LayerKind::Input { shape: vec![16] }, &[]))
@@ -262,6 +267,9 @@ pub fn distributed_alloc_probe(warmup: u64, steps: u64) -> Vec<DistAllocProbe> {
             conf.updater = UpdaterConf::sgd(0.1);
             conf.topology = topo.clone();
             conf.alloc_probe_from = Some(warmup);
+            if ckpt {
+                conf.checkpoint = Some(CheckpointConf::every(4));
+            }
             let report = run_job(&conf, data.clone());
             DistAllocProbe {
                 topology: name,
@@ -456,6 +464,173 @@ pub fn overlap_probes_json(probes: &[OverlapProbe]) -> String {
             p.virt_ratio,
             p.seq_wall_ms,
             p.overlap_wall_ms,
+            if i + 1 == probes.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Faults probe: recovery overhead on the simnet clock (BENCH_faults.json)
+// ---------------------------------------------------------------------------
+
+/// One fault scenario of one job under one cost model: the virtual-clock
+/// overhead of checkpoint cadence, kill-and-restore, and stragglers (with
+/// and without backup workers), plus the invariant that none of them
+/// perturbs training values (`values_bitwise` against the fault-free run).
+#[derive(Debug, Clone)]
+pub struct FaultsProbe {
+    pub job: &'static str,
+    pub cost: &'static str,
+    pub scenario: &'static str,
+    pub iters: u64,
+    /// Final virtual clock of the (single) worker group (ms).
+    pub virt_ms: f64,
+    /// virt_ms / the fault-free baseline's virt_ms (1.0 for the baseline
+    /// itself; > 1 ⇒ the scenario costs virtual time).
+    pub overhead_ratio: f64,
+    pub fault_events: usize,
+    pub checkpoints: u64,
+    pub backup_rescues: u64,
+    /// Summed restart cost (latency + checkpoint re-fetch) on the virtual
+    /// clock, excluding replayed steps.
+    pub recovery_virt_ms: f64,
+    /// Final params bitwise-equal to the fault-free run — faults move the
+    /// clock and the ledger, never the math.
+    pub values_bitwise: bool,
+}
+
+fn params_bitwise_eq(
+    a: &std::collections::HashMap<String, Blob>,
+    b: &std::collections::HashMap<String, Blob>,
+) -> bool {
+    a.len() == b.len()
+        && a.iter().all(|(name, va)| {
+            b.get(name).is_some_and(|vb| {
+                va.shape() == vb.shape()
+                    && va.data().iter().zip(vb.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+            })
+        })
+}
+
+/// Measure recovery overhead for the MLP and convnet jobs under the
+/// cluster (1 Gbps) and lan (10 Gbps) cost models, on sandblaster(1,2)
+/// (sole tenant of a sharded server group, so a kill exercises the full
+/// checkpoint-restore path). Five scenarios per (job, cost): fault-free
+/// baseline, checkpoint cadence alone, checkpoint + mid-run kill, an 8×
+/// straggler stretch, and the same straggler hidden by a backup worker.
+/// The convnet runs at `iters / 2`; cadence/kill/delay schedules scale
+/// with the step budget.
+pub fn faults_probe(iters: u64) -> Vec<FaultsProbe> {
+    let costs: [(&'static str, CostModel); 2] =
+        [("cluster", CostModel::cluster()), ("lan", CostModel::lan())];
+    let mlp = NetBuilder::new()
+        .add(LayerConf::new("data", LayerKind::Input { shape: vec![16, 64] }, &[]))
+        .add(LayerConf::new("label", LayerKind::Input { shape: vec![16] }, &[]))
+        .add(LayerConf::new(
+            "h1",
+            LayerKind::InnerProduct { out: 32, act: Activation::Relu, init_std: 0.1 },
+            &["data"],
+        ))
+        .add(LayerConf::new(
+            "logits",
+            LayerKind::InnerProduct { out: 5, act: Activation::Identity, init_std: 0.1 },
+            &["h1"],
+        ))
+        .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]));
+    let digits: Arc<dyn DataSource> = Arc::new(SyntheticDigits::new(64, 5, 77));
+    let images: Arc<dyn DataSource> = Arc::new(SyntheticImages::cifar_like(4));
+    let jobs: [(&'static str, NetBuilder, Arc<dyn DataSource>, usize, u64); 2] = [
+        ("mlp", mlp, digits, 16, iters.max(6)),
+        ("convnet", cifar_convnet(8), images, 8, (iters / 2).max(6)),
+    ];
+
+    let mut out = Vec::new();
+    for (job, builder, data, batch, iters) in jobs {
+        // Schedule scaled to the step budget: checkpoint boundaries at
+        // thirds, the kill in the last sixth (after at least one
+        // boundary), the straggler stretch over the second quarter.
+        let every = (iters / 3).max(1);
+        let kill_at = (iters * 5 / 6).max(1);
+        let (delay_from, delay_to) = (iters / 4, (iters / 2).max(iters / 4 + 1));
+        for (cost_name, cost) in &costs {
+            let run = |faults: FaultPlan, ckpt: Option<u64>, backups: usize| {
+                let mut conf = JobConf::new("faults_probe", builder.clone());
+                conf.batch_size = batch;
+                conf.iters = iters;
+                conf.updater = UpdaterConf::sgd(0.1);
+                conf.topology = ClusterTopology::sandblaster(1, 2);
+                conf.cost = *cost;
+                conf.faults = faults;
+                conf.checkpoint = ckpt.map(CheckpointConf::every);
+                conf.backup_workers = backups;
+                run_job(&conf, data.clone())
+            };
+            let slow = FaultPlan::none().delay_range(0, delay_from, delay_to, 8.0);
+            let base = run(FaultPlan::none(), None, 0);
+            let scenarios: [(&'static str, crate::coordinator::JobReport); 4] = [
+                ("ckpt", run(FaultPlan::none(), Some(every), 0)),
+                ("ckpt+kill", run(FaultPlan::none().kill(0, kill_at), Some(every), 0)),
+                ("straggler", run(slow.clone(), None, 0)),
+                ("straggler+backup", run(slow, None, 1)),
+            ];
+            let base_virt = base.group_virt_ms[0];
+            let mut push = |scenario: &'static str, r: &crate::coordinator::JobReport| {
+                out.push(FaultsProbe {
+                    job,
+                    cost: cost_name,
+                    scenario,
+                    iters,
+                    virt_ms: r.group_virt_ms[0],
+                    overhead_ratio: r.group_virt_ms[0] / base_virt,
+                    fault_events: r.fault_events.len(),
+                    checkpoints: r.checkpoints,
+                    backup_rescues: r.backup_rescues,
+                    recovery_virt_ms: r.fault_events.iter().map(|e| e.recovery_virt_ms).sum(),
+                    values_bitwise: params_bitwise_eq(&base.params, &r.params),
+                });
+            };
+            push("baseline", &base);
+            for (scenario, report) in &scenarios {
+                push(scenario, report);
+            }
+        }
+    }
+    out
+}
+
+/// Serialize probes as the `BENCH_faults.json` artifact emitted by
+/// `cargo bench --bench figures -- faults`.
+pub fn faults_probes_json(probes: &[FaultsProbe]) -> String {
+    let mut s = String::from("{\n  \"probe\": \"fault_recovery\",\n  \"cases\": [\n");
+    for (i, p) in probes.iter().enumerate() {
+        let metrics = metrics_json(
+            "     ",
+            &[
+                ("virt_ms", p.virt_ms, "ms", "lower_is_better"),
+                ("overhead_ratio", p.overhead_ratio, "x", "lower_is_better"),
+                ("recovery_virt_ms", p.recovery_virt_ms, "ms", "lower_is_better"),
+                ("backup_rescues", p.backup_rescues as f64, "steps", "higher_is_better"),
+            ],
+        );
+        s.push_str(&format!(
+            "    {{\"job\": \"{}\", \"cost\": \"{}\", \"scenario\": \"{}\", \"iters\": {}, \
+             \"virt_ms\": {:.4}, \"overhead_ratio\": {:.4}, \"fault_events\": {}, \
+             \"checkpoints\": {}, \"backup_rescues\": {}, \"recovery_virt_ms\": {:.4}, \
+             \"values_bitwise\": {},\n     \"metrics\": {}}}{}\n",
+            p.job,
+            p.cost,
+            p.scenario,
+            p.iters,
+            p.virt_ms,
+            p.overhead_ratio,
+            p.fault_events,
+            p.checkpoints,
+            p.backup_rescues,
+            p.recovery_virt_ms,
+            p.values_bitwise,
+            metrics,
             if i + 1 == probes.len() { "" } else { "," }
         ));
     }
@@ -1621,6 +1796,58 @@ mod tests {
         assert!(j.contains("\"hogwild(2,1,10)\""));
         assert!(j.contains("\"steady_allocs_per_group\""));
         // trivially parseable by the in-repo JSON reader
+        assert!(crate::utils::json::Json::parse(&j).is_ok());
+    }
+
+    /// The fault-recovery probe's invariants: no scenario perturbs training
+    /// values, the kill scenario recovers (one fault event, a restored
+    /// checkpoint, a strictly positive recovery charge), backups rescue
+    /// every delayed step, and the JSON artifact parses. Overhead
+    /// magnitudes are machine-dependent and only recorded — except the kill
+    /// scenario's, whose restart latency is a pure virtual charge and must
+    /// show up as > 1×.
+    #[test]
+    fn faults_probe_pins_recovery_invariants() {
+        let probes = faults_probe(6);
+        assert_eq!(probes.len(), 2 * 2 * 5, "2 jobs x 2 costs x 5 scenarios");
+        for p in &probes {
+            let tag = format!("{}/{}/{}", p.job, p.cost, p.scenario);
+            assert!(p.values_bitwise, "{tag}: faults must never perturb values");
+            assert!(p.virt_ms > 0.0, "{tag}");
+            match p.scenario {
+                "baseline" => {
+                    assert_eq!(p.fault_events, 0, "{tag}");
+                    assert_eq!(p.checkpoints, 0, "{tag}");
+                    assert_eq!(p.overhead_ratio, 1.0, "{tag}");
+                }
+                "ckpt" => {
+                    assert_eq!(p.fault_events, 0, "{tag}");
+                    assert!(p.checkpoints >= 1, "{tag}: cadence must snapshot");
+                }
+                "ckpt+kill" => {
+                    assert_eq!(p.fault_events, 1, "{tag}: the kill must be recovered");
+                    assert!(p.checkpoints >= 1, "{tag}");
+                    assert!(p.recovery_virt_ms > 0.0, "{tag}");
+                    assert!(
+                        p.overhead_ratio > 1.0,
+                        "{tag}: restart latency must cost virtual time ({:.4})",
+                        p.overhead_ratio
+                    );
+                }
+                "straggler" => assert_eq!(p.backup_rescues, 0, "{tag}"),
+                "straggler+backup" => {
+                    assert!(p.backup_rescues >= 1, "{tag}: backups must rescue");
+                    assert_eq!(p.fault_events, 0, "{tag}: delays are not kills");
+                }
+                other => panic!("unknown scenario {other}"),
+            }
+        }
+        let j = faults_probes_json(&probes);
+        assert!(j.contains("\"fault_recovery\""));
+        assert!(j.contains("\"ckpt+kill\""));
+        assert!(j.contains("\"straggler+backup\""));
+        assert!(j.contains("\"values_bitwise\": true"));
+        assert!(j.contains("\"recovery_virt_ms\""));
         assert!(crate::utils::json::Json::parse(&j).is_ok());
     }
 

@@ -1,0 +1,150 @@
+//! Deterministic fault injection on the simnet clock: per-worker-group
+//! kill-at-step and delay/straggler schedules, configured via
+//! [`crate::coordinator::JobConf::faults`].
+//!
+//! Production scale means workers die and stragglers happen (IBM DLaaS:
+//! resilience is what turns a training framework into a service). The plan
+//! is *deterministic in step space* — a kill fires at the top of a named
+//! `(group, step)`, a delay scales that step's virtual compute charge —
+//! so fault scenarios replay bit-for-bit: recovery tests can pin a
+//! restarted run against an uninterrupted one, and `BENCH_faults.json`
+//! measures recovery overhead on the virtual clock instead of on wall
+//! noise. Training *values* are never perturbed; only control flow (kill →
+//! restart from checkpoint) and the clock/ledger accounting change.
+
+/// A delay rule: steps `from..to` of `group` take `factor`× their healthy
+/// per-worker compute time (a straggling worker dragging the group's
+/// synchronous barrier).
+#[derive(Debug, Clone, PartialEq)]
+struct DelayRule {
+    group: usize,
+    from: u64,
+    to: u64,
+    factor: f64,
+}
+
+/// A deterministic fault schedule for one job. Built with the chained
+/// constructors; queried by the worker-group loop each step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    kills: Vec<(usize, u64)>,
+    delays: Vec<DelayRule>,
+    /// Virtual time (µs) a killed worker group spends restarting —
+    /// scheduler reallocation, process start, net rebuild — before the
+    /// checkpoint read is charged on top.
+    pub restart_latency_us: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan { kills: Vec::new(), delays: Vec::new(), restart_latency_us: 2_000_000.0 }
+    }
+}
+
+impl FaultPlan {
+    /// The perfect cluster: nothing ever fails.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty() && self.delays.is_empty()
+    }
+
+    /// Kill worker group `group` at the top of `step` (before the step's
+    /// batch is consumed). The group restarts from the latest checkpoint —
+    /// see the recovery rules in `coordinator::worker_group_loop`.
+    pub fn kill(mut self, group: usize, step: u64) -> FaultPlan {
+        self.kills.push((group, step));
+        self
+    }
+
+    /// Straggle: `group`'s step `step` takes `factor`× its healthy
+    /// per-worker compute time on the virtual clock.
+    pub fn delay(self, group: usize, step: u64, factor: f64) -> FaultPlan {
+        self.delay_range(group, step, step + 1, factor)
+    }
+
+    /// Straggle over a half-open step range `from..to`.
+    pub fn delay_range(mut self, group: usize, from: u64, to: u64, factor: f64) -> FaultPlan {
+        assert!(factor >= 1.0, "a delay factor below 1 would model a speedup");
+        self.delays.push(DelayRule { group, from, to, factor });
+        self
+    }
+
+    pub fn with_restart_latency_us(mut self, us: f64) -> FaultPlan {
+        self.restart_latency_us = us;
+        self
+    }
+
+    /// Does the plan kill `group` at the top of `step`?
+    pub fn kill_at(&self, group: usize, step: u64) -> bool {
+        self.kills.iter().any(|&(g, s)| g == group && s == step)
+    }
+
+    /// Compute-time multiplier for `(group, step)`: the worst matching
+    /// delay rule, or 1.0 when the step is healthy.
+    pub fn delay_factor(&self, group: usize, step: u64) -> f64 {
+        self.delays
+            .iter()
+            .filter(|r| r.group == group && (r.from..r.to).contains(&step))
+            .map(|r| r.factor)
+            .fold(1.0, f64::max)
+    }
+}
+
+/// One recovered kill, as reported in `JobReport::fault_events`: where the
+/// group died, where it resumed, which checkpoint (if any) it restored
+/// from, and what the recovery cost on its virtual clock.
+#[derive(Debug, Clone)]
+pub struct FaultRecord {
+    pub group: usize,
+    pub killed_at_step: u64,
+    pub resumed_at_step: u64,
+    /// `Some(step)` when the group restored a checkpoint taken after that
+    /// many completed steps; `None` for a cold restart (no checkpoint yet)
+    /// or a shared-server rejoin (live params survive the kill).
+    pub restored_from: Option<u64>,
+    /// Virtual-clock cost of the restart itself (latency + checkpoint
+    /// read), excluding the replayed steps.
+    pub recovery_virt_ms: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_benign() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        assert!(!p.kill_at(0, 0));
+        assert_eq!(p.delay_factor(0, 0), 1.0);
+    }
+
+    #[test]
+    fn kill_matches_only_its_group_and_step() {
+        let p = FaultPlan::none().kill(1, 7);
+        assert!(p.kill_at(1, 7));
+        assert!(!p.kill_at(0, 7));
+        assert!(!p.kill_at(1, 6));
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn delay_ranges_take_the_worst_matching_factor() {
+        let p = FaultPlan::none().delay_range(0, 5, 10, 2.0).delay(0, 7, 4.0).delay(1, 7, 8.0);
+        assert_eq!(p.delay_factor(0, 4), 1.0);
+        assert_eq!(p.delay_factor(0, 5), 2.0);
+        assert_eq!(p.delay_factor(0, 7), 4.0);
+        assert_eq!(p.delay_factor(0, 9), 2.0);
+        assert_eq!(p.delay_factor(0, 10), 1.0);
+        assert_eq!(p.delay_factor(1, 7), 8.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "speedup")]
+    fn sub_unit_delay_factor_rejected() {
+        let _ = FaultPlan::none().delay(0, 1, 0.5);
+    }
+}

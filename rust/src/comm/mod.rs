@@ -8,8 +8,10 @@
 //! every transfer is charged to a [`ByteLedger`] and, in virtual-time mode,
 //! advances a [`VirtualClock`] by the [`LinkModel`] cost.
 
+pub mod faults;
 pub mod msg;
 pub mod simnet;
 
+pub use faults::{FaultPlan, FaultRecord};
 pub use msg::Msg;
 pub use simnet::{ByteLedger, CostModel, LinkModel, LinkTimeline, VirtualClock};

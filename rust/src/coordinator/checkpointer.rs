@@ -1,0 +1,291 @@
+//! Asynchronous checkpointing of server-group params, off the hot path:
+//! worker group 0 requests a snapshot at its cadence boundary (one channel
+//! send — no Blob allocation, no serialization on the worker thread) and a
+//! background *checkpointer* thread snapshots server group 0's params,
+//! keeps the latest snapshot in memory as the recovery source, and — when
+//! a directory is configured — writes it durably through
+//! [`Checkpoint::write_to`] via a temp-file + rename (a crash mid-write
+//! never leaves a torn `.ckpt` behind).
+//!
+//! Recovery ([`Checkpointer::latest_blocking`]) waits until every requested
+//! snapshot has completed before returning the latest one, so a restart
+//! that follows a cadence boundary deterministically sees that boundary's
+//! state — the property the bit-identical restart test pins.
+
+use crate::model::checkpoint::Checkpoint;
+use crate::server::ServerGroup;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+/// Checkpoint cadence + durability knobs ([`super::JobConf::checkpoint`]).
+#[derive(Debug, Clone)]
+pub struct CheckpointConf {
+    /// Snapshot after every `every_steps` completed steps of worker group 0
+    /// (0 never snapshots — the checkpointer idles).
+    pub every_steps: u64,
+    /// When set, each snapshot is also written durably to
+    /// `<dir>/<job>.step<N>.ckpt` (temp-file + rename).
+    pub dir: Option<PathBuf>,
+}
+
+impl CheckpointConf {
+    pub fn every(steps: u64) -> CheckpointConf {
+        CheckpointConf { every_steps: steps, dir: None }
+    }
+
+    pub fn with_dir(mut self, dir: impl Into<PathBuf>) -> CheckpointConf {
+        self.dir = Some(dir.into());
+        self
+    }
+}
+
+struct State {
+    /// Snapshots requested by the worker plane (monotone).
+    requested: u64,
+    /// Snapshots captured in memory (export done, durable write possibly
+    /// still in flight). The requester waits on this — the export must
+    /// observe the exact cadence boundary, before later flushes mutate the
+    /// server — while the expensive serialization stays asynchronous.
+    exported: u64,
+    /// Snapshots fully completed, including the durable write when one is
+    /// configured (trails `exported`).
+    completed: u64,
+    /// The newest snapshot: (completed steps, params). `Arc` so recovery
+    /// can hold it without cloning tensor payloads under the lock.
+    latest: Option<Arc<(u64, Checkpoint)>>,
+    /// Durable-write failures (recorded, not fatal: the in-memory snapshot
+    /// still serves recovery; the job surfaces these at shutdown).
+    io_errors: Vec<String>,
+    /// Set when the writer thread exits — waiters must not block on
+    /// snapshots a dead writer will never complete.
+    writer_dead: bool,
+}
+
+/// Handle shared by the worker threads (request/recover) and `run_job`
+/// (shutdown). See the module docs for the protocol.
+pub struct Checkpointer {
+    state: Mutex<State>,
+    cv: Condvar,
+    tx: Mutex<Option<mpsc::Sender<u64>>>,
+    writer: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Checkpointer {
+    /// Start the background writer against `servers[0]` (the authoritative
+    /// replica in single-server-group topologies; group 0's replica under
+    /// hogwild).
+    pub fn spawn(
+        conf: CheckpointConf,
+        servers: Arc<Vec<ServerGroup>>,
+        job: &str,
+    ) -> Arc<Checkpointer> {
+        let (tx, rx) = mpsc::channel::<u64>();
+        let ck = Arc::new(Checkpointer {
+            state: Mutex::new(State {
+                requested: 0,
+                exported: 0,
+                completed: 0,
+                latest: None,
+                io_errors: Vec::new(),
+                writer_dead: false,
+            }),
+            cv: Condvar::new(),
+            tx: Mutex::new(Some(tx)),
+            writer: Mutex::new(None),
+        });
+        let me = ck.clone();
+        let job = job.to_string();
+        let handle = std::thread::Builder::new()
+            .name("checkpointer".into())
+            .spawn(move || {
+                // Mark the writer dead on every exit path (including a
+                // panic in `export_params`) so `latest_blocking` waiters
+                // wake instead of hanging on a snapshot that never lands.
+                struct ExitGuard(Arc<Checkpointer>);
+                impl Drop for ExitGuard {
+                    fn drop(&mut self) {
+                        let mut st = self.0.state.lock().unwrap();
+                        st.writer_dead = true;
+                        drop(st);
+                        self.0.cv.notify_all();
+                    }
+                }
+                let _mark_dead = ExitGuard(me.clone());
+                while let Ok(step) = rx.recv() {
+                    let snap = Arc::new((step, Checkpoint {
+                        tensors: servers[0].export_params(),
+                    }));
+                    // Publish the in-memory snapshot immediately: the
+                    // requester blocked on `wait_exported` resumes training
+                    // (and mutating the servers) as soon as the boundary is
+                    // captured, while the durable write proceeds below.
+                    {
+                        let mut st = me.state.lock().unwrap();
+                        st.latest = Some(snap.clone());
+                        st.exported += 1;
+                        drop(st);
+                        me.cv.notify_all();
+                    }
+                    let mut io_err = None;
+                    if let Some(dir) = &conf.dir {
+                        let tmp = dir.join(format!(".{job}.step{step}.ckpt.tmp"));
+                        let fin = dir.join(format!("{job}.step{step}.ckpt"));
+                        let write = || -> Result<(), String> {
+                            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+                            snap.1.save(&tmp).map_err(|e| e.to_string())?;
+                            std::fs::rename(&tmp, &fin).map_err(|e| e.to_string())?;
+                            Ok(())
+                        };
+                        if let Err(e) = write() {
+                            io_err = Some(format!("checkpoint step {step}: {e}"));
+                        }
+                    }
+                    let mut st = me.state.lock().unwrap();
+                    st.completed += 1;
+                    if let Some(e) = io_err {
+                        st.io_errors.push(e);
+                    }
+                    drop(st);
+                    me.cv.notify_all();
+                }
+            })
+            .expect("spawn checkpointer");
+        *ck.writer.lock().unwrap() = Some(handle);
+        ck
+    }
+
+    /// Request a snapshot of the state after `step` completed steps. One
+    /// channel send — the worker hot path never serializes or allocates.
+    pub fn request(&self, step: u64) {
+        let tx = self.tx.lock().unwrap();
+        if let Some(tx) = tx.as_ref() {
+            let mut st = self.state.lock().unwrap();
+            if tx.send(step).is_ok() {
+                st.requested += 1;
+            }
+        }
+    }
+
+    /// Block until every requested snapshot has been captured in memory.
+    /// Called by the requester right after [`Checkpointer::request`]: the
+    /// export is a memcpy on the writer thread (no worker-thread Blob
+    /// allocation), but it must land before the worker's next flush mutates
+    /// the servers or the snapshot would smear past its step boundary.
+    pub fn wait_exported(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.exported < st.requested && !st.writer_dead {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// The latest snapshot, after every requested one has completed (a
+    /// recovering group must not race the writer and restore a stale
+    /// boundary). `None` when nothing was ever requested.
+    pub fn latest_blocking(&self) -> Option<Arc<(u64, Checkpoint)>> {
+        let mut st = self.state.lock().unwrap();
+        while st.completed < st.requested && !st.writer_dead {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.latest.clone()
+    }
+
+    /// Snapshots completed so far.
+    pub fn completed(&self) -> u64 {
+        self.state.lock().unwrap().completed
+    }
+
+    /// Durable-write failures recorded so far.
+    pub fn io_errors(&self) -> Vec<String> {
+        self.state.lock().unwrap().io_errors.clone()
+    }
+
+    /// Retire the writer thread (any queued snapshots land first); returns
+    /// the total snapshots taken. Idempotent.
+    pub fn shutdown(&self) -> u64 {
+        *self.tx.lock().unwrap() = None;
+        if let Some(h) = self.writer.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        self.completed()
+    }
+}
+
+impl Drop for Checkpointer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ByteLedger;
+    use crate::tensor::Blob;
+    use crate::updater::UpdaterConf;
+
+    fn one_group() -> Arc<Vec<ServerGroup>> {
+        let g = ServerGroup::new(2, UpdaterConf::sgd(0.1), Arc::new(ByteLedger::new()));
+        g.put("w", Blob::full(&[6], 1.0), 1.0, 1.0);
+        g.put("b", Blob::full(&[2], -1.0), 1.0, 1.0);
+        Arc::new(vec![g])
+    }
+
+    #[test]
+    fn request_complete_latest_roundtrip() {
+        let servers = one_group();
+        let ck = Checkpointer::spawn(CheckpointConf::every(4), servers.clone(), "t");
+        assert!(ck.latest_blocking().is_none(), "nothing requested yet");
+        ck.request(4);
+        let snap = ck.latest_blocking().expect("snapshot lands");
+        assert_eq!(snap.0, 4);
+        assert_eq!(snap.1.tensors.len(), 2);
+        assert_eq!(snap.1.tensors["w"].data(), &[1.0; 6]);
+        // A later request observes the mutated server state.
+        servers[0].update("w", &Blob::full(&[6], 1.0), 0);
+        ck.request(8);
+        let snap = ck.latest_blocking().expect("second snapshot");
+        assert_eq!(snap.0, 8);
+        assert!(snap.1.tensors["w"].data()[0] < 1.0);
+        assert_eq!(ck.shutdown(), 2);
+        assert!(ck.io_errors().is_empty());
+    }
+
+    #[test]
+    fn durable_snapshots_land_as_loadable_files() {
+        let dir = std::env::temp_dir().join(format!("singa_ckpt_dir_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let servers = one_group();
+        let conf = CheckpointConf::every(2).with_dir(&dir);
+        let ck = Checkpointer::spawn(conf, servers, "job");
+        ck.request(2);
+        ck.request(4);
+        assert_eq!(ck.latest_blocking().unwrap().0, 4);
+        ck.shutdown();
+        for step in [2u64, 4] {
+            let path = dir.join(format!("job.step{step}.ckpt"));
+            let loaded = Checkpoint::load(&path)
+                .unwrap_or_else(|e| panic!("{} must load: {e}", path.display()));
+            assert_eq!(loaded.tensors.len(), 2);
+        }
+        // No temp files left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files must be renamed away");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Requests after shutdown are dropped, not panics; `latest_blocking`
+    /// never hangs on them.
+    #[test]
+    fn request_after_shutdown_is_ignored() {
+        let ck = Checkpointer::spawn(CheckpointConf::every(1), one_group(), "t");
+        ck.request(1);
+        ck.shutdown();
+        ck.request(2);
+        let snap = ck.latest_blocking().expect("first snapshot still served");
+        assert_eq!(snap.0, 1);
+    }
+}

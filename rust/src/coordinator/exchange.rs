@@ -59,6 +59,7 @@ fn comm_driver_loop(
     jobs: mpsc::Receiver<CommJob>,
     allocs: &AtomicU64,
     probe_from: Option<u64>,
+    base: u64,
 ) {
     while let Ok(job) = jobs.recv() {
         match job {
@@ -68,7 +69,7 @@ fn comm_driver_loop(
             CommJob::Flush { bucket, step } => {
                 let probed = probe_from.is_some_and(|from| step >= from);
                 let before = if probed { Blob::alloc_count() } else { 0 };
-                workspace::apply_flush(plan, store, sg, bucket, step);
+                workspace::apply_flush(plan, store, sg, bucket, step, base);
                 if probed {
                     allocs.fetch_add(Blob::alloc_count() - before, Ordering::Relaxed);
                 }
@@ -123,13 +124,20 @@ pub struct GroupExchange {
     /// Per-bucket countdown of contributing nodes for the current step.
     outstanding: Vec<usize>,
     step: u64,
+    /// First step this exchange will run (0 for a fresh job; the resume
+    /// step after a worker-group restart). Bucket epochs count relative to
+    /// it, so a restarted exchange's prefetch (epoch 1) satisfies its
+    /// first consumer exactly like step 0's did.
+    base: u64,
     step_start_virt_us: f64,
     sw: Stopwatch,
 }
 
 impl GroupExchange {
     /// Resolve the workspace for `net` and, in overlap mode, start the
-    /// comm driver against `servers[server_group]`.
+    /// comm driver against `servers[server_group]`. `start_step` is the
+    /// first step this exchange will run (non-zero when a worker group
+    /// restarts mid-job — see [`super::worker_group_loop`]).
     pub fn new(
         net: &NeuralNet,
         conf: &JobConf,
@@ -137,6 +145,7 @@ impl GroupExchange {
         server_group: usize,
         link: LinkModel,
         workers: usize,
+        start_step: u64,
     ) -> GroupExchange {
         let ws = ParamWorkspace::new(net, conf.bucket_coalesce_bytes);
         let outstanding = vec![0usize; ws.nbuckets()];
@@ -162,6 +171,7 @@ impl GroupExchange {
                         rx,
                         &allocs,
                         probe_from,
+                        start_step,
                     )
                 })
                 .expect("spawn comm driver");
@@ -180,7 +190,8 @@ impl GroupExchange {
             driver_dead,
             comm_allocs,
             outstanding,
-            step: 0,
+            step: start_step,
+            base: start_step,
             step_start_virt_us: 0.0,
             sw: Stopwatch::new(),
         }
@@ -220,16 +231,18 @@ impl GroupExchange {
     /// per-bucket on its epoch (the paper's per-param blocking — bottom
     /// buckets, needed first by the forward pass, are waited on first) and
     /// max-merging each bucket's virtual finish time into the clock.
-    /// Step 0 adopts the prefetched server state without a version bump
-    /// (the historical initial distribute); later steps bump versions like
-    /// the historical write-back.
+    /// The exchange's first step adopts the prefetched server state without
+    /// a version bump (the historical initial distribute); later steps bump
+    /// versions like the historical write-back.
     pub fn consume_fresh(&self, net: &mut NeuralNet, step: u64, clock: &mut VirtualClock) {
+        debug_assert!(step >= self.base, "consume_fresh before the exchange's start step");
+        let rel = step - self.base;
         let plan = self.ws.plan();
         let store = self.ws.store();
         let mut params = net.params_mut();
         for (spec, (mx, cv)) in plan.buckets.iter().zip(&store.bufs) {
             let mut buf = mx.lock().unwrap();
-            while buf.epoch < step + 1 {
+            while buf.epoch < rel + 1 {
                 assert!(
                     !self.driver_dead.load(Ordering::SeqCst),
                     "comm driver died before publishing a bucket epoch"
@@ -240,7 +253,7 @@ impl GroupExchange {
             for (i, &s) in spec.slots.iter().enumerate() {
                 for &j in &plan.slots[s].params {
                     let p = &mut params[j];
-                    if step == 0 {
+                    if rel == 0 {
                         assert_eq!(
                             buf.fresh[i].shape(),
                             p.data.shape(),
@@ -250,7 +263,7 @@ impl GroupExchange {
                         );
                     }
                     p.data.copy_from(&buf.fresh[i]);
-                    if step > 0 {
+                    if rel > 0 {
                         p.version += 1;
                     }
                 }
@@ -296,11 +309,17 @@ impl GroupExchange {
         let mut total = 0usize;
         for b in 0..plan.buckets.len() {
             self.ws.aggregate_bucket(net, b);
-            workspace::apply_flush(plan, store, sg, b, step);
+            workspace::apply_flush(plan, store, sg, b, step, self.base);
             store.bufs[b].0.lock().unwrap().finish_virt_us = clock.us;
             total += plan.buckets[b].flush_bytes;
         }
         clock.transfer(&self.link, total);
+    }
+
+    /// Wire bytes of one full-step gradient flush (all buckets) — what a
+    /// backup worker's discarded duplicate flush charges to the ledger.
+    pub fn step_flush_bytes(&self) -> usize {
+        self.ws.plan().buckets.iter().map(|b| b.flush_bytes).sum()
     }
 
     /// Block until every bucket's flush for `step` has been applied,
@@ -312,9 +331,11 @@ impl GroupExchange {
         if !self.overlap {
             return;
         }
+        debug_assert!(step >= self.base, "drain before the exchange's start step");
+        let rel = step - self.base;
         for (mx, cv) in &self.ws.store().bufs {
             let mut buf = mx.lock().unwrap();
-            while buf.epoch < step + 2 {
+            while buf.epoch < rel + 2 {
                 assert!(
                     !self.driver_dead.load(Ordering::SeqCst),
                     "comm driver died before publishing a bucket epoch"
@@ -475,7 +496,7 @@ mod tests {
         let mut exs: Vec<GroupExchange> = (0..groups)
             .map(|g| {
                 let link = *topo.param_link(&conf.cost);
-                GroupExchange::new(&nets[g], &conf, &servers, topo.server_group_of(g), link, 1)
+                GroupExchange::new(&nets[g], &conf, &servers, topo.server_group_of(g), link, 1, 0)
             })
             .collect();
         let mut algs: Vec<Bp> = (0..groups).map(|_| Bp::new()).collect();

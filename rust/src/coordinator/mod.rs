@@ -11,12 +11,13 @@
 //! [`CostModel`]) while training semantics are exact — see DESIGN.md
 //! §Hardware-Adaptation.
 
+pub mod checkpointer;
 pub mod copyqueue;
 pub mod exchange;
 pub mod workspace;
 
 use crate::cluster::ClusterTopology;
-use crate::comm::{ByteLedger, CostModel, VirtualClock};
+use crate::comm::{ByteLedger, CostModel, FaultPlan, FaultRecord, VirtualClock};
 use crate::data::DataSource;
 use crate::metrics::{Record, TrainingLog};
 use crate::model::partition::{logical_param_name, partition_net};
@@ -29,6 +30,8 @@ use crate::utils::rng::Rng;
 use crate::utils::timer::Stopwatch;
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
+use self::checkpointer::Checkpointer;
+pub use self::checkpointer::CheckpointConf;
 use self::exchange::GroupExchange;
 
 /// Which `TrainOneBatch` algorithm the job uses (paper §4.1.3).
@@ -93,6 +96,25 @@ pub struct JobConf {
     /// thread performs in steps `>= w` and reports the per-group totals in
     /// [`JobReport::steady_allocs`] — the distributed zero-alloc probe.
     pub alloc_probe_from: Option<u64>,
+    /// Deterministic fault-injection schedule on the simnet clock —
+    /// per-group kills and straggler delays ([`FaultPlan::none`] for the
+    /// perfect cluster). Kills are recovered, not fatal: the group restarts
+    /// from the latest checkpoint and resumes its shard stream.
+    pub faults: FaultPlan,
+    /// Periodic asynchronous checkpointing of server group 0's params —
+    /// the recovery source for worker-group restarts. Worker group 0
+    /// requests a snapshot every `every_steps` steps (one channel send; the
+    /// serialization happens on the background checkpointer thread, so
+    /// worker `steady_allocs` stays 0). `None` disables.
+    pub checkpoint: Option<CheckpointConf>,
+    /// Backup workers per group for straggler mitigation (sandblaster's
+    /// duplicate-flush-discard): with backups, a delayed step's compute
+    /// charge stays at the healthy per-worker time — the backup's copy of
+    /// the straggler's shard wins the race — while the duplicate flush is
+    /// charged to the wire and discarded. Training values are identical
+    /// with or without backups; only clock/ledger accounting and
+    /// [`JobReport::backup_rescues`] change. 0 disables.
+    pub backup_workers: usize,
 }
 
 impl JobConf {
@@ -113,6 +135,9 @@ impl JobConf {
             log_every: 1,
             warmup_iters: 0,
             alloc_probe_from: None,
+            faults: FaultPlan::none(),
+            checkpoint: None,
+            backup_workers: 0,
         }
     }
 }
@@ -182,6 +207,39 @@ pub struct JobReport {
     /// or after [`JobConf::alloc_probe_from`] (all zeros when the probe is
     /// off — the zero-clone parameter-plane claim).
     pub steady_allocs: Vec<u64>,
+    /// Per worker group: `Some(panic message)` when the group's thread
+    /// panicked (an *unscheduled* death — scheduled kills are recovered and
+    /// land in [`JobReport::fault_events`] instead). A failed group zeroes
+    /// its `group_virt_ms`/`steady_allocs` entries; healthy groups complete
+    /// normally — a dead group no longer tears the job down.
+    pub group_failures: Vec<Option<String>>,
+    /// Every recovered kill, across all groups: where each group died,
+    /// where it resumed, what recovery cost on its virtual clock.
+    pub fault_events: Vec<FaultRecord>,
+    /// Straggler steps hidden by backup workers (duplicate flush charged
+    /// and discarded), summed over groups.
+    pub backup_rescues: u64,
+    /// Asynchronous checkpoints taken by the background checkpointer.
+    pub checkpoints: u64,
+}
+
+/// What one worker-group thread hands back to `run_job`.
+struct GroupRun {
+    virt_ms: f64,
+    steady_allocs: u64,
+    faults: Vec<FaultRecord>,
+    backup_rescues: u64,
+}
+
+/// Render a worker thread's panic payload for [`JobReport::group_failures`].
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker group panicked".to_string()
+    }
 }
 
 /// Run a training job to completion.
@@ -228,6 +286,13 @@ pub fn run_job(conf: &JobConf, data: Arc<dyn DataSource>) -> JobReport {
         }
     }
 
+    // Asynchronous checkpoint plane: snapshots requested by worker group 0
+    // land on this background thread, off every worker's hot path.
+    let ckpt: Option<Arc<Checkpointer>> = conf
+        .checkpoint
+        .as_ref()
+        .map(|cc| Checkpointer::spawn(cc.clone(), servers.clone(), &conf.name));
+
     let log = Arc::new(TrainingLog::new());
     let job_sw = Stopwatch::new();
     // Warm-up gate: group 0 publishes its completed-step count; groups 1+
@@ -247,6 +312,7 @@ pub fn run_job(conf: &JobConf, data: Arc<dyn DataSource>) -> JobReport {
         let topo = topo.clone();
         let job_sw = job_sw.clone();
         let warmup_gate = warmup_gate.clone();
+        let ckpt = ckpt.clone();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("wg{g}"))
@@ -258,7 +324,7 @@ pub fn run_job(conf: &JobConf, data: Arc<dyn DataSource>) -> JobReport {
                     }
                     worker_group_loop(
                         g, &conf, group_builder, &topo, &servers, &*data, &log, &job_sw,
-                        &warmup_gate,
+                        &warmup_gate, ckpt.as_deref(),
                     )
                 })
                 .expect("spawn worker group"),
@@ -266,11 +332,41 @@ pub fn run_job(conf: &JobConf, data: Arc<dyn DataSource>) -> JobReport {
     }
     let mut group_virt_ms = Vec::with_capacity(handles.len());
     let mut steady_allocs = Vec::with_capacity(handles.len());
+    let mut group_failures = Vec::with_capacity(handles.len());
+    let mut fault_events = Vec::new();
+    let mut backup_rescues = 0u64;
     for h in handles {
-        let (virt_ms, allocs) = h.join().expect("worker group panicked");
-        group_virt_ms.push(virt_ms);
-        steady_allocs.push(allocs);
+        // A panicking group is a per-group failure, not a job abort: its
+        // message lands in the report and the healthy groups still join
+        // and deliver their results.
+        match h.join() {
+            Ok(run) => {
+                group_virt_ms.push(run.virt_ms);
+                steady_allocs.push(run.steady_allocs);
+                group_failures.push(None);
+                fault_events.extend(run.faults);
+                backup_rescues += run.backup_rescues;
+            }
+            Err(payload) => {
+                group_virt_ms.push(0.0);
+                steady_allocs.push(0);
+                group_failures.push(Some(panic_message(&*payload)));
+            }
+        }
     }
+    // Retire the checkpointer (queued snapshots land first). Durable-write
+    // failures are surfaced, never fatal — the in-memory snapshots already
+    // served any recovery.
+    let checkpoints = match &ckpt {
+        Some(c) => {
+            let n = c.shutdown();
+            for e in c.io_errors() {
+                eprintln!("[{}] checkpoint write failed: {e}", conf.name);
+            }
+            n
+        }
+        None => 0,
+    };
 
     // Collect final params from every server group (group 0's replica also
     // exposed as `params` for compatibility).
@@ -296,12 +392,24 @@ pub fn run_job(conf: &JobConf, data: Arc<dyn DataSource>) -> JobReport {
         params,
         group_params,
         steady_allocs,
+        group_failures,
+        fault_events,
+        backup_rescues,
+        checkpoints,
     }
 }
 
-/// Body of one worker-group thread. Returns the group's final virtual
-/// clock in ms plus the Blob allocations it performed in probed steps
-/// (see [`JobConf::alloc_probe_from`]).
+/// How one stint — an uninterrupted run of steps on one net/exchange —
+/// ended: all steps done, or a scheduled kill at the top of `step`.
+enum StintEnd {
+    Completed,
+    Killed { step: u64 },
+}
+
+/// Body of one worker-group thread: run stints until the step budget is
+/// exhausted, recovering from every scheduled kill in between (restart
+/// latency on the virtual clock, checkpoint restore or cold start for a
+/// sole-tenant server group, live rejoin for a shared one).
 #[allow(clippy::too_many_arguments)]
 fn worker_group_loop(
     g: usize,
@@ -313,8 +421,124 @@ fn worker_group_loop(
     log: &TrainingLog,
     job_sw: &Stopwatch,
     warmup_gate: &WarmupGate,
-) -> (f64, u64) {
-    let mut net = group_builder.build(&mut Rng::new(conf.seed));
+    ckpt: Option<&Checkpointer>,
+) -> GroupRun {
+    let sg_idx = topo.server_group_of(g);
+    let link = *topo.param_link(&conf.cost);
+    let sg = &servers[sg_idx];
+    let mut clock = VirtualClock::new();
+    // Reused input slots: `batch_into` refills the same blobs every step.
+    // Hoisted above the stint loop so replayed steps stay allocation-free.
+    let mut inputs: HashMap<String, Blob> = HashMap::new();
+    let mut steady_allocs = 0u64;
+    let mut backup_rescues = 0u64;
+    let mut faults: Vec<FaultRecord> = Vec::new();
+    // Kill steps already taken: a restarted stint that replays its kill
+    // step must not die twice on the same schedule entry.
+    let mut fired: Vec<u64> = Vec::new();
+    let mut start_step = 0u64;
+
+    loop {
+        let end = run_worker_stint(
+            g,
+            conf,
+            &group_builder,
+            topo,
+            servers,
+            data,
+            log,
+            job_sw,
+            warmup_gate,
+            ckpt,
+            start_step,
+            &mut clock,
+            &mut inputs,
+            &mut steady_allocs,
+            &mut backup_rescues,
+            &fired,
+        );
+        let step = match end {
+            StintEnd::Completed => break,
+            StintEnd::Killed { step } => step,
+        };
+        fired.push(step);
+        let before_ms = clock.ms();
+        // Process respawn + scheduler placement for the replacement group.
+        clock.advance(conf.faults.restart_latency_us);
+        // Sole tenant of its server group → only this (now dead) group
+        // advanced that state, so recovery rolls it back to the latest
+        // checkpoint (re-fetching it over the param link) and replays from
+        // that boundary — or cold-starts from the seed params when nothing
+        // was ever checkpointed. A shared server group (downpour) keeps the
+        // healthy groups' progress: the restarted group rejoins the live
+        // state at its kill step.
+        let sole_tenant =
+            topo.nworker_groups == 1 || topo.nserver_groups >= topo.nworker_groups;
+        let (resume, restored_from) = if sole_tenant {
+            match ckpt.and_then(|c| c.latest_blocking()) {
+                Some(snap) => {
+                    let (cstep, checkpoint) = &*snap;
+                    sg.restore_params(&checkpoint.tensors)
+                        .expect("checkpoint/server param planes diverged");
+                    clock.transfer(&link, checkpoint.byte_size());
+                    (*cstep, Some(*cstep))
+                }
+                None => {
+                    // Cold restart: re-seed the replica with the initial
+                    // params (same RNG stream as run_job's registration
+                    // probe) and replay the whole shard stream.
+                    let probe = group_builder.clone().build(&mut Rng::new(conf.seed));
+                    let mut seen = std::collections::HashSet::new();
+                    for p in probe.params() {
+                        let logical = logical_param_name(&p.name);
+                        if seen.insert(logical.clone()) {
+                            sg.put(&logical, p.data.clone(), p.lr_mult, p.wd_mult);
+                        }
+                    }
+                    (0, None)
+                }
+            }
+        } else {
+            (step, None)
+        };
+        faults.push(FaultRecord {
+            group: g,
+            killed_at_step: step,
+            resumed_at_step: resume,
+            restored_from,
+            recovery_virt_ms: clock.ms() - before_ms,
+        });
+        start_step = resume;
+    }
+    GroupRun { virt_ms: clock.ms(), steady_allocs, faults, backup_rescues }
+}
+
+/// One uninterrupted run of steps `[start_step, conf.iters)` on a freshly
+/// built net + exchange. Every return path retires the comm driver first
+/// (in-flight flushes land on the servers), so a kill arriving mid-flush
+/// can never deadlock the bucket condvars or leak the driver thread — the
+/// partially-flushed server state it leaves behind is exactly what a real
+/// mid-exchange crash leaves, and recovery owns making sense of it.
+#[allow(clippy::too_many_arguments)]
+fn run_worker_stint(
+    g: usize,
+    conf: &JobConf,
+    group_builder: &NetBuilder,
+    topo: &ClusterTopology,
+    servers: &Arc<Vec<ServerGroup>>,
+    data: &dyn DataSource,
+    log: &TrainingLog,
+    job_sw: &Stopwatch,
+    warmup_gate: &WarmupGate,
+    ckpt: Option<&Checkpointer>,
+    start_step: u64,
+    clock: &mut VirtualClock,
+    inputs: &mut HashMap<String, Blob>,
+    steady_allocs: &mut u64,
+    backup_rescues: &mut u64,
+    fired: &[u64],
+) -> StintEnd {
+    let mut net = group_builder.clone().build(&mut Rng::new(conf.seed));
     let sg_idx = topo.server_group_of(g);
     let link = *topo.param_link(&conf.cost);
     let k = topo.nworkers_per_group.max(1);
@@ -322,39 +546,57 @@ fn worker_group_loop(
     // sum/fresh buffers resolved once — plus (overlap mode) the comm
     // driver thread that drains flushed buckets while backward continues.
     // The steady-state loop below performs zero Blob allocations.
-    let mut ex = GroupExchange::new(&net, conf, servers, sg_idx, link, k);
+    let mut ex = GroupExchange::new(&net, conf, servers, sg_idx, link, k, start_step);
     let mut alg = conf.algorithm.instantiate();
     let sg = &servers[sg_idx];
-    let mut clock = VirtualClock::new();
-    // Reused input slots: `batch_into` refills the same blobs every step.
-    let mut inputs: HashMap<String, Blob> = HashMap::new();
-    let mut steady_allocs = 0u64;
     let warmup_target = conf.warmup_iters.min(conf.iters);
+    // Wire cost of one full gradient flush — what a backup worker's
+    // duplicate flush charges when it outruns a straggler.
+    let duplicate_flush_bytes = ex.step_flush_bytes();
 
     // Initial fetch: overlap mode prefetches the first forward's buckets
     // through the comm channel; sequential mode fetches inline.
-    ex.prefetch(sg, &mut clock);
+    ex.prefetch(sg, clock);
 
-    for step in 0..conf.iters {
+    for step in start_step..conf.iters {
+        // Scheduled kill: die at the top of the step, before any work.
+        if conf.faults.kill_at(g, step) && !fired.contains(&step) {
+            ex.shutdown();
+            *steady_allocs += ex.comm_steady_allocs();
+            return StintEnd::Killed { step };
+        }
         let allocs_before = Blob::alloc_count();
         let batch_index = crate::data::shard_index(step, g, topo.nworker_groups);
-        data.batch_into(batch_index, conf.batch_size, &mut inputs);
+        data.batch_into(batch_index, conf.batch_size, inputs);
 
         // Adopt this step's fresh parameter values bucket by bucket — each
         // bucket blocks only on its own ready epoch, not on the whole
         // exchange, and merges its transfer's virtual finish time.
-        ex.consume_fresh(&mut net, step, &mut clock);
+        ex.consume_fresh(&mut net, step, clock);
 
         net.zero_grads();
         ex.begin_step(step, clock.us);
         // Overlap mode: the exchange observer flushes each gradient bucket
         // the moment its last layer's ComputeGradient finishes, while the
         // backward pass continues on the layers below.
-        let stats = alg.train_one_batch_observed(&mut net, &inputs, &mut ex);
+        let stats = alg.train_one_batch_observed(&mut net, inputs, &mut ex);
         let compute_us = ex.step_elapsed_us();
         // Within-group workers split the compute ideally on the virtual
-        // clock; bridge traffic is charged on the feature plane.
-        clock.advance(compute_us / k as f64);
+        // clock. A scheduled straggler stretches the step by the delay
+        // factor — unless backup workers absorb it: the backup's copy of
+        // the slow shard wins the race at the healthy per-worker time, and
+        // its duplicate flush is charged to the wire and discarded
+        // (sandblaster's duplicate-update discard; values are identical
+        // either way, only clock/ledger accounting moves).
+        let per_worker_us = compute_us / k as f64;
+        let delay = conf.faults.delay_factor(g, step);
+        if delay > 1.0 && conf.backup_workers > 0 {
+            *backup_rescues += 1;
+            sg.ledger.add_param(duplicate_flush_bytes);
+            clock.advance(per_worker_us);
+        } else {
+            clock.advance(per_worker_us * delay);
+        }
         let bridge_bytes = net.bridge_bytes();
         if bridge_bytes > 0 {
             sg.ledger.add_feature(bridge_bytes);
@@ -363,7 +605,7 @@ fn worker_group_loop(
 
         // Sequential mode: the whole aggregate → update → receive exchange
         // happens here, blocking (the historical PR 4 recipe, bit for bit).
-        ex.flush_sequential(&net, sg, step, &mut clock);
+        ex.flush_sequential(&net, sg, step, clock);
 
         // Distributed Hogwild: neighbour server-group sync. In-flight
         // flushes must land first — averaging a half-flushed replica would
@@ -375,7 +617,7 @@ fn worker_group_loop(
         {
             let neighbour = (sg_idx + 1) % servers.len();
             if neighbour != sg_idx {
-                ex.drain(step, &mut clock);
+                ex.drain(step, clock);
                 let bytes = sg.sync_with(&servers[neighbour]);
                 clock.transfer(&conf.cost.network, bytes);
             }
@@ -385,13 +627,26 @@ fn worker_group_loop(
             if conf.warmup_iters > 0 && step + 1 == warmup_target {
                 // Groups released from warm-up must see the fully warmed
                 // server state, not a half-flushed one.
-                ex.drain(step, &mut clock);
+                ex.drain(step, clock);
             }
             warmup_gate.advance(step + 1);
+            // Checkpoint cadence: drain in-flight flushes so the snapshot
+            // sees a full-step boundary, hand off to the background
+            // checkpointer (one channel send), and wait only for the
+            // in-memory export — serialization and the durable write stay
+            // off this thread, and the export clones on the checkpointer
+            // thread, so this group's Blob alloc tally stays untouched.
+            if let (Some(ck), Some(cc)) = (ckpt, conf.checkpoint.as_ref()) {
+                if cc.every_steps > 0 && (step + 1) % cc.every_steps == 0 {
+                    ex.drain(step, clock);
+                    ck.request(step + 1);
+                    ck.wait_exported();
+                }
+            }
         }
         if let Some(from) = conf.alloc_probe_from {
             if step >= from {
-                steady_allocs += Blob::alloc_count() - allocs_before;
+                *steady_allocs += Blob::alloc_count() - allocs_before;
             }
         }
         let final_step = step + 1 == conf.iters;
@@ -409,12 +664,12 @@ fn worker_group_loop(
     // Wait out the final step's flushes (merging their virtual finish
     // times into the group clock) and retire the comm driver; its
     // post-warm-up Blob allocations count against this group's tally.
-    if conf.iters > 0 {
-        ex.drain(conf.iters - 1, &mut clock);
+    if conf.iters > start_step {
+        ex.drain(conf.iters - 1, clock);
     }
     ex.shutdown();
-    steady_allocs += ex.comm_steady_allocs();
-    (clock.ms(), steady_allocs)
+    *steady_allocs += ex.comm_steady_allocs();
+    StintEnd::Completed
 }
 
 #[cfg(test)]

@@ -62,9 +62,11 @@ pub struct BucketSpec {
 pub struct BucketBuf {
     pub sums: Vec<Blob>,
     pub fresh: Vec<Blob>,
-    /// Completed exchanges: the initial prefetch publishes epoch 1, the
-    /// flush of step `s` publishes `s + 2`. A consumer of step `s` waits
-    /// for `epoch >= s + 1`.
+    /// Completed exchanges, counted relative to the exchange's start step
+    /// `b` (0 for a fresh job; the resume step after a worker-group
+    /// restart): the initial prefetch publishes epoch 1, the flush of step
+    /// `s` publishes `s - b + 2`. A consumer of step `s` waits for
+    /// `epoch >= s - b + 1`.
     pub epoch: u64,
     /// Absolute virtual time (µs) at which the exchange that produced
     /// `epoch` finished on the modeled link (what the consumer's clock
@@ -112,16 +114,18 @@ pub fn fill_fresh(plan: &ExchangePlan, store: &BucketStore, sg: &ServerGroup, b:
 
 /// THE flush recipe for one bucket — push its aggregated sums through the
 /// server's updater (slot order, the historical per-slot application),
-/// receive fresh values, and publish epoch `step + 2`. The single
-/// definition shared by the comm driver and the sequential exchange: the
-/// bit-identity contract between the two modes reduces to "same
-/// aggregation + same `apply_flush`".
+/// receive fresh values, and publish epoch `step - base + 2` (`base` is
+/// the exchange's start step; the server sees the absolute `step`). The
+/// single definition shared by the comm driver and the sequential
+/// exchange: the bit-identity contract between the two modes reduces to
+/// "same aggregation + same `apply_flush`".
 pub fn apply_flush(
     plan: &ExchangePlan,
     store: &BucketStore,
     sg: &ServerGroup,
     b: usize,
     step: u64,
+    base: u64,
 ) {
     let (mx, cv) = &store.bufs[b];
     let mut buf = mx.lock().unwrap();
@@ -129,7 +133,7 @@ pub fn apply_flush(
     for (i, &s) in plan.buckets[b].slots.iter().enumerate() {
         sg.update_into(&plan.slots[s].logical, &sums[i], step, &mut fresh[i]);
     }
-    *epoch = step + 2;
+    *epoch = step - base + 2;
     cv.notify_all();
 }
 

@@ -19,6 +19,13 @@ use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"SNGA";
 const VERSION: u32 = 1;
+/// Header-field sanity bounds: a checkpoint claiming more params or more
+/// elements per tensor than these is rejected before any payload work.
+const MAX_PARAMS: usize = 1 << 20;
+const MAX_ELEMS: usize = 1 << 30;
+/// Payload read granularity (elements): preallocation per `reserve` call
+/// is bounded by this, so memory tracks delivered bytes, not the header.
+const READ_CHUNK_ELEMS: usize = 1 << 16;
 
 /// A named set of tensors (what gets saved/restored).
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -40,23 +47,36 @@ impl Checkpoint {
         c
     }
 
-    /// Restore into a net: every param whose name matches (and whose shape
-    /// agrees) is overwritten. Returns the number restored.
-    pub fn restore(&self, net: &mut crate::model::NeuralNet) -> usize {
+    /// Restore into a net: every param whose name matches is overwritten
+    /// **in place** (`Blob::copy_from` into the existing buffer — zero Blob
+    /// allocations when shapes agree). A shape mismatch aborts with an
+    /// error naming the offending param; params matched before the mismatch
+    /// keep their restored values (the net walk is in `params_mut` order).
+    /// Returns the number restored.
+    pub fn try_restore(&self, net: &mut crate::model::NeuralNet) -> Result<usize> {
         let mut n = 0;
         for p in net.params_mut() {
             if let Some(v) = self.tensors.get(&p.name) {
-                assert_eq!(
-                    v.shape(),
-                    p.data.shape(),
-                    "checkpoint shape mismatch for {}",
-                    p.name
-                );
-                p.data = v.clone();
+                if v.shape() != p.data.shape() {
+                    return Err(anyhow!(
+                        "checkpoint shape mismatch for '{}': checkpoint {:?} vs net {:?}",
+                        p.name,
+                        v.shape(),
+                        p.data.shape()
+                    ));
+                }
+                p.data.copy_from(v);
                 n += 1;
             }
         }
-        n
+        Ok(n)
+    }
+
+    /// Thin panicking wrapper over [`Checkpoint::try_restore`] for callers
+    /// restoring a checkpoint they produced themselves (a mismatch is a
+    /// bug, not an input error).
+    pub fn restore(&self, net: &mut crate::model::NeuralNet) -> usize {
+        self.try_restore(net).expect("checkpoint restore failed")
     }
 
     /// Serialize to a writer.
@@ -94,7 +114,12 @@ impl Checkpoint {
             return Err(anyhow!("unsupported checkpoint version {version}"));
         }
         let count = read_u32(r)? as usize;
-        let mut tensors = HashMap::with_capacity(count);
+        if count > MAX_PARAMS {
+            return Err(anyhow!("implausible param count {count}"));
+        }
+        // Capacity follows delivered entries, not the untrusted header: a
+        // lying `count` costs an error partway through, never a huge map.
+        let mut tensors = HashMap::new();
         for _ in 0..count {
             let name_len = read_u32(r)? as usize;
             if name_len > 4096 {
@@ -111,17 +136,37 @@ impl Checkpoint {
             for _ in 0..ndims {
                 let mut b = [0u8; 8];
                 r.read_exact(&mut b)?;
-                shape.push(u64::from_le_bytes(b) as usize);
+                let d = u64::from_le_bytes(b);
+                shape.push(
+                    usize::try_from(d).map_err(|_| anyhow!("tensor dim {d} overflows usize"))?,
+                );
             }
-            let n: usize = shape.iter().product();
-            if n > 1 << 30 {
+            // `iter().product()` wraps silently in release builds, letting
+            // a crafted shape slip past the size guard — multiply checked.
+            let mut n = 1usize;
+            for &d in &shape {
+                n = n
+                    .checked_mul(d)
+                    .ok_or_else(|| anyhow!("tensor element count overflows (shape {shape:?})"))?;
+            }
+            if n > MAX_ELEMS {
                 return Err(anyhow!("implausible tensor size {n}"));
             }
-            let mut data = Vec::with_capacity(n);
+            // Grow the payload buffer chunk by chunk so preallocation is
+            // capped by what the reader has actually produced (plus one
+            // chunk) — a huge claimed `n` over a truncated stream errors
+            // out after at most 256 KiB, never a multi-GiB reserve.
+            let mut data: Vec<f32> = Vec::new();
             let mut buf = [0u8; 4];
-            for _ in 0..n {
-                r.read_exact(&mut buf)?;
-                data.push(f32::from_le_bytes(buf));
+            let mut remaining = n;
+            while remaining > 0 {
+                let chunk = remaining.min(READ_CHUNK_ELEMS);
+                data.reserve(chunk);
+                for _ in 0..chunk {
+                    r.read_exact(&mut buf)?;
+                    data.push(f32::from_le_bytes(buf));
+                }
+                remaining -= chunk;
             }
             tensors.insert(name, Blob::from_vec(&shape, data));
         }
@@ -230,6 +275,133 @@ mod tests {
         c.write_to(&mut buf).unwrap();
         buf.truncate(buf.len() - 7);
         assert!(Checkpoint::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    /// Build a syntactically valid header by hand (magic, version, count,
+    /// then caller-supplied entry bytes) — the corrupt-input fuzz corpus.
+    fn header(count: u32, entries: &[u8]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&count.to_le_bytes());
+        buf.extend_from_slice(entries);
+        buf
+    }
+
+    /// One tensor entry's header bytes: name, rank, dims — no payload.
+    fn entry(name: &str, dims: &[u64]) -> Vec<u8> {
+        let mut e = Vec::new();
+        e.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        e.extend_from_slice(name.as_bytes());
+        e.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+        for &d in dims {
+            e.extend_from_slice(&d.to_le_bytes());
+        }
+        e
+    }
+
+    /// A header claiming ~4 billion params must be rejected up front —
+    /// never trusted into a `with_capacity` or a 4-billion-entry loop.
+    #[test]
+    fn rejects_huge_param_count() {
+        let buf = header(u32::MAX, &[]);
+        let err = Checkpoint::read_from(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("param count"), "{err}");
+    }
+
+    /// Dims whose product wraps around usize (2^33 × 2^33 ≡ 4 mod 2^64)
+    /// used to slip past the `n > 1 << 30` guard in release builds and
+    /// read garbage as a tiny tensor; checked multiplication rejects it.
+    #[test]
+    fn rejects_product_wrapping_shape() {
+        let buf = header(1, &entry("w", &[1 << 33, 1 << 33]));
+        let err = Checkpoint::read_from(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("overflows"), "{err}");
+    }
+
+    /// A single dim beyond usize (on any platform, u64::MAX) is rejected
+    /// at conversion, before any multiplication.
+    #[test]
+    fn rejects_dim_overflowing_usize() {
+        let buf = header(1, &entry("w", &[u64::MAX, 2]));
+        let err = Checkpoint::read_from(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("overflows"), "{err}");
+    }
+
+    /// In-range product above the element cap is still implausible.
+    #[test]
+    fn rejects_oversized_tensor_claim() {
+        let buf = header(1, &entry("w", &[(1 << 30) + 1]));
+        let err = Checkpoint::read_from(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("implausible tensor size"), "{err}");
+    }
+
+    /// A plausible-sized claim (256 MiB of f32s) backed by 8 bytes of
+    /// payload must fail on the truncated read — quickly, with memory
+    /// bounded by the delivered bytes plus one read chunk, not by the
+    /// claimed size (the old code reserved the full claim up front).
+    #[test]
+    fn truncated_payload_with_large_claim_errors_cheaply() {
+        let mut buf = header(1, &entry("w", &[1 << 26]));
+        buf.extend_from_slice(&[0u8; 8]); // 2 of the claimed 2^26 floats
+        assert!(Checkpoint::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    /// Shape-mismatched restore is an error naming the offending param —
+    /// not a panic (the recovery path feeds untrusted files through this).
+    #[test]
+    fn try_restore_shape_mismatch_names_param() {
+        let net = small_net();
+        let mut c = Checkpoint::from_net(&net);
+        c.tensors.insert("fc/weight".to_string(), Blob::zeros(&[7, 7]));
+        let mut fresh = small_net();
+        let err = c.try_restore(&mut fresh).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("fc/weight"), "error must name the param: {msg}");
+        assert!(msg.contains("shape mismatch"), "{msg}");
+    }
+
+    /// The thin `restore` wrapper keeps the historical panicking contract.
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn restore_wrapper_panics_on_shape_mismatch() {
+        let net = small_net();
+        let mut c = Checkpoint::from_net(&net);
+        c.tensors.insert("fc/weight".to_string(), Blob::zeros(&[7, 7]));
+        c.restore(&mut small_net());
+    }
+
+    /// `try_restore` matches by name: a checkpoint missing a param restores
+    /// the rest and reports the count.
+    #[test]
+    fn try_restore_partial_by_name() {
+        let net = small_net();
+        let mut c = Checkpoint::from_net(&net);
+        c.tensors.remove("fc/bias");
+        let mut fresh = NetBuilder::new()
+            .add(LayerConf::new("data", LayerKind::Input { shape: vec![2, 4] }, &[]))
+            .add(LayerConf::new(
+                "fc",
+                LayerKind::InnerProduct { out: 3, act: Activation::Tanh, init_std: 0.2 },
+                &["data"],
+            ))
+            .build(&mut Rng::new(99));
+        assert_eq!(c.try_restore(&mut fresh).unwrap(), 1);
+        let want = net.params().iter().find(|p| p.name == "fc/weight").unwrap().data.clone();
+        let got = fresh.params().iter().find(|p| p.name == "fc/weight").unwrap().data.clone();
+        assert_eq!(want, got);
+    }
+
+    /// Restoring into an identically-shaped net copies in place: zero Blob
+    /// allocations (the old `p.data = v.clone()` allocated per param).
+    #[test]
+    fn restore_in_place_is_allocation_free() {
+        let net = small_net();
+        let c = Checkpoint::from_net(&net);
+        let mut fresh = small_net();
+        let before = Blob::alloc_count();
+        assert_eq!(c.try_restore(&mut fresh).unwrap(), 2);
+        assert_eq!(Blob::alloc_count(), before, "in-place restore must not allocate");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 use crate::comm::{ByteLedger, Msg};
 use crate::tensor::Blob;
 use crate::updater::{Updater, UpdaterConf};
+use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -288,6 +289,49 @@ impl ServerGroup {
         bytes
     }
 
+    /// Snapshot every registered parameter's current value (name → clone) —
+    /// the checkpointer thread's read path. Reads the shards directly (one
+    /// lock at a time) instead of going through `get`, so snapshot traffic
+    /// never pollutes the worker ledger's param-byte accounting.
+    pub fn export_params(&self) -> HashMap<String, Blob> {
+        let names = self.param_names();
+        let mut out = HashMap::with_capacity(names.len());
+        for name in names {
+            let shard = self.shard_of(&name);
+            let guard = self.shards[shard].lock().unwrap();
+            let (v, _) = guard.value(&name).expect("routed param present in shard");
+            out.insert(name, v.clone());
+        }
+        out
+    }
+
+    /// Overwrite registered parameters in place from a checkpoint snapshot
+    /// (worker-group recovery): values are copied into the existing server
+    /// buffers (no Blob allocation) and versions bumped. Params absent from
+    /// `tensors` are left untouched; a shape mismatch aborts with an error
+    /// naming the param. Returns the number restored.
+    pub fn restore_params(&self, tensors: &HashMap<String, Blob>) -> Result<usize> {
+        let mut n = 0;
+        for name in self.param_names() {
+            if let Some(v) = tensors.get(&name) {
+                let shard = self.shard_of(&name);
+                let mut guard = self.shards[shard].lock().unwrap();
+                let e = guard.params.get_mut(&name).expect("routed param present in shard");
+                if e.value.shape() != v.shape() {
+                    return Err(anyhow!(
+                        "checkpoint/server shape mismatch for '{name}': checkpoint {:?} vs server {:?}",
+                        v.shape(),
+                        e.value.shape()
+                    ));
+                }
+                e.value.copy_from(v);
+                e.version += 1;
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
     /// Registered-byte tally per shard from the route table (the running
     /// counterpart of the [`ServerGroup::shard_loads`] walk).
     pub fn registered_shard_bytes(&self) -> Vec<usize> {
@@ -478,6 +522,52 @@ mod tests {
             g.registered_shard_bytes().iter().sum::<usize>(),
             (0..10).map(|i| if i == 3 { 500 * 4 } else { (50 + i * 30) * 4 }).sum::<usize>()
         );
+    }
+
+    /// Snapshot/restore round trip across a sharded group: values survive,
+    /// versions bump, the ledger never sees checkpoint traffic, and the
+    /// restore copies into existing server buffers without allocating.
+    #[test]
+    fn export_restore_roundtrip_bypasses_ledger() {
+        let ledger = Arc::new(ByteLedger::new());
+        let g = ServerGroup::new(3, UpdaterConf::sgd(0.1), ledger.clone());
+        for i in 0..5 {
+            g.put(&format!("p{i}"), Blob::full(&[8 + i], i as f32), 1.0, 1.0);
+        }
+        let before_bytes = ledger.param_bytes();
+        let snap = g.export_params();
+        assert_eq!(snap.len(), 5);
+        // Perturb, then restore the snapshot.
+        for i in 0..5 {
+            g.update(&format!("p{i}"), &Blob::full(&[8 + i], 1.0), 0);
+        }
+        let after_updates = ledger.param_bytes();
+        let before_allocs = Blob::alloc_count();
+        assert_eq!(g.restore_params(&snap).unwrap(), 5);
+        assert_eq!(Blob::alloc_count(), before_allocs, "restore must copy in place");
+        assert_eq!(ledger.param_bytes(), after_updates, "snapshot/restore must not hit the ledger");
+        assert!(after_updates > before_bytes, "real updates do hit the ledger");
+        for i in 0..5 {
+            let (v, ver) = g.get(&format!("p{i}"));
+            assert!(v.data().iter().all(|&x| x == i as f32), "p{i} not restored");
+            assert!(ver >= 2, "restore must bump the version");
+        }
+    }
+
+    /// A snapshot with a mismatched shape is an error naming the param;
+    /// missing params are skipped, not errors.
+    #[test]
+    fn restore_params_shape_mismatch_errors() {
+        let g = group(2);
+        g.put("w", Blob::zeros(&[4]), 1.0, 1.0);
+        g.put("b", Blob::zeros(&[2]), 1.0, 1.0);
+        let mut snap = HashMap::new();
+        snap.insert("w".to_string(), Blob::zeros(&[5]));
+        let err = g.restore_params(&snap).unwrap_err();
+        assert!(err.to_string().contains("'w'"), "{err}");
+        snap.insert("w".to_string(), Blob::full(&[4], 9.0));
+        assert_eq!(g.restore_params(&snap).unwrap(), 1); // "b" untouched, skipped
+        assert_eq!(g.get("w").0.data(), &[9.0; 4]);
     }
 
     /// Concurrent opposing neighbour syncs must neither deadlock nor tear:

@@ -1,0 +1,358 @@
+//! Fault-tolerance acceptance suite: deterministic kills, checkpoint
+//! restarts, straggler/backup accounting, and panic isolation, all on the
+//! simnet clock. The key pins:
+//!
+//! - a downpour group killed mid-run rejoins the live servers and the job
+//!   still converges to the fault-free band;
+//! - a sole-tenant group killed after a checkpoint boundary restores that
+//!   boundary and replays to a final state bit-identical to an
+//!   uninterrupted run (and cold-restarts bit-identically when nothing was
+//!   ever checkpointed);
+//! - backup workers hide scheduled stragglers from the virtual clock while
+//!   training values stay bitwise unchanged (duplicate-flush-discard);
+//! - a worker panic is a per-group failure in the report, not a job abort;
+//! - checkpointing keeps the distributed steady state allocation-free.
+//!
+//! CI runs this suite under `PALLAS_NUM_THREADS=1` and `=4`.
+
+use singa::cluster::ClusterTopology;
+use singa::comm::FaultPlan;
+use singa::coordinator::{run_job, CheckpointConf, JobConf, JobReport};
+use singa::data::{DataSource, SyntheticDigits};
+use singa::model::checkpoint::Checkpoint;
+use singa::model::layer::{Activation, LayerConf, LayerKind};
+use singa::model::NetBuilder;
+use singa::tensor::Blob;
+use singa::updater::UpdaterConf;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+fn mlp(batch: usize, dim: usize, hidden: usize, classes: usize) -> NetBuilder {
+    NetBuilder::new()
+        .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, dim] }, &[]))
+        .add(LayerConf::new("label", LayerKind::Input { shape: vec![batch] }, &[]))
+        .add(LayerConf::new(
+            "h1",
+            LayerKind::InnerProduct { out: hidden, act: Activation::Relu, init_std: 0.1 },
+            &["data"],
+        ))
+        .add(LayerConf::new(
+            "logits",
+            LayerKind::InnerProduct { out: classes, act: Activation::Identity, init_std: 0.1 },
+            &["h1"],
+        ))
+        .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]))
+}
+
+fn digits() -> Arc<dyn DataSource> {
+    Arc::new(SyntheticDigits::new(64, 5, 77))
+}
+
+/// The last logged (loss, metric) bits per step for one group. A recovered
+/// run logs a killed step range twice — once before the kill, once on
+/// replay — and the replay is the trajectory that must match the
+/// uninterrupted run, so comparisons take the LAST record per step.
+fn last_per_step(report: &JobReport, group: usize) -> BTreeMap<u64, (u32, u32)> {
+    let mut m = BTreeMap::new();
+    for r in report.log.snapshot() {
+        if r.group == group {
+            m.insert(r.step, (r.loss.to_bits(), r.metric.to_bits()));
+        }
+    }
+    m
+}
+
+fn assert_params_bitwise_equal(a: &HashMap<String, Blob>, b: &HashMap<String, Blob>) {
+    assert_eq!(a.len(), b.len(), "param count");
+    for (name, va) in a {
+        let vb = b.get(name).unwrap_or_else(|| panic!("missing param {name}"));
+        assert_eq!(va.shape(), vb.shape(), "{name}");
+        for (x, y) in va.data().iter().zip(vb.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "param {name} diverged");
+        }
+    }
+}
+
+fn healthy(report: &JobReport) {
+    for (g, f) in report.group_failures.iter().enumerate() {
+        assert!(f.is_none(), "group {g} failed: {f:?}");
+    }
+}
+
+/// Downpour(3,1,2): group 1 dies mid-run. Its server group is shared, so
+/// the healthy groups' progress survives and the restarted group rejoins
+/// the live state at its kill step — and the job still converges to the
+/// fault-free loss band.
+#[test]
+fn downpour_midrun_kill_converges_to_fault_free_band() {
+    let run = |faults: FaultPlan| {
+        let mut conf = JobConf::new("fault-downpour", mlp(16, 64, 32, 5));
+        conf.iters = 80;
+        conf.updater = UpdaterConf::sgd(0.1);
+        conf.topology = ClusterTopology::downpour(3, 1, 2);
+        conf.faults = faults;
+        run_job(&conf, digits())
+    };
+    let free = run(FaultPlan::none());
+    let faulted = run(FaultPlan::none().kill(1, 25).with_restart_latency_us(500_000.0));
+    healthy(&free);
+    healthy(&faulted);
+
+    assert!(free.fault_events.is_empty());
+    assert_eq!(faulted.fault_events.len(), 1, "exactly one recovered kill");
+    let ev = &faulted.fault_events[0];
+    assert_eq!(ev.group, 1);
+    assert_eq!(ev.killed_at_step, 25);
+    assert_eq!(ev.resumed_at_step, 25, "shared servers → live rejoin at the kill step");
+    assert_eq!(ev.restored_from, None, "live rejoin restores no checkpoint");
+    assert!(ev.recovery_virt_ms >= 500.0, "restart latency on the clock: {}", ev.recovery_virt_ms);
+
+    // The killed group completes every step exactly once (rejoin replays
+    // nothing), and recovery shows up on its virtual clock.
+    let steps: Vec<u64> = last_per_step(&faulted, 1).keys().copied().collect();
+    assert_eq!(steps, (0..80).collect::<Vec<_>>(), "group 1 completes its shard stream");
+    assert!(
+        faulted.group_virt_ms[1] > free.group_virt_ms[1],
+        "recovery must cost virtual time: {} vs {}",
+        faulted.group_virt_ms[1],
+        free.group_virt_ms[1]
+    );
+
+    // Fault-free band: async interleaving is nondeterministic, so compare
+    // converged quality, not trajectories.
+    let final_metric = |r: &JobReport| {
+        (0..3)
+            .map(|g| f32::from_bits(last_per_step(r, g).values().last().unwrap().1))
+            .fold(0.0f32, f32::max)
+    };
+    let (mf, mk) = (final_metric(&free), final_metric(&faulted));
+    assert!(mf > 0.7, "fault-free run must converge: {mf}");
+    assert!(mk > 0.7, "killed run must converge: {mk}");
+    assert!((mf - mk).abs() < 0.25, "kill left the loss band: {mf} vs {mk}");
+}
+
+/// Sandblaster(1,1) with checkpointing every 8 steps, killed at step 20:
+/// recovery restores the step-16 boundary and replays 16..28. The replayed
+/// trajectory and the final params must be bit-identical to an
+/// uninterrupted run, the durable `.ckpt` files must land and load, and
+/// the fault record must name the restored boundary.
+#[test]
+fn restart_from_checkpoint_is_bitwise_identical() {
+    let dir = std::env::temp_dir().join(format!("singa_faults_restart_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut conf = JobConf::new("fault-restart", mlp(16, 64, 32, 5));
+    conf.iters = 28;
+    conf.updater = UpdaterConf::sgd(0.2);
+
+    let baseline = run_job(&conf, digits());
+
+    conf.checkpoint = Some(CheckpointConf::every(8).with_dir(&dir));
+    conf.faults = FaultPlan::none().kill(0, 20).with_restart_latency_us(500_000.0);
+    let recovered = run_job(&conf, digits());
+    healthy(&baseline);
+    healthy(&recovered);
+
+    assert_eq!(recovered.fault_events.len(), 1);
+    let ev = &recovered.fault_events[0];
+    assert_eq!(ev.killed_at_step, 20);
+    assert_eq!(ev.resumed_at_step, 16, "latest boundary before the kill");
+    assert_eq!(ev.restored_from, Some(16));
+    // Boundaries 8 and 16 before the kill, 24 on replay.
+    assert_eq!(recovered.checkpoints, 3);
+
+    // Steps 16..20 ran twice — pre-kill and replayed — and the replay must
+    // retrace the uninterrupted trajectory bit for bit.
+    let recs = recovered.log.snapshot();
+    for step in 16..20u64 {
+        assert_eq!(
+            recs.iter().filter(|r| r.step == step).count(),
+            2,
+            "step {step} must be replayed after the restore"
+        );
+    }
+    let (a, b) = (last_per_step(&baseline, 0), last_per_step(&recovered, 0));
+    assert_eq!(a.keys().collect::<Vec<_>>(), b.keys().collect::<Vec<_>>());
+    for (step, bits) in &a {
+        assert_eq!(bits, &b[step], "step {step} diverged after restart");
+    }
+    assert_params_bitwise_equal(&baseline.params, &recovered.params);
+
+    // Durable snapshots: one loadable file per boundary, no temp litter.
+    for step in [8u64, 16, 24] {
+        let path = dir.join(format!("fault-restart.step{step}.ckpt"));
+        let loaded = Checkpoint::load(&path)
+            .unwrap_or_else(|e| panic!("{} must load: {e}", path.display()));
+        assert_eq!(loaded.tensors.len(), baseline.params.len());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A kill before the first checkpoint boundary — or with checkpointing
+/// disabled entirely — cold-restarts from the seed params and replays the
+/// whole shard stream, which must also be bit-identical to an
+/// uninterrupted run (same seed, same stream).
+#[test]
+fn cold_restart_without_checkpoint_replays_bitwise() {
+    let mut conf = JobConf::new("fault-cold", mlp(16, 64, 32, 5));
+    conf.iters = 12;
+    conf.updater = UpdaterConf::sgd(0.2);
+
+    let baseline = run_job(&conf, digits());
+
+    conf.faults = FaultPlan::none().kill(0, 5).with_restart_latency_us(100_000.0);
+    let recovered = run_job(&conf, digits());
+    healthy(&recovered);
+
+    assert_eq!(recovered.fault_events.len(), 1);
+    let ev = &recovered.fault_events[0];
+    assert_eq!(ev.killed_at_step, 5);
+    assert_eq!(ev.resumed_at_step, 0, "no checkpoint → replay from the seed");
+    assert_eq!(ev.restored_from, None);
+    assert_eq!(recovered.checkpoints, 0);
+
+    let (a, b) = (last_per_step(&baseline, 0), last_per_step(&recovered, 0));
+    assert_eq!(a, b, "cold-restarted trajectory diverged");
+    assert_params_bitwise_equal(&baseline.params, &recovered.params);
+}
+
+/// The schedule edge: a kill at step 0 (before any work at all) must still
+/// recover — the fired-kill ledger keeps the replayed step 0 alive.
+#[test]
+fn kill_at_step_zero_recovers() {
+    let mut conf = JobConf::new("fault-zero", mlp(8, 64, 16, 5));
+    conf.iters = 6;
+    conf.updater = UpdaterConf::sgd(0.2);
+    conf.faults = FaultPlan::none().kill(0, 0).with_restart_latency_us(100_000.0);
+    let report = run_job(&conf, digits());
+    healthy(&report);
+    assert_eq!(report.fault_events.len(), 1);
+    assert_eq!(report.fault_events[0].killed_at_step, 0);
+    assert_eq!(report.fault_events[0].resumed_at_step, 0);
+    let steps: Vec<u64> = last_per_step(&report, 0).keys().copied().collect();
+    assert_eq!(steps, (0..6).collect::<Vec<_>>());
+}
+
+/// Sandblaster straggler mitigation: a scheduled 50× straggler stretches
+/// the virtual clock — unless backup workers absorb it, in which case the
+/// clock stays at the healthy pace, the duplicate flush is charged to the
+/// ledger and discarded, and the rescues are counted. Training values are
+/// bitwise identical in all three runs (delays and backups only move the
+/// clock and the ledger, never the math).
+#[test]
+fn backup_workers_hide_stragglers_without_perturbing_values() {
+    let run = |faults: FaultPlan, backups: usize| {
+        let mut conf = JobConf::new("fault-straggle", mlp(16, 64, 32, 5));
+        conf.iters = 12;
+        conf.updater = UpdaterConf::sgd(0.2);
+        conf.faults = faults;
+        conf.backup_workers = backups;
+        run_job(&conf, digits())
+    };
+    let slow = FaultPlan::none().delay_range(0, 2, 10, 50.0);
+    let base = run(FaultPlan::none(), 0);
+    let straggler = run(slow.clone(), 0);
+    let rescued = run(slow, 1);
+    for r in [&base, &straggler, &rescued] {
+        healthy(r);
+        assert!(r.fault_events.is_empty(), "delays are not kills");
+    }
+
+    // Values: bitwise identical across all three runs.
+    let a = last_per_step(&base, 0);
+    assert_eq!(a, last_per_step(&straggler, 0), "straggler perturbed values");
+    assert_eq!(a, last_per_step(&rescued, 0), "backup perturbed values");
+    assert_params_bitwise_equal(&base.params, &straggler.params);
+    assert_params_bitwise_equal(&base.params, &rescued.params);
+
+    // Clock: the unmitigated straggler drags 8 steps by 50×; backups hide
+    // it (the backup's copy of the slow shard wins at the healthy pace).
+    assert!(
+        straggler.group_virt_ms[0] > rescued.group_virt_ms[0],
+        "backups must hide the straggler on the clock: {} vs {}",
+        straggler.group_virt_ms[0],
+        rescued.group_virt_ms[0]
+    );
+    assert_eq!(straggler.backup_rescues, 0);
+    assert_eq!(rescued.backup_rescues, 8, "one rescue per delayed step");
+
+    // Ledger: the discarded duplicate flushes are still paid for on the
+    // wire.
+    assert!(
+        rescued.ledger.param_bytes() > base.ledger.param_bytes(),
+        "duplicate flushes must be charged: {} vs {}",
+        rescued.ledger.param_bytes(),
+        base.ledger.param_bytes()
+    );
+}
+
+/// A data source that fails for one group's shard partway through — an
+/// *unscheduled* death, unlike the fault plan's recoverable kills.
+struct OutageSource {
+    inner: SyntheticDigits,
+    groups: u64,
+    dead_group: u64,
+    from_step: u64,
+}
+
+impl DataSource for OutageSource {
+    fn input_names(&self) -> Vec<String> {
+        self.inner.input_names()
+    }
+
+    fn batch(&self, index: u64, batch: usize) -> HashMap<String, Blob> {
+        if index % self.groups == self.dead_group && index / self.groups >= self.from_step {
+            panic!("synthetic data outage");
+        }
+        self.inner.batch(index, batch)
+    }
+}
+
+/// An unscheduled worker panic surfaces as that group's entry in
+/// `group_failures` — the healthy groups complete every step and the job
+/// still delivers params, instead of aborting the process.
+#[test]
+fn worker_panic_is_a_group_failure_not_a_job_abort() {
+    let mut conf = JobConf::new("fault-panic", mlp(16, 64, 32, 5));
+    conf.iters = 10;
+    conf.updater = UpdaterConf::sgd(0.1);
+    conf.topology = ClusterTopology::downpour(3, 1, 1);
+    let data = Arc::new(OutageSource {
+        inner: SyntheticDigits::new(64, 5, 77),
+        groups: 3,
+        dead_group: 1,
+        from_step: 5,
+    });
+    let report = run_job(&conf, data);
+
+    assert_eq!(report.group_failures.len(), 3);
+    assert!(report.group_failures[0].is_none());
+    assert!(report.group_failures[2].is_none());
+    let msg = report.group_failures[1].as_ref().expect("group 1 must be reported dead");
+    assert!(msg.contains("synthetic data outage"), "panic message surfaced: {msg}");
+    assert!(report.fault_events.is_empty(), "an unscheduled panic is not a recovered kill");
+
+    for g in [0usize, 2] {
+        let steps: Vec<u64> = last_per_step(&report, g).keys().copied().collect();
+        assert_eq!(steps, (0..10).collect::<Vec<_>>(), "healthy group {g} completes");
+    }
+    assert!(last_per_step(&report, 1).len() < 10, "dead group stopped early");
+    assert!(!report.params.is_empty(), "the job still delivers params");
+    assert_eq!(report.group_virt_ms[1], 0.0, "failed group reports no clock");
+}
+
+/// The zero-alloc pin with the checkpoint plane armed: cadence requests are
+/// one channel send and the export clones on the checkpointer thread, so
+/// worker steady-state Blob allocations stay exactly zero.
+#[test]
+fn checkpointing_keeps_steady_state_allocation_free() {
+    let mut conf = JobConf::new("fault-alloc", mlp(16, 64, 32, 5));
+    conf.iters = 12;
+    conf.updater = UpdaterConf::sgd(0.2);
+    conf.checkpoint = Some(CheckpointConf::every(4));
+    conf.alloc_probe_from = Some(3);
+    let report = run_job(&conf, digits());
+    healthy(&report);
+    assert_eq!(report.steady_allocs, vec![0], "checkpointing must stay off the hot path");
+    assert_eq!(report.checkpoints, 3);
+}
