@@ -149,11 +149,14 @@ fn emit_conv_probe() {
 }
 
 /// Run the sequential-vs-overlapped exchange probe (MLP + convnet jobs ×
-/// cluster/lan/local cost models) and write the `BENCH_overlap.json`
-/// artifact at the repo root. With `check`, assert the acceptance bar: the
-/// convnet job's overlapped virtual step time beats sequential on the
-/// cluster link model (ratio < 1.0) — the CI overlap step runs this under
-/// `PALLAS_NUM_THREADS=1` and `=4`.
+/// cluster/lan/local cost models for `raw`; the f16/int8 wire codecs on
+/// the comm-bound cluster model) and write the `BENCH_overlap.json`
+/// artifact at the repo root. With `check`, assert the acceptance bars:
+/// the convnet job's overlapped virtual step time beats sequential on the
+/// cluster link under `raw` (ratio < 1.0); each compressed entry's
+/// wire-byte ratio lands in its codec's band (f16 ≈ ½, int8 ≈ ¼ of raw);
+/// and the comm-bound MLP job's *sequential* virtual step gets faster
+/// under both codecs — the CI codec job runs this.
 fn emit_overlap_probe(check: bool) {
     let probes = singa::bench::overlap_probe(6);
     let json = singa::bench::overlap_probes_json(&probes);
@@ -165,10 +168,13 @@ fn emit_overlap_probe(check: bool) {
         Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
     if check {
-        let conv = probes
-            .iter()
-            .find(|p| p.job == "convnet" && p.cost == "cluster")
-            .expect("convnet/cluster probe present");
+        let entry = |job: &str, cost: &str, codec: &str| {
+            probes
+                .iter()
+                .find(|p| p.job == job && p.cost == cost && p.codec == codec)
+                .unwrap_or_else(|| panic!("{job}/{cost}/{codec} probe present"))
+        };
+        let conv = entry("convnet", "cluster", "raw");
         assert!(
             conv.virt_ratio < 1.0,
             "overlap must beat sequential for convnet on cluster: ratio {:.4} \
@@ -177,8 +183,42 @@ fn emit_overlap_probe(check: bool) {
             conv.seq_virt_step_ms,
             conv.overlap_virt_step_ms
         );
+        // Wire-byte shrink per codec, on both jobs' cluster entries: the
+        // encoded flush must land near the codec's element shrink (chunk
+        // headers + the uncompressed Msg headers keep it off the ideal
+        // 0.5 / 0.25).
+        for job in ["mlp", "convnet"] {
+            let f16 = entry(job, "cluster", "f16");
+            assert!(
+                f16.wire_ratio_vs_raw > 0.4 && f16.wire_ratio_vs_raw < 0.60,
+                "{job}: f16 wire ratio {:.4} outside (0.4, 0.60)",
+                f16.wire_ratio_vs_raw
+            );
+            let int8 = entry(job, "cluster", "int8");
+            assert!(
+                int8.wire_ratio_vs_raw > 0.15 && int8.wire_ratio_vs_raw < 0.35,
+                "{job}: int8 wire ratio {:.4} outside (0.15, 0.35)",
+                int8.wire_ratio_vs_raw
+            );
+        }
+        // Comm-bound gain: the MLP on the 1 Gbps cluster link is dominated
+        // by transfer time, so its sequential virtual step (compute + comm
+        // sum — the deterministic accounting) must improve under both
+        // codecs.
+        let raw = entry("mlp", "cluster", "raw");
+        for codec in ["f16", "int8"] {
+            let c = entry("mlp", "cluster", codec);
+            assert!(
+                c.seq_virt_step_ms < raw.seq_virt_step_ms,
+                "mlp/cluster: {codec} sequential virtual step {:.4} ms must beat \
+                 raw {:.4} ms",
+                c.seq_virt_step_ms,
+                raw.seq_virt_step_ms
+            );
+        }
         println!(
-            "overlap smoke check passed: convnet/cluster ratio {:.4} ({} buckets)",
+            "overlap smoke check passed: convnet/cluster ratio {:.4} ({} buckets); \
+             codec wire ratios within bands and mlp/cluster seq step faster compressed",
             conv.virt_ratio, conv.buckets
         );
     }

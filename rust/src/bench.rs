@@ -11,7 +11,7 @@ use crate::baselines::{
     SystemPolicy,
 };
 use crate::cluster::ClusterTopology;
-use crate::comm::{CostModel, FaultPlan, LinkModel};
+use crate::comm::{Codec, CostModel, FaultPlan, LinkModel};
 use crate::coordinator::copyqueue::{
     alexnet_like_profiles, iteration_time_us, CopyMode, UpdateRates,
 };
@@ -236,17 +236,21 @@ pub fn distributed_alloc_probe(warmup: u64, steps: u64) -> Vec<DistAllocProbe> {
     // The `ckpt` flag arms the asynchronous checkpoint plane (snapshot
     // every 4 steps): cadence requests are one channel send and the export
     // clones on the checkpointer thread, so the worker tally must stay 0
-    // with checkpointing enabled too.
-    let cases: [(&'static str, ClusterTopology, bool); 4] = [
-        ("sandblaster(1,1)", ClusterTopology::sandblaster(1, 1), false),
-        ("sandblaster(1,1)+ckpt", ClusterTopology::sandblaster(1, 1), true),
-        ("downpour(3,1,2)", ClusterTopology::downpour(3, 1, 2), false),
-        ("hogwild(2,1,10)", ClusterTopology::hogwild(2, 1, 10), false),
+    // with checkpointing enabled too. The `+f16`/`+int8` cases arm the
+    // wire codec: steady-state encode/decode and error feedback must run
+    // entirely in the workspace scratch sized at construction.
+    let cases: [(&'static str, ClusterTopology, bool, Codec); 6] = [
+        ("sandblaster(1,1)", ClusterTopology::sandblaster(1, 1), false, Codec::Raw),
+        ("sandblaster(1,1)+ckpt", ClusterTopology::sandblaster(1, 1), true, Codec::Raw),
+        ("sandblaster(1,1)+f16", ClusterTopology::sandblaster(1, 1), false, Codec::F16),
+        ("sandblaster(1,1)+int8", ClusterTopology::sandblaster(1, 1), false, Codec::Int8),
+        ("downpour(3,1,2)", ClusterTopology::downpour(3, 1, 2), false, Codec::Raw),
+        ("hogwild(2,1,10)", ClusterTopology::hogwild(2, 1, 10), false, Codec::Raw),
     ];
     let data: Arc<dyn DataSource> = Arc::new(SyntheticDigits::new(64, 5, 77));
     cases
         .iter()
-        .map(|&(name, ref topo, ckpt)| {
+        .map(|&(name, ref topo, ckpt, codec)| {
             let b = NetBuilder::new()
                 .add(LayerConf::new("data", LayerKind::Input { shape: vec![16, 64] }, &[]))
                 .add(LayerConf::new("label", LayerKind::Input { shape: vec![16] }, &[]))
@@ -267,6 +271,7 @@ pub fn distributed_alloc_probe(warmup: u64, steps: u64) -> Vec<DistAllocProbe> {
             conf.updater = UpdaterConf::sgd(0.1);
             conf.topology = topo.clone();
             conf.alloc_probe_from = Some(warmup);
+            conf.wire_codec = codec;
             if ckpt {
                 conf.checkpoint = Some(CheckpointConf::every(4));
             }
@@ -347,8 +352,16 @@ pub fn alloc_probe_json_from(models: &[AllocProbe], dist: &[DistAllocProbe]) -> 
 pub struct OverlapProbe {
     pub job: &'static str,
     pub cost: &'static str,
+    /// Wire codec of this entry (`"raw"`, `"f16"`, `"int8"`).
+    pub codec: &'static str,
     /// Flush buckets the job's net resolves to (default coalescing).
     pub buckets: usize,
+    /// Wire bytes of one full-step gradient flush (all buckets) under this
+    /// entry's codec — what the simnet link actually carries per step.
+    pub step_flush_bytes: usize,
+    /// `step_flush_bytes` / the same job's raw flush bytes (1.0 for raw
+    /// entries; ≈0.5 for f16, ≈0.25 for int8 on f32 payloads).
+    pub wire_ratio_vs_raw: f64,
     pub seq_virt_step_ms: f64,
     pub overlap_virt_step_ms: f64,
     /// overlapped / sequential virtual step time (< 1 ⇒ overlap wins).
@@ -363,6 +376,13 @@ pub struct OverlapProbe {
 /// parameter plane crosses the modeled network link; trajectories are
 /// bit-identical between the two runs (pinned elsewhere), only the clock
 /// accounting differs.
+///
+/// `Codec::Raw` runs the full cost matrix; the quantizing codecs (f16,
+/// int8) run the comm-bound cluster cost only — the configuration where
+/// shrinking wire bytes is supposed to pay, and the one the figures gate:
+/// the compressed entries must show the wire-byte ratio near the codec's
+/// element shrink AND a faster *sequential* virtual step (compute + comm
+/// sum, where the deterministic comm saving can't hide behind overlap).
 pub fn overlap_probe(iters: u64) -> Vec<OverlapProbe> {
     let costs: [(&'static str, CostModel); 3] = [
         ("cluster", CostModel::cluster()),
@@ -393,9 +413,11 @@ pub fn overlap_probe(iters: u64) -> Vec<OverlapProbe> {
     let jobs: [(&'static str, NetBuilder, Arc<dyn DataSource>, usize); 2] =
         [("mlp", mlp, digits, 32), ("convnet", cifar_convnet(16), images, 16)];
 
+    let codecs: [(&'static str, Codec); 3] =
+        [("raw", Codec::Raw), ("f16", Codec::F16), ("int8", Codec::Int8)];
     let mut out = Vec::new();
     for (job, builder, data, batch) in jobs {
-        let make_conf = |overlap: bool, cost: &CostModel| {
+        let make_conf = |overlap: bool, cost: &CostModel, codec: Codec| {
             let mut conf = JobConf::new("overlap_probe", builder.clone());
             conf.batch_size = batch;
             conf.iters = iters;
@@ -403,45 +425,62 @@ pub fn overlap_probe(iters: u64) -> Vec<OverlapProbe> {
             conf.topology = ClusterTopology::sandblaster(1, 2);
             conf.cost = *cost;
             conf.overlap_exchange = overlap;
+            conf.wire_codec = codec;
             conf
         };
-        // Bucket count from the SAME conf the runs use, so the artifact
-        // can never report a layout the measurements didn't.
-        let buckets = {
-            let conf = make_conf(true, &costs[0].1);
+        // Layout + wire accounting from the SAME conf the runs use, so the
+        // artifact can never report a layout the measurements didn't.
+        let plan_stats = |codec: Codec| {
+            let conf = make_conf(true, &costs[0].1, codec);
             let net = conf.net.clone().build(&mut Rng::new(7));
-            crate::coordinator::workspace::ParamWorkspace::new(&net, conf.bucket_coalesce_bytes)
-                .nbuckets()
+            let ws = crate::coordinator::workspace::ParamWorkspace::new(
+                &net,
+                conf.bucket_coalesce_bytes,
+                codec,
+            );
+            let flush: usize = ws.plan().buckets.iter().map(|b| b.flush_bytes).sum();
+            (ws.nbuckets(), flush)
         };
-        for (cost_name, cost) in &costs {
-            // Best-of-3 runs per mode (the GEMM probe's best-of-iters
-            // recipe): virtual step time embeds each run's real measured
-            // compute, so single-run scheduler noise on a shared CI runner
-            // could otherwise push the gated ratio past 1.0 spuriously.
-            let run = |overlap: bool| {
-                let mut best_virt = f64::INFINITY;
-                let mut best_wall = f64::INFINITY;
-                for _ in 0..3 {
-                    let report = run_job(&make_conf(overlap, cost), data.clone());
-                    let virt = report.group_virt_ms.iter().cloned().fold(0.0, f64::max)
-                        / iters.max(1) as f64;
-                    best_virt = best_virt.min(virt);
-                    best_wall = best_wall.min(report.wall_ms);
-                }
-                (best_virt, best_wall)
-            };
-            let (seq_virt_step_ms, seq_wall_ms) = run(false);
-            let (overlap_virt_step_ms, overlap_wall_ms) = run(true);
-            out.push(OverlapProbe {
-                job,
-                cost: cost_name,
-                buckets,
-                seq_virt_step_ms,
-                overlap_virt_step_ms,
-                virt_ratio: overlap_virt_step_ms / seq_virt_step_ms,
-                seq_wall_ms,
-                overlap_wall_ms,
-            });
+        let (buckets, raw_flush_bytes) = plan_stats(Codec::Raw);
+        for (codec_name, codec) in codecs {
+            let step_flush_bytes =
+                if codec == Codec::Raw { raw_flush_bytes } else { plan_stats(codec).1 };
+            let cost_list: &[(&'static str, CostModel)] =
+                if codec == Codec::Raw { &costs } else { &costs[..1] };
+            for (cost_name, cost) in cost_list {
+                // Best-of-3 runs per mode (the GEMM probe's best-of-iters
+                // recipe): virtual step time embeds each run's real measured
+                // compute, so single-run scheduler noise on a shared CI
+                // runner could otherwise push the gated ratio past 1.0
+                // spuriously.
+                let run = |overlap: bool| {
+                    let mut best_virt = f64::INFINITY;
+                    let mut best_wall = f64::INFINITY;
+                    for _ in 0..3 {
+                        let report = run_job(&make_conf(overlap, cost, codec), data.clone());
+                        let virt = report.group_virt_ms.iter().cloned().fold(0.0, f64::max)
+                            / iters.max(1) as f64;
+                        best_virt = best_virt.min(virt);
+                        best_wall = best_wall.min(report.wall_ms);
+                    }
+                    (best_virt, best_wall)
+                };
+                let (seq_virt_step_ms, seq_wall_ms) = run(false);
+                let (overlap_virt_step_ms, overlap_wall_ms) = run(true);
+                out.push(OverlapProbe {
+                    job,
+                    cost: cost_name,
+                    codec: codec_name,
+                    buckets,
+                    step_flush_bytes,
+                    wire_ratio_vs_raw: step_flush_bytes as f64 / raw_flush_bytes as f64,
+                    seq_virt_step_ms,
+                    overlap_virt_step_ms,
+                    virt_ratio: overlap_virt_step_ms / seq_virt_step_ms,
+                    seq_wall_ms,
+                    overlap_wall_ms,
+                });
+            }
         }
     }
     out
@@ -453,12 +492,16 @@ pub fn overlap_probes_json(probes: &[OverlapProbe]) -> String {
     let mut s = String::from("{\n  \"probe\": \"overlap_exchange\",\n  \"cases\": [\n");
     for (i, p) in probes.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"job\": \"{}\", \"cost\": \"{}\", \"buckets\": {}, \
+            "    {{\"job\": \"{}\", \"cost\": \"{}\", \"codec\": \"{}\", \"buckets\": {}, \
+             \"step_flush_bytes\": {}, \"wire_ratio_vs_raw\": {:.4}, \
              \"seq_virt_step_ms\": {:.4}, \"overlap_virt_step_ms\": {:.4}, \
              \"virt_ratio\": {:.4}, \"seq_wall_ms\": {:.2}, \"overlap_wall_ms\": {:.2}}}{}\n",
             p.job,
             p.cost,
+            p.codec,
             p.buckets,
+            p.step_flush_bytes,
+            p.wire_ratio_vs_raw,
             p.seq_virt_step_ms,
             p.overlap_virt_step_ms,
             p.virt_ratio,
@@ -1753,14 +1796,27 @@ mod tests {
     #[test]
     fn overlap_probe_convnet_beats_sequential_on_cluster() {
         let probes = overlap_probe(4);
-        assert_eq!(probes.len(), 6);
+        // Per job: raw × {cluster, lan, local} + {f16, int8} × cluster.
+        assert_eq!(probes.len(), 10);
         for p in &probes {
-            assert!(p.buckets >= 1, "{}/{}", p.job, p.cost);
+            assert!(p.buckets >= 1, "{}/{}/{}", p.job, p.cost, p.codec);
             assert!(p.seq_virt_step_ms > 0.0 && p.overlap_virt_step_ms > 0.0);
+            assert!(p.step_flush_bytes > 0);
+            match p.codec {
+                "raw" => assert_eq!(p.wire_ratio_vs_raw, 1.0, "{}/{}", p.job, p.cost),
+                _ => assert!(
+                    p.wire_ratio_vs_raw > 0.0 && p.wire_ratio_vs_raw < 1.0,
+                    "{}/{}/{}: ratio {}",
+                    p.job,
+                    p.cost,
+                    p.codec,
+                    p.wire_ratio_vs_raw
+                ),
+            }
         }
         let conv = probes
             .iter()
-            .find(|p| p.job == "convnet" && p.cost == "cluster")
+            .find(|p| p.job == "convnet" && p.cost == "cluster" && p.codec == "raw")
             .expect("convnet/cluster probe present");
         assert!(
             conv.virt_ratio < 1.0,
@@ -1792,6 +1848,8 @@ mod tests {
         // distributed run_job probe rides in the same artifact
         assert!(j.contains("\"distributed\""));
         assert!(j.contains("\"sandblaster(1,1)\""));
+        assert!(j.contains("\"sandblaster(1,1)+f16\""));
+        assert!(j.contains("\"sandblaster(1,1)+int8\""));
         assert!(j.contains("\"downpour(3,1,2)\""));
         assert!(j.contains("\"hogwild(2,1,10)\""));
         assert!(j.contains("\"steady_allocs_per_group\""));

@@ -1,0 +1,401 @@
+//! Per-bucket wire codecs for the parameter plane (Mayer & Jacobsen's
+//! survey, PAPERS.md: communication compression as a standard scalability
+//! lever): each flush-bucket chunk is encoded with a quantization scale
+//! riding in its header, so comm-bound configs ship ~2× (f16) or ~4×
+//! (int8) fewer gradient/value bytes over the modeled link.
+//!
+//! Workers and servers share an address space here (the wire is simulated),
+//! so "encoding" is a quantize→dequantize round trip: the values that reach
+//! the server's updater — and the fresh values the worker adopts — are
+//! exactly what a real receiver would decode, while the byte counts charged
+//! to the [`crate::comm::LinkTimeline`] and [`crate::comm::ByteLedger`] are
+//! the compressed chunk sizes.
+//!
+//! Quantization error on the *gradient* path is preserved, not dropped:
+//! [`feedback_encode`] keeps a per-slot residual (error feedback, 1-bit-SGD
+//! style) that is re-added to the next flush, so the running sum of decoded
+//! gradients tracks the uncompressed sum and convergence is unchanged in
+//! expectation. Value adoption (server → worker) is plain quantization —
+//! the server's master copy stays full precision.
+//!
+//! [`Codec::Raw`] is the identity: the hot path ships blobs in the
+//! historical format with the historical byte accounting, bit for bit (the
+//! encode/decode functions below still exist for Raw so the test matrix can
+//! pin its bitwise round trip through the chunk format).
+//!
+//! Decoding is hardened like [`crate::model::checkpoint::Checkpoint::read_from`]:
+//! truncated headers, short payloads, bad counts, and NaN/negative scales
+//! are [`anyhow::Result`] errors naming the offending field — never panics.
+
+use anyhow::{bail, Result};
+
+/// Encoded-chunk header: tag byte + f32 LE scale + u32 LE element count.
+pub const CHUNK_HEADER: usize = 9;
+
+/// Bound on a decoded chunk's element count (mirrors the checkpoint
+/// reader's `MAX_ELEMS`): a corrupt count field errors out instead of
+/// driving a giant allocation or loop.
+pub const MAX_ELEMS: usize = 1 << 30;
+
+/// Wire codec for flush buckets, selected via
+/// [`crate::coordinator::JobConf::wire_codec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    /// Full f32 payloads, historical format and byte accounting — the
+    /// exchange is bit-identical to the uncompressed parameter plane.
+    Raw,
+    /// IEEE 754 binary16 with a per-chunk scale (values are normalized by
+    /// the chunk's max magnitude before conversion, so ±huge and subnormal
+    /// buckets neither overflow nor flush to zero). ~2× payload shrink;
+    /// per-element error ≤ `max_abs / 1024`.
+    F16,
+    /// 8-bit linear quantization, `scale = max_abs / 127`, round to
+    /// nearest. ~4× payload shrink; per-element error ≤ `scale / 2` (≈
+    /// `max_abs / 254`) — re-injected into the next flush by error
+    /// feedback on the gradient path.
+    Int8,
+}
+
+impl Codec {
+    /// Parse a config-file spelling.
+    pub fn parse(s: &str) -> Result<Codec> {
+        match s {
+            "raw" => Ok(Codec::Raw),
+            "f16" => Ok(Codec::F16),
+            "int8" => Ok(Codec::Int8),
+            other => bail!("unknown wire codec '{other}' (raw | f16 | int8)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::Raw => "raw",
+            Codec::F16 => "f16",
+            Codec::Int8 => "int8",
+        }
+    }
+
+    /// Chunk-format tag byte.
+    fn tag(self) -> u8 {
+        match self {
+            Codec::Raw => 0,
+            Codec::F16 => 1,
+            Codec::Int8 => 2,
+        }
+    }
+
+    /// Encoded payload bytes per element.
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            Codec::Raw => 4,
+            Codec::F16 => 2,
+            Codec::Int8 => 1,
+        }
+    }
+
+    /// Encoded buffer length for `n` elements (header + payload).
+    pub fn encoded_len(self, n: usize) -> usize {
+        CHUNK_HEADER + n * self.elem_bytes()
+    }
+
+    /// Modeled wire bytes of one `payload_bytes` (f32) parameter payload
+    /// under this codec. Raw ships the blob as-is — the historical charge,
+    /// no chunk framing — so its accounting stays bit-identical; quantized
+    /// codecs pay the compressed payload plus the chunk header carrying
+    /// the scale.
+    pub fn wire_bytes(self, payload_bytes: usize) -> usize {
+        match self {
+            Codec::Raw => payload_bytes,
+            coded => coded.encoded_len(payload_bytes / 4),
+        }
+    }
+
+    /// Per-chunk quantization scale for `src` (the value a decoder
+    /// multiplies by). 0.0 encodes an all-zero (or non-finite-max) chunk:
+    /// every element decodes to exactly 0.
+    fn scale_for(self, src: &[f32]) -> f32 {
+        let max_abs = src.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if !max_abs.is_finite() || max_abs == 0.0 {
+            return match self {
+                Codec::Raw => 1.0,
+                _ => 0.0,
+            };
+        }
+        match self {
+            Codec::Raw => 1.0,
+            Codec::F16 => max_abs,
+            // The division can flush to zero for deeply subnormal chunks —
+            // then the whole chunk quantizes to zero, which is within the
+            // error bound (every element is ≤ max_abs ≈ 0 anyway).
+            Codec::Int8 => max_abs / 127.0,
+        }
+    }
+
+    /// Encode `src` into `dst` (cleared and refilled; reserve
+    /// [`Codec::encoded_len`] up front to keep the steady state free of
+    /// buffer growth). Inputs are expected finite — gradients and values
+    /// on this plane always are.
+    pub fn encode_into(self, src: &[f32], dst: &mut Vec<u8>) {
+        dst.clear();
+        dst.push(self.tag());
+        let scale = self.scale_for(src);
+        dst.extend_from_slice(&scale.to_le_bytes());
+        dst.extend_from_slice(&(src.len() as u32).to_le_bytes());
+        match self {
+            Codec::Raw => {
+                for &v in src {
+                    dst.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Codec::F16 => {
+                for &v in src {
+                    let h = if scale == 0.0 { 0 } else { f32_to_f16_bits(v / scale) };
+                    dst.extend_from_slice(&h.to_le_bytes());
+                }
+            }
+            Codec::Int8 => {
+                for &v in src {
+                    let q = if scale == 0.0 {
+                        0i8
+                    } else {
+                        (v / scale).round().clamp(-127.0, 127.0) as i8
+                    };
+                    dst.push(q as u8);
+                }
+            }
+        }
+    }
+
+    /// Decode an encoded chunk into `dst` (whose length must equal the
+    /// chunk's element count). Hardened: corrupt or truncated chunks are
+    /// errors naming the offending field, never panics.
+    pub fn decode_into(self, src: &[u8], dst: &mut [f32]) -> Result<()> {
+        if src.len() < CHUNK_HEADER {
+            bail!(
+                "encoded chunk truncated: {} bytes, need a {CHUNK_HEADER}-byte header",
+                src.len()
+            );
+        }
+        let tag = src[0];
+        if tag != self.tag() {
+            bail!(
+                "chunk codec tag {tag} does not match decoder '{}' (tag {})",
+                self.name(),
+                self.tag()
+            );
+        }
+        let scale = f32::from_le_bytes(src[1..5].try_into().unwrap());
+        if !scale.is_finite() {
+            bail!("chunk scale is not finite ({scale})");
+        }
+        if scale < 0.0 {
+            bail!("chunk scale is negative ({scale})");
+        }
+        let count = u32::from_le_bytes(src[5..9].try_into().unwrap()) as usize;
+        if count > MAX_ELEMS {
+            bail!("chunk element count {count} exceeds the {MAX_ELEMS} bound");
+        }
+        if count != dst.len() {
+            bail!(
+                "chunk element count {count} does not match the {}-element destination",
+                dst.len()
+            );
+        }
+        let payload = &src[CHUNK_HEADER..];
+        let want = count * self.elem_bytes();
+        if payload.len() != want {
+            bail!(
+                "chunk payload is {} bytes, expected {want} for {count} '{}' elements",
+                payload.len(),
+                self.name()
+            );
+        }
+        match self {
+            Codec::Raw => {
+                for (d, c) in dst.iter_mut().zip(payload.chunks_exact(4)) {
+                    *d = f32::from_le_bytes(c.try_into().unwrap());
+                }
+            }
+            Codec::F16 => {
+                for (d, c) in dst.iter_mut().zip(payload.chunks_exact(2)) {
+                    let h = u16::from_le_bytes(c.try_into().unwrap());
+                    *d = f16_bits_to_f32(h) * scale;
+                }
+            }
+            Codec::Int8 => {
+                for (d, &b) in dst.iter_mut().zip(payload) {
+                    *d = (b as i8) as f32 * scale;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// THE error-feedback encode recipe, shared by the comm path
+/// ([`crate::coordinator::workspace::apply_flush`]) and the accumulation
+/// test so the two cannot drift apart: add the residual carried from the
+/// previous flush into `grad`, encode the compensated gradient, decode into
+/// `dec` (the values that actually reach the server), and store the fresh
+/// quantization error back into `residual` for the next flush. All slices
+/// share one length; `enc` is the caller's reserved chunk scratch.
+pub fn feedback_encode(
+    codec: Codec,
+    grad: &mut [f32],
+    residual: &mut [f32],
+    enc: &mut Vec<u8>,
+    dec: &mut [f32],
+) {
+    for (g, r) in grad.iter_mut().zip(residual.iter()) {
+        *g += *r;
+    }
+    codec.encode_into(grad, enc);
+    codec.decode_into(enc, dec).expect("self-encoded chunk must decode");
+    for ((r, g), d) in residual.iter_mut().zip(grad.iter()).zip(dec.iter()) {
+        *r = *g - *d;
+    }
+}
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even (the `half` crate
+/// is not in the offline vendor set). Overflow saturates to ±65504 (the
+/// largest finite half) instead of producing an infinity — a quantizer
+/// must never widen a finite value to inf.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (NaN keeps a quiet payload bit).
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127;
+    if e < -24 {
+        return sign; // underflows even the smallest half subnormal
+    }
+    let h = if e >= -14 {
+        // Normal half range (round-to-nearest-even; a mantissa carry into
+        // the exponent is still correct rounding).
+        let mant16 = mant >> 13;
+        let round = mant & 0x1fff;
+        let mut h = (((e + 15) as u32) << 10) | mant16;
+        if round > 0x1000 || (round == 0x1000 && (mant16 & 1) == 1) {
+            h += 1;
+        }
+        h
+    } else {
+        // Subnormal half: shift the (implicit-bit) mantissa into place.
+        let m = mant | 0x0080_0000;
+        let shift = (13 - 14 - e) as u32;
+        let mant16 = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut h = mant16;
+        if rem > half || (rem == half && (mant16 & 1) == 1) {
+            h += 1;
+        }
+        h
+    };
+    if h >= 0x7c00 {
+        return sign | 0x7bff; // saturate instead of rounding up to inf
+    }
+    sign | h as u16
+}
+
+/// IEEE 754 binary16 bits → f32 (exact: every half value is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal half: renormalize into the f32 exponent range.
+            let mut e = 113u32; // 127 - 15 + 1
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Half → f32 → half is the identity for every non-NaN bit pattern
+    /// (the f32 conversion is exact, so converting back must land on the
+    /// same bits) — pins both converters against each other exhaustively.
+    #[test]
+    fn f16_f32_f16_is_identity_for_all_non_nan_patterns() {
+        for h in 0..=u16::MAX {
+            let exp = (h >> 10) & 0x1f;
+            let mant = h & 0x3ff;
+            if exp == 31 && mant != 0 {
+                continue; // NaN payloads are canonicalized, not preserved
+            }
+            if exp == 31 {
+                // ±inf saturates to ±max-finite by design; skip identity.
+                continue;
+            }
+            let back = f32_to_f16_bits(f16_bits_to_f32(h));
+            assert_eq!(back, h, "pattern {h:#06x} did not round-trip");
+        }
+    }
+
+    /// Spot values against the IEEE tables: 1.0, -2.5, the largest finite
+    /// half, the smallest subnormal, and overflow saturation.
+    #[test]
+    fn f16_conversion_spot_values() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.5), 0xc100);
+        assert_eq!(f16_bits_to_f32(0x7bff), 65504.0);
+        assert_eq!(f16_bits_to_f32(0x0001), 5.960_464_5e-8);
+        assert_eq!(f32_to_f16_bits(1e9), 0x7bff, "overflow saturates, not inf");
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(0.0).to_le_bytes(), [0, 0]);
+        // Round-to-nearest-even: 2049/2048 is exactly between two halves.
+        assert_eq!(f32_to_f16_bits(1.0 + 1.0 / 2048.0), 0x3c00);
+    }
+
+    /// Encoded sizes: header + n × per-element payload; Raw's modeled wire
+    /// size is the historical bare payload (no chunk framing).
+    #[test]
+    fn encoded_and_wire_sizes() {
+        assert_eq!(Codec::Raw.encoded_len(10), CHUNK_HEADER + 40);
+        assert_eq!(Codec::F16.encoded_len(10), CHUNK_HEADER + 20);
+        assert_eq!(Codec::Int8.encoded_len(10), CHUNK_HEADER + 10);
+        assert_eq!(Codec::Raw.wire_bytes(40), 40);
+        assert_eq!(Codec::F16.wire_bytes(40), CHUNK_HEADER + 20);
+        assert_eq!(Codec::Int8.wire_bytes(40), CHUNK_HEADER + 10);
+    }
+
+    #[test]
+    fn parse_and_names() {
+        for c in [Codec::Raw, Codec::F16, Codec::Int8] {
+            assert_eq!(Codec::parse(c.name()).unwrap(), c);
+        }
+        assert!(Codec::parse("zstd").is_err());
+    }
+
+    /// The actual encoded buffer length always matches `encoded_len` — the
+    /// scratch reservation in the workspace depends on it.
+    #[test]
+    fn encode_fills_exactly_encoded_len() {
+        let v = [0.5f32, -3.25, 0.0, 1e-3];
+        let mut enc = Vec::new();
+        for c in [Codec::Raw, Codec::F16, Codec::Int8] {
+            c.encode_into(&v, &mut enc);
+            assert_eq!(enc.len(), c.encoded_len(v.len()), "{}", c.name());
+        }
+    }
+}

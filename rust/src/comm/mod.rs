@@ -8,10 +8,12 @@
 //! every transfer is charged to a [`ByteLedger`] and, in virtual-time mode,
 //! advances a [`VirtualClock`] by the [`LinkModel`] cost.
 
+pub mod codec;
 pub mod faults;
 pub mod msg;
 pub mod simnet;
 
+pub use codec::Codec;
 pub use faults::{FaultPlan, FaultRecord};
 pub use msg::Msg;
 pub use simnet::{ByteLedger, CostModel, LinkModel, LinkTimeline, VirtualClock};

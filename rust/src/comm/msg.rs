@@ -67,6 +67,13 @@ impl Msg {
         2 * payload_bytes + 2 * Msg::HEADER
     }
 
+    /// [`Msg::exchange_wire_size`] under a wire codec: the gradient goes up
+    /// and the fresh value comes down as *encoded* chunks, one header each.
+    /// `Codec::Raw` reproduces the historical charge exactly.
+    pub fn exchange_wire_size_coded(codec: crate::comm::Codec, payload_bytes: usize) -> usize {
+        2 * codec.wire_bytes(payload_bytes) + 2 * Msg::HEADER
+    }
+
     pub fn param(&self) -> &str {
         match self {
             Msg::Put { param, .. }
@@ -118,5 +125,26 @@ mod tests {
         let v = Blob::zeros(&[10]); // 40 payload bytes
         assert_eq!(Msg::exchange_wire_size(v.byte_size()), 2 * 40 + 128);
         assert_eq!(Msg::exchange_wire_size(0), 128);
+    }
+
+    /// Coded exchange sizes: Raw matches the historical formula bit for
+    /// bit; f16/int8 pay the compressed payload plus one chunk header per
+    /// direction.
+    #[test]
+    fn coded_exchange_wire_sizes() {
+        use crate::comm::codec::{Codec, CHUNK_HEADER};
+        let payload = 40; // 10 f32 elements
+        assert_eq!(
+            Msg::exchange_wire_size_coded(Codec::Raw, payload),
+            Msg::exchange_wire_size(payload)
+        );
+        assert_eq!(
+            Msg::exchange_wire_size_coded(Codec::F16, payload),
+            2 * (CHUNK_HEADER + 20) + 128
+        );
+        assert_eq!(
+            Msg::exchange_wire_size_coded(Codec::Int8, payload),
+            2 * (CHUNK_HEADER + 10) + 128
+        );
     }
 }

@@ -43,6 +43,9 @@ pub fn parse_job(text: &str) -> Result<JobConf> {
     if let Some(p) = doc.get("partition_within_group").and_then(Json::as_bool) {
         conf.partition_within_group = p;
     }
+    if let Some(c) = doc.get("wire_codec").and_then(Json::as_str) {
+        conf.wire_codec = crate::comm::Codec::parse(c)?;
+    }
     Ok(conf)
 }
 
@@ -150,5 +153,17 @@ mod tests {
     fn rejects_unknown_preset_and_updater() {
         assert!(parse_job(r#"{"model": "ghost"}"#).is_err());
         assert!(parse_job(r#"{"model": "mlp", "updater": {"algo": "warp"}}"#).is_err());
+    }
+
+    #[test]
+    fn parses_wire_codec_and_rejects_unknown() {
+        use crate::comm::Codec;
+        let conf = parse_job(r#"{"model": "mlp"}"#).unwrap();
+        assert_eq!(conf.wire_codec, Codec::Raw);
+        let conf = parse_job(r#"{"model": "mlp", "wire_codec": "int8"}"#).unwrap();
+        assert_eq!(conf.wire_codec, Codec::Int8);
+        let conf = parse_job(r#"{"model": "mlp", "wire_codec": "f16"}"#).unwrap();
+        assert_eq!(conf.wire_codec, Codec::F16);
+        assert!(parse_job(r#"{"model": "mlp", "wire_codec": "zip"}"#).is_err());
     }
 }

@@ -147,7 +147,7 @@ impl GroupExchange {
         workers: usize,
         start_step: u64,
     ) -> GroupExchange {
-        let ws = ParamWorkspace::new(net, conf.bucket_coalesce_bytes);
+        let ws = ParamWorkspace::new(net, conf.bucket_coalesce_bytes, conf.wire_codec);
         let outstanding = vec![0usize; ws.nbuckets()];
         let comm_allocs = Arc::new(AtomicU64::new(0));
         let driver_dead = Arc::new(AtomicBool::new(false));
@@ -459,12 +459,14 @@ mod tests {
         topo: &ClusterTopology,
         overlap: bool,
         iters: u64,
+        codec: crate::comm::Codec,
     ) -> (Vec<Vec<(u32, u32)>>, Vec<HashMap<String, Blob>>) {
         let mut conf = JobConf::new("lockstep", digit_mlp());
         conf.updater = UpdaterConf::sgd(0.1);
         conf.topology = topo.clone();
         conf.overlap_exchange = overlap;
         conf.bucket_coalesce_bytes = 0; // per-layer buckets
+        conf.wire_codec = codec;
         let ledger = Arc::new(ByteLedger::new());
         let servers: Arc<Vec<ServerGroup>> = Arc::new(
             (0..topo.nserver_groups)
@@ -578,8 +580,20 @@ mod tests {
     #[test]
     fn downpour_3_1_2_overlap_matches_sequential_bitwise() {
         let topo = ClusterTopology::downpour(3, 1, 2);
-        let seq = lockstep_run(&topo, false, 12);
-        let ovl = lockstep_run(&topo, true, 12);
+        let seq = lockstep_run(&topo, false, 12, crate::comm::Codec::Raw);
+        let ovl = lockstep_run(&topo, true, 12, crate::comm::Codec::Raw);
+        assert_bitwise_equal(&seq, &ovl);
+    }
+
+    /// The seq-vs-overlap bit-identity contract holds under quantizing
+    /// codecs too: both modes route through the same `apply_flush`
+    /// (error-feedback encode included) and residuals live per-slot, so
+    /// cross-bucket completion order cannot perturb them.
+    #[test]
+    fn downpour_int8_overlap_matches_sequential_bitwise() {
+        let topo = ClusterTopology::downpour(3, 1, 2);
+        let seq = lockstep_run(&topo, false, 12, crate::comm::Codec::Int8);
+        let ovl = lockstep_run(&topo, true, 12, crate::comm::Codec::Int8);
         assert_bitwise_equal(&seq, &ovl);
     }
 
@@ -590,8 +604,8 @@ mod tests {
     #[test]
     fn hogwild_sync_mid_flush_overlap_matches_sequential_bitwise() {
         let topo = ClusterTopology::hogwild(2, 1, 3);
-        let seq = lockstep_run(&topo, false, 10);
-        let ovl = lockstep_run(&topo, true, 10);
+        let seq = lockstep_run(&topo, false, 10, crate::comm::Codec::Raw);
+        let ovl = lockstep_run(&topo, true, 10, crate::comm::Codec::Raw);
         assert_bitwise_equal(&seq, &ovl);
     }
 
@@ -601,8 +615,8 @@ mod tests {
     #[test]
     fn lockstep_overlap_is_deterministic() {
         let topo = ClusterTopology::downpour(3, 1, 2);
-        let a = lockstep_run(&topo, true, 6);
-        let b = lockstep_run(&topo, true, 6);
+        let a = lockstep_run(&topo, true, 6, crate::comm::Codec::Raw);
+        let b = lockstep_run(&topo, true, 6, crate::comm::Codec::Raw);
         assert_bitwise_equal(&a, &b);
     }
 }

@@ -17,7 +17,7 @@ pub mod exchange;
 pub mod workspace;
 
 use crate::cluster::ClusterTopology;
-use crate::comm::{ByteLedger, CostModel, FaultPlan, FaultRecord, VirtualClock};
+use crate::comm::{ByteLedger, Codec, CostModel, FaultPlan, FaultRecord, VirtualClock};
 use crate::data::DataSource;
 use crate::metrics::{Record, TrainingLog};
 use crate::model::partition::{logical_param_name, partition_net};
@@ -83,6 +83,14 @@ pub struct JobConf {
     /// 0 = pure per-layer buckets; `usize::MAX` = a single bucket (the
     /// sequential degenerate case).
     pub bucket_coalesce_bytes: usize,
+    /// Wire codec for the steady-state parameter exchange: flush buckets
+    /// (gradients up, fresh values down) are encoded per chunk with a
+    /// quantization scale, with an error-feedback residual per slot so the
+    /// gradient compression error is re-injected into the next flush (see
+    /// [`crate::comm::codec`]). [`Codec::Raw`] (the default) is
+    /// bit-identical to the uncompressed plane in values AND in byte
+    /// accounting; f16/int8 shrink the modeled wire ~2×/~4×.
+    pub wire_codec: Codec,
     /// Log every n-th iteration; 0 logs only the final step.
     pub log_every: u64,
     /// Warm-up: group 0 trains alone for this many iterations before the
@@ -132,6 +140,7 @@ impl JobConf {
             cost: CostModel::numa_server(),
             overlap_exchange: true,
             bucket_coalesce_bytes: 4096,
+            wire_codec: Codec::Raw,
             log_every: 1,
             warmup_iters: 0,
             alloc_probe_from: None,

@@ -18,6 +18,7 @@
 //! historical recipe, so sequential and overlapped exchanges are
 //! bit-identical.
 
+use crate::comm::codec::{self, Codec};
 use crate::comm::Msg;
 use crate::model::partition::{bucket_slots, logical_slot_map};
 use crate::model::NeuralNet;
@@ -42,11 +43,12 @@ pub struct SlotInfo {
 pub struct BucketSpec {
     /// Slot indices covered, ascending (a contiguous range).
     pub slots: Vec<usize>,
-    /// Update+response wire bytes of one steady-state flush
-    /// ([`Msg::exchange_wire_size`] summed over the slots).
+    /// Update+response wire bytes of one steady-state flush under the
+    /// plan's codec ([`Msg::exchange_wire_size_coded`] summed over the
+    /// slots; `Codec::Raw` reproduces the historical charge exactly).
     pub flush_bytes: usize,
-    /// Initial-fetch wire bytes (value × replicas, the historical
-    /// per-replica fetch charge).
+    /// Initial-fetch wire bytes (encoded value × replicas; the historical
+    /// per-replica fetch charge under `Codec::Raw`).
     pub fetch_bytes: usize,
     /// Param-bearing nodes contributing gradients, ascending — their
     /// count is the per-step completion target for the backward hook, and
@@ -62,6 +64,16 @@ pub struct BucketSpec {
 pub struct BucketBuf {
     pub sums: Vec<Blob>,
     pub fresh: Vec<Blob>,
+    /// Per-slot error-feedback residuals (quantization error carried into
+    /// the next flush). Empty under `Codec::Raw`.
+    pub residual: Vec<Blob>,
+    /// Per-slot decoded-gradient scratch — the dequantized payload the
+    /// server's updater consumes. Empty under `Codec::Raw`.
+    pub dec: Vec<Blob>,
+    /// Encoded-chunk scratch, reserved at construction to the bucket's
+    /// largest slot so steady-state encodes never grow it. Empty under
+    /// `Codec::Raw`.
+    pub enc: Vec<u8>,
     /// Completed exchanges, counted relative to the exchange's start step
     /// `b` (0 for a fresh job; the resume step after a worker-group
     /// restart): the initial prefetch publishes epoch 1, the flush of step
@@ -89,6 +101,9 @@ pub struct ExchangePlan {
     /// collecting the whole net's param list per flush.
     pub node_actions: Vec<Vec<(usize, bool)>>,
     pub buckets: Vec<BucketSpec>,
+    /// Wire codec every flush/fetch of this plan encodes with (and the
+    /// codec its `flush_bytes`/`fetch_bytes` were computed under).
+    pub codec: Codec,
 }
 
 /// The mutable bucket buffers, shared between the worker thread and its
@@ -101,14 +116,30 @@ pub struct BucketStore {
 /// THE prefetch recipe for one bucket — fill its fresh slots from the
 /// server and publish epoch 1. The single definition shared by the comm
 /// driver (overlap mode) and the inline sequential fetch, so the two modes
-/// cannot drift apart.
+/// cannot drift apart. Under a quantizing codec the value crosses the
+/// modeled wire encoded: the worker adopts what a receiver would decode,
+/// and the ledger is charged the compressed response size.
 pub fn fill_fresh(plan: &ExchangePlan, store: &BucketStore, sg: &ServerGroup, b: usize) {
     let (mx, cv) = &store.bufs[b];
     let mut buf = mx.lock().unwrap();
+    let BucketBuf { fresh, enc, epoch, .. } = &mut *buf;
     for (i, &s) in plan.buckets[b].slots.iter().enumerate() {
-        sg.get_into(&plan.slots[s].logical, &mut buf.fresh[i]);
+        let info = &plan.slots[s];
+        match plan.codec {
+            Codec::Raw => {
+                sg.get_into(&info.logical, &mut fresh[i]);
+            }
+            coded => {
+                let down = Msg::HEADER + coded.wire_bytes(info.byte_size);
+                sg.get_into_sized(&info.logical, &mut fresh[i], down);
+                coded.encode_into(fresh[i].data(), enc);
+                coded
+                    .decode_into(enc, fresh[i].data_mut())
+                    .expect("self-encoded value chunk must decode");
+            }
+        }
     }
-    buf.epoch = 1;
+    *epoch = 1;
     cv.notify_all();
 }
 
@@ -119,6 +150,14 @@ pub fn fill_fresh(plan: &ExchangePlan, store: &BucketStore, sg: &ServerGroup, b:
 /// single definition shared by the comm driver and the sequential
 /// exchange: the bit-identity contract between the two modes reduces to
 /// "same aggregation + same `apply_flush`".
+///
+/// Under a quantizing codec each slot runs the error-feedback encode
+/// ([`codec::feedback_encode`]): the residual carried from the previous
+/// flush is added to the aggregated gradient, the compensated gradient is
+/// encoded, the server's updater consumes the *decoded* payload, and the
+/// fresh quantization error is stored back for the next flush. The fresh
+/// value returns as an encoded chunk too; ledger charges use the
+/// compressed chunk sizes. `Codec::Raw` is the historical body, untouched.
 pub fn apply_flush(
     plan: &ExchangePlan,
     store: &BucketStore,
@@ -129,9 +168,31 @@ pub fn apply_flush(
 ) {
     let (mx, cv) = &store.bufs[b];
     let mut buf = mx.lock().unwrap();
-    let BucketBuf { sums, fresh, epoch, .. } = &mut *buf;
+    let BucketBuf { sums, fresh, residual, dec, enc, epoch, .. } = &mut *buf;
     for (i, &s) in plan.buckets[b].slots.iter().enumerate() {
-        sg.update_into(&plan.slots[s].logical, &sums[i], step, &mut fresh[i]);
+        let info = &plan.slots[s];
+        match plan.codec {
+            Codec::Raw => {
+                sg.update_into(&info.logical, &sums[i], step, &mut fresh[i]);
+            }
+            coded => {
+                codec::feedback_encode(
+                    coded,
+                    sums[i].data_mut(),
+                    residual[i].data_mut(),
+                    enc,
+                    dec[i].data_mut(),
+                );
+                let chunk = coded.wire_bytes(info.byte_size);
+                let up = Msg::HEADER + info.logical.len() + chunk;
+                let down = Msg::HEADER + chunk;
+                sg.update_into_sized(&info.logical, &dec[i], step, &mut fresh[i], up, down);
+                coded.encode_into(fresh[i].data(), enc);
+                coded
+                    .decode_into(enc, fresh[i].data_mut())
+                    .expect("self-encoded value chunk must decode");
+            }
+        }
     }
     *epoch = step - base + 2;
     cv.notify_all();
@@ -150,8 +211,11 @@ impl ParamWorkspace {
     /// list and size the aggregation/fresh buffers. The net's param order
     /// must stay stable for the workspace's lifetime (it is: the layer
     /// graph is fixed after `build`). `coalesce_bytes` is the bucket
-    /// coalescing threshold (see [`bucket_slots`]).
-    pub fn new(net: &NeuralNet, coalesce_bytes: usize) -> ParamWorkspace {
+    /// coalescing threshold (see [`bucket_slots`]); `wire_codec` selects
+    /// the flush-bucket encoding — residual slots and encode/decode
+    /// scratch are sized here, so compression adds zero steady-state Blob
+    /// allocations.
+    pub fn new(net: &NeuralNet, coalesce_bytes: usize, wire_codec: Codec) -> ParamWorkspace {
         let params = net.params();
         let names: Vec<&str> = params.iter().map(|p| p.name.as_str()).collect();
         let (logicals, param_slot) = logical_slot_map(&names);
@@ -195,8 +259,8 @@ impl ParamWorkspace {
             for (pos, &s) in spec.slots.iter().enumerate() {
                 slot_bucket[s] = b;
                 slot_pos[s] = pos;
-                spec.flush_bytes += Msg::exchange_wire_size(slots[s].byte_size);
-                spec.fetch_bytes += slots[s].byte_size * slots[s].replicas;
+                spec.flush_bytes += Msg::exchange_wire_size_coded(wire_codec, slots[s].byte_size);
+                spec.fetch_bytes += wire_codec.wire_bytes(slots[s].byte_size) * slots[s].replicas;
             }
             buckets.push(spec);
         }
@@ -236,13 +300,30 @@ impl ParamWorkspace {
                     sums[i].resize(shapes[s]);
                     fresh[i].resize(shapes[s]);
                 }
-                let buf = BucketBuf { sums, fresh, epoch: 0, finish_virt_us: 0.0 };
+                let (mut residual, mut dec) = (Vec::new(), Vec::new());
+                let mut enc = Vec::new();
+                if wire_codec != Codec::Raw {
+                    residual = spec.slots.iter().map(|&s| Blob::zeros(shapes[s])).collect();
+                    dec = spec.slots.iter().map(|&s| Blob::zeros(shapes[s])).collect();
+                    let max_elems =
+                        spec.slots.iter().map(|&s| slots[s].byte_size / 4).max().unwrap_or(0);
+                    enc.reserve(wire_codec.encoded_len(max_elems));
+                }
+                let buf =
+                    BucketBuf { sums, fresh, residual, dec, enc, epoch: 0, finish_virt_us: 0.0 };
                 (Mutex::new(buf), Condvar::new())
             })
             .collect();
 
         ParamWorkspace {
-            plan: Arc::new(ExchangePlan { slots, param_slot, node_bucket, node_actions, buckets }),
+            plan: Arc::new(ExchangePlan {
+                slots,
+                param_slot,
+                node_bucket,
+                node_actions,
+                buckets,
+                codec: wire_codec,
+            }),
             store: Arc::new(BucketStore { bufs }),
         }
     }
@@ -352,7 +433,7 @@ mod tests {
             sum.scale(1.0 / *count as f32);
         }
 
-        let ws = ParamWorkspace::new(&net, 0);
+        let ws = ParamWorkspace::new(&net, 0, Codec::Raw);
         for b in 0..ws.nbuckets() {
             ws.aggregate_bucket(&net, b);
         }
@@ -377,7 +458,7 @@ mod tests {
     #[test]
     fn steady_state_aggregation_is_allocation_free() {
         let net = partitioned_mlp(2);
-        let ws = ParamWorkspace::new(&net, 0);
+        let ws = ParamWorkspace::new(&net, 0, Codec::Raw);
         for b in 0..ws.nbuckets() {
             ws.aggregate_bucket(&net, b); // warm (already sized)
         }
@@ -397,7 +478,7 @@ mod tests {
     #[test]
     fn bucket_layout_on_partitioned_net() {
         let net = partitioned_mlp(3);
-        let ws = ParamWorkspace::new(&net, 0);
+        let ws = ParamWorkspace::new(&net, 0, Codec::Raw);
         let plan = ws.plan();
         // Two logical layers with params (h1, logits) → two buckets.
         assert_eq!(ws.nbuckets(), 2);
@@ -419,7 +500,7 @@ mod tests {
             assert_eq!(plan.node_actions[i].len(), nparams);
         }
         // Coalescing everything yields the single-bucket degenerate case.
-        let one = ParamWorkspace::new(&net, usize::MAX);
+        let one = ParamWorkspace::new(&net, usize::MAX, Codec::Raw);
         assert_eq!(one.nbuckets(), 1);
         assert_eq!(one.plan().buckets[0].node_list.len(), 6);
     }
@@ -430,7 +511,7 @@ mod tests {
     #[test]
     fn bucket_wire_bytes_match_historical_formulas() {
         let net = partitioned_mlp(2);
-        let ws = ParamWorkspace::new(&net, usize::MAX);
+        let ws = ParamWorkspace::new(&net, usize::MAX, Codec::Raw);
         let spec = &ws.plan().buckets[0];
         let want_flush: usize =
             ws.slots().iter().map(|s| 2 * s.byte_size + 128).sum();
@@ -438,5 +519,38 @@ mod tests {
             ws.slots().iter().map(|s| s.byte_size * s.replicas).sum();
         assert_eq!(spec.flush_bytes, want_flush);
         assert_eq!(spec.fetch_bytes, want_fetch);
+    }
+
+    /// Under a quantizing codec the plan's wire accounting uses the
+    /// encoded chunk sizes ([`Msg::exchange_wire_size_coded`] per slot for
+    /// flushes, `wire_bytes × replicas` for fetches), and the scratch
+    /// buffers (residual, dec, enc) are sized at construction.
+    #[test]
+    fn coded_bucket_wire_bytes_match_codec_formulas() {
+        let net = partitioned_mlp(2);
+        for codec in [Codec::F16, Codec::Int8] {
+            let ws = ParamWorkspace::new(&net, usize::MAX, codec);
+            let spec = &ws.plan().buckets[0];
+            let want_flush: usize = ws
+                .slots()
+                .iter()
+                .map(|s| Msg::exchange_wire_size_coded(codec, s.byte_size))
+                .sum();
+            let want_fetch: usize =
+                ws.slots().iter().map(|s| codec.wire_bytes(s.byte_size) * s.replicas).sum();
+            assert_eq!(spec.flush_bytes, want_flush, "{} flush", codec.name());
+            assert_eq!(spec.fetch_bytes, want_fetch, "{} fetch", codec.name());
+            // Coded plans get per-slot residual + decode scratch and an
+            // encode buffer big enough for the largest slot.
+            let buf = ws.store().bufs[0].0.lock().unwrap();
+            assert_eq!(buf.residual.len(), spec.slots.len());
+            assert_eq!(buf.dec.len(), spec.slots.len());
+            let max_elems = ws.slots().iter().map(|s| s.byte_size / 4).max().unwrap();
+            assert!(buf.enc.capacity() >= codec.encoded_len(max_elems));
+        }
+        // Raw plans carry no codec scratch at all.
+        let raw = ParamWorkspace::new(&net, usize::MAX, Codec::Raw);
+        let buf = raw.store().bufs[0].0.lock().unwrap();
+        assert!(buf.residual.is_empty() && buf.dec.is_empty() && buf.enc.capacity() == 0);
     }
 }

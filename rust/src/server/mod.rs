@@ -203,6 +203,28 @@ impl ServerGroup {
         version
     }
 
+    /// [`ServerGroup::update_into`] with caller-supplied wire charges — the
+    /// codec path: `grad` is the *decoded* (dequantized) payload the
+    /// updater consumes, while the ledger is charged the compressed
+    /// request/response bytes that actually crossed the modeled wire.
+    pub fn update_into_sized(
+        &self,
+        name: &str,
+        grad: &Blob,
+        step: u64,
+        value_out: &mut Blob,
+        up_bytes: usize,
+        down_bytes: usize,
+    ) -> u64 {
+        self.ledger.add_param(up_bytes);
+        let version = self.shards[self.shard_of(name)]
+            .lock()
+            .unwrap()
+            .update_into(name, grad, step, value_out);
+        self.ledger.add_param(down_bytes);
+        version
+    }
+
     /// Fetch the current value and version. Allocating wrapper over
     /// [`ServerGroup::get_into`].
     pub fn get(&self, name: &str) -> (Blob, u64) {
@@ -217,6 +239,17 @@ impl ServerGroup {
         let version =
             self.shards[self.shard_of(name)].lock().unwrap().get_into(name, value_out);
         self.ledger.add_param(Msg::response_wire_size(value_out));
+        version
+    }
+
+    /// [`ServerGroup::get_into`] with a caller-supplied response charge —
+    /// the codec path: the value comes back as an encoded chunk, so the
+    /// ledger sees its compressed size instead of the full f32 payload.
+    pub fn get_into_sized(&self, name: &str, value_out: &mut Blob, down_bytes: usize) -> u64 {
+        self.ledger.add_param(Msg::get_wire_size(name));
+        let version =
+            self.shards[self.shard_of(name)].lock().unwrap().get_into(name, value_out);
+        self.ledger.add_param(down_bytes);
         version
     }
 

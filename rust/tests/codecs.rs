@@ -1,0 +1,413 @@
+//! Codec test matrix for the wire-compressed parameter plane: per-codec
+//! roundtrip error bounds on adversarial buckets, the error-feedback
+//! accumulation contract (residuals keep the decoded running sum on the
+//! uncompressed trajectory; dropping them visibly drifts), hardened decode
+//! of corrupt chunks, and full `run_job` pins — explicit `Codec::Raw`
+//! bit-identical to the default exchange, f16/int8 overlap-vs-sequential
+//! bitwise, compressed training convergence, zero steady-state Blob
+//! allocations with compression armed, and honest ledger shrink.
+//!
+//! CI runs this suite under `PALLAS_NUM_THREADS=1` and `=4`.
+
+use singa::comm::codec::{self, Codec, CHUNK_HEADER};
+use singa::coordinator::{run_job, JobConf, JobReport};
+use singa::data::{DataSource, SyntheticDigits};
+use singa::model::layer::{Activation, LayerConf, LayerKind};
+use singa::model::NetBuilder;
+use singa::updater::UpdaterConf;
+use singa::utils::quickcheck::{forall, prop_assert, Gen, PropResult};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// Satellite 1: property tests — roundtrip error bounds on edge buckets
+// ---------------------------------------------------------------------------
+
+/// Generate one bucket, biased toward the quantizer's hard cases: all-zero,
+/// single-element, constant-value, subnormal-magnitude, and ±huge chunks
+/// alongside plain gaussian noise.
+fn gen_bucket(g: &mut Gen) -> Vec<f32> {
+    let n = g.usize(1, 64);
+    match *g.choose(&["random", "zero", "single", "constant", "subnormal", "huge"]) {
+        "random" => g.gaussian_vec(n, 1.0),
+        "zero" => vec![0.0; n],
+        "single" => {
+            let mut v = vec![0.0; n];
+            let j = g.usize(0, n - 1);
+            v[j] = g.f32(-5.0, 5.0);
+            v
+        }
+        "constant" => vec![g.f32(-3.0, 3.0); n],
+        "subnormal" => g.f32_vec(n, -1e-41, 1e-41),
+        "huge" => g.f32_vec(n, -1e38, 1e38),
+        other => unreachable!("unknown bucket kind {other}"),
+    }
+}
+
+/// Per-codec absolute error bound for one bucket: f16 errors stay under
+/// `max_abs / 1000` (the binary16 relative step after normalization is
+/// 2^-11), int8 under `max_abs / 100` (half a quantization step is
+/// `max_abs / 254`); the additive slack covers subnormal-scale precision
+/// loss and underflow-to-zero chunks.
+fn roundtrip_atol(codec: Codec, src: &[f32]) -> f32 {
+    let max_abs = src.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    match codec {
+        Codec::Raw => 0.0,
+        Codec::F16 => max_abs / 1000.0 + 1e-41,
+        Codec::Int8 => max_abs / 100.0 + 1e-41,
+    }
+}
+
+#[test]
+fn quantizing_roundtrip_stays_within_per_codec_bounds() {
+    forall(300, |g| {
+        let src = gen_bucket(g);
+        let mut enc = Vec::new();
+        let mut dec = vec![0.0f32; src.len()];
+        for codec in [Codec::F16, Codec::Int8] {
+            codec.encode_into(&src, &mut enc);
+            prop_assert(
+                enc.len() == codec.encoded_len(src.len()),
+                &format!("{}: encoded length", codec.name()),
+            )?;
+            codec
+                .decode_into(&enc, &mut dec)
+                .map_err(|e| format!("{}: decode failed: {e}", codec.name()))?;
+            let atol = roundtrip_atol(codec, &src);
+            for (i, (&x, &y)) in src.iter().zip(&dec).enumerate() {
+                prop_assert(
+                    (x - y).abs() <= atol,
+                    &format!(
+                        "{} idx {i}: {x} decoded as {y} (atol {atol}, n={})",
+                        codec.name(),
+                        src.len()
+                    ),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn raw_roundtrip_is_bitwise() {
+    forall(300, |g| -> PropResult {
+        let src = gen_bucket(g);
+        let mut enc = Vec::new();
+        let mut dec = vec![0.0f32; src.len()];
+        Codec::Raw.encode_into(&src, &mut enc);
+        Codec::Raw.decode_into(&enc, &mut dec).map_err(|e| format!("raw decode: {e}"))?;
+        for (i, (&x, &y)) in src.iter().zip(&dec).enumerate() {
+            prop_assert(
+                x.to_bits() == y.to_bits(),
+                &format!("raw idx {i}: {x:?} -> {y:?} not bitwise"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// The all-zero chunk is the scale-0 sentinel: every codec must decode it
+/// to exact zeros (not NaN from a 0/0 normalization).
+#[test]
+fn all_zero_bucket_decodes_to_exact_zeros() {
+    let src = [0.0f32; 17];
+    let mut enc = Vec::new();
+    let mut dec = [1.0f32; 17];
+    for codec in [Codec::Raw, Codec::F16, Codec::Int8] {
+        codec.encode_into(&src, &mut enc);
+        codec.decode_into(&enc, &mut dec).unwrap();
+        assert!(dec.iter().all(|&v| v == 0.0), "{}: zeros in, zeros out", codec.name());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Satellite 2: error feedback keeps the decoded running sum on track
+// ---------------------------------------------------------------------------
+
+/// Feed the same gradient bucket through int8 for 200 steps. With error
+/// feedback ([`codec::feedback_encode`] — the exact recipe the comm path
+/// runs) the sum of decoded gradients telescopes to the true running sum
+/// minus one bounded residual. Without feedback, the element sitting
+/// between two quantization levels (0.0042 ≈ 0.53 steps) picks up the same
+/// rounding bias every step and drifts linearly.
+#[test]
+fn int8_error_feedback_tracks_uncompressed_running_sum() {
+    let grad = [1.0f32, 0.0042, -0.0042, 0.5];
+    let steps = 200u32;
+
+    let mut residual = [0.0f32; 4];
+    let mut dec = [0.0f32; 4];
+    let mut enc = Vec::new();
+    let mut sum_fb = [0.0f64; 4];
+    for _ in 0..steps {
+        let mut g = grad;
+        codec::feedback_encode(Codec::Int8, &mut g, &mut residual, &mut enc, &mut dec);
+        for (s, &d) in sum_fb.iter_mut().zip(&dec) {
+            *s += d as f64;
+        }
+    }
+
+    let mut sum_nf = [0.0f64; 4];
+    let mut plain = [0.0f32; 4];
+    for _ in 0..steps {
+        Codec::Int8.encode_into(&grad, &mut enc);
+        Codec::Int8.decode_into(&enc, &mut plain).unwrap();
+        for (s, &d) in sum_nf.iter_mut().zip(&plain) {
+            *s += d as f64;
+        }
+    }
+
+    // With feedback: |sum error| = |final residual| ≤ half a quantization
+    // step of the compensated gradient (≈ max_abs / 254).
+    for i in 0..4 {
+        let want = grad[i] as f64 * steps as f64;
+        let err = (sum_fb[i] - want).abs();
+        assert!(err <= 0.016, "element {i}: feedback sum error {err} after {steps} steps");
+    }
+
+    // Without feedback: the biased element drifts by ~0.0037/step.
+    let want1 = grad[1] as f64 * steps as f64;
+    let err_fb = (sum_fb[1] - want1).abs();
+    let err_nf = (sum_nf[1] - want1).abs();
+    assert!(err_nf > 0.3, "expected visible drift without feedback, got {err_nf}");
+    assert!(
+        err_nf > 10.0 * err_fb.max(1e-6),
+        "feedback must beat plain quantization by an order of magnitude: \
+         {err_fb} (fb) vs {err_nf} (none)"
+    );
+}
+
+/// Error feedback never lets the residual grow without bound: after any
+/// number of steps of a random (but fixed) gradient, the residual stays
+/// under one quantization step of the compensated gradient.
+#[test]
+fn error_feedback_residual_stays_bounded() {
+    forall(50, |g| -> PropResult {
+        let grad = g.gaussian_vec(g.usize(1, 32), 1.0);
+        let max_abs = grad.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let mut residual = vec![0.0f32; grad.len()];
+        let mut dec = vec![0.0f32; grad.len()];
+        let mut enc = Vec::new();
+        for _ in 0..50 {
+            let mut step = grad.clone();
+            codec::feedback_encode(Codec::Int8, &mut step, &mut residual, &mut enc, &mut dec);
+        }
+        // Compensated max_abs ≤ max_abs + bound; one step ≈ that / 127.
+        let bound = (max_abs + 0.1) / 100.0 + 1e-41;
+        for (i, &r) in residual.iter().enumerate() {
+            prop_assert(
+                r.abs() <= bound,
+                &format!("residual {i} grew to {r} (bound {bound}, max_abs {max_abs})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Satellite 3: hardened decode — corrupt chunks are errors, not panics
+// ---------------------------------------------------------------------------
+
+/// Every corruption mode returns an error naming the offending field, for
+/// every codec — mirroring the checkpoint reader's hardening.
+#[test]
+fn corrupt_chunks_error_instead_of_panicking() {
+    let src = [0.25f32, -1.5, 3.0, 0.0, 0.75, -0.125];
+    for codec in [Codec::Raw, Codec::F16, Codec::Int8] {
+        let name = codec.name();
+        let mut enc = Vec::new();
+        codec.encode_into(&src, &mut enc);
+        let mut dst = [0.0f32; 6];
+
+        // Truncated header.
+        let err = codec.decode_into(&enc[..4], &mut dst).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{name}: {err}");
+
+        // Short payload (one byte missing).
+        let err = codec.decode_into(&enc[..enc.len() - 1], &mut dst).unwrap_err();
+        assert!(err.to_string().contains("payload"), "{name}: {err}");
+
+        // NaN scale.
+        let mut bad = enc.clone();
+        bad[1..5].copy_from_slice(&f32::NAN.to_le_bytes());
+        let err = codec.decode_into(&bad, &mut dst).unwrap_err();
+        assert!(err.to_string().contains("not finite"), "{name}: {err}");
+
+        // Negative scale.
+        let mut bad = enc.clone();
+        bad[1..5].copy_from_slice(&(-1.0f32).to_le_bytes());
+        let err = codec.decode_into(&bad, &mut dst).unwrap_err();
+        assert!(err.to_string().contains("negative"), "{name}: {err}");
+
+        // Corrupt element count far past the MAX_ELEMS bound.
+        let mut bad = enc.clone();
+        bad[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = codec.decode_into(&bad, &mut dst).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{name}: {err}");
+
+        // Count / destination mismatch.
+        let mut short = [0.0f32; 5];
+        let err = codec.decode_into(&enc, &mut short).unwrap_err();
+        assert!(err.to_string().contains("does not match"), "{name}: {err}");
+
+        // Codec tag mismatch: a chunk encoded by one codec must be rejected
+        // by the others' decoders.
+        for other in [Codec::Raw, Codec::F16, Codec::Int8] {
+            if other == codec {
+                continue;
+            }
+            let err = other.decode_into(&enc, &mut dst).unwrap_err();
+            assert!(err.to_string().contains("tag"), "{name} vs {}: {err}", other.name());
+        }
+
+        // The pristine chunk still decodes after all that.
+        codec.decode_into(&enc, &mut dst).unwrap();
+    }
+}
+
+/// An empty buffer and a bare header are both truncation errors; a header
+/// with zero elements and an empty destination is valid.
+#[test]
+fn decode_boundary_sizes() {
+    let mut dst = [0.0f32; 0];
+    for codec in [Codec::Raw, Codec::F16, Codec::Int8] {
+        assert!(codec.decode_into(&[], &mut dst).is_err());
+        assert!(codec.decode_into(&[codec as u8], &mut dst).is_err());
+        let mut enc = Vec::new();
+        codec.encode_into(&[], &mut enc);
+        assert_eq!(enc.len(), CHUNK_HEADER);
+        codec.decode_into(&enc, &mut dst).unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end run_job pins
+// ---------------------------------------------------------------------------
+
+fn mlp(batch: usize, dim: usize, hidden: usize, classes: usize) -> NetBuilder {
+    NetBuilder::new()
+        .add(LayerConf::new("data", LayerKind::Input { shape: vec![batch, dim] }, &[]))
+        .add(LayerConf::new("label", LayerKind::Input { shape: vec![batch] }, &[]))
+        .add(LayerConf::new(
+            "h1",
+            LayerKind::InnerProduct { out: hidden, act: Activation::Relu, init_std: 0.1 },
+            &["data"],
+        ))
+        .add(LayerConf::new(
+            "logits",
+            LayerKind::InnerProduct { out: classes, act: Activation::Identity, init_std: 0.1 },
+            &["h1"],
+        ))
+        .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]))
+}
+
+fn digits() -> Arc<dyn DataSource> {
+    Arc::new(SyntheticDigits::new(64, 5, 77))
+}
+
+/// Compare two single-group runs bit for bit: (step, loss, metric)
+/// sequences and every server group's final replica.
+fn assert_reports_bitwise_equal(a: &JobReport, b: &JobReport) {
+    let (ra, rb) = (a.log.snapshot(), b.log.snapshot());
+    assert_eq!(ra.len(), rb.len(), "record count");
+    for (x, y) in ra.iter().zip(&rb) {
+        assert_eq!((x.group, x.step), (y.group, y.step));
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "step {}: loss diverged", x.step);
+        assert_eq!(x.metric.to_bits(), y.metric.to_bits(), "step {}: metric diverged", x.step);
+    }
+    assert_eq!(a.group_params.len(), b.group_params.len());
+    for (sg, (pa, pb)) in a.group_params.iter().zip(&b.group_params).enumerate() {
+        assert_eq!(pa.len(), pb.len(), "server group {sg}");
+        for (name, va) in pa {
+            let vb = pb.get(name).unwrap_or_else(|| panic!("missing param {name}"));
+            for (x, y) in va.data().iter().zip(vb.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "server group {sg} param {name}");
+            }
+        }
+    }
+}
+
+fn codec_run(codec: Codec, overlap: bool, iters: u64) -> JobReport {
+    let mut conf = JobConf::new("codec-e2e", mlp(16, 64, 32, 5));
+    conf.iters = iters;
+    conf.updater = UpdaterConf::sgd(0.1);
+    conf.wire_codec = codec;
+    conf.overlap_exchange = overlap;
+    conf.alloc_probe_from = Some(3);
+    run_job(&conf, digits())
+}
+
+/// The codec knob at its `raw` default is the historical exchange: an
+/// explicit `Codec::Raw` run is bit-identical to a run of the default
+/// configuration, in both exchange modes.
+#[test]
+fn explicit_raw_codec_matches_default_bitwise() {
+    for overlap in [false, true] {
+        let mut default_conf = JobConf::new("codec-e2e", mlp(16, 64, 32, 5));
+        default_conf.iters = 15;
+        default_conf.updater = UpdaterConf::sgd(0.1);
+        default_conf.overlap_exchange = overlap;
+        default_conf.alloc_probe_from = Some(3);
+        let default_run = run_job(&default_conf, digits());
+        let explicit = codec_run(Codec::Raw, overlap, 15);
+        assert_reports_bitwise_equal(&default_run, &explicit);
+    }
+}
+
+/// Sequential and overlapped exchanges stay bit-identical under the
+/// quantizing codecs: both route through the same per-slot error-feedback
+/// encode, and residuals are per-slot state, so bucket completion order
+/// cannot perturb them. The steady state stays allocation-free with
+/// compression armed — encode/decode scratch and residual slots were sized
+/// at workspace construction.
+#[test]
+fn compressed_overlap_matches_sequential_bitwise_and_alloc_free() {
+    for codec in [Codec::F16, Codec::Int8] {
+        let seq = codec_run(codec, false, 15);
+        let ovl = codec_run(codec, true, 15);
+        assert_reports_bitwise_equal(&seq, &ovl);
+        assert_eq!(seq.steady_allocs, vec![0], "{}: sequential steady allocs", codec.name());
+        assert_eq!(ovl.steady_allocs, vec![0], "{}: overlapped steady allocs", codec.name());
+    }
+}
+
+/// Compressed training still converges: error feedback re-injects the
+/// quantization error, so f16 and int8 runs reach the same quality band as
+/// the task demands (the digits MLP separates cleanly within 80 iters).
+#[test]
+fn compressed_training_converges() {
+    for codec in [Codec::F16, Codec::Int8] {
+        let report = codec_run(codec, true, 80);
+        for (g, f) in report.group_failures.iter().enumerate() {
+            assert!(f.is_none(), "group {g} failed: {f:?}");
+        }
+        let recs = report.log.snapshot();
+        let last = recs.iter().filter(|r| r.group == 0).last().expect("log records");
+        assert!(
+            last.metric > 0.7,
+            "{}: final metric {} after 80 iters must clear 0.7",
+            codec.name(),
+            last.metric
+        );
+    }
+}
+
+/// The ledger charges the compressed chunk sizes, not the raw payloads:
+/// parameter-plane bytes shrink by roughly the codec's element ratio
+/// (headers keep it off the ideal ½ / ¼), and strictly ordered
+/// int8 < f16 < raw.
+#[test]
+fn ledger_charges_shrink_with_compression() {
+    let raw = codec_run(Codec::Raw, true, 40).ledger.param_bytes();
+    let f16 = codec_run(Codec::F16, true, 40).ledger.param_bytes();
+    let int8 = codec_run(Codec::Int8, true, 40).ledger.param_bytes();
+    assert!(int8 < f16 && f16 < raw, "expected int8 < f16 < raw, got {int8} / {f16} / {raw}");
+    assert!(
+        (f16 as f64) < 0.65 * raw as f64,
+        "f16 must roughly halve the wire: {f16} vs raw {raw}"
+    );
+    assert!(
+        (int8 as f64) < 0.40 * raw as f64,
+        "int8 must roughly quarter the wire: {int8} vs raw {raw}"
+    );
+}

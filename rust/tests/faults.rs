@@ -16,7 +16,7 @@
 //! CI runs this suite under `PALLAS_NUM_THREADS=1` and `=4`.
 
 use singa::cluster::ClusterTopology;
-use singa::comm::FaultPlan;
+use singa::comm::{Codec, FaultPlan};
 use singa::coordinator::{run_job, CheckpointConf, JobConf, JobReport};
 use singa::data::{DataSource, SyntheticDigits};
 use singa::model::checkpoint::Checkpoint;
@@ -231,6 +231,70 @@ fn kill_at_step_zero_recovers() {
     assert_eq!(report.fault_events[0].resumed_at_step, 0);
     let steps: Vec<u64> = last_per_step(&report, 0).keys().copied().collect();
     assert_eq!(steps, (0..6).collect::<Vec<_>>());
+}
+
+/// Codec × fault interaction: a downpour group killed mid-run under
+/// `Codec::Int8` (quantized flushes with error feedback) still converges
+/// to the int8 fault-free loss band. The restarted group's residuals reset
+/// to zero — exactly what a real rejoining worker would do — so the pin is
+/// the convergence band, not bitwise equality.
+#[test]
+fn int8_midrun_kill_converges_to_fault_free_band() {
+    let run = |faults: FaultPlan| {
+        let mut conf = JobConf::new("fault-int8", mlp(16, 64, 32, 5));
+        conf.iters = 80;
+        conf.updater = UpdaterConf::sgd(0.1);
+        conf.topology = ClusterTopology::downpour(3, 1, 2);
+        conf.wire_codec = Codec::Int8;
+        conf.faults = faults;
+        run_job(&conf, digits())
+    };
+    let free = run(FaultPlan::none());
+    let faulted = run(FaultPlan::none().kill(1, 25).with_restart_latency_us(500_000.0));
+    healthy(&free);
+    healthy(&faulted);
+    assert_eq!(faulted.fault_events.len(), 1, "exactly one recovered kill");
+
+    let final_metric = |r: &JobReport| {
+        (0..3)
+            .map(|g| f32::from_bits(last_per_step(r, g).values().last().unwrap().1))
+            .fold(0.0f32, f32::max)
+    };
+    let (mf, mk) = (final_metric(&free), final_metric(&faulted));
+    assert!(mf > 0.7, "int8 fault-free run must converge: {mf}");
+    assert!(mk > 0.7, "int8 killed run must converge: {mk}");
+    assert!((mf - mk).abs() < 0.25, "kill left the int8 loss band: {mf} vs {mk}");
+}
+
+/// Codec × checkpoint restart: under an *explicit* `Codec::Raw` the
+/// kill-restore-replay path stays bit-identical to the uninterrupted run —
+/// the codec knob at its default must not perturb the PR 7 recovery
+/// contract.
+#[test]
+fn raw_codec_restart_from_checkpoint_stays_bitwise() {
+    let dir = std::env::temp_dir().join(format!("singa_faults_raw_codec_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut conf = JobConf::new("fault-raw-codec", mlp(16, 64, 32, 5));
+    conf.iters = 28;
+    conf.updater = UpdaterConf::sgd(0.2);
+    conf.wire_codec = Codec::Raw;
+
+    let baseline = run_job(&conf, digits());
+
+    conf.checkpoint = Some(CheckpointConf::every(8).with_dir(&dir));
+    conf.faults = FaultPlan::none().kill(0, 20).with_restart_latency_us(500_000.0);
+    let recovered = run_job(&conf, digits());
+    healthy(&baseline);
+    healthy(&recovered);
+
+    let (a, b) = (last_per_step(&baseline, 0), last_per_step(&recovered, 0));
+    assert_eq!(a.keys().collect::<Vec<_>>(), b.keys().collect::<Vec<_>>());
+    for (step, bits) in &a {
+        assert_eq!(bits, &b[step], "step {step} diverged after restart under raw codec");
+    }
+    assert_params_bitwise_equal(&baseline.params, &recovered.params);
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// Sandblaster straggler mitigation: a scheduled 50× straggler stretches

@@ -148,9 +148,9 @@ fn single_bucket_overlap_degenerates_to_sequential() {
     let builder = mlp(16, 64, 32, 5);
     {
         let net = builder.clone().build(&mut Rng::new(1));
-        assert_eq!(ParamWorkspace::new(&net, usize::MAX).nbuckets(), 1);
+        assert_eq!(ParamWorkspace::new(&net, usize::MAX, singa::comm::Codec::Raw).nbuckets(), 1);
         // Threshold 0: one bucket per param-bearing layer (h1, logits).
-        assert_eq!(ParamWorkspace::new(&net, 0).nbuckets(), 2);
+        assert_eq!(ParamWorkspace::new(&net, 0, singa::comm::Codec::Raw).nbuckets(), 2);
     }
     let mut conf = JobConf::new("ovl-one", builder);
     conf.iters = 12;

@@ -46,6 +46,14 @@ macro_rules! anyhow {
     };
 }
 
+/// `bail!("...")` — return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
 /// Attach context to an error, mirroring `anyhow::Context`.
 pub trait Context<T, E> {
     fn context<C: fmt::Display>(self, context: C) -> Result<T>;
@@ -85,6 +93,18 @@ mod tests {
         let e = fail().unwrap_err();
         assert_eq!(e.to_string(), "boom 7");
         assert_eq!(format!("{e:?}"), "boom 7");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("denied {}", 7);
+            }
+            Ok(3)
+        }
+        assert_eq!(f(false).unwrap(), 3);
+        assert_eq!(f(true).unwrap_err().to_string(), "denied 7");
     }
 
     #[test]
