@@ -1,0 +1,592 @@
+//! pallas-lint: repo-invariant static analysis for `rust/src`.
+//!
+//! A std-only, line-oriented scanner that machine-checks the invariants this
+//! repo previously kept only in comments and review habit:
+//!
+//! * **raw-sync** — `std::sync::{Mutex, Condvar}` may appear only in
+//!   `runtime/sync.rs`; everywhere else the rank-ordered wrappers
+//!   (`OrderedMutex` / `OrderedCondvar`) are mandatory so the lock-order
+//!   sanitizer sees every acquisition.
+//! * **alloc** — steady-state hot-path files (exchange driver, workspace,
+//!   server, wire codecs, tensor kernels) must not introduce allocation
+//!   tokens (`Blob::new(`, `vec![`, `.to_vec()`, `Vec::new(`) without a
+//!   waiver naming why the allocation is not on the steady-state path.
+//! * **panic** — hardened input paths (`comm/codec.rs`, `model/checkpoint.rs`,
+//!   `config/mod.rs`, `utils/json.rs`) must not call `.unwrap()` /
+//!   `.expect(` on malformed input; infallible uses carry a waiver.
+//! * **target-feature** — `#[target_feature]` functions and the `avx2::`
+//!   module are referenced only from `tensor/kernel.rs`, where runtime
+//!   detection gates every call.
+//! * **safety** — every `unsafe` block / `unsafe impl` carries a `// SAFETY:`
+//!   comment within the ten preceding lines (`unsafe fn` *declarations* are
+//!   contracts, not operations, and are enforced by
+//!   `#![deny(unsafe_op_in_unsafe_fn)]` instead).
+//!
+//! Waiver syntax: `// lint: <rule>-ok(reason)` on the offending line or the
+//! line directly above it. A waiver attached to a `fn` line covers the whole
+//! function body. `#[cfg(test)]` modules are skipped entirely.
+//!
+//! String literals and comments are stripped before token matching, so
+//! prose never trips a rule; waivers and `SAFETY:` markers are read from the
+//! raw lines. Exit status: 0 clean, 1 findings, 2 usage/IO error.
+
+use std::path::{Path, PathBuf};
+
+const ALL_RULES: &[&str] = &["raw-sync", "alloc", "panic", "target-feature", "safety"];
+
+/// Files where steady-state allocation tokens require a waiver.
+const HOT_ALLOC_FILES: &[&str] = &[
+    "coordinator/exchange.rs",
+    "coordinator/workspace.rs",
+    "server/mod.rs",
+    "comm/codec.rs",
+    "tensor/gemm.rs",
+    "tensor/conv.rs",
+    "tensor/ops.rs",
+    "tensor/kernel.rs",
+];
+
+/// Hardened never-panic-on-input files.
+const NO_PANIC_FILES: &[&str] =
+    &["comm/codec.rs", "model/checkpoint.rs", "config/mod.rs", "utils/json.rs"];
+
+/// The one file allowed to name raw `std::sync` primitives (it wraps them).
+const SYNC_EXEMPT_FILES: &[&str] = &["runtime/sync.rs"];
+
+/// The one file allowed to declare `#[target_feature]` fns or name `avx2::`.
+const TARGET_FEATURE_HOME: &str = "tensor/kernel.rs";
+
+const ALLOC_TOKENS: &[&str] = &["Blob::new(", "vec![", ".to_vec()", "Vec::new("];
+const PANIC_TOKENS: &[&str] = &[".unwrap()", ".expect("];
+const SYNC_WORDS: &[&str] = &["Mutex", "Condvar"];
+const TF_TOKENS: &[&str] = &["#[target_feature", "avx2::"];
+
+struct Finding {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    snippet: String,
+}
+
+fn main() {
+    let root = match std::env::args().nth(1) {
+        Some(p) => PathBuf::from(p),
+        None => Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src"),
+    };
+    match run(&root) {
+        Ok(findings) if findings.is_empty() => {
+            println!("pallas-lint: clean ({})", root.display());
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.snippet);
+            }
+            println!(
+                "pallas-lint: {} finding(s). Waive with `// lint: <rule>-ok(reason)` on the \
+                 line, the line above, or a `fn` line to cover that function.",
+                findings.len()
+            );
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("pallas-lint: error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    if files.is_empty() {
+        return Err(format!("no .rs files under {}", root.display()));
+    }
+    let mut findings = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        scan_file(&rel, &text, &mut findings);
+    }
+    Ok(findings)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().and_then(|x| x.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Scoped waiver: attached to a `fn` line, it covers until the function's
+/// closing brace.
+struct FnWaiver {
+    rule: &'static str,
+    base_depth: i64,
+    entered_body: bool,
+}
+
+fn scan_file(rel: &str, text: &str, out: &mut Vec<Finding>) {
+    let code = strip_noncode(text);
+    let raw_lines: Vec<&str> = text.lines().collect();
+    let code_lines: Vec<&str> = code.lines().collect();
+    let n = raw_lines.len().min(code_lines.len());
+
+    let hot = HOT_ALLOC_FILES.contains(&rel);
+    let no_panic = NO_PANIC_FILES.contains(&rel);
+    let sync_exempt = SYNC_EXEMPT_FILES.contains(&rel);
+    let tf_home = rel == TARGET_FEATURE_HOME;
+
+    let mut depth: i64 = 0;
+    let mut test_mod_close: Option<i64> = None;
+    let mut pending_cfg_test = false;
+    let mut fn_waivers: Vec<FnWaiver> = Vec::new();
+    let mut carried: Vec<&'static str> = Vec::new();
+
+    for i in 0..n {
+        let raw = raw_lines[i];
+        let cl = code_lines[i];
+        let depth_before = depth;
+        let opens = cl.bytes().filter(|&b| b == b'{').count() as i64;
+        let closes = cl.bytes().filter(|&b| b == b'}').count() as i64;
+        depth = depth_before + opens - closes;
+
+        // Waivers written on this raw line (comments included).
+        let mut here: Vec<&'static str> = Vec::new();
+        for &rule in ALL_RULES {
+            if raw.contains(&format!("lint: {rule}-ok(")) {
+                here.push(rule);
+            }
+        }
+        let mut effective: Vec<&'static str> = here.clone();
+        effective.extend(carried.iter().copied());
+        effective.extend(fn_waivers.iter().map(|w| w.rule));
+
+        // `#[cfg(test)] mod ... { }` bodies are out of scope for every rule.
+        if test_mod_close.is_none() {
+            if cl.contains("#[cfg(test)]") {
+                pending_cfg_test = true;
+            }
+            if pending_cfg_test {
+                if !find_word(cl, "mod").is_empty() {
+                    test_mod_close = Some(depth_before);
+                    pending_cfg_test = false;
+                } else if !cl.trim().is_empty() && !cl.trim_start().starts_with("#[") {
+                    // The cfg(test) attached to something other than a mod
+                    // (a fn, a use): stop waiting for one.
+                    pending_cfg_test = false;
+                }
+            }
+        }
+        let in_test = test_mod_close.is_some();
+
+        // A waiver attached to a `fn` line covers the whole function.
+        if (!here.is_empty() || !carried.is_empty()) && !find_word(cl, "fn").is_empty() {
+            for &rule in here.iter().chain(carried.iter()) {
+                if depth > depth_before {
+                    // Body opened on this line and is still open.
+                    fn_waivers.push(FnWaiver { rule, base_depth: depth_before, entered_body: true });
+                } else if depth == depth_before && opens == 0 {
+                    // Multi-line signature: body opens on a later line.
+                    fn_waivers.push(FnWaiver { rule, base_depth: depth_before, entered_body: false });
+                }
+                // One-line fn (opened and closed here): same-line coverage
+                // already applied; nothing outlives this line.
+            }
+        }
+
+        if !in_test {
+            let waived = |rule: &str| effective.iter().any(|&w| w == rule);
+            if !sync_exempt && !waived("raw-sync") {
+                for &w in SYNC_WORDS {
+                    if !find_word(cl, w).is_empty() {
+                        push(out, rel, i + 1, "raw-sync", raw);
+                        break;
+                    }
+                }
+            }
+            if hot && !waived("alloc") && ALLOC_TOKENS.iter().any(|t| cl.contains(t)) {
+                push(out, rel, i + 1, "alloc", raw);
+            }
+            if no_panic && !waived("panic") && PANIC_TOKENS.iter().any(|t| cl.contains(t)) {
+                push(out, rel, i + 1, "panic", raw);
+            }
+            if !tf_home
+                && !waived("target-feature")
+                && TF_TOKENS.iter().any(|t| cl.contains(t))
+            {
+                push(out, rel, i + 1, "target-feature", raw);
+            }
+            if !waived("safety") && has_unsafe_op(cl) {
+                let lo = i.saturating_sub(10);
+                let documented = raw_lines[lo..=i].iter().any(|l| l.contains("SAFETY:"));
+                if !documented {
+                    push(out, rel, i + 1, "safety", raw);
+                }
+            }
+        }
+
+        // Close the test module once its brace depth unwinds.
+        if let Some(d) = test_mod_close {
+            if depth <= d {
+                test_mod_close = None;
+            }
+        }
+        // Comment-only (or blank) lines carry their waivers to the next code
+        // line; a code line consumes them.
+        if cl.trim().is_empty() {
+            for &rule in &here {
+                if !carried.contains(&rule) {
+                    carried.push(rule);
+                }
+            }
+        } else {
+            carried.clear();
+        }
+        for w in fn_waivers.iter_mut() {
+            if depth > w.base_depth {
+                w.entered_body = true;
+            }
+        }
+        fn_waivers.retain(|w| !(w.entered_body && depth <= w.base_depth));
+    }
+}
+
+fn push(out: &mut Vec<Finding>, rel: &str, line: usize, rule: &'static str, raw: &str) {
+    let mut snippet: String = raw.trim().chars().take(120).collect();
+    if raw.trim().chars().count() > 120 {
+        snippet.push('…');
+    }
+    out.push(Finding { file: rel.to_string(), line, rule, snippet });
+}
+
+/// `unsafe` occurrences that are operations (blocks, `unsafe impl`), not
+/// `unsafe fn` declarations.
+fn has_unsafe_op(cl: &str) -> bool {
+    for at in find_word(cl, "unsafe") {
+        let rest = cl[at + "unsafe".len()..].trim_start();
+        let is_fn_decl = rest.starts_with("fn")
+            && rest[2..].chars().next().map(|c| !is_ident_char(c)).unwrap_or(true);
+        if !is_fn_decl {
+            return true;
+        }
+    }
+    false
+}
+
+fn is_ident_char(c: char) -> bool {
+    c == '_' || c.is_ascii_alphanumeric()
+}
+
+/// Byte offsets where `word` occurs with non-identifier characters (or line
+/// edges) on both sides.
+fn find_word(code: &str, word: &str) -> Vec<usize> {
+    let cb = code.as_bytes();
+    let mut hits = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_ident_byte(cb[at - 1]);
+        let after_ok = end >= cb.len() || !is_ident_byte(cb[end]);
+        if before_ok && after_ok {
+            hits.push(at);
+        }
+        from = at + word.len();
+    }
+    hits
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Replace string-literal contents and comments with spaces (newlines kept),
+/// so token matching only ever sees code. Handles line + nested block
+/// comments, plain/byte strings with escapes, raw strings `r#".."#`, and
+/// char literals vs lifetimes.
+fn strip_noncode(src: &str) -> String {
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(usize),
+    }
+    let b = src.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(b.len());
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            if matches!(st, St::LineComment) {
+                st = St::Code;
+            }
+            out.push(b'\n');
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == b'/' && b.get(i + 1) == Some(&b'/') {
+                    st = St::LineComment;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+                    st = St::BlockComment(1);
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'"' {
+                    st = St::Str;
+                    out.push(b'"');
+                    i += 1;
+                } else if let Some(hashes) = raw_string_open(b, i) {
+                    let skip = raw_prefix_len(b, i) + hashes + 1; // prefix + #s + quote
+                    for _ in 0..skip {
+                        out.push(b' ');
+                    }
+                    st = St::RawStr(hashes);
+                    i += skip;
+                } else if c == b'b' && b.get(i + 1) == Some(&b'"') && prev_not_ident(b, i) {
+                    out.extend_from_slice(b" \"");
+                    st = St::Str;
+                    i += 2;
+                } else if c == b'\'' {
+                    if let Some(end) = char_literal_end(b, i) {
+                        for _ in i..=end {
+                            out.push(b' ');
+                        }
+                        i = end + 1;
+                    } else {
+                        out.push(c); // lifetime tick
+                        i += 1;
+                    }
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                out.push(b' ');
+                i += 1;
+            }
+            St::BlockComment(d) => {
+                if c == b'*' && b.get(i + 1) == Some(&b'/') {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    st = if d == 1 { St::Code } else { St::BlockComment(d - 1) };
+                } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    st = St::BlockComment(d + 1);
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == b'\\' {
+                    // Preserve the newline of a `\`-continued string so raw
+                    // and stripped line numbering stay aligned.
+                    if b.get(i + 1) == Some(&b'\n') {
+                        out.extend_from_slice(b" \n");
+                    } else {
+                        out.extend_from_slice(b"  ");
+                    }
+                    i += 2;
+                } else if c == b'"' {
+                    out.push(b'"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == b'"' && b[i + 1..].iter().take(hashes).filter(|&&x| x == b'#').count() == hashes
+                {
+                    for _ in 0..=hashes {
+                        out.push(b' ');
+                    }
+                    i += 1 + hashes;
+                    st = St::Code;
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.truncate(b.len());
+    String::from_utf8(out).unwrap_or_default()
+}
+
+/// At `i` in code state: does a raw-string literal (`r"`, `r#"`, `br"`, …)
+/// open here? Returns the hash count.
+fn raw_string_open(b: &[u8], i: usize) -> Option<usize> {
+    if !prev_not_ident(b, i) {
+        return None;
+    }
+    let mut j = i;
+    if b.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+fn raw_prefix_len(b: &[u8], i: usize) -> usize {
+    if b.get(i) == Some(&b'b') {
+        2 // `br`
+    } else {
+        1 // `r`
+    }
+}
+
+fn prev_not_ident(b: &[u8], i: usize) -> bool {
+    i == 0 || !is_ident_byte(b[i - 1])
+}
+
+/// If a char literal opens at the `'` at `i`, return the index of its
+/// closing quote; `None` means it is a lifetime tick.
+fn char_literal_end(b: &[u8], i: usize) -> Option<usize> {
+    match b.get(i + 1) {
+        Some(&b'\\') => {
+            // Escaped: `'\n'`, `'\''`, `'\x41'`, `'\u{1F600}'` — the
+            // escaped char at i+2 is consumed, closing quote comes later.
+            (i + 3..=(i + 14).min(b.len().saturating_sub(1)))
+                .find(|&j| b[j] == b'\'')
+        }
+        Some(&ch) => {
+            if b.get(i + 2) == Some(&b'\'') {
+                Some(i + 2) // single-byte char
+            } else if ch >= 0x80 {
+                // A single multibyte char, closing within a few bytes.
+                (i + 2..=(i + 5).min(b.len().saturating_sub(1)))
+                    .find(|&j| b[j] == b'\'')
+            } else {
+                None // `'a` lifetime
+            }
+        }
+        None => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(rel: &str, text: &str) -> Vec<(usize, &'static str)> {
+        let mut out = Vec::new();
+        scan_file(rel, text, &mut out);
+        out.into_iter().map(|f| (f.line, f.rule)).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let code = strip_noncode("let x = \"Mutex\"; // Mutex here\n/* Mutex */ let y = 1;\n");
+        assert!(!code.contains("Mutex"), "{code}");
+        assert!(code.contains("let x ="));
+        assert!(code.contains("let y = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_are_stripped() {
+        let code = strip_noncode("let s = r#\"Mutex \" inner\"#; let c = '\"'; let d = 'x';\n");
+        assert!(!code.contains("Mutex"), "{code}");
+        assert!(!code.contains("inner"), "{code}");
+        assert!(code.contains("let d ="), "{code}");
+        // Lifetimes survive as code.
+        let code = strip_noncode("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert!(code.contains("<'a>"), "{code}");
+    }
+
+    #[test]
+    fn word_boundary_spares_wrapper_names() {
+        assert!(find_word("let m = OrderedMutex::new(1, \"s\", 0);", "Mutex").is_empty());
+        assert!(!find_word("use std::sync::Mutex;", "Mutex").is_empty());
+        assert!(find_word("MutexGuard", "Mutex").is_empty());
+    }
+
+    #[test]
+    fn raw_sync_rule_fires_outside_sync_module() {
+        let hits = scan("server/mod.rs", "use std::sync::Mutex;\n");
+        assert_eq!(hits, vec![(1, "raw-sync")]);
+        assert!(scan("runtime/sync.rs", "use std::sync::Mutex;\n").is_empty());
+        // Doc prose does not count.
+        assert!(scan("server/mod.rs", "/// a Mutex-shaped story\n").is_empty());
+    }
+
+    #[test]
+    fn alloc_rule_respects_waivers_and_tests() {
+        let src = "fn f() {\n    let v = vec![0u8; 4];\n}\n";
+        assert_eq!(scan("comm/codec.rs", src), vec![(2, "alloc")]);
+        assert!(scan("cluster/mod.rs", src).is_empty(), "non-hot file");
+        let waived = "fn f() {\n    let v = vec![0u8; 4]; // lint: alloc-ok(test scratch)\n}\n";
+        assert!(scan("comm/codec.rs", waived).is_empty());
+        let above = "fn f() {\n    // lint: alloc-ok(scratch)\n    let v = vec![0u8; 4];\n}\n";
+        assert!(scan("comm/codec.rs", above).is_empty());
+        let tests = "#[cfg(test)]\nmod tests {\n    fn f() { let v = vec![0u8; 4]; }\n}\n";
+        assert!(scan("comm/codec.rs", tests).is_empty());
+    }
+
+    #[test]
+    fn fn_scoped_waiver_covers_whole_body() {
+        let src = "fn build() -> V { // lint: alloc-ok(construction)\n    let a = Vec::new();\n    let b = vec![0; 3];\n    b\n}\nfn other() {\n    let c = Vec::new();\n}\n";
+        assert_eq!(scan("server/mod.rs", src), vec![(7, "alloc")]);
+    }
+
+    #[test]
+    fn panic_rule_only_in_hardened_files() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n";
+        assert_eq!(scan("utils/json.rs", src), vec![(2, "panic")]);
+        assert!(scan("tensor/gemm.rs", src).is_empty());
+        let waived = "fn f(x: Option<u8>) -> u8 {\n    // lint: panic-ok(checked above)\n    x.unwrap()\n}\n";
+        assert!(scan("utils/json.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn target_feature_rule_keeps_kernels_contained() {
+        let src = "fn f() { avx2::copy_span(p, q, n); }\n";
+        assert_eq!(scan("tensor/gemm.rs", src), vec![(1, "target-feature")]);
+        assert!(scan("tensor/kernel.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_needs_nearby_safety_comment() {
+        let bad = "fn f() {\n    unsafe { do_it() }\n}\n";
+        assert_eq!(scan("model/net.rs", bad), vec![(2, "safety")]);
+        let good = "fn f() {\n    // SAFETY: checked by caller.\n    unsafe { do_it() }\n}\n";
+        assert!(scan("model/net.rs", good).is_empty());
+        // Declarations are the compiler's job (unsafe_op_in_unsafe_fn).
+        let decl = "unsafe fn g() {}\n";
+        assert!(scan("model/net.rs", decl).is_empty());
+    }
+}

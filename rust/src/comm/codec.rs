@@ -184,6 +184,7 @@ impl Codec {
                 self.tag()
             );
         }
+        // lint: panic-ok(4-byte slice of a length-checked header is infallible)
         let scale = f32::from_le_bytes(src[1..5].try_into().unwrap());
         if !scale.is_finite() {
             bail!("chunk scale is not finite ({scale})");
@@ -191,6 +192,7 @@ impl Codec {
         if scale < 0.0 {
             bail!("chunk scale is negative ({scale})");
         }
+        // lint: panic-ok(4-byte slice of a length-checked header is infallible)
         let count = u32::from_le_bytes(src[5..9].try_into().unwrap()) as usize;
         if count > MAX_ELEMS {
             bail!("chunk element count {count} exceeds the {MAX_ELEMS} bound");
@@ -213,11 +215,13 @@ impl Codec {
         match self {
             Codec::Raw => {
                 for (d, c) in dst.iter_mut().zip(payload.chunks_exact(4)) {
+                    // lint: panic-ok(chunks_exact(4) yields 4-byte slices)
                     *d = f32::from_le_bytes(c.try_into().unwrap());
                 }
             }
             Codec::F16 => {
                 for (d, c) in dst.iter_mut().zip(payload.chunks_exact(2)) {
+                    // lint: panic-ok(chunks_exact(2) yields 2-byte slices)
                     let h = u16::from_le_bytes(c.try_into().unwrap());
                     *d = f16_bits_to_f32(h) * scale;
                 }
@@ -250,6 +254,7 @@ pub fn feedback_encode(
         *g += *r;
     }
     codec.encode_into(grad, enc);
+    // lint: panic-ok(round-trip of a buffer this call just encoded; a failure is a codec bug, not input)
     codec.decode_into(enc, dec).expect("self-encoded chunk must decode");
     for ((r, g), d) in residual.iter_mut().zip(grad.iter()).zip(dec.iter()) {
         *r = *g - *d;

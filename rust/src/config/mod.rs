@@ -166,4 +166,29 @@ mod tests {
         assert_eq!(conf.wire_codec, Codec::F16);
         assert!(parse_job(r#"{"model": "mlp", "wire_codec": "zip"}"#).is_err());
     }
+
+    #[test]
+    fn malformed_documents_error_instead_of_panicking() {
+        // Broken JSON surfaces the parse error with context, never a panic.
+        assert!(parse_job("").is_err());
+        assert!(parse_job("{").is_err());
+        assert!(parse_job(r#"{"model": "mlp", "batch": 1e}"#).is_err());
+        assert!(parse_job(r#"{"updater": {"algo": "sgd", "lr": }}"#).is_err());
+    }
+
+    #[test]
+    fn wrong_typed_fields_fall_back_to_defaults() {
+        // Fields of the wrong JSON type degrade to their defaults instead of
+        // panicking mid-parse; only semantically invalid values are errors.
+        let conf = parse_job(
+            r#"{"model": "mlp", "batch": "many", "iters": null,
+                "updater": {"algo": "sgd", "lr": "fast", "momentum": []},
+                "cluster": {"worker_groups": "two"}}"#,
+        )
+        .unwrap();
+        assert_eq!(conf.batch_size, 16);
+        assert_eq!(conf.iters, 100);
+        assert_eq!(conf.updater.lr, 0.1);
+        assert_eq!(conf.topology.nworker_groups, 1);
+    }
 }

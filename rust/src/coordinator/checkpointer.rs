@@ -13,9 +13,12 @@
 //! state — the property the bit-identical restart test pins.
 
 use crate::model::checkpoint::Checkpoint;
+use crate::runtime::sync::{
+    OrderedCondvar, OrderedMutex, RANK_CKPT_CHANNEL, RANK_CKPT_STATE, RANK_CKPT_WRITER,
+};
 use crate::server::ServerGroup;
 use std::path::PathBuf;
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc};
 
 /// Checkpoint cadence + durability knobs ([`super::JobConf::checkpoint`]).
 #[derive(Debug, Clone)]
@@ -64,10 +67,12 @@ struct State {
 /// Handle shared by the worker threads (request/recover) and `run_job`
 /// (shutdown). See the module docs for the protocol.
 pub struct Checkpointer {
-    state: Mutex<State>,
-    cv: Condvar,
-    tx: Mutex<Option<mpsc::Sender<u64>>>,
-    writer: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Ranked above the channel slot: [`Checkpointer::request`] holds `tx`
+    /// while bumping `requested` under `state`.
+    state: OrderedMutex<State>,
+    cv: OrderedCondvar,
+    tx: OrderedMutex<Option<mpsc::Sender<u64>>>,
+    writer: OrderedMutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl Checkpointer {
@@ -81,17 +86,21 @@ impl Checkpointer {
     ) -> Arc<Checkpointer> {
         let (tx, rx) = mpsc::channel::<u64>();
         let ck = Arc::new(Checkpointer {
-            state: Mutex::new(State {
-                requested: 0,
-                exported: 0,
-                completed: 0,
-                latest: None,
-                io_errors: Vec::new(),
-                writer_dead: false,
-            }),
-            cv: Condvar::new(),
-            tx: Mutex::new(Some(tx)),
-            writer: Mutex::new(None),
+            state: OrderedMutex::new(
+                RANK_CKPT_STATE,
+                "ckpt.state",
+                State {
+                    requested: 0,
+                    exported: 0,
+                    completed: 0,
+                    latest: None,
+                    io_errors: Vec::new(),
+                    writer_dead: false,
+                },
+            ),
+            cv: OrderedCondvar::new(),
+            tx: OrderedMutex::new(RANK_CKPT_CHANNEL, "ckpt.channel", Some(tx)),
+            writer: OrderedMutex::new(RANK_CKPT_WRITER, "ckpt.writer", None),
         });
         let me = ck.clone();
         let job = job.to_string();

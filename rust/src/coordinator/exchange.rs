@@ -148,7 +148,7 @@ impl GroupExchange {
         start_step: u64,
     ) -> GroupExchange {
         let ws = ParamWorkspace::new(net, conf.bucket_coalesce_bytes, conf.wire_codec);
-        let outstanding = vec![0usize; ws.nbuckets()];
+        let outstanding = vec![0usize; ws.nbuckets()]; // lint: alloc-ok(exchange construction, once per job)
         let comm_allocs = Arc::new(AtomicU64::new(0));
         let driver_dead = Arc::new(AtomicBool::new(false));
         let (tx, comm) = if conf.overlap_exchange {

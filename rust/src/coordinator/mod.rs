@@ -28,8 +28,9 @@ use crate::tensor::Blob;
 use crate::updater::UpdaterConf;
 use crate::utils::rng::Rng;
 use crate::utils::timer::Stopwatch;
+use crate::runtime::sync::{OrderedCondvar, OrderedMutex, RANK_WARMUP_GATE};
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use self::checkpointer::Checkpointer;
 pub use self::checkpointer::CheckpointConf;
 use self::exchange::GroupExchange;
@@ -158,13 +159,16 @@ impl JobConf {
 /// so a `warmup_iters >= iters` job (or a panicking group 0) can never
 /// strand the other groups.
 struct WarmupGate {
-    steps: Mutex<u64>,
-    cv: Condvar,
+    steps: OrderedMutex<u64>,
+    cv: OrderedCondvar,
 }
 
 impl WarmupGate {
     fn new() -> WarmupGate {
-        WarmupGate { steps: Mutex::new(0), cv: Condvar::new() }
+        WarmupGate {
+            steps: OrderedMutex::new(RANK_WARMUP_GATE, "warmup.gate", 0),
+            cv: OrderedCondvar::new(),
+        }
     }
 
     /// Group 0: publish `done` completed steps (monotone).

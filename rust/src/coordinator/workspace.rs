@@ -22,9 +22,10 @@ use crate::comm::codec::{self, Codec};
 use crate::comm::Msg;
 use crate::model::partition::{bucket_slots, logical_slot_map};
 use crate::model::NeuralNet;
+use crate::runtime::sync::{OrderedCondvar, OrderedMutex, RANK_WORKSPACE_BUCKET};
 use crate::server::ServerGroup;
 use crate::tensor::Blob;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 
 /// One logical parameter's routing record.
 pub struct SlotInfo {
@@ -109,8 +110,11 @@ pub struct ExchangePlan {
 /// The mutable bucket buffers, shared between the worker thread and its
 /// comm driver. One `(Mutex, Condvar)` pair per bucket: the next step's
 /// forward blocks per-bucket on the condvar, not on the whole exchange.
+/// The bucket lock ranks *below* the server route/shard locks —
+/// [`apply_flush`]/[`fill_fresh`] hold a bucket while calling into the
+/// server — and no two buckets are ever held together.
 pub struct BucketStore {
-    pub bufs: Vec<(Mutex<BucketBuf>, Condvar)>,
+    pub bufs: Vec<(OrderedMutex<BucketBuf>, OrderedCondvar)>,
 }
 
 /// THE prefetch recipe for one bucket — fill its fresh slots from the
@@ -215,7 +219,7 @@ impl ParamWorkspace {
     /// the flush-bucket encoding — residual slots and encode/decode
     /// scratch are sized here, so compression adds zero steady-state Blob
     /// allocations.
-    pub fn new(net: &NeuralNet, coalesce_bytes: usize, wire_codec: Codec) -> ParamWorkspace {
+    pub fn new(net: &NeuralNet, coalesce_bytes: usize, wire_codec: Codec) -> ParamWorkspace { // lint: alloc-ok(plan construction, once per job)
         let params = net.params();
         let names: Vec<&str> = params.iter().map(|p| p.name.as_str()).collect();
         let (logicals, param_slot) = logical_slot_map(&names);
@@ -311,7 +315,10 @@ impl ParamWorkspace {
                 }
                 let buf =
                     BucketBuf { sums, fresh, residual, dec, enc, epoch: 0, finish_virt_us: 0.0 };
-                (Mutex::new(buf), Condvar::new())
+                (
+                    OrderedMutex::new(RANK_WORKSPACE_BUCKET, "workspace.bucket", buf),
+                    OrderedCondvar::new(),
+                )
             })
             .collect();
 

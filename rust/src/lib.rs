@@ -16,6 +16,11 @@
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
+// Every unsafe operation must sit in an explicit `unsafe {}` block with its
+// own `// SAFETY:` justification, even inside `unsafe fn` — enforced here by
+// the compiler and cross-checked by `pallas_lint` (rule `unsafe-safety`).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod utils;
 pub mod tensor;
 pub mod model;

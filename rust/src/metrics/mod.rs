@@ -2,7 +2,7 @@
 //! groups, with both wall-clock and virtual-clock timestamps (the latter
 //! models the simulated deployment — see [`crate::comm::simnet`]).
 
-use std::sync::Mutex;
+use crate::runtime::sync::{OrderedMutex, RANK_METRICS_LOG};
 
 /// One logged training step.
 #[derive(Debug, Clone, PartialEq)]
@@ -18,14 +18,20 @@ pub struct Record {
 }
 
 /// Thread-safe append-only training log.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct TrainingLog {
-    records: Mutex<Vec<Record>>,
+    records: OrderedMutex<Vec<Record>>,
+}
+
+impl Default for TrainingLog {
+    fn default() -> TrainingLog {
+        TrainingLog::new()
+    }
 }
 
 impl TrainingLog {
     pub fn new() -> TrainingLog {
-        TrainingLog::default()
+        TrainingLog { records: OrderedMutex::new(RANK_METRICS_LOG, "metrics.log", Vec::new()) }
     }
 
     pub fn push(&self, r: Record) {

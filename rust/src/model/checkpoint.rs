@@ -76,6 +76,7 @@ impl Checkpoint {
     /// restoring a checkpoint they produced themselves (a mismatch is a
     /// bug, not an input error).
     pub fn restore(&self, net: &mut crate::model::NeuralNet) -> usize {
+        // lint: panic-ok(documented panicking convenience wrapper over try_restore)
         self.try_restore(net).expect("checkpoint restore failed")
     }
 

@@ -73,6 +73,7 @@
 pub mod device;
 pub mod manifest;
 pub mod pool;
+pub mod sync;
 pub mod xla_job;
 
 use crate::tensor::kernel::{simd_supported, KernelChoice, KernelKind};

@@ -43,9 +43,12 @@
 //! [`crate::runtime::threads`], nested parallelism degrades into queueing,
 //! not OS oversubscription.
 
+use crate::runtime::sync::{
+    OrderedCondvar, OrderedMutex, RANK_POOL_LATCH, RANK_POOL_STATE,
+};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Condvar, Mutex, OnceLock};
+use std::sync::OnceLock;
 
 /// One queued task: the erased closure, the task index to call it with,
 /// and the completion latch of the `run` call that enqueued it.
@@ -64,14 +67,18 @@ struct Job {
 /// The mutex also provides the happens-before edge that makes task writes
 /// (e.g. GEMM output stripes) visible to the caller after the wait.
 struct Latch {
-    remaining: Mutex<usize>,
-    cv: Condvar,
+    remaining: OrderedMutex<usize>,
+    cv: OrderedCondvar,
     panicked: AtomicBool,
 }
 
 impl Latch {
     fn new(n: usize) -> Latch {
-        Latch { remaining: Mutex::new(n), cv: Condvar::new(), panicked: AtomicBool::new(false) }
+        Latch {
+            remaining: OrderedMutex::new(RANK_POOL_LATCH, "pool.latch", n),
+            cv: OrderedCondvar::new(),
+            panicked: AtomicBool::new(false),
+        }
     }
 
     /// Mark one task finished. The final `done` must not touch the latch
@@ -104,16 +111,20 @@ struct PoolState {
 }
 
 struct Pool {
-    state: Mutex<PoolState>,
+    state: OrderedMutex<PoolState>,
     /// Parked workers wait here for the queue to become non-empty.
-    work_cv: Condvar,
+    work_cv: OrderedCondvar,
 }
 
 fn pool() -> &'static Pool {
     static POOL: OnceLock<Pool> = OnceLock::new();
     POOL.get_or_init(|| Pool {
-        state: Mutex::new(PoolState { queue: VecDeque::new(), workers: 0 }),
-        work_cv: Condvar::new(),
+        state: OrderedMutex::new(
+            RANK_POOL_STATE,
+            "pool.state",
+            PoolState { queue: VecDeque::new(), workers: 0 },
+        ),
+        work_cv: OrderedCondvar::new(),
     })
 }
 
@@ -202,7 +213,7 @@ impl Drop for HelpOnDrop<'_> {
 /// Execute `f(0..tasks)` across the persistent pool and block until every
 /// task finished. `f` may run concurrently on several threads (it must be
 /// `Sync`); per-task mutable state is typically handed out through a
-/// `Vec<Mutex<_>>` indexed by task — each slot is locked by exactly one
+/// `Vec<OrderedMutex<_>>` indexed by task — each slot is locked by exactly one
 /// task, so the locks are uncontended.
 ///
 /// `tasks <= 1` runs entirely on the caller thread, touching no pool
@@ -302,8 +313,11 @@ mod tests {
         let t = 4;
         {
             let chunk = data.len() / t;
-            let slots: Vec<Mutex<&mut [u32]>> =
-                data.chunks_mut(chunk).map(Mutex::new).collect();
+            use crate::runtime::sync::RANK_COMPUTE_STRIPE;
+            let slots: Vec<OrderedMutex<&mut [u32]>> = data
+                .chunks_mut(chunk)
+                .map(|s| OrderedMutex::new(RANK_COMPUTE_STRIPE, "pool.test.slot", s))
+                .collect();
             run(t, |tid| {
                 let mut s = slots[tid].try_lock().expect("task owns its slot");
                 for v in s.iter_mut() {

@@ -1,0 +1,690 @@
+//! Rank-ordered lock wrappers with an optional runtime lock-order sanitizer.
+//!
+//! Every blocking lock in the crate is an [`OrderedMutex`] (paired with
+//! [`OrderedCondvar`] where waiting is needed) carrying a **static rank** and
+//! a **per-lock ordering key**. The crate-wide invariant, previously asserted
+//! only in comments, is:
+//!
+//! > A thread may acquire a lock only if its rank is **strictly greater**
+//! > than every rank it already holds, or — for same-rank families that are
+//! > legitimately held together (server shards during `sync_with`) — its
+//! > ordering key is strictly greater than every held key of that rank.
+//!
+//! # Rank table
+//!
+//! Ascending rank = acquired later while other locks are held. The order is
+//! derived from the real nesting in the code (a workspace bucket is held
+//! across `ServerGroup::update_into`, which takes route then shard; the
+//! checkpointer holds its channel lock while publishing state), not from
+//! module layering:
+//!
+//! | rank | const                   | lock                                      |
+//! |------|-------------------------|-------------------------------------------|
+//! | 10   | `RANK_WORKSPACE_BUCKET` | `coordinator::workspace` bucket buffers   |
+//! | 20   | `RANK_SERVER_ROUTE`     | `server` shard routing table              |
+//! | 30   | `RANK_SERVER_SHARD`     | `server` parameter shards (keyed)         |
+//! | 40   | `RANK_CKPT_CHANNEL`     | checkpointer request channel slot         |
+//! | 50   | `RANK_CKPT_STATE`       | checkpointer published state              |
+//! | 55   | `RANK_CKPT_WRITER`      | checkpointer writer join-handle slot      |
+//! | 60   | `RANK_WARMUP_GATE`      | coordinator warm-up gate                  |
+//! | 70   | `RANK_METRICS_LOG`      | `metrics::TrainingLog` records            |
+//! | 80   | `RANK_POOL_STATE`       | `runtime::pool` queue state               |
+//! | 84   | `RANK_POOL_LATCH`       | `runtime::pool` per-dispatch latch        |
+//! | 90   | `RANK_COMPUTE_STRIPE`   | per-task output stripes (gemm/conv/tests) |
+//!
+//! # Arming
+//!
+//! The sanitizer is controlled by `PALLAS_SANITIZE`, resolved once:
+//!
+//! * unset — **on** in debug builds, **off** in release builds;
+//! * `0` / `off` — forced off (raw `std::sync` fast path: the only per-op
+//!   cost is two relaxed atomic loads and a predictable branch);
+//! * `1` / `on` — track held locks, panic on rank/key inversion or on a
+//!   cycle in the global site-pair acquisition graph, naming both sites;
+//! * `stress[:seed]` — everything `on` does, plus deterministic seeded
+//!   yields injected at acquire points to perturb thread schedules.
+//!
+//! Violations panic with both sites named, e.g.
+//! `acquiring `server.route` (rank 20) while holding `pool.latch` (rank 84)`.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Condvar, LockResult, Mutex, MutexGuard, OnceLock, PoisonError, TryLockError};
+
+pub const RANK_WORKSPACE_BUCKET: u16 = 10;
+pub const RANK_SERVER_ROUTE: u16 = 20;
+pub const RANK_SERVER_SHARD: u16 = 30;
+pub const RANK_CKPT_CHANNEL: u16 = 40;
+pub const RANK_CKPT_STATE: u16 = 50;
+pub const RANK_CKPT_WRITER: u16 = 55;
+pub const RANK_WARMUP_GATE: u16 = 60;
+pub const RANK_METRICS_LOG: u16 = 70;
+pub const RANK_POOL_STATE: u16 = 80;
+pub const RANK_POOL_LATCH: u16 = 84;
+pub const RANK_COMPUTE_STRIPE: u16 = 90;
+
+/// Sanitizer mode, resolved once from `PALLAS_SANITIZE` (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Off,
+    On,
+    /// `On` plus deterministic seeded yields at acquire points.
+    Stress { seed: u64 },
+}
+
+/// Decide the mode from the raw env value and the build profile. Pure policy
+/// (unit-tested); [`mode`] caches the result of applying it to the process
+/// environment.
+pub fn mode_policy(env: Option<&str>, debug_build: bool) -> Mode {
+    match env.map(str::trim) {
+        None => {
+            if debug_build {
+                Mode::On
+            } else {
+                Mode::Off
+            }
+        }
+        Some("0") | Some("off") | Some("") => Mode::Off,
+        Some(s) if s == "stress" || s.starts_with("stress:") => {
+            let seed = s
+                .strip_prefix("stress:")
+                .and_then(|v| v.parse::<u64>().ok())
+                .unwrap_or(0x9E37_79B9_7F4A_7C15);
+            Mode::Stress { seed }
+        }
+        // "1", "on", and anything unrecognized arm the plain sanitizer —
+        // a typo in the knob should never silently disarm it.
+        Some(_) => Mode::On,
+    }
+}
+
+/// The process-wide sanitizer mode (env resolved once).
+pub fn mode() -> Mode {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        OVR_NONE => {}
+        OVR_OFF => return Mode::Off,
+        OVR_ON => return Mode::On,
+        _ => return Mode::Stress { seed: override_seed() },
+    }
+    static MODE: OnceLock<Mode> = OnceLock::new();
+    *MODE.get_or_init(|| {
+        mode_policy(std::env::var("PALLAS_SANITIZE").ok().as_deref(), cfg!(debug_assertions))
+    })
+}
+
+const OVR_NONE: u8 = 0;
+const OVR_OFF: u8 = 1;
+const OVR_ON: u8 = 2;
+const OVR_STRESS: u8 = 3;
+static OVERRIDE: AtomicU8 = AtomicU8::new(OVR_NONE);
+static OVERRIDE_SEED: AtomicU64 = AtomicU64::new(0);
+
+fn override_seed() -> u64 {
+    OVERRIDE_SEED.load(Ordering::Relaxed)
+}
+
+/// Force a mode for the current process, bypassing the cached env decision.
+/// Test-only escape hatch (the sanitizer's own tests must run armed even in
+/// `--release` test runs, and integration tests force `stress`
+/// deterministically instead of relying on the harness environment).
+/// `None` restores the env-derived mode.
+pub fn override_mode_for_tests(m: Option<Mode>) {
+    match m {
+        None => OVERRIDE.store(OVR_NONE, Ordering::Relaxed),
+        Some(Mode::Off) => OVERRIDE.store(OVR_OFF, Ordering::Relaxed),
+        Some(Mode::On) => OVERRIDE.store(OVR_ON, Ordering::Relaxed),
+        Some(Mode::Stress { seed }) => {
+            OVERRIDE_SEED.store(seed, Ordering::Relaxed);
+            OVERRIDE.store(OVR_STRESS, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Static identity of one lock: rank, ordering key, and a site label used in
+/// violation reports and as the node id of the acquisition-order graph.
+#[derive(Debug)]
+struct LockMeta {
+    rank: u16,
+    key: u64,
+    site: &'static str,
+}
+
+/// Auto-assigned ordering keys start far above any explicit key a caller
+/// would construct (`server` uses `group_id << 16 | shard`), so the two
+/// schemes never interleave within a rank class by accident.
+const AUTO_KEY_BASE: u64 = 1 << 40;
+static NEXT_AUTO_KEY: AtomicU64 = AtomicU64::new(AUTO_KEY_BASE);
+
+fn auto_key() -> u64 {
+    NEXT_AUTO_KEY.fetch_add(1, Ordering::Relaxed)
+}
+
+/// A mutex carrying a static rank + ordering key, checked by the sanitizer
+/// when armed. API mirrors `std::sync::Mutex` (`lock` returns a
+/// `LockResult`, poisoning included) so call sites migrate unchanged.
+pub struct OrderedMutex<T> {
+    meta: LockMeta,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    /// A lock with an auto-assigned ordering key (creation order). Use when
+    /// no two locks of this rank are ever held together.
+    pub fn new(rank: u16, site: &'static str, value: T) -> OrderedMutex<T> {
+        OrderedMutex {
+            meta: LockMeta { rank, key: auto_key(), site },
+            inner: Mutex::new(value),
+        }
+    }
+
+    /// A lock with an explicit ordering key, for same-rank families that are
+    /// held together and must therefore be acquired in ascending-key order
+    /// (e.g. server shards keyed `(group_id << 16) | shard_index`).
+    pub fn with_key(rank: u16, site: &'static str, key: u64, value: T) -> OrderedMutex<T> {
+        debug_assert!(key < AUTO_KEY_BASE, "explicit keys live below AUTO_KEY_BASE");
+        OrderedMutex { meta: LockMeta { rank, key, site }, inner: Mutex::new(value) }
+    }
+
+    pub fn lock(&self) -> LockResult<OrderedMutexGuard<'_, T>> {
+        let tracked = sanitizer::before_acquire(&self.meta);
+        let (inner, poisoned) = match self.inner.lock() {
+            Ok(g) => (g, false),
+            Err(p) => (p.into_inner(), true),
+        };
+        if tracked {
+            sanitizer::on_acquired(&self.meta);
+        }
+        let guard = OrderedMutexGuard { inner: Some(inner), meta: &self.meta, tracked };
+        if poisoned {
+            Err(PoisonError::new(guard))
+        } else {
+            Ok(guard)
+        }
+    }
+
+    /// Non-blocking acquire: tracked in the held set but exempt from the
+    /// ordering check (a `try_lock` that would invert merely fails, it
+    /// cannot deadlock).
+    pub fn try_lock(&self) -> Result<OrderedMutexGuard<'_, T>, TryLockError<()>> {
+        let tracked = mode() != Mode::Off;
+        match self.inner.try_lock() {
+            Ok(g) => {
+                if tracked {
+                    sanitizer::on_acquired(&self.meta);
+                }
+                Ok(OrderedMutexGuard { inner: Some(g), meta: &self.meta, tracked })
+            }
+            Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+            Err(TryLockError::Poisoned(_)) => {
+                Err(TryLockError::Poisoned(PoisonError::new(())))
+            }
+        }
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for OrderedMutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut d = f.debug_struct("OrderedMutex");
+        d.field("rank", &self.meta.rank).field("site", &self.meta.site);
+        match self.inner.try_lock() {
+            Ok(g) => d.field("data", &&*g),
+            Err(_) => d.field("data", &"<locked>"),
+        };
+        d.finish()
+    }
+}
+
+/// RAII guard for [`OrderedMutex`]; releases the lock and pops the held-set
+/// token on drop. The `Option` exists so [`OrderedCondvar::wait`] can take
+/// the inner guard without double-releasing.
+pub struct OrderedMutexGuard<'a, T> {
+    inner: Option<MutexGuard<'a, T>>,
+    meta: &'a LockMeta,
+    tracked: bool,
+}
+
+impl<T> std::ops::Deref for OrderedMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard holds the lock until dropped or waited")
+    }
+}
+
+impl<T> std::ops::DerefMut for OrderedMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard holds the lock until dropped or waited")
+    }
+}
+
+impl<T> Drop for OrderedMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.inner.take().is_some() && self.tracked {
+            sanitizer::on_release(self.meta);
+        }
+    }
+}
+
+/// Condvar paired with [`OrderedMutex`]: `wait` pops the lock's held-set
+/// token for the duration of the sleep and re-checks + re-pushes on wake
+/// (re-acquisition while holding other locks is still an ordering event).
+pub struct OrderedCondvar {
+    inner: Condvar,
+}
+
+impl Default for OrderedCondvar {
+    fn default() -> OrderedCondvar {
+        OrderedCondvar::new()
+    }
+}
+
+impl OrderedCondvar {
+    pub const fn new() -> OrderedCondvar {
+        OrderedCondvar { inner: Condvar::new() }
+    }
+
+    pub fn wait<'a, T>(
+        &self,
+        mut guard: OrderedMutexGuard<'a, T>,
+    ) -> LockResult<OrderedMutexGuard<'a, T>> {
+        let meta = guard.meta;
+        let tracked = guard.tracked;
+        let inner = guard.inner.take().expect("guard holds the lock until dropped or waited");
+        drop(guard); // inner is None: releases nothing, pops nothing
+        if tracked {
+            sanitizer::on_release(meta);
+        }
+        let (inner, poisoned) = match self.inner.wait(inner) {
+            Ok(g) => (g, false),
+            Err(p) => (p.into_inner(), true),
+        };
+        if tracked {
+            // Re-acquisition after the sleep is an ordering event too: the
+            // waiter may hold other locks across the wait.
+            sanitizer::before_acquire(meta);
+            sanitizer::on_acquired(meta);
+        }
+        let guard = OrderedMutexGuard { inner: Some(inner), meta, tracked };
+        if poisoned {
+            Err(PoisonError::new(guard))
+        } else {
+            Ok(guard)
+        }
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}
+
+/// The sanitizer proper: per-thread held-lock sets, the global site-pair
+/// acquisition graph, and the stress-mode yield injector. Everything here is
+/// reached only when [`mode`] is not `Off`.
+mod sanitizer {
+    use super::*;
+
+    #[derive(Clone, Copy)]
+    struct Held {
+        rank: u16,
+        key: u64,
+        site: &'static str,
+    }
+
+    thread_local! {
+        static HELD: RefCell<Vec<Held>> = const { RefCell::new(Vec::new()) };
+        /// Site pairs this thread has already reported to the global graph;
+        /// keeps the global mutex off the steady-state armed path.
+        static KNOWN_EDGES: RefCell<HashSet<(usize, usize)>> = RefCell::new(HashSet::new());
+    }
+
+    /// Global acquisition-order graph over site labels: an edge `a -> b`
+    /// means some thread acquired `b` while holding `a`. A cycle means two
+    /// code paths disagree about lock order even if each individually
+    /// respects some ranking.
+    struct Graph {
+        adj: HashMap<&'static str, HashSet<&'static str>>,
+    }
+
+    fn graph() -> &'static Mutex<Graph> {
+        static GRAPH: OnceLock<Mutex<Graph>> = OnceLock::new();
+        GRAPH.get_or_init(|| Mutex::new(Graph { adj: HashMap::new() }))
+    }
+
+    /// Deterministic per-acquire yield decision for stress mode: a splitmix64
+    /// hash of (seed, global acquire counter) — reproducible for a given
+    /// interleaving-free workload, schedule-perturbing for a concurrent one.
+    fn stress_yield(seed: u64) {
+        static ACQUIRES: AtomicU64 = AtomicU64::new(0);
+        let n = ACQUIRES.fetch_add(1, Ordering::Relaxed);
+        let mut z = seed.wrapping_add(n.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        match z % 4 {
+            0 => std::thread::yield_now(),
+            1 => {
+                // A slightly longer perturbation than yield_now: enough to
+                // let a racing thread win the lock, short enough to keep the
+                // stress suites fast.
+                std::thread::sleep(std::time::Duration::from_micros(z % 50));
+            }
+            _ => {}
+        }
+    }
+
+    /// Run the ordering checks for `meta` against this thread's held set.
+    /// Returns whether the sanitizer is armed (the caller threads that bool
+    /// through the guard so push/pop stay balanced even if the mode override
+    /// flips mid-hold). Panics on violation.
+    pub(super) fn before_acquire(meta: &LockMeta) -> bool {
+        let m = mode();
+        if m == Mode::Off {
+            return false;
+        }
+        if let Mode::Stress { seed } = m {
+            stress_yield(seed);
+        }
+        HELD.with(|held| {
+            let held = held.borrow();
+            if held.is_empty() {
+                return;
+            }
+            record_edges(&held, meta);
+            for h in held.iter() {
+                let inverted = h.rank > meta.rank || (h.rank == meta.rank && h.key >= meta.key);
+                if inverted {
+                    panic!(
+                        "PALLAS_SANITIZE: lock-order violation: acquiring `{}` (rank {}, key {:#x}) \
+                         while holding `{}` (rank {}, key {:#x}) — locks must be taken in ascending \
+                         (rank, key) order; see the rank table in runtime::sync",
+                        meta.site, meta.rank, meta.key, h.site, h.rank, h.key
+                    );
+                }
+            }
+        });
+        true
+    }
+
+    /// Record `held -> meta` site pairs in the global graph, panicking if a
+    /// new edge closes a cycle (a path `meta.site -> ... -> held.site`
+    /// already exists from some other code path).
+    fn record_edges(held: &[Held], meta: &LockMeta) {
+        for h in held {
+            if h.site == meta.site {
+                // Same-site families (shards, stripes, buckets) are ordered
+                // by key, not by the graph; a self-edge would be a false
+                // cycle.
+                continue;
+            }
+            let pair = (h.site.as_ptr() as usize, meta.site.as_ptr() as usize);
+            let fresh = KNOWN_EDGES.with(|known| known.borrow_mut().insert(pair));
+            if !fresh {
+                continue;
+            }
+            let mut g = graph().lock().unwrap_or_else(PoisonError::into_inner);
+            if let Some(path) = path_between(&g.adj, meta.site, h.site) {
+                panic!(
+                    "PALLAS_SANITIZE: acquisition-order cycle: acquiring `{}` (rank {}) while \
+                     holding `{}` (rank {}) closes the cycle {} -> `{}`",
+                    meta.site,
+                    meta.rank,
+                    h.site,
+                    h.rank,
+                    path.iter().map(|s| format!("`{s}`")).collect::<Vec<_>>().join(" -> "),
+                    meta.site,
+                );
+            }
+            g.adj.entry(h.site).or_default().insert(meta.site);
+        }
+    }
+
+    /// DFS: a path `from -> ... -> to` in the acquisition graph, if any.
+    fn path_between(
+        adj: &HashMap<&'static str, HashSet<&'static str>>,
+        from: &'static str,
+        to: &'static str,
+    ) -> Option<Vec<&'static str>> {
+        let mut stack = vec![vec![from]];
+        let mut seen: HashSet<&str> = HashSet::new();
+        while let Some(path) = stack.pop() {
+            let last = *path.last().expect("paths are non-empty by construction");
+            if last == to {
+                return Some(path);
+            }
+            if !seen.insert(last) {
+                continue;
+            }
+            if let Some(next) = adj.get(last) {
+                for &n in next {
+                    let mut p = path.clone();
+                    p.push(n);
+                    stack.push(p);
+                }
+            }
+        }
+        None
+    }
+
+    pub(super) fn on_acquired(meta: &LockMeta) {
+        HELD.with(|held| {
+            held.borrow_mut().push(Held { rank: meta.rank, key: meta.key, site: meta.site });
+        });
+    }
+
+    pub(super) fn on_release(meta: &LockMeta) {
+        HELD.with(|held| {
+            let mut held = held.borrow_mut();
+            // Guards may drop in any order; pop the newest matching token.
+            if let Some(i) = held.iter().rposition(|h| h.key == meta.key && h.rank == meta.rank)
+            {
+                held.remove(i);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serialize tests that flip the process-wide mode override (the lib
+    /// test binary runs tests in parallel; two tests forcing different modes
+    /// concurrently would see each other's setting).
+    fn override_guard(m: Mode) -> impl Drop {
+        static SERIAL: Mutex<()> = Mutex::new(());
+        struct Restore(Option<MutexGuard<'static, ()>>);
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                override_mode_for_tests(None);
+                self.0.take();
+            }
+        }
+        let serial = SERIAL.lock().unwrap_or_else(PoisonError::into_inner);
+        override_mode_for_tests(Some(m));
+        Restore(Some(serial))
+    }
+
+    #[test]
+    fn mode_policy_resolves_env_and_profile() {
+        assert_eq!(mode_policy(None, true), Mode::On);
+        assert_eq!(mode_policy(None, false), Mode::Off);
+        assert_eq!(mode_policy(Some("0"), true), Mode::Off);
+        assert_eq!(mode_policy(Some("off"), true), Mode::Off);
+        assert_eq!(mode_policy(Some("1"), false), Mode::On);
+        assert_eq!(mode_policy(Some("on"), false), Mode::On);
+        assert!(matches!(mode_policy(Some("stress"), false), Mode::Stress { .. }));
+        assert_eq!(mode_policy(Some("stress:42"), false), Mode::Stress { seed: 42 });
+        // Unknown values arm the sanitizer rather than silently disarming it.
+        assert_eq!(mode_policy(Some("banana"), false), Mode::On);
+    }
+
+    #[test]
+    fn ascending_rank_acquisition_is_clean() {
+        let _g = override_guard(Mode::On);
+        let low = OrderedMutex::new(10, "test.ascending.low", 1u32);
+        let high = OrderedMutex::new(20, "test.ascending.high", 2u32);
+        let a = low.lock().unwrap();
+        let b = high.lock().unwrap();
+        assert_eq!(*a + *b, 3);
+    }
+
+    #[test]
+    fn inverted_rank_acquisition_panics_naming_both_sites() {
+        let _g = override_guard(Mode::On);
+        let low = OrderedMutex::new(10, "test.invert.low", ());
+        let high = OrderedMutex::new(20, "test.invert.high", ());
+        let err = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _b = high.lock().unwrap();
+                let _a = low.lock().unwrap(); // rank 10 after rank 20: inversion
+            })
+            .join()
+            .expect_err("inversion must panic")
+        });
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()).unwrap());
+        assert!(msg.contains("lock-order violation"), "{msg}");
+        assert!(msg.contains("`test.invert.low` (rank 10"), "{msg}");
+        assert!(msg.contains("`test.invert.high` (rank 20"), "{msg}");
+    }
+
+    #[test]
+    fn same_rank_descending_key_panics() {
+        let _g = override_guard(Mode::On);
+        // Ascending keys on one pair: fine.
+        {
+            let first = OrderedMutex::with_key(30, "test.key.asc.first", 1, ());
+            let second = OrderedMutex::with_key(30, "test.key.asc.second", 2, ());
+            let _a = first.lock().unwrap();
+            let _b = second.lock().unwrap();
+        }
+        // Descending keys on a fresh pair (no prior graph edges, so the
+        // rank/key check — not the cycle check — is what fires).
+        let first = OrderedMutex::with_key(30, "test.key.desc.first", 1, ());
+        let second = OrderedMutex::with_key(30, "test.key.desc.second", 2, ());
+        let err = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _b = second.lock().unwrap();
+                let _a = first.lock().unwrap(); // key 1 after key 2 at equal rank
+            })
+            .join()
+            .expect_err("descending same-rank keys must panic")
+        });
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("lock-order violation"), "{msg}");
+    }
+
+    #[test]
+    fn acquisition_graph_reports_cycles_between_sites() {
+        let _g = override_guard(Mode::On);
+        // Same rank, auto keys in creation order: locking a then b is legal
+        // by rank/key and records the edge a -> b. A second code path that
+        // locks b then a is caught by the graph (the key check would also
+        // fire; the graph check runs first and names the cycle).
+        let a = OrderedMutex::new(50, "test.cycle.a", ());
+        let b = OrderedMutex::new(50, "test.cycle.b", ());
+        {
+            let _a = a.lock().unwrap();
+            let _b = b.lock().unwrap();
+        }
+        let err = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _b = b.lock().unwrap();
+                let _a = a.lock().unwrap();
+            })
+            .join()
+            .expect_err("reversed order must be reported")
+        });
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("acquisition-order cycle"), "{msg}");
+        assert!(msg.contains("`test.cycle.a`"), "{msg}");
+        assert!(msg.contains("`test.cycle.b`"), "{msg}");
+    }
+
+    #[test]
+    fn disarmed_mode_skips_all_checks() {
+        let _g = override_guard(Mode::Off);
+        let low = OrderedMutex::new(10, "test.off.low", ());
+        let high = OrderedMutex::new(20, "test.off.high", ());
+        // Inverted order, but the sanitizer is off: raw fast path, no panic.
+        let _b = high.lock().unwrap();
+        let _a = low.lock().unwrap();
+    }
+
+    #[test]
+    fn condvar_wait_releases_and_reacquires_tracking() {
+        let _g = override_guard(Mode::On);
+        let gate = OrderedMutex::new(40, "test.cv.gate", false);
+        let cv = OrderedCondvar::new();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let mut ready = gate.lock().unwrap();
+                while !*ready {
+                    ready = cv.wait(ready).unwrap();
+                }
+                // Woken holding only `gate`; acquiring a higher rank is legal.
+                let after = OrderedMutex::new(60, "test.cv.after", 7u32);
+                assert_eq!(*after.lock().unwrap(), 7);
+            });
+            loop {
+                let mut ready = gate.lock().unwrap();
+                *ready = true;
+                cv.notify_all();
+                break;
+            }
+        });
+    }
+
+    #[test]
+    fn stress_mode_perturbs_but_stays_correct() {
+        let _g = override_guard(Mode::Stress { seed: 7 });
+        let shared = OrderedMutex::new(50, "test.stress.ctr", 0u64);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..200 {
+                        *shared.lock().unwrap() += 1;
+                    }
+                });
+            }
+        });
+        assert_eq!(*shared.lock().unwrap(), 800);
+    }
+
+    #[test]
+    fn try_lock_is_tracked_but_exempt_from_order_checks() {
+        let _g = override_guard(Mode::On);
+        let low = OrderedMutex::new(10, "test.try.low", ());
+        let high = OrderedMutex::new(20, "test.try.high", ());
+        let _b = high.lock().unwrap();
+        // A blocking lock here would invert; try_lock cannot deadlock and is
+        // allowed through (it still lands in the held set).
+        let a = low.try_lock().expect("uncontended");
+        drop(a);
+        assert!(matches!(low.try_lock(), Ok(_)));
+    }
+
+    #[test]
+    fn poisoned_ordered_mutex_still_hands_back_data() {
+        let _g = override_guard(Mode::On);
+        let m = OrderedMutex::new(70, "test.poison", 5u32);
+        let _ = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _guard = m.lock().unwrap();
+                panic!("poison it");
+            })
+            .join()
+        });
+        let v = match m.lock() {
+            Ok(g) => *g,
+            Err(poisoned) => *poisoned.into_inner(),
+        };
+        assert_eq!(v, 5);
+    }
+}

@@ -13,12 +13,13 @@
 //!   groups periodically synchronize by averaging — see [`ServerGroup::sync_with`].
 
 use crate::comm::{ByteLedger, Msg};
+use crate::runtime::sync::{OrderedMutex, RANK_SERVER_ROUTE, RANK_SERVER_SHARD};
 use crate::tensor::Blob;
 use crate::updater::{Updater, UpdaterConf};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Global creation counter giving every [`ServerGroup`] a unique id — the
 /// fixed total order [`ServerGroup::sync_with`] acquires shard locks in.
@@ -117,10 +118,12 @@ struct RouteTable {
 /// A server group: `size` shards plus the routing table.
 pub struct ServerGroup {
     /// Global creation-order id; `sync_with` locks groups in ascending id
-    /// order so concurrent neighbour syncs can never deadlock.
+    /// order so concurrent neighbour syncs can never deadlock. The shard
+    /// mutexes carry `(id << 16) | shard` as their explicit ordering key, so
+    /// the sanitizer verifies that claim on every multi-shard acquisition.
     id: u64,
-    shards: Vec<Mutex<ServerShard>>,
-    route: Mutex<RouteTable>,
+    shards: Vec<OrderedMutex<ServerShard>>,
+    route: OrderedMutex<RouteTable>,
     /// bytes by plane, shared with the workers' ledger.
     pub ledger: Arc<ByteLedger>,
 }
@@ -128,13 +131,27 @@ pub struct ServerGroup {
 impl ServerGroup {
     pub fn new(size: usize, conf: UpdaterConf, ledger: Arc<ByteLedger>) -> ServerGroup {
         assert!(size >= 1);
+        let id = GROUP_IDS.fetch_add(1, Ordering::Relaxed);
         ServerGroup {
-            id: GROUP_IDS.fetch_add(1, Ordering::Relaxed),
-            shards: (0..size).map(|_| Mutex::new(ServerShard::new(conf.clone()))).collect(),
-            route: Mutex::new(RouteTable {
-                by_name: HashMap::new(),
-                shard_bytes: vec![0; size],
-            }),
+            id,
+            shards: (0..size as u64)
+                .map(|s| {
+                    OrderedMutex::with_key(
+                        RANK_SERVER_SHARD,
+                        "server.shard",
+                        (id << 16) | s,
+                        ServerShard::new(conf.clone()),
+                    )
+                })
+                .collect(),
+            route: OrderedMutex::new(
+                RANK_SERVER_ROUTE,
+                "server.route",
+                RouteTable {
+                    by_name: HashMap::new(),
+                    shard_bytes: vec![0; size], // lint: alloc-ok(group construction, once per job)
+                },
+            ),
             ledger,
         }
     }

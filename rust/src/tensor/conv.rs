@@ -33,7 +33,7 @@
 use super::blob::Blob;
 use super::gemm::{gemm_with_threads, Transpose};
 use super::kernel::{add_span, copy_span, KernelKind};
-use std::sync::Mutex;
+use crate::runtime::sync::{OrderedMutex, RANK_COMPUTE_STRIPE};
 
 /// Static geometry of a conv/pool operation.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -79,7 +79,7 @@ fn run_striped(
     tasks: usize,
     f: impl Fn(usize, usize, &mut [f32]) + Sync,
 ) {
-    let mut stripes: Vec<Mutex<(usize, usize, &mut [f32])>> = Vec::with_capacity(tasks);
+    let mut stripes: Vec<OrderedMutex<(usize, usize, &mut [f32])>> = Vec::with_capacity(tasks);
     let mut rest: &mut [f32] = out;
     let mut next = 0usize;
     for tid in 0..tasks {
@@ -88,7 +88,7 @@ fn run_striped(
         next = u0 + un;
         let (chunk, tail) = rest.split_at_mut(un * unit_len);
         rest = tail;
-        stripes.push(Mutex::new((u0, un, chunk)));
+        stripes.push(OrderedMutex::new(RANK_COMPUTE_STRIPE, "conv.stripe", (u0, un, chunk)));
     }
     crate::runtime::pool::run(tasks, |tid| {
         let mut guard = stripes[tid].try_lock().expect("each task owns its stripe");
@@ -477,7 +477,7 @@ pub fn conv2d_forward(
     g: &Conv2dGeom,
 ) -> (Blob, Vec<Vec<f32>>) {
     let mut out = Blob::default();
-    let mut cols = Vec::new();
+    let mut cols = Vec::new(); // lint: alloc-ok(allocating wrapper, not the steady-state _into path)
     let mut scratch = ConvScratch::new();
     conv2d_forward_into(input, weight, bias, g, &mut out, &mut cols, &mut scratch);
     (out, cols)
@@ -623,7 +623,7 @@ pub fn maxpool_forward_into(input: &Blob, g: &Conv2dGeom, out: &mut Blob, arg: &
 /// Max-pool forward: input `[B,C,H,W]` → (output, argmax indices).
 pub fn maxpool_forward(input: &Blob, g: &Conv2dGeom) -> (Blob, Vec<usize>) {
     let mut out = Blob::default();
-    let mut arg = Vec::new();
+    let mut arg = Vec::new(); // lint: alloc-ok(allocating wrapper, not the steady-state _into path)
     maxpool_forward_into(input, g, &mut out, &mut arg);
     (out, arg)
 }

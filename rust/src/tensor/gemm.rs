@@ -34,8 +34,8 @@
 
 use super::blob::Blob;
 use super::kernel::{microkernel, scale8, KernelKind};
+use crate::runtime::sync::{OrderedMutex, RANK_COMPUTE_STRIPE};
 use std::cell::{Cell, RefCell};
-use std::sync::Mutex;
 
 /// Whether an operand is logically transposed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -58,7 +58,7 @@ const _: () = assert!(MC * KC <= PACK_LEN, "A tile must fit in a pool buffer");
 thread_local! {
     /// Reusable pack buffers owned by this thread; buffer 0 serves the B
     /// panel, the rest serve per-worker A tiles.
-    static PACK_POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+    static PACK_POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) }; // lint: alloc-ok(empty pool, grown once per thread)
     /// Pack-buffer allocations made on behalf of this thread's gemm calls
     /// (pool growth only). The alloc probe diffs this across steady-state
     /// training steps, exactly like `Blob::alloc_count`.
@@ -78,7 +78,7 @@ fn take_pool(min_bufs: usize) -> Vec<Vec<f32>> {
     let mut pool = PACK_POOL.with(|p| std::mem::take(&mut *p.borrow_mut()));
     while pool.len() < min_bufs {
         PACK_ALLOCS.with(|c| c.set(c.get() + 1));
-        pool.push(vec![0.0f32; PACK_LEN]);
+        pool.push(vec![0.0f32; PACK_LEN]); // lint: alloc-ok(counted pool growth, warm-up only)
     }
     pool
 }
@@ -207,7 +207,8 @@ pub fn gemm_with_kernel(
         // stripes out over the persistent pool. Stripe-local blocks
         // coincide with the serial blocks, so each row of C sees the
         // serial operation sequence exactly.
-        let mut stripes: Vec<Mutex<(usize, usize, &mut [f32], &mut Vec<f32>)>> =
+        // lint: alloc-ok(per-call stripe table of borrows, not Blob payloads)
+        let mut stripes: Vec<OrderedMutex<(usize, usize, &mut [f32], &mut Vec<f32>)>> =
             Vec::with_capacity(t);
         {
             let mut rest: &mut [f32] = &mut c[..];
@@ -222,7 +223,11 @@ pub fn gemm_with_kernel(
                 let (stripe, tail) = rest.split_at_mut(rcount * n);
                 rest = tail;
                 let a_pack = slots.next().expect("one A slot per task");
-                stripes.push(Mutex::new((rstart, rcount, stripe, a_pack)));
+                stripes.push(OrderedMutex::new(
+                    RANK_COMPUTE_STRIPE,
+                    "gemm.stripe",
+                    (rstart, rcount, stripe, a_pack),
+                ));
             }
         }
         let mut kk = 0;

@@ -363,24 +363,31 @@ mod avx2 {
                 c: *mut f32,
                 ldc: usize,
             ) {
-                let mut lo = [_mm256_setzero_ps(); $mr];
-                let mut hi = [_mm256_setzero_ps(); $mr];
-                for p in 0..kb {
-                    let bp = b.add(p * ldb);
-                    let b0 = _mm256_loadu_ps(bp);
-                    let b1 = _mm256_loadu_ps(bp.add(8));
-                    for r in 0..$mr {
-                        let av = _mm256_set1_ps(*a.add(r * lda + p));
-                        lo[r] = _mm256_fmadd_ps(av, b0, lo[r]);
-                        hi[r] = _mm256_fmadd_ps(av, b1, hi[r]);
+                // SAFETY: caller contract (module docs) — AVX2+FMA verified
+                // at runtime, A spans `$mr` rows x `kb` at stride `lda`, B
+                // spans `kb` rows x 16 at stride `ldb`, C spans `$mr` rows
+                // x 16 at stride `ldc`; all arithmetic below stays inside
+                // those spans.
+                unsafe {
+                    let mut lo = [_mm256_setzero_ps(); $mr];
+                    let mut hi = [_mm256_setzero_ps(); $mr];
+                    for p in 0..kb {
+                        let bp = b.add(p * ldb);
+                        let b0 = _mm256_loadu_ps(bp);
+                        let b1 = _mm256_loadu_ps(bp.add(8));
+                        for r in 0..$mr {
+                            let av = _mm256_set1_ps(*a.add(r * lda + p));
+                            lo[r] = _mm256_fmadd_ps(av, b0, lo[r]);
+                            hi[r] = _mm256_fmadd_ps(av, b1, hi[r]);
+                        }
                     }
-                }
-                let al = _mm256_set1_ps(alpha);
-                for r in 0..$mr {
-                    let cp = c.add(r * ldc);
-                    _mm256_storeu_ps(cp, _mm256_fmadd_ps(al, lo[r], _mm256_loadu_ps(cp)));
-                    let cq = cp.add(8);
-                    _mm256_storeu_ps(cq, _mm256_fmadd_ps(al, hi[r], _mm256_loadu_ps(cq)));
+                    let al = _mm256_set1_ps(alpha);
+                    for r in 0..$mr {
+                        let cp = c.add(r * ldc);
+                        _mm256_storeu_ps(cp, _mm256_fmadd_ps(al, lo[r], _mm256_loadu_ps(cp)));
+                        let cq = cp.add(8);
+                        _mm256_storeu_ps(cq, _mm256_fmadd_ps(al, hi[r], _mm256_loadu_ps(cq)));
+                    }
                 }
             }
         };
@@ -404,18 +411,22 @@ mod avx2 {
                 c: *mut f32,
                 ldc: usize,
             ) {
-                let mut acc = [_mm256_setzero_ps(); $mr];
-                for p in 0..kb {
-                    let b0 = _mm256_loadu_ps(b.add(p * ldb));
-                    for r in 0..$mr {
-                        let av = _mm256_set1_ps(*a.add(r * lda + p));
-                        acc[r] = _mm256_fmadd_ps(av, b0, acc[r]);
+                // SAFETY: caller contract as for `tile16!`, with 8-wide
+                // column spans instead of 16.
+                unsafe {
+                    let mut acc = [_mm256_setzero_ps(); $mr];
+                    for p in 0..kb {
+                        let b0 = _mm256_loadu_ps(b.add(p * ldb));
+                        for r in 0..$mr {
+                            let av = _mm256_set1_ps(*a.add(r * lda + p));
+                            acc[r] = _mm256_fmadd_ps(av, b0, acc[r]);
+                        }
                     }
-                }
-                let al = _mm256_set1_ps(alpha);
-                for r in 0..$mr {
-                    let cp = c.add(r * ldc);
-                    _mm256_storeu_ps(cp, _mm256_fmadd_ps(al, acc[r], _mm256_loadu_ps(cp)));
+                    let al = _mm256_set1_ps(alpha);
+                    for r in 0..$mr {
+                        let cp = c.add(r * ldc);
+                        _mm256_storeu_ps(cp, _mm256_fmadd_ps(al, acc[r], _mm256_loadu_ps(cp)));
+                    }
                 }
             }
         };
@@ -440,17 +451,23 @@ mod avx2 {
                 c: *mut f32,
                 ldc: usize,
             ) {
-                let mut r = 0;
-                while r + MR <= mb {
-                    $t4(kb, alpha, a.add(r * kb), kb, b, ldb, c.add(r * ldc), ldc);
-                    r += MR;
-                }
-                if r + 2 <= mb {
-                    $t2(kb, alpha, a.add(r * kb), kb, b, ldb, c.add(r * ldc), ldc);
-                    r += 2;
-                }
-                if r < mb {
-                    $t1(kb, alpha, a.add(r * kb), kb, b, ldb, c.add(r * ldc), ldc);
+                // SAFETY: the tile calls partition the `mb` rows exactly
+                // (4/2/1 edge tiles), so each inherits in-bounds spans from
+                // this function's caller contract; the tiles share this
+                // function's target features.
+                unsafe {
+                    let mut r = 0;
+                    while r + MR <= mb {
+                        $t4(kb, alpha, a.add(r * kb), kb, b, ldb, c.add(r * ldc), ldc);
+                        r += MR;
+                    }
+                    if r + 2 <= mb {
+                        $t2(kb, alpha, a.add(r * kb), kb, b, ldb, c.add(r * ldc), ldc);
+                        r += 2;
+                    }
+                    if r < mb {
+                        $t1(kb, alpha, a.add(r * kb), kb, b, ldb, c.add(r * ldc), ldc);
+                    }
                 }
             }
         };
@@ -475,29 +492,39 @@ mod avx2 {
         c: *mut f32,
         ldc: usize,
     ) -> usize {
-        let mut j = 0;
-        while j + NR <= nb {
-            col_strip16(mb, kb, alpha, a, b.add(j), ldb, c.add(j), ldc);
-            j += NR;
+        // SAFETY: caller contract (`microkernel_simd`) — AVX2+FMA detected
+        // and the pack/tile bounds hold; the strips advance `j` by whole
+        // 16/8-column spans that stay inside B and C.
+        unsafe {
+            let mut j = 0;
+            while j + NR <= nb {
+                col_strip16(mb, kb, alpha, a, b.add(j), ldb, c.add(j), ldc);
+                j += NR;
+            }
+            if j + 8 <= nb {
+                col_strip8(mb, kb, alpha, a, b.add(j), ldb, c.add(j), ldc);
+                j += 8;
+            }
+            j
         }
-        if j + 8 <= nb {
-            col_strip8(mb, kb, alpha, a, b.add(j), ldb, c.add(j), ldc);
-            j += 8;
-        }
-        j
     }
 
     /// `dst[0..n] = src[0..n]` with 8-wide unaligned loads/stores.
     #[target_feature(enable = "avx2")]
     pub unsafe fn copy_span(src: *const f32, dst: *mut f32, n: usize) {
-        let mut i = 0;
-        while i + 8 <= n {
-            _mm256_storeu_ps(dst.add(i), _mm256_loadu_ps(src.add(i)));
-            i += 8;
-        }
-        while i < n {
-            *dst.add(i) = *src.add(i);
-            i += 1;
+        // SAFETY: caller contract — `src` and `dst` are valid for `n`
+        // elements and do not overlap; unaligned load/store intrinsics have
+        // no alignment requirement beyond validity.
+        unsafe {
+            let mut i = 0;
+            while i + 8 <= n {
+                _mm256_storeu_ps(dst.add(i), _mm256_loadu_ps(src.add(i)));
+                i += 8;
+            }
+            while i < n {
+                *dst.add(i) = *src.add(i);
+                i += 1;
+            }
         }
     }
 
@@ -505,16 +532,19 @@ mod avx2 {
     /// the scalar accumulate.
     #[target_feature(enable = "avx2")]
     pub unsafe fn add_span(src: *const f32, dst: *mut f32, n: usize) {
-        let mut i = 0;
-        while i + 8 <= n {
-            let s = _mm256_loadu_ps(src.add(i));
-            let d = _mm256_loadu_ps(dst.add(i));
-            _mm256_storeu_ps(dst.add(i), _mm256_add_ps(d, s));
-            i += 8;
-        }
-        while i < n {
-            *dst.add(i) += *src.add(i);
-            i += 1;
+        // SAFETY: caller contract as for `copy_span`.
+        unsafe {
+            let mut i = 0;
+            while i + 8 <= n {
+                let s = _mm256_loadu_ps(src.add(i));
+                let d = _mm256_loadu_ps(dst.add(i));
+                _mm256_storeu_ps(dst.add(i), _mm256_add_ps(d, s));
+                i += 8;
+            }
+            while i < n {
+                *dst.add(i) += *src.add(i);
+                i += 1;
+            }
         }
     }
 }

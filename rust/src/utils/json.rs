@@ -380,9 +380,17 @@ impl<'a> Parser<'a> {
                                 if self.b[self.i + 1..].starts_with(b"\\u") {
                                     self.i += 2;
                                     let lo = self.hex4()?;
-                                    let combined =
-                                        0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
-                                    char::from_u32(combined)
+                                    if (0xDC00..0xE000).contains(&lo) {
+                                        let combined =
+                                            0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                        char::from_u32(combined)
+                                    } else {
+                                        // High surrogate followed by a
+                                        // non-low-surrogate escape; without
+                                        // the range check `lo - 0xDC00`
+                                        // underflows.
+                                        None
+                                    }
                                 } else {
                                     None
                                 }
@@ -437,7 +445,8 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| self.err("invalid number"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))
@@ -512,5 +521,35 @@ mod tests {
     fn error_offsets() {
         let e = Json::parse("{\"a\": @}").unwrap_err();
         assert_eq!(e.offset, 6);
+    }
+
+    #[test]
+    fn malformed_inputs_error_instead_of_panicking() {
+        for doc in [
+            "",
+            "-",
+            "+1",
+            "1e",
+            "1e+",
+            "-.",
+            "1.2.3",
+            "nul",
+            "tru",
+            "falsy",
+            "[1",
+            "{\"a\"",
+            "{\"a\" 1}",
+            r#""\q""#,
+            r#""\u12"#,
+            r#""\u12G4""#,
+            r#""\ud800""#,
+            r#""\ud800A""#,
+            // High surrogate + non-surrogate escape: used to underflow in
+            // the pair-combining arithmetic instead of erroring.
+            r#""\ud800\u0041""#,
+            r#""\udc00""#,
+        ] {
+            assert!(Json::parse(doc).is_err(), "accepted malformed input {doc:?}");
+        }
     }
 }

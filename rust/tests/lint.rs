@@ -1,0 +1,22 @@
+//! Harness entry for `pallas_lint`: the repo's own sources must pass the
+//! static analyzer with zero unwaived findings. Runs the compiled binary
+//! (built as part of `cargo test`) against `rust/src` so CI and local test
+//! runs both enforce the invariants without a separate step.
+
+use std::path::Path;
+use std::process::Command;
+
+#[test]
+fn pallas_lint_is_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src");
+    let out = Command::new(env!("CARGO_BIN_EXE_pallas_lint"))
+        .arg(&src)
+        .output()
+        .expect("run pallas_lint");
+    assert!(
+        out.status.success(),
+        "pallas_lint reported findings:\n{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}

@@ -1,0 +1,149 @@
+//! Lock-sanitizer integration tests.
+//!
+//! Two phases in one test body (the sanitizer mode override is
+//! process-global, so the phases must run sequentially):
+//!
+//! 1. A seeded rank inversion on two public `OrderedMutex` handles is caught
+//!    and the panic names both acquisition sites.
+//! 2. The real concurrent machinery — opposing pairwise `sync_with` replica
+//!    syncs, worker-style nested bucket→route→shard updates, mid-flush
+//!    checkpoint exports, and a threaded GEMM over the shared pool — runs
+//!    clean under `Stress` mode (deterministic injected yields widen race
+//!    windows) with a 4-wide pool.
+
+use std::sync::Arc;
+
+use singa::comm::ByteLedger;
+use singa::coordinator::checkpointer::Checkpointer;
+use singa::coordinator::CheckpointConf;
+use singa::runtime::sync::{self, Mode, OrderedMutex, RANK_SERVER_ROUTE, RANK_WORKSPACE_BUCKET};
+use singa::server::ServerGroup;
+use singa::tensor::{gemm_with_threads, Blob, Transpose};
+use singa::updater::UpdaterConf;
+
+/// Restores the default (env-driven) sanitizer mode even if the test panics.
+struct RestoreMode;
+impl Drop for RestoreMode {
+    fn drop(&mut self) {
+        sync::override_mode_for_tests(None);
+    }
+}
+
+fn new_group(vals: &[(&str, f32)]) -> ServerGroup {
+    let g = ServerGroup::new(2, UpdaterConf::sgd(0.05), Arc::new(ByteLedger::new()));
+    for &(name, v) in vals {
+        g.put(name, Blob::full(&[32], v), 1.0, 1.0);
+    }
+    g
+}
+
+#[test]
+fn sanitizer_catches_inversions_and_suites_run_clean_under_stress() {
+    // Pin the pool width before anything touches the shared compute pool.
+    std::env::set_var("PALLAS_NUM_THREADS", "4");
+    let _restore = RestoreMode;
+
+    // ---- Phase 1: a rank inversion is caught, naming both sites. ----
+    sync::override_mode_for_tests(Some(Mode::On));
+    let low = OrderedMutex::new(RANK_WORKSPACE_BUCKET, "it.rank.low", ());
+    let high = OrderedMutex::new(RANK_SERVER_ROUTE, "it.rank.high", ());
+    let msg = std::thread::scope(|s| {
+        let h = s.spawn(|| {
+            let _hi = high.lock().unwrap();
+            // Inversion: rank 10 acquired while rank 20 is held.
+            let _lo = low.lock().unwrap();
+        });
+        let payload = h.join().expect_err("rank inversion must panic");
+        payload.downcast::<String>().map(|b| *b).unwrap_or_default()
+    });
+    assert!(
+        msg.contains("it.rank.high") && msg.contains("it.rank.low"),
+        "sanitizer panic must name both sites, got: {msg:?}"
+    );
+    assert!(
+        msg.contains("rank 10") && msg.contains("rank 20"),
+        "sanitizer panic must name both ranks, got: {msg:?}"
+    );
+
+    // ---- Phase 2: the real suites stay clean under stress scheduling. ----
+    sync::override_mode_for_tests(Some(Mode::Stress { seed: 7 }));
+
+    let servers = Arc::new(vec![
+        new_group(&[("w0", 1.0), ("w1", 2.0), ("w2", 3.0)]),
+        new_group(&[("w0", 3.0), ("w1", 2.0), ("w2", 1.0)]),
+    ]);
+    let ck = Checkpointer::spawn(CheckpointConf::every(1), servers.clone(), "sanitize");
+    let a = &servers[0];
+    let b = &servers[1];
+
+    std::thread::scope(|s| {
+        // Opposing pairwise syncs: shard locks are keyed by (group, shard),
+        // so both directions take them in one global order and serialize
+        // instead of deadlocking.
+        s.spawn(|| {
+            for _ in 0..50 {
+                a.sync_with(b);
+            }
+        });
+        s.spawn(|| {
+            for _ in 0..50 {
+                b.sync_with(a);
+            }
+        });
+        // Worker-style updates nested under a bucket-ranked lock — the same
+        // bucket -> route -> shard chain the flush path exercises.
+        s.spawn(|| {
+            let bucket = OrderedMutex::new(RANK_WORKSPACE_BUCKET, "it.sanitize.bucket", ());
+            let grad = Blob::full(&[32], 0.1);
+            let mut out = Blob::zeros(&[32]);
+            for step in 0..60u64 {
+                let _held = bucket.lock().unwrap();
+                a.update_into("w1", &grad, step, &mut out);
+            }
+        });
+        // Mid-flush checkpoint exports racing the syncs and updates above.
+        s.spawn(|| {
+            for step in 0..30u64 {
+                ck.request(step);
+                ck.wait_exported();
+            }
+        });
+        // Pool dispatch + stripe locks under stress via a threaded GEMM.
+        s.spawn(|| {
+            let (m, n, k) = (64usize, 48usize, 32usize);
+            let av = vec![0.5f32; m * k];
+            let bv = vec![0.25f32; k * n];
+            for _ in 0..6 {
+                let mut c = vec![1.0f32; m * n];
+                gemm_with_threads(
+                    Transpose::No,
+                    Transpose::No,
+                    m,
+                    n,
+                    k,
+                    1.0,
+                    &av,
+                    &bv,
+                    0.0,
+                    &mut c,
+                    4,
+                );
+                for x in &c {
+                    assert!((x - 4.0).abs() < 1e-3, "gemm element off: {x}");
+                }
+            }
+        });
+    });
+
+    let done = ck.shutdown();
+    assert!(done >= 30, "checkpointer completed {done} snapshots, wanted >= 30");
+    let latest = ck.latest_blocking().expect("a snapshot must have landed");
+    assert!(latest.1.tensors.contains_key("w0"));
+    for name in ["w0", "w1", "w2"] {
+        let (value, _version) = a.get(name);
+        assert!(
+            value.data().iter().all(|x| x.is_finite()),
+            "param {name} corrupted under stress"
+        );
+    }
+}
