@@ -268,6 +268,70 @@ fn emit_faults_probe(check: bool) {
     }
 }
 
+/// Run the wire-chaos probe (sandblaster(1,1) × raw/int8 codecs ×
+/// {lossless, drop+retry, corrupt+retry, severed}) and write the
+/// `BENCH_chaos.json` artifact at the repo root. With `check`, assert the
+/// acceptance bars: the armed-but-lossless baseline wastes no bytes; every
+/// eventually-delivered lossy scenario ends bitwise identical to the
+/// lossless run while paying a strictly positive retransmit/overhead cost
+/// (honest byte accounting: goodput < 1); and the severed scenario
+/// completes with recorded bounded-staleness degradation instead of
+/// hanging — the CI chaos job runs this under `PALLAS_NUM_THREADS=1` and
+/// `=4`.
+fn emit_chaos_probe(check: bool) {
+    let probes = singa::bench::chaos_probe(12);
+    let json = singa::bench::chaos_probes_json(&probes);
+    println!("==== wire-chaos probe ====");
+    print!("{json}");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_chaos.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    if check {
+        for p in &probes {
+            let tag = format!("{}/{}", p.codec, p.scenario);
+            match p.scenario {
+                "lossless" => {
+                    assert_eq!(p.wasted_bytes, 0, "{tag}: lossless run must waste no bytes");
+                    assert_eq!(p.goodput_ratio, 1.0, "{tag}: lossless goodput must be 1");
+                    assert_eq!(p.degraded_steps, 0, "{tag}: lossless run must not degrade");
+                }
+                "drop+retry" | "corrupt+retry" => {
+                    assert!(
+                        p.values_bitwise,
+                        "{tag}: eventual delivery must end bitwise identical to lossless"
+                    );
+                    assert!(p.retransmits > 0, "{tag}: the retry protocol must have fired");
+                    assert_eq!(p.degraded_steps, 0, "{tag}: retries must prevent degradation");
+                    assert!(
+                        p.overhead_ratio > 1.0 && p.goodput_ratio < 1.0,
+                        "{tag}: a lossy wire must cost virtual time and goodput \
+                         (ratio {:.4}, goodput {:.4})",
+                        p.overhead_ratio,
+                        p.goodput_ratio
+                    );
+                }
+                "severed" => {
+                    assert!(
+                        p.degraded_steps > 0 && p.staleness_adoptions > 0,
+                        "{tag}: a severed link must degrade to recorded bounded staleness \
+                         (degraded {} / adoptions {})",
+                        p.degraded_steps,
+                        p.staleness_adoptions
+                    );
+                }
+                other => panic!("unexpected chaos scenario '{other}'"),
+            }
+        }
+        println!(
+            "chaos check passed: {} scenarios — lossy runs bitwise-stable under eventual \
+             delivery, severed links degrade gracefully",
+            probes.len()
+        );
+    }
+}
+
 fn main() {
     // `cargo bench --bench figures -- alloc [check]` runs only the
     // allocation probes (model loops + distributed run_job; the CI
@@ -276,6 +340,7 @@ fn main() {
     // conv/im2col scaling probe; `-- overlap [check]` runs only the
     // sequential-vs-overlapped exchange probe (CI adds `check`);
     // `-- faults [check]` runs only the fault-recovery probe (CI adds
+    // `check`); `-- chaos [check]` runs only the wire-chaos probe (CI adds
     // `check`); no argument runs everything.
     let args: Vec<String> = std::env::args().collect();
     let has = |s: &str| args.iter().any(|a| a == s);
@@ -295,6 +360,10 @@ fn main() {
         emit_faults_probe(has("check"));
         return;
     }
+    if has("chaos") {
+        emit_chaos_probe(has("check"));
+        return;
+    }
     emit_alloc_probe(has("check"));
     if has("alloc") {
         return;
@@ -303,6 +372,7 @@ fn main() {
     emit_conv_probe();
     emit_overlap_probe(false);
     emit_faults_probe(false);
+    emit_chaos_probe(false);
 
     println!("==== paper figures (quick mode) ====");
     let out = singa::bench::run_all(true);

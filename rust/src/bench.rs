@@ -239,18 +239,24 @@ pub fn distributed_alloc_probe(warmup: u64, steps: u64) -> Vec<DistAllocProbe> {
     // with checkpointing enabled too. The `+f16`/`+int8` cases arm the
     // wire codec: steady-state encode/decode and error feedback must run
     // entirely in the workspace scratch sized at construction.
-    let cases: [(&'static str, ClusterTopology, bool, Codec); 6] = [
-        ("sandblaster(1,1)", ClusterTopology::sandblaster(1, 1), false, Codec::Raw),
-        ("sandblaster(1,1)+ckpt", ClusterTopology::sandblaster(1, 1), true, Codec::Raw),
-        ("sandblaster(1,1)+f16", ClusterTopology::sandblaster(1, 1), false, Codec::F16),
-        ("sandblaster(1,1)+int8", ClusterTopology::sandblaster(1, 1), false, Codec::Int8),
-        ("downpour(3,1,2)", ClusterTopology::downpour(3, 1, 2), false, Codec::Raw),
-        ("hogwild(2,1,10)", ClusterTopology::hogwild(2, 1, 10), false, Codec::Raw),
+    // The `+chaos` case arms the retry protocol (every first copy dropped,
+    // every retransmit delivered): CRC framing, retransmit bookkeeping, and
+    // the shared wire timeline must all run in pre-sized scratch.
+    let none = FaultPlan::none;
+    let lossy = || FaultPlan::none().drop_nth(0, 0, u64::MAX, 0);
+    let cases: [(&'static str, ClusterTopology, bool, Codec, FaultPlan); 7] = [
+        ("sandblaster(1,1)", ClusterTopology::sandblaster(1, 1), false, Codec::Raw, none()),
+        ("sandblaster(1,1)+ckpt", ClusterTopology::sandblaster(1, 1), true, Codec::Raw, none()),
+        ("sandblaster(1,1)+f16", ClusterTopology::sandblaster(1, 1), false, Codec::F16, none()),
+        ("sandblaster(1,1)+int8", ClusterTopology::sandblaster(1, 1), false, Codec::Int8, none()),
+        ("sandblaster(1,1)+chaos", ClusterTopology::sandblaster(1, 1), false, Codec::Raw, lossy()),
+        ("downpour(3,1,2)", ClusterTopology::downpour(3, 1, 2), false, Codec::Raw, none()),
+        ("hogwild(2,1,10)", ClusterTopology::hogwild(2, 1, 10), false, Codec::Raw, none()),
     ];
     let data: Arc<dyn DataSource> = Arc::new(SyntheticDigits::new(64, 5, 77));
     cases
-        .iter()
-        .map(|&(name, ref topo, ckpt, codec)| {
+        .into_iter()
+        .map(|(name, topo, ckpt, codec, faults)| {
             let b = NetBuilder::new()
                 .add(LayerConf::new("data", LayerKind::Input { shape: vec![16, 64] }, &[]))
                 .add(LayerConf::new("label", LayerKind::Input { shape: vec![16] }, &[]))
@@ -272,6 +278,7 @@ pub fn distributed_alloc_probe(warmup: u64, steps: u64) -> Vec<DistAllocProbe> {
             conf.topology = topo.clone();
             conf.alloc_probe_from = Some(warmup);
             conf.wire_codec = codec;
+            conf.faults = faults;
             if ckpt {
                 conf.checkpoint = Some(CheckpointConf::every(4));
             }
@@ -672,6 +679,164 @@ pub fn faults_probes_json(probes: &[FaultsProbe]) -> String {
             p.checkpoints,
             p.backup_rescues,
             p.recovery_virt_ms,
+            p.values_bitwise,
+            metrics,
+            if i + 1 == probes.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Chaos probe: retry protocol under a lossy wire (BENCH_chaos.json)
+// ---------------------------------------------------------------------------
+
+/// One wire-fault scenario of the MLP job under one codec: retransmit and
+/// goodput accounting for the retry protocol, the recovery overhead on the
+/// virtual clock, and the headline invariant that a lossy run whose buckets
+/// all eventually deliver stays bitwise identical to the lossless run.
+#[derive(Debug, Clone)]
+pub struct ChaosProbe {
+    pub codec: &'static str,
+    pub scenario: &'static str,
+    pub iters: u64,
+    /// Final virtual clock of the (single) worker group (ms).
+    pub virt_ms: f64,
+    /// virt_ms / the lossless baseline's virt_ms — the recovery overhead of
+    /// timeouts and retransmits (1.0 for the baseline itself).
+    pub overhead_ratio: f64,
+    pub drops: u64,
+    pub corruptions_detected: u64,
+    pub retransmits: u64,
+    /// Retransmits per training step — the protocol's retry pressure.
+    pub retransmit_rate: f64,
+    pub staleness_adoptions: u64,
+    /// Distinct degraded steps summed over groups (buckets that exhausted
+    /// their retry budget and adopted last-known-fresh values).
+    pub degraded_steps: u64,
+    /// Bytes charged to attempts that never delivered (honest accounting:
+    /// the ledger includes them).
+    pub wasted_bytes: u64,
+    /// Useful fraction of the parameter-plane traffic:
+    /// 1 - wasted_bytes / ledger.param_bytes().
+    pub goodput_ratio: f64,
+    /// Final params bitwise-equal to the lossless run. True whenever every
+    /// bucket eventually delivered; the `severed` scenario degrades to
+    /// bounded staleness instead, so it reports false by design.
+    pub values_bitwise: bool,
+}
+
+/// Measure the retry protocol on sandblaster(1,1) under the Raw and Int8
+/// codecs. Four scenarios per codec: lossless baseline (framing armed via a
+/// never-firing rule, so the transparency pin is part of the probe), every
+/// first copy dropped, every first copy corrupted (CRC-detected), and a
+/// link severed halfway (bounded-staleness degradation).
+pub fn chaos_probe(iters: u64) -> Vec<ChaosProbe> {
+    let iters = iters.max(6);
+    let mlp = NetBuilder::new()
+        .add(LayerConf::new("data", LayerKind::Input { shape: vec![16, 64] }, &[]))
+        .add(LayerConf::new("label", LayerKind::Input { shape: vec![16] }, &[]))
+        .add(LayerConf::new(
+            "h1",
+            LayerKind::InnerProduct { out: 32, act: Activation::Relu, init_std: 0.1 },
+            &["data"],
+        ))
+        .add(LayerConf::new(
+            "logits",
+            LayerKind::InnerProduct { out: 5, act: Activation::Identity, init_std: 0.1 },
+            &["h1"],
+        ))
+        .add(LayerConf::new("loss", LayerKind::SoftmaxLoss, &["logits", "label"]));
+    let digits: Arc<dyn DataSource> = Arc::new(SyntheticDigits::new(64, 5, 77));
+
+    let mut out = Vec::new();
+    for codec in [Codec::Raw, Codec::Int8] {
+        let run = |faults: FaultPlan| {
+            let mut conf = JobConf::new("chaos_probe", mlp.clone());
+            conf.batch_size = 16;
+            conf.iters = iters;
+            conf.updater = UpdaterConf::sgd(0.1);
+            conf.wire_codec = codec;
+            conf.faults = faults;
+            run_job(&conf, digits.clone())
+        };
+        // The baseline arms the frame path with a rule that never fires, so
+        // overhead_ratio isolates the cost of faults, not of framing.
+        let armed = FaultPlan::none().drop_nth(0, u64::MAX - 1, u64::MAX, 0);
+        let base = run(armed);
+        let scenarios: [(&'static str, crate::coordinator::JobReport); 3] = [
+            ("drop+retry", run(FaultPlan::none().drop_nth(0, 0, u64::MAX, 0))),
+            ("corrupt+retry", run(FaultPlan::none().corrupt_nth(0, 0, u64::MAX, 0))),
+            ("severed", run(FaultPlan::none().sever(0, iters / 2))),
+        ];
+        let base_virt = base.group_virt_ms[0];
+        let mut push = |scenario: &'static str, r: &crate::coordinator::JobReport| {
+            let ev = &r.wire_events;
+            let total = r.ledger.param_bytes() as f64;
+            let goodput = if total > 0.0 {
+                (total - ev.wasted_bytes as f64) / total
+            } else {
+                1.0
+            };
+            out.push(ChaosProbe {
+                codec: codec.name(),
+                scenario,
+                iters,
+                virt_ms: r.group_virt_ms[0],
+                overhead_ratio: r.group_virt_ms[0] / base_virt,
+                drops: ev.drops,
+                corruptions_detected: ev.corruptions_detected,
+                retransmits: ev.retransmits,
+                retransmit_rate: ev.retransmits as f64 / iters as f64,
+                staleness_adoptions: ev.staleness_adoptions,
+                degraded_steps: ev.degraded_steps.iter().sum(),
+                wasted_bytes: ev.wasted_bytes,
+                goodput_ratio: goodput,
+                values_bitwise: params_bitwise_eq(&base.params, &r.params),
+            });
+        };
+        push("lossless", &base);
+        for (scenario, report) in &scenarios {
+            push(scenario, report);
+        }
+    }
+    out
+}
+
+/// Serialize probes as the `BENCH_chaos.json` artifact emitted by
+/// `cargo bench --bench figures -- chaos`.
+pub fn chaos_probes_json(probes: &[ChaosProbe]) -> String {
+    let mut s = String::from("{\n  \"probe\": \"wire_chaos\",\n  \"cases\": [\n");
+    for (i, p) in probes.iter().enumerate() {
+        let metrics = metrics_json(
+            "     ",
+            &[
+                ("virt_ms", p.virt_ms, "ms", "lower_is_better"),
+                ("recovery_overhead", p.overhead_ratio, "x", "lower_is_better"),
+                ("retransmit_rate", p.retransmit_rate, "retransmits/step", "lower_is_better"),
+                ("goodput_ratio", p.goodput_ratio, "fraction", "higher_is_better"),
+                ("degraded_steps", p.degraded_steps as f64, "steps", "lower_is_better"),
+            ],
+        );
+        s.push_str(&format!(
+            "    {{\"codec\": \"{}\", \"scenario\": \"{}\", \"iters\": {}, \
+             \"virt_ms\": {:.4}, \"overhead_ratio\": {:.4}, \"drops\": {}, \
+             \"corruptions_detected\": {}, \"retransmits\": {}, \"staleness_adoptions\": {}, \
+             \"degraded_steps\": {}, \"wasted_bytes\": {}, \"goodput_ratio\": {:.4}, \
+             \"values_bitwise\": {},\n     \"metrics\": {}}}{}\n",
+            p.codec,
+            p.scenario,
+            p.iters,
+            p.virt_ms,
+            p.overhead_ratio,
+            p.drops,
+            p.corruptions_detected,
+            p.retransmits,
+            p.staleness_adoptions,
+            p.degraded_steps,
+            p.wasted_bytes,
+            p.goodput_ratio,
             p.values_bitwise,
             metrics,
             if i + 1 == probes.len() { "" } else { "," }
@@ -1906,6 +2071,52 @@ mod tests {
         assert!(j.contains("\"straggler+backup\""));
         assert!(j.contains("\"values_bitwise\": true"));
         assert!(j.contains("\"recovery_virt_ms\""));
+        assert!(crate::utils::json::Json::parse(&j).is_ok());
+    }
+
+    /// The wire-chaos probe must show the retry protocol working: lossy
+    /// scenarios that eventually deliver end bitwise identical to the
+    /// lossless baseline while paying virtual time and wasted bytes; the
+    /// severed scenario degrades to recorded staleness; and the JSON
+    /// artifact parses.
+    #[test]
+    fn chaos_probe_pins_retry_invariants() {
+        let probes = chaos_probe(6);
+        assert_eq!(probes.len(), 2 * 4, "2 codecs x 4 scenarios");
+        for p in &probes {
+            let tag = format!("{}/{}", p.codec, p.scenario);
+            assert!(p.virt_ms > 0.0, "{tag}");
+            match p.scenario {
+                "lossless" => {
+                    assert_eq!(p.wasted_bytes, 0, "{tag}");
+                    assert_eq!(p.retransmits, 0, "{tag}");
+                    assert_eq!(p.degraded_steps, 0, "{tag}");
+                    assert_eq!(p.overhead_ratio, 1.0, "{tag}");
+                }
+                "drop+retry" | "corrupt+retry" => {
+                    assert!(p.values_bitwise, "{tag}: eventual delivery must be bitwise");
+                    assert!(p.retransmits > 0, "{tag}: retries must fire");
+                    assert_eq!(p.degraded_steps, 0, "{tag}: retries must prevent degradation");
+                    assert!(p.goodput_ratio < 1.0, "{tag}: wasted copies must be charged");
+                    assert!(
+                        p.overhead_ratio > 1.0,
+                        "{tag}: timeouts and retransmits must cost virtual time ({:.4})",
+                        p.overhead_ratio
+                    );
+                }
+                "severed" => {
+                    assert!(p.degraded_steps > 0, "{tag}: a dead link must degrade");
+                    assert!(p.staleness_adoptions > 0, "{tag}");
+                }
+                other => panic!("unknown scenario {other}"),
+            }
+        }
+        let j = chaos_probes_json(&probes);
+        assert!(j.contains("\"wire_chaos\""));
+        assert!(j.contains("\"drop+retry\""));
+        assert!(j.contains("\"severed\""));
+        assert!(j.contains("\"goodput_ratio\""));
+        assert!(j.contains("\"retransmit_rate\""));
         assert!(crate::utils::json::Json::parse(&j).is_ok());
     }
 

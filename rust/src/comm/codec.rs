@@ -32,6 +32,13 @@ use anyhow::{bail, Result};
 /// Encoded-chunk header: tag byte + f32 LE scale + u32 LE element count.
 pub const CHUNK_HEADER: usize = 9;
 
+/// Integrity-frame header prepended to a chunk under the retry protocol
+/// (`FaultPlan` wire faults armed): u32 LE per-bucket sequence number +
+/// u32 LE CRC32 of the chunk bytes. The sequence number lets a receiver
+/// discard duplicates and stale retransmits; the CRC turns silent bit
+/// damage into a detected, retryable loss — for `Raw` payloads too.
+pub const FRAME_HEADER: usize = 8;
+
 /// Bound on a decoded chunk's element count (mirrors the checkpoint
 /// reader's `MAX_ELEMS`): a corrupt count field errors out instead of
 /// driving a giant allocation or loop.
@@ -98,6 +105,14 @@ impl Codec {
         CHUNK_HEADER + n * self.elem_bytes()
     }
 
+    /// Buffer length of a CRC-framed chunk for `n` elements. Under the
+    /// retry protocol even `Raw` ships the self-describing chunk format
+    /// (the CRC needs a concrete byte layout to cover), so the framed wire
+    /// charge is `FRAME_HEADER + encoded_len` for every codec.
+    pub fn framed_len(self, n: usize) -> usize {
+        FRAME_HEADER + self.encoded_len(n)
+    }
+
     /// Modeled wire bytes of one `payload_bytes` (f32) parameter payload
     /// under this codec. Raw ships the blob as-is — the historical charge,
     /// no chunk framing — so its accounting stays bit-identical; quantized
@@ -137,6 +152,13 @@ impl Codec {
     /// on this plane always are.
     pub fn encode_into(self, src: &[f32], dst: &mut Vec<u8>) {
         dst.clear();
+        self.encode_append(src, dst);
+    }
+
+    /// [`Codec::encode_into`] without the clear: append the chunk to
+    /// whatever `dst` already holds (the integrity frame writes its header
+    /// first and backfills the CRC over the appended chunk).
+    fn encode_append(self, src: &[f32], dst: &mut Vec<u8>) {
         dst.push(self.tag());
         let scale = self.scale_for(src);
         dst.extend_from_slice(&scale.to_le_bytes());
@@ -234,6 +256,72 @@ impl Codec {
         }
         Ok(())
     }
+}
+
+const CRC32_TABLE: [u32; 256] = crc32_table();
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32/ISO-HDLC (the IEEE 802.3 polynomial, reflected, as in ethernet,
+/// gzip, and zlib) over `data`. Std-only, table-driven; the table is built
+/// at compile time.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Encode `src` as a CRC-framed chunk into `dst` (cleared and refilled):
+/// `[seq u32 LE][crc32 u32 LE][chunk]`, with the CRC computed over the
+/// chunk bytes. Reserve [`Codec::framed_len`] up front to keep the steady
+/// state free of buffer growth.
+pub fn frame_chunk(codec: Codec, seq: u32, src: &[f32], dst: &mut Vec<u8>) {
+    dst.clear();
+    dst.extend_from_slice(&seq.to_le_bytes());
+    dst.extend_from_slice(&[0u8; 4]); // CRC backfilled below
+    codec.encode_append(src, dst);
+    let crc = crc32(&dst[FRAME_HEADER..]);
+    dst[4..8].copy_from_slice(&crc.to_le_bytes());
+}
+
+/// Verify a framed chunk: returns the sequence number and the chunk bytes,
+/// or a named error on a truncated frame or CRC mismatch. Hardened like
+/// [`Codec::decode_into`]: arbitrary input never panics.
+pub fn frame_verify(buf: &[u8]) -> Result<(u32, &[u8])> {
+    if buf.len() < FRAME_HEADER {
+        bail!(
+            "framed chunk truncated: {} bytes, need a {FRAME_HEADER}-byte frame header",
+            buf.len()
+        );
+    }
+    // lint: panic-ok(4-byte slices of a length-checked header are infallible)
+    let seq = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    // lint: panic-ok(4-byte slices of a length-checked header are infallible)
+    let want = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    let got = crc32(&buf[FRAME_HEADER..]);
+    if got != want {
+        bail!(
+            "frame CRC32 mismatch: header says {want:#010x}, chunk hashes to {got:#010x} \
+             (corrupt transfer; discard and await retransmit)"
+        );
+    }
+    Ok((seq, &buf[FRAME_HEADER..]))
 }
 
 /// THE error-feedback encode recipe, shared by the comm path
@@ -402,5 +490,48 @@ mod tests {
             c.encode_into(&v, &mut enc);
             assert_eq!(enc.len(), c.encoded_len(v.len()), "{}", c.name());
         }
+    }
+
+    /// CRC-32/ISO-HDLC check vectors: the canonical "123456789" → 0xCBF43926,
+    /// the empty string → 0, and a single zero byte.
+    #[test]
+    fn crc32_check_vectors() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(&[0u8]), 0xD202_EF8D);
+    }
+
+    /// A framed chunk round-trips: verify recovers the sequence number and
+    /// the exact chunk bytes the codec produced, at the `framed_len` size.
+    #[test]
+    fn frame_roundtrip_preserves_seq_and_chunk() {
+        let v = [0.5f32, -3.25, 0.0, 1e-3];
+        let mut framed = Vec::new();
+        let mut bare = Vec::new();
+        for c in [Codec::Raw, Codec::F16, Codec::Int8] {
+            frame_chunk(c, 7, &v, &mut framed);
+            assert_eq!(framed.len(), c.framed_len(v.len()), "{}", c.name());
+            let (seq, chunk) = frame_verify(&framed).unwrap();
+            assert_eq!(seq, 7);
+            c.encode_into(&v, &mut bare);
+            assert_eq!(chunk, &bare[..], "{}", c.name());
+            let mut dec = [0.0f32; 4];
+            c.decode_into(chunk, &mut dec).unwrap();
+        }
+    }
+
+    /// Truncated frames and CRC mismatches are named errors, never panics
+    /// or silent acceptance.
+    #[test]
+    fn frame_verify_hardened() {
+        assert!(frame_verify(&[]).unwrap_err().to_string().contains("truncated"));
+        assert!(frame_verify(&[1, 2, 3]).unwrap_err().to_string().contains("truncated"));
+        // An 8-byte frame with an empty chunk: CRC of nothing is 0.
+        assert!(frame_verify(&[9, 0, 0, 0, 0, 0, 0, 0]).is_ok());
+        let mut framed = Vec::new();
+        frame_chunk(Codec::Raw, 1, &[1.0, 2.0], &mut framed);
+        framed[FRAME_HEADER + 3] ^= 0x40;
+        let e = frame_verify(&framed).unwrap_err().to_string();
+        assert!(e.contains("CRC32 mismatch"), "{e}");
     }
 }

@@ -1,16 +1,84 @@
 //! Deterministic fault injection on the simnet clock: per-worker-group
-//! kill-at-step and delay/straggler schedules, configured via
+//! kill-at-step and delay/straggler schedules, plus per-link *wire* fault
+//! schedules (drop / corrupt / duplicate / reorder), configured via
 //! [`crate::coordinator::JobConf::faults`].
 //!
-//! Production scale means workers die and stragglers happen (IBM DLaaS:
-//! resilience is what turns a training framework into a service). The plan
-//! is *deterministic in step space* — a kill fires at the top of a named
-//! `(group, step)`, a delay scales that step's virtual compute charge —
-//! so fault scenarios replay bit-for-bit: recovery tests can pin a
-//! restarted run against an uninterrupted one, and `BENCH_faults.json`
-//! measures recovery overhead on the virtual clock instead of on wall
-//! noise. Training *values* are never perturbed; only control flow (kill →
-//! restart from checkpoint) and the clock/ledger accounting change.
+//! Production scale means workers die, stragglers happen, and the network
+//! loses or mangles packets (IBM DLaaS: resilience is what turns a training
+//! framework into a service; the Mayer & Jacobsen survey names transport
+//! reliability a core open challenge). The plan is *deterministic in step
+//! space* — a kill fires at the top of a named `(group, step)`, a delay
+//! scales that step's virtual compute charge, and a wire rule decides the
+//! fate of a named flush attempt, with probabilistic rules resolved by a
+//! seeded splitmix64 stream (the same generator family as
+//! `PALLAS_SANITIZE=stress`) — so chaos scenarios replay bit-for-bit:
+//! tests can pin a lossy run against a lossless one, and
+//! `BENCH_chaos.json` measures retry overhead on the virtual clock instead
+//! of on wall noise. Training *values* are never perturbed by the plan
+//! itself; the retry protocol in `coordinator::exchange` re-delivers lost
+//! and corrupt flushes (value-transparent), and only an exhausted retry
+//! budget degrades a bucket to its last-known value (counted as bounded
+//! staleness in `JobReport::wire_events`).
+
+use anyhow::{bail, Result};
+
+/// One splitmix64 output step — the same finalizer family the stress-mode
+/// sanitizer seeds its yield decisions with (`runtime::sync`). Used here to
+/// resolve probabilistic wire rules deterministically from the plan seed.
+pub(crate) fn splitmix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Fold a tuple of event coordinates into the seeded stream: one splitmix
+/// step per component, so nearby coordinates land far apart.
+fn mix(seed: u64, parts: &[u64]) -> u64 {
+    parts.iter().fold(splitmix64(seed), |h, &p| splitmix64(h ^ p))
+}
+
+/// What a wire rule does to a matching flush attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFault {
+    /// The transfer vanishes: bytes are charged (they crossed the wire),
+    /// nothing arrives, the sender's deadline fires.
+    Drop,
+    /// The transfer arrives bit-damaged: the CRC32 frame check fails on the
+    /// receiver and the chunk is discarded, same outcome as a drop.
+    Corrupt,
+    /// The transfer arrives twice: the second copy burns wire time and is
+    /// discarded by its stale sequence number.
+    Duplicate,
+    /// A stale retransmit overtakes the fresh copy: the out-of-date frame
+    /// arrives first and is discarded by its sequence number.
+    Reorder,
+}
+
+impl WireFault {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireFault::Drop => "drop",
+            WireFault::Corrupt => "corrupt",
+            WireFault::Duplicate => "duplicate",
+            WireFault::Reorder => "reorder",
+        }
+    }
+}
+
+/// A wire rule: flush attempts of `group` in steps `from..to` suffer
+/// `kind`, either on one named attempt (`nth = Some`) or on every attempt
+/// (`nth = None`, a severed link), gated by a `rate` coin resolved from the
+/// plan's seeded splitmix64 stream (`rate = 1.0` fires unconditionally).
+#[derive(Debug, Clone, PartialEq)]
+struct WireRule {
+    group: usize,
+    from: u64,
+    to: u64,
+    kind: WireFault,
+    nth: Option<u32>,
+    rate: f64,
+}
 
 /// A delay rule: steps `from..to` of `group` take `factor`× their healthy
 /// per-worker compute time (a straggling worker dragging the group's
@@ -24,11 +92,14 @@ struct DelayRule {
 }
 
 /// A deterministic fault schedule for one job. Built with the chained
-/// constructors; queried by the worker-group loop each step.
+/// constructors; queried by the worker-group loop each step and by the
+/// exchange's delivery loop on each flush attempt.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FaultPlan {
     kills: Vec<(usize, u64)>,
     delays: Vec<DelayRule>,
+    wire: Vec<WireRule>,
+    wire_seed: u64,
     /// Virtual time (µs) a killed worker group spends restarting —
     /// scheduler reallocation, process start, net rebuild — before the
     /// checkpoint read is charged on top.
@@ -37,7 +108,13 @@ pub struct FaultPlan {
 
 impl Default for FaultPlan {
     fn default() -> FaultPlan {
-        FaultPlan { kills: Vec::new(), delays: Vec::new(), restart_latency_us: 2_000_000.0 }
+        FaultPlan {
+            kills: Vec::new(),
+            delays: Vec::new(),
+            wire: Vec::new(),
+            wire_seed: 0xC4A0_5EED,
+            restart_latency_us: 2_000_000.0,
+        }
     }
 }
 
@@ -48,7 +125,7 @@ impl FaultPlan {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.kills.is_empty() && self.delays.is_empty()
+        self.kills.is_empty() && self.delays.is_empty() && self.wire.is_empty()
     }
 
     /// Kill worker group `group` at the top of `step` (before the step's
@@ -67,14 +144,98 @@ impl FaultPlan {
 
     /// Straggle over a half-open step range `from..to`.
     pub fn delay_range(mut self, group: usize, from: u64, to: u64, factor: f64) -> FaultPlan {
-        assert!(factor >= 1.0, "a delay factor below 1 would model a speedup");
+        assert!(
+            factor.is_finite() && factor >= 1.0,
+            "delay factor must be finite and >= 1 (a factor below 1 would model a speedup); \
+             got {factor}"
+        );
         self.delays.push(DelayRule { group, from, to, factor });
         self
     }
 
     pub fn with_restart_latency_us(mut self, us: f64) -> FaultPlan {
+        assert!(
+            us.is_finite() && us >= 0.0,
+            "restart latency must be finite and >= 0 µs (it is charged to every \
+             recovery on the virtual clock); got {us}"
+        );
         self.restart_latency_us = us;
         self
+    }
+
+    /// Reseed the splitmix64 stream that resolves probabilistic wire rules.
+    pub fn with_wire_seed(mut self, seed: u64) -> FaultPlan {
+        self.wire_seed = seed;
+        self
+    }
+
+    fn wire_rule(
+        mut self,
+        group: usize,
+        from: u64,
+        to: u64,
+        kind: WireFault,
+        nth: Option<u32>,
+        rate: f64,
+    ) -> FaultPlan {
+        assert!(
+            rate.is_finite() && (0.0..=1.0).contains(&rate),
+            "wire fault rate must be a finite probability in [0, 1]; got {rate}"
+        );
+        self.wire.push(WireRule { group, from, to, kind, nth, rate });
+        self
+    }
+
+    /// Lose attempt `nth` (0-based) of every bucket flush `group` sends in
+    /// steps `from..to`. With `nth = 0` the first copy always vanishes and
+    /// the retransmit goes through — the canonical eventual-delivery plan.
+    pub fn drop_nth(self, group: usize, from: u64, to: u64, nth: u32) -> FaultPlan {
+        self.wire_rule(group, from, to, WireFault::Drop, Some(nth), 1.0)
+    }
+
+    /// Bit-damage attempt `nth` of every matching flush: the receiver's
+    /// CRC32 check rejects the frame and the sender retransmits.
+    pub fn corrupt_nth(self, group: usize, from: u64, to: u64, nth: u32) -> FaultPlan {
+        self.wire_rule(group, from, to, WireFault::Corrupt, Some(nth), 1.0)
+    }
+
+    /// Deliver attempt `nth` of every matching flush twice; the second copy
+    /// is discarded by its duplicate sequence number.
+    pub fn duplicate_nth(self, group: usize, from: u64, to: u64, nth: u32) -> FaultPlan {
+        self.wire_rule(group, from, to, WireFault::Duplicate, Some(nth), 1.0)
+    }
+
+    /// Let a stale retransmit overtake attempt `nth` of every matching
+    /// flush; the out-of-date frame is discarded by its sequence number.
+    pub fn reorder_nth(self, group: usize, from: u64, to: u64, nth: u32) -> FaultPlan {
+        self.wire_rule(group, from, to, WireFault::Reorder, Some(nth), 1.0)
+    }
+
+    /// Probabilistic chaos: every attempt of every matching flush suffers
+    /// `kind` with probability `rate`, resolved from the seeded splitmix64
+    /// stream (bit-for-bit reproducible for a given `wire_seed`).
+    pub fn wire_rate(
+        self,
+        group: usize,
+        from: u64,
+        to: u64,
+        kind: WireFault,
+        rate: f64,
+    ) -> FaultPlan {
+        self.wire_rule(group, from, to, kind, None, rate)
+    }
+
+    /// Sever `group`'s link from step `from` onward: every attempt of every
+    /// later flush is lost, so each bucket exhausts its retry budget and
+    /// the group degrades to bounded staleness.
+    pub fn sever(self, group: usize, from: u64) -> FaultPlan {
+        self.wire_rule(group, from, u64::MAX, WireFault::Drop, None, 1.0)
+    }
+
+    /// Does the plan schedule any wire faults? When false, the exchange
+    /// runs the historical (frameless, retry-free) protocol bit-for-bit.
+    pub fn has_wire_faults(&self) -> bool {
+        !self.wire.is_empty()
     }
 
     /// Does the plan kill `group` at the top of `step`?
@@ -90,6 +251,138 @@ impl FaultPlan {
             .filter(|r| r.group == group && (r.from..r.to).contains(&step))
             .map(|r| r.factor)
             .fold(1.0, f64::max)
+    }
+
+    /// Fate of one flush attempt: the first rule (in insertion order)
+    /// matching `(group, step, attempt)` whose rate coin lands decides;
+    /// `None` means clean delivery. `seq` is the frame's sequence number —
+    /// part of the coin so distinct buckets of one step fault
+    /// independently under probabilistic rules.
+    pub fn wire_fault(&self, group: usize, step: u64, seq: u32, attempt: u32) -> Option<WireFault> {
+        for (i, r) in self.wire.iter().enumerate() {
+            if r.group != group || !(r.from..r.to).contains(&step) {
+                continue;
+            }
+            if let Some(n) = r.nth {
+                if n != attempt {
+                    continue;
+                }
+            }
+            if r.rate < 1.0 {
+                let h = mix(
+                    self.wire_seed,
+                    &[group as u64, step, seq as u64, attempt as u64, i as u64],
+                );
+                // 53 high bits → a uniform f64 in [0, 1).
+                if (h >> 11) as f64 / (1u64 << 53) as f64 >= r.rate {
+                    continue;
+                }
+            }
+            return Some(r.kind);
+        }
+        None
+    }
+
+    /// Which bit a `Corrupt` fault flips in the framed chunk, resolved from
+    /// the same stream (salted so it never correlates with the rate coin).
+    pub fn corrupt_bit(
+        &self,
+        group: usize,
+        step: u64,
+        seq: u32,
+        attempt: u32,
+        frame_bits: u64,
+    ) -> u64 {
+        debug_assert!(frame_bits > 0);
+        let salted = self.wire_seed ^ 0xB17F_11B5;
+        let h = mix(salted, &[group as u64, step, seq as u64, attempt as u64]);
+        h % frame_bits
+    }
+
+    /// Reject rules naming worker groups the job does not have — a kill,
+    /// delay, or wire rule aimed at an out-of-range group would otherwise
+    /// never fire and the scenario would silently test nothing.
+    pub fn validate(&self, n_groups: usize) -> Result<()> {
+        for &(g, step) in &self.kills {
+            if g >= n_groups {
+                bail!(
+                    "fault plan: kill at step {step} names worker group {g}, but the job \
+                     has only {n_groups} worker group(s) (groups are 0-based)"
+                );
+            }
+        }
+        for r in &self.delays {
+            if r.group >= n_groups {
+                bail!(
+                    "fault plan: delay rule over steps {}..{} names worker group {}, but \
+                     the job has only {n_groups} worker group(s) (groups are 0-based)",
+                    r.from,
+                    r.to,
+                    r.group
+                );
+            }
+        }
+        for r in &self.wire {
+            if r.group >= n_groups {
+                bail!(
+                    "fault plan: wire {} rule over steps {}..{} names worker group {}, but \
+                     the job has only {n_groups} worker group(s) (groups are 0-based)",
+                    r.kind.name(),
+                    r.from,
+                    r.to,
+                    r.group
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Retry/timeout knobs for the wire protocol (`JobConf::retry`): attempt
+/// `a` of a flush arms a virtual-clock deadline `timeout_us * backoff^a`
+/// after its send instant; a lost or corrupt delivery retransmits at the
+/// deadline, and after `max_attempts` failed copies the bucket degrades to
+/// its last-known value (bounded staleness) instead of hanging.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryConf {
+    pub timeout_us: f64,
+    pub backoff: f64,
+    pub max_attempts: u32,
+}
+
+impl Default for RetryConf {
+    fn default() -> RetryConf {
+        RetryConf { timeout_us: 5_000.0, backoff: 2.0, max_attempts: 4 }
+    }
+}
+
+impl RetryConf {
+    pub fn new(timeout_us: f64, backoff: f64, max_attempts: u32) -> RetryConf {
+        let conf = RetryConf { timeout_us, backoff, max_attempts };
+        conf.validate();
+        conf
+    }
+
+    /// Panic (with the offending field) on values that would poison the
+    /// virtual clock or retry forever.
+    pub fn validate(&self) {
+        assert!(
+            self.timeout_us.is_finite() && self.timeout_us > 0.0,
+            "retry timeout must be finite and > 0 µs; got {}",
+            self.timeout_us
+        );
+        assert!(
+            self.backoff.is_finite() && self.backoff >= 1.0,
+            "retry backoff factor must be finite and >= 1; got {}",
+            self.backoff
+        );
+        assert!(self.max_attempts >= 1, "retry needs at least one attempt");
+    }
+
+    /// Deadline armed for attempt `attempt` (0-based), in µs after its send
+    /// instant: exponential backoff on the base timeout.
+    pub fn timeout_after(&self, attempt: u32) -> f64 {
+        self.timeout_us * self.backoff.powi(attempt as i32)
     }
 }
 
@@ -110,6 +403,57 @@ pub struct FaultRecord {
     pub recovery_virt_ms: f64,
 }
 
+/// Wire-plane outcome of a job, reported in `JobReport::wire_events`
+/// (mirroring `fault_events` for the process plane). All counts are summed
+/// over the job; `degraded_steps` is per worker group.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WireEvents {
+    /// Transfers lost in flight (charged to the wire, never delivered).
+    pub drops: u64,
+    /// Frames whose CRC32 check failed on the receiver.
+    pub corruptions_detected: u64,
+    /// Extra copies discarded by their duplicate sequence number.
+    pub duplicates_discarded: u64,
+    /// Stale frames that overtook fresh ones, discarded by sequence number.
+    pub reorders_discarded: u64,
+    /// Retransmissions the deadline protocol issued.
+    pub retransmits: u64,
+    /// Buckets that exhausted `max_attempts` and adopted their last-known
+    /// value instead (bounded staleness).
+    pub staleness_adoptions: u64,
+    /// Bytes burned on transfers that were lost, corrupt, or discarded.
+    pub wasted_bytes: u64,
+    /// Per worker group: steps in which at least one bucket degraded.
+    pub degraded_steps: Vec<u64>,
+}
+
+impl WireEvents {
+    /// Fold one worker group's tallies into the job total: scalar counters
+    /// add, and the group's `degraded_steps` entries append (one entry per
+    /// group, in join order — see `run_job`).
+    pub fn absorb(&mut self, other: WireEvents) {
+        self.drops += other.drops;
+        self.corruptions_detected += other.corruptions_detected;
+        self.duplicates_discarded += other.duplicates_discarded;
+        self.reorders_discarded += other.reorders_discarded;
+        self.retransmits += other.retransmits;
+        self.staleness_adoptions += other.staleness_adoptions;
+        self.wasted_bytes += other.wasted_bytes;
+        self.degraded_steps.extend(other.degraded_steps);
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.drops == 0
+            && self.corruptions_detected == 0
+            && self.duplicates_discarded == 0
+            && self.reorders_discarded == 0
+            && self.retransmits == 0
+            && self.staleness_adoptions == 0
+            && self.wasted_bytes == 0
+            && self.degraded_steps.iter().all(|&d| d == 0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,6 +464,8 @@ mod tests {
         assert!(p.is_empty());
         assert!(!p.kill_at(0, 0));
         assert_eq!(p.delay_factor(0, 0), 1.0);
+        assert!(!p.has_wire_faults());
+        assert_eq!(p.wire_fault(0, 0, 0, 0), None);
     }
 
     #[test]
@@ -146,5 +492,148 @@ mod tests {
     #[should_panic(expected = "speedup")]
     fn sub_unit_delay_factor_rejected() {
         let _ = FaultPlan::none().delay(0, 1, 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn nan_delay_factor_rejected() {
+        let _ = FaultPlan::none().delay(0, 1, f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "restart latency")]
+    fn nan_restart_latency_rejected() {
+        let _ = FaultPlan::none().with_restart_latency_us(f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "restart latency")]
+    fn negative_restart_latency_rejected() {
+        let _ = FaultPlan::none().with_restart_latency_us(-1.0);
+    }
+
+    #[test]
+    fn wire_rules_match_group_step_and_attempt() {
+        let p = FaultPlan::none().drop_nth(1, 5, 10, 0);
+        assert!(p.has_wire_faults());
+        assert!(!p.is_empty());
+        assert_eq!(p.wire_fault(1, 5, 3, 0), Some(WireFault::Drop));
+        assert_eq!(p.wire_fault(1, 9, 0, 0), Some(WireFault::Drop));
+        // Wrong group, step outside the range, or a later attempt: clean.
+        assert_eq!(p.wire_fault(0, 5, 3, 0), None);
+        assert_eq!(p.wire_fault(1, 10, 3, 0), None);
+        assert_eq!(p.wire_fault(1, 4, 3, 0), None);
+        assert_eq!(p.wire_fault(1, 5, 3, 1), None);
+    }
+
+    #[test]
+    fn first_matching_rule_wins() {
+        let p = FaultPlan::none().corrupt_nth(0, 0, 10, 0).drop_nth(0, 0, 10, 0);
+        assert_eq!(p.wire_fault(0, 3, 0, 0), Some(WireFault::Corrupt));
+    }
+
+    #[test]
+    fn sever_drops_every_attempt_from_its_step() {
+        let p = FaultPlan::none().sever(0, 7);
+        assert_eq!(p.wire_fault(0, 6, 0, 0), None);
+        for attempt in 0..16 {
+            assert_eq!(p.wire_fault(0, 7, 0, attempt), Some(WireFault::Drop));
+            assert_eq!(p.wire_fault(0, u64::MAX - 1, 9, attempt), Some(WireFault::Drop));
+        }
+    }
+
+    #[test]
+    fn rate_coin_is_seeded_and_deterministic() {
+        let p = FaultPlan::none().wire_rate(0, 0, 1000, WireFault::Drop, 0.5);
+        let outcomes: Vec<bool> = (0..1000).map(|s| p.wire_fault(0, s, 0, 0).is_some()).collect();
+        // Bit-for-bit replay under the same seed.
+        let again: Vec<bool> = (0..1000).map(|s| p.wire_fault(0, s, 0, 0).is_some()).collect();
+        assert_eq!(outcomes, again);
+        // Roughly half fire; both outcomes occur.
+        let fired = outcomes.iter().filter(|&&b| b).count();
+        assert!((300..=700).contains(&fired), "rate 0.5 fired {fired}/1000");
+        // A different seed resolves differently somewhere.
+        let q = FaultPlan::none()
+            .with_wire_seed(0xDEAD_BEEF)
+            .wire_rate(0, 0, 1000, WireFault::Drop, 0.5);
+        let other: Vec<bool> = (0..1000).map(|s| q.wire_fault(0, s, 0, 0).is_some()).collect();
+        assert_ne!(outcomes, other);
+    }
+
+    #[test]
+    fn rate_extremes() {
+        let never = FaultPlan::none().wire_rate(0, 0, 100, WireFault::Corrupt, 0.0);
+        assert!((0..100).all(|s| never.wire_fault(0, s, 0, 0).is_none()));
+        let always = FaultPlan::none().wire_rate(0, 0, 100, WireFault::Corrupt, 1.0);
+        assert!((0..100).all(|s| always.wire_fault(0, s, 0, 0) == Some(WireFault::Corrupt)));
+    }
+
+    #[test]
+    #[should_panic(expected = "probability")]
+    fn out_of_range_rate_rejected() {
+        let _ = FaultPlan::none().wire_rate(0, 0, 1, WireFault::Drop, 1.5);
+    }
+
+    #[test]
+    fn corrupt_bit_is_deterministic_and_in_range() {
+        let p = FaultPlan::none();
+        for len in [1u64, 8, 800, 4096] {
+            let b = p.corrupt_bit(0, 3, 1, 0, len);
+            assert!(b < len);
+            assert_eq!(b, p.corrupt_bit(0, 3, 1, 0, len));
+        }
+    }
+
+    #[test]
+    fn validate_names_the_offending_rule() {
+        assert!(FaultPlan::none().validate(1).is_ok());
+        let full = FaultPlan::none().kill(0, 3).delay(0, 1, 2.0).drop_nth(0, 0, 9, 0);
+        assert!(full.validate(1).is_ok());
+
+        let e = FaultPlan::none().kill(2, 3).validate(2).unwrap_err().to_string();
+        assert!(e.contains("kill") && e.contains("group 2") && e.contains("2 worker group"), "{e}");
+
+        let e = FaultPlan::none().delay(5, 1, 2.0).validate(2).unwrap_err().to_string();
+        assert!(e.contains("delay") && e.contains("group 5"), "{e}");
+
+        let e = FaultPlan::none().corrupt_nth(3, 0, 9, 0).validate(3).unwrap_err().to_string();
+        assert!(e.contains("corrupt") && e.contains("group 3"), "{e}");
+
+        let e = FaultPlan::none().sever(9, 0).validate(1).unwrap_err().to_string();
+        assert!(e.contains("drop") && e.contains("group 9"), "{e}");
+    }
+
+    #[test]
+    fn retry_conf_deadlines_back_off_exponentially() {
+        let r = RetryConf::new(1_000.0, 2.0, 4);
+        assert_eq!(r.timeout_after(0), 1_000.0);
+        assert_eq!(r.timeout_after(1), 2_000.0);
+        assert_eq!(r.timeout_after(3), 8_000.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "timeout")]
+    fn retry_conf_rejects_nan_timeout() {
+        let _ = RetryConf::new(f64::NAN, 2.0, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "backoff")]
+    fn retry_conf_rejects_sub_unit_backoff() {
+        let _ = RetryConf::new(1_000.0, 0.5, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one attempt")]
+    fn retry_conf_rejects_zero_attempts() {
+        let _ = RetryConf::new(1_000.0, 2.0, 0);
+    }
+
+    #[test]
+    fn wire_events_clean_check() {
+        let mut w = WireEvents { degraded_steps: vec![0, 0], ..WireEvents::default() };
+        assert!(w.is_clean());
+        w.retransmits = 1;
+        assert!(!w.is_clean());
     }
 }

@@ -14,6 +14,6 @@ pub mod msg;
 pub mod simnet;
 
 pub use codec::Codec;
-pub use faults::{FaultPlan, FaultRecord};
+pub use faults::{FaultPlan, FaultRecord, RetryConf, WireEvents, WireFault};
 pub use msg::Msg;
-pub use simnet::{ByteLedger, CostModel, LinkModel, LinkTimeline, VirtualClock};
+pub use simnet::{ByteLedger, CostModel, Delivery, LinkModel, LinkTimeline, VirtualClock};

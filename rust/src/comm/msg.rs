@@ -74,6 +74,15 @@ impl Msg {
         2 * codec.wire_bytes(payload_bytes) + 2 * Msg::HEADER
     }
 
+    /// [`Msg::exchange_wire_size_coded`] under the retry protocol: both
+    /// directions ship CRC-framed self-describing chunks (every codec,
+    /// `Raw` included — integrity needs the frame), so each direction pays
+    /// the chunk plus the 8-byte integrity frame on top of its `Msg`
+    /// header.
+    pub fn exchange_wire_size_framed(codec: crate::comm::Codec, payload_bytes: usize) -> usize {
+        2 * codec.framed_len(payload_bytes / 4) + 2 * Msg::HEADER
+    }
+
     pub fn param(&self) -> &str {
         match self {
             Msg::Put { param, .. }
@@ -145,6 +154,27 @@ mod tests {
         assert_eq!(
             Msg::exchange_wire_size_coded(Codec::Int8, payload),
             2 * (CHUNK_HEADER + 10) + 128
+        );
+    }
+
+    /// Framed exchange sizes: every codec — Raw included — pays the chunk
+    /// header plus the 8-byte integrity frame per direction once the retry
+    /// protocol is armed.
+    #[test]
+    fn framed_exchange_wire_sizes() {
+        use crate::comm::codec::{Codec, CHUNK_HEADER, FRAME_HEADER};
+        let payload = 40; // 10 f32 elements
+        assert_eq!(
+            Msg::exchange_wire_size_framed(Codec::Raw, payload),
+            2 * (FRAME_HEADER + CHUNK_HEADER + 40) + 128
+        );
+        assert_eq!(
+            Msg::exchange_wire_size_framed(Codec::F16, payload),
+            2 * (FRAME_HEADER + CHUNK_HEADER + 20) + 128
+        );
+        assert_eq!(
+            Msg::exchange_wire_size_framed(Codec::Int8, payload),
+            2 * (FRAME_HEADER + CHUNK_HEADER + 10) + 128
         );
     }
 }

@@ -8,6 +8,7 @@
 //! *shapes* then follow from the compute/communication ratio exactly as in
 //! the paper's analysis (§5.4.1).
 
+use crate::comm::faults::WireFault;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// A point-to-point link: `time(bytes) = latency + bytes / bandwidth`.
@@ -19,31 +20,48 @@ pub struct LinkModel {
 }
 
 impl LinkModel {
+    /// A validated link: `latency_us` finite and >= 0, `gbps` finite and
+    /// > 0. A NaN latency or a zero bandwidth would poison every virtual
+    /// -clock figure downstream (`transfer_us` would return NaN/inf and
+    /// `merge_us`/`barrier` would propagate it), so reject loudly here.
+    pub fn new(latency_us: f64, gbps: f64) -> LinkModel {
+        assert!(
+            latency_us.is_finite() && latency_us >= 0.0,
+            "link latency must be finite and >= 0 µs; got {latency_us}"
+        );
+        assert!(
+            gbps.is_finite() && gbps > 0.0,
+            "link bandwidth must be finite and > 0 Gbps (zero would make every \
+             transfer take infinite virtual time); got {gbps}"
+        );
+        LinkModel { latency_us, gbps }
+    }
+
     /// 1 Gbps datacenter ethernet (paper's cluster switch), ~50 µs RTT/2.
     pub fn ethernet_1g() -> LinkModel {
-        LinkModel { latency_us: 50.0, gbps: 1.0 }
+        LinkModel::new(50.0, 1.0)
     }
 
     /// PCIe 3.0 x16 host↔device (paper's GPU workstation): ~8 µs, ~12 GB/s
     /// effective ≈ 96 Gbps.
     pub fn pcie3() -> LinkModel {
-        LinkModel { latency_us: 8.0, gbps: 96.0 }
+        LinkModel::new(8.0, 96.0)
     }
 
     /// Same-socket shared memory: near-zero latency, memcpy-bound.
     pub fn shared_memory() -> LinkModel {
-        LinkModel { latency_us: 0.5, gbps: 400.0 }
+        LinkModel::new(0.5, 400.0)
     }
 
     /// Cross-NUMA-socket memory path (the >8-thread degradation in the
     /// paper's Fig 18a is attributed to cross-CPU memory access).
     pub fn cross_numa() -> LinkModel {
-        LinkModel { latency_us: 1.5, gbps: 80.0 }
+        LinkModel::new(1.5, 80.0)
     }
 
     /// 10 Gbps rack LAN (a modern top-of-rack switch), ~20 µs one-way.
     pub fn ethernet_10g() -> LinkModel {
-        LinkModel { latency_us: 20.0, gbps: 10.0 }
+        LinkModel::new(20.0, 10.0)
     }
 
     /// Transfer time in microseconds.
@@ -226,6 +244,42 @@ impl LinkTimeline {
     pub fn free_us(&self) -> f64 {
         self.free_us
     }
+
+    /// The delivery model: charge one flush *attempt* and report its fate.
+    /// The wire time is burned whether or not the payload survives — a lost
+    /// or corrupt transfer occupied the link exactly as long as a clean one
+    /// (honest accounting of wasted bytes); a `Duplicate` serializes a
+    /// second back-to-back copy and finishes when the extra copy lands. The
+    /// outcome is decided upstream by `FaultPlan::wire_fault`, so chaos
+    /// scenarios replay bit-for-bit.
+    pub fn deliver(
+        &mut self,
+        link: &LinkModel,
+        flush_us: f64,
+        bytes: usize,
+        fault: Option<WireFault>,
+    ) -> (Delivery, f64) {
+        let finish = self.flush(link, flush_us, bytes);
+        match fault {
+            Some(WireFault::Drop) => (Delivery::Lost, finish),
+            Some(WireFault::Corrupt) => (Delivery::Corrupted, finish),
+            Some(WireFault::Duplicate) => (Delivery::Ok, self.flush(link, finish, bytes)),
+            Some(WireFault::Reorder) | None => (Delivery::Ok, finish),
+        }
+    }
+}
+
+/// Fate of one transfer attempt through [`LinkTimeline::deliver`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Delivery {
+    /// The frame arrived intact (possibly alongside discarded extra or
+    /// stale copies — those are counted by the protocol layer).
+    Ok,
+    /// The frame vanished in flight; the sender's deadline will fire.
+    Lost,
+    /// The frame arrived bit-damaged; the receiver's CRC32 check rejects
+    /// it, which the sender observes as a deadline miss.
+    Corrupted,
 }
 
 #[cfg(test)]
@@ -282,6 +336,47 @@ mod tests {
         assert_eq!(c.us, 100.0);
         c.merge_us(130.0); // exposed comm tail
         assert_eq!(c.us, 130.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bandwidth")]
+    fn zero_bandwidth_link_rejected() {
+        let _ = LinkModel::new(10.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bandwidth")]
+    fn nan_bandwidth_link_rejected() {
+        let _ = LinkModel::new(10.0, f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "latency")]
+    fn negative_latency_link_rejected() {
+        let _ = LinkModel::new(-1.0, 1.0);
+    }
+
+    /// The delivery model burns wire time on every fate: lost and corrupt
+    /// attempts occupy the link exactly like clean ones, and a duplicate
+    /// serializes a second copy behind the first.
+    #[test]
+    fn deliver_charges_every_fate_honestly() {
+        let link = LinkModel::new(10.0, 8.0); // 10 µs + 1 µs per 1000 B
+        let mut tl = LinkTimeline::new();
+        let (d, f) = tl.deliver(&link, 0.0, 1000, None);
+        assert_eq!((d, f), (Delivery::Ok, 11.0));
+        let (d, f) = tl.deliver(&link, 11.0, 1000, Some(WireFault::Drop));
+        assert_eq!((d, f), (Delivery::Lost, 22.0));
+        let (d, f) = tl.deliver(&link, 22.0, 1000, Some(WireFault::Corrupt));
+        assert_eq!((d, f), (Delivery::Corrupted, 33.0));
+        // Duplicate: two back-to-back copies, finish when the second lands.
+        let (d, f) = tl.deliver(&link, 33.0, 1000, Some(WireFault::Duplicate));
+        assert_eq!((d, f), (Delivery::Ok, 55.0));
+        assert_eq!(tl.free_us(), 55.0);
+        // Reorder: the stale-copy charge is the protocol layer's job; the
+        // real frame itself is one clean transfer.
+        let (d, f) = tl.deliver(&link, 55.0, 1000, Some(WireFault::Reorder));
+        assert_eq!((d, f), (Delivery::Ok, 66.0));
     }
 
     /// The overlap timeline: transfers are charged at their flush time,

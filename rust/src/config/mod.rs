@@ -46,7 +46,33 @@ pub fn parse_job(text: &str) -> Result<JobConf> {
     if let Some(c) = doc.get("wire_codec").and_then(Json::as_str) {
         conf.wire_codec = crate::comm::Codec::parse(c)?;
     }
+    if let Some(r) = doc.get("retry") {
+        conf.retry = parse_retry(r)?;
+    }
     Ok(conf)
+}
+
+/// Parse the optional `"retry"` block (wire-protocol timeout/backoff knobs,
+/// see [`crate::comm::RetryConf`]). Wrong-typed fields fall back to their
+/// defaults; semantically invalid values — a non-finite or non-positive
+/// timeout, a backoff below 1, zero attempts — are errors here so the job
+/// fails at parse time instead of panicking inside `run_job`.
+fn parse_retry(r: &Json) -> Result<crate::comm::RetryConf> {
+    let d = crate::comm::RetryConf::default();
+    let timeout_us = r.get("timeout_us").and_then(Json::as_f64).unwrap_or(d.timeout_us);
+    let backoff = r.get("backoff").and_then(Json::as_f64).unwrap_or(d.backoff);
+    let max_attempts =
+        r.get("max_attempts").and_then(Json::as_usize).unwrap_or(d.max_attempts as usize);
+    if !timeout_us.is_finite() || timeout_us <= 0.0 {
+        return Err(anyhow!("retry: timeout_us must be finite and > 0; got {timeout_us}"));
+    }
+    if !backoff.is_finite() || backoff < 1.0 {
+        return Err(anyhow!("retry: backoff must be finite and >= 1; got {backoff}"));
+    }
+    if max_attempts == 0 || max_attempts > u32::MAX as usize {
+        return Err(anyhow!("retry: max_attempts must be in 1..=2^32-1; got {max_attempts}"));
+    }
+    Ok(crate::comm::RetryConf { timeout_us, backoff, max_attempts: max_attempts as u32 })
 }
 
 /// Built-in model presets.
@@ -165,6 +191,34 @@ mod tests {
         let conf = parse_job(r#"{"model": "mlp", "wire_codec": "f16"}"#).unwrap();
         assert_eq!(conf.wire_codec, Codec::F16);
         assert!(parse_job(r#"{"model": "mlp", "wire_codec": "zip"}"#).is_err());
+    }
+
+    #[test]
+    fn parses_retry_knobs_with_defaults_and_rejects_invalid() {
+        use crate::comm::RetryConf;
+        // No block → defaults.
+        let conf = parse_job(r#"{"model": "mlp"}"#).unwrap();
+        assert_eq!(conf.retry, RetryConf::default());
+        // Full block.
+        let conf = parse_job(
+            r#"{"model": "mlp",
+                "retry": {"timeout_us": 900.0, "backoff": 1.5, "max_attempts": 6}}"#,
+        )
+        .unwrap();
+        assert_eq!(conf.retry.timeout_us, 900.0);
+        assert_eq!(conf.retry.backoff, 1.5);
+        assert_eq!(conf.retry.max_attempts, 6);
+        // Wrong-typed fields degrade to defaults (the house parsing style).
+        let conf = parse_job(
+            r#"{"model": "mlp", "retry": {"timeout_us": "slow", "backoff": null}}"#,
+        )
+        .unwrap();
+        assert_eq!(conf.retry, RetryConf::default());
+        // Semantically invalid values error at parse time, never panic.
+        assert!(parse_job(r#"{"model": "mlp", "retry": {"timeout_us": 0}}"#).is_err());
+        assert!(parse_job(r#"{"model": "mlp", "retry": {"timeout_us": -5.0}}"#).is_err());
+        assert!(parse_job(r#"{"model": "mlp", "retry": {"backoff": 0.5}}"#).is_err());
+        assert!(parse_job(r#"{"model": "mlp", "retry": {"max_attempts": 0}}"#).is_err());
     }
 
     #[test]

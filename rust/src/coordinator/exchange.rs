@@ -25,7 +25,9 @@
 //! keeps the PR 4 blocking exchange, bit-identical in values and in
 //! virtual-clock accounting to the historical code.
 
-use super::workspace::{self, BucketStore, ExchangePlan, ParamWorkspace};
+use super::workspace::{
+    self, BucketStore, ExchangePlan, ParamWorkspace, WireCounters, WireOp, WirePlane,
+};
 use super::JobConf;
 use crate::comm::{LinkModel, LinkTimeline, VirtualClock};
 use crate::model::net::GradObserver;
@@ -41,10 +43,13 @@ use std::sync::{mpsc, Arc};
 /// so shutdown needs no dedicated message.
 enum CommJob {
     /// Fill the bucket's fresh slots from the server (initial prefetch).
-    Prefetch { bucket: usize },
+    /// `flush_us` is the virtual send instant — the armed (retry-protocol)
+    /// driver charges the shared wire timeline itself; unarmed mode ignores
+    /// it (the observer already stamped the timeline inline).
+    Prefetch { bucket: usize, flush_us: f64 },
     /// Push the bucket's aggregated sums through the server's updater and
     /// receive fresh values (the steady-state flush of step `step`).
-    Flush { bucket: usize, step: u64 },
+    Flush { bucket: usize, step: u64, flush_us: f64 },
 }
 
 /// Body of the comm-driver thread: drain bucket jobs against the server
@@ -60,16 +65,27 @@ fn comm_driver_loop(
     allocs: &AtomicU64,
     probe_from: Option<u64>,
     base: u64,
+    wire: Option<&WirePlane>,
 ) {
     while let Ok(job) = jobs.recv() {
         match job {
-            CommJob::Prefetch { bucket } => {
-                workspace::fill_fresh(plan, store, sg, bucket);
-            }
-            CommJob::Flush { bucket, step } => {
+            CommJob::Prefetch { bucket, flush_us } => match wire {
+                Some(w) => {
+                    let op = WireOp::Prefetch;
+                    workspace::deliver(plan, store, sg, w, bucket, op, base, flush_us);
+                }
+                None => workspace::fill_fresh(plan, store, sg, bucket),
+            },
+            CommJob::Flush { bucket, step, flush_us } => {
                 let probed = probe_from.is_some_and(|from| step >= from);
                 let before = if probed { Blob::alloc_count() } else { 0 };
-                workspace::apply_flush(plan, store, sg, bucket, step, base);
+                match wire {
+                    Some(w) => {
+                        let op = WireOp::Flush { step };
+                        workspace::deliver(plan, store, sg, w, bucket, op, base, flush_us);
+                    }
+                    None => workspace::apply_flush(plan, store, sg, bucket, step, base),
+                }
                 if probed {
                     allocs.fetch_add(Blob::alloc_count() - before, Ordering::Relaxed);
                 }
@@ -112,8 +128,14 @@ pub struct GroupExchange {
     /// Ideal intra-group compute split (workers per group) — flush
     /// timestamps scale by it exactly like the step's compute charge.
     k: f64,
-    /// Serialized virtual timeline of the group's parameter link.
+    /// Serialized virtual timeline of the group's parameter link (unarmed
+    /// mode; the armed protocol's shared timeline lives in [`WirePlane`]).
     timeline: LinkTimeline,
+    /// The retry protocol, present iff the fault plan carries wire rules:
+    /// link + fault stream + retry knobs + shared timeline + counters,
+    /// shared with the comm driver. `None` runs the historical (frameless,
+    /// retry-free) plane bit-for-bit.
+    wire: Option<Arc<WirePlane>>,
     /// Job channel to the comm driver; dropped to retire it.
     tx: Option<mpsc::Sender<CommJob>>,
     comm: Option<std::thread::JoinHandle<()>>,
@@ -137,7 +159,11 @@ impl GroupExchange {
     /// Resolve the workspace for `net` and, in overlap mode, start the
     /// comm driver against `servers[server_group]`. `start_step` is the
     /// first step this exchange will run (non-zero when a worker group
-    /// restarts mid-job — see [`super::worker_group_loop`]).
+    /// restarts mid-job — see [`super::worker_group_loop`]). `group` is the
+    /// worker-group index the fault plan's wire rules key on, and
+    /// `wire_counters` the group's job-lifetime wire tallies — required
+    /// (and the retry protocol armed) iff the plan carries wire rules.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         net: &NeuralNet,
         conf: &JobConf,
@@ -146,8 +172,23 @@ impl GroupExchange {
         link: LinkModel,
         workers: usize,
         start_step: u64,
+        group: usize,
+        wire_counters: Option<Arc<WireCounters>>,
     ) -> GroupExchange {
-        let ws = ParamWorkspace::new(net, conf.bucket_coalesce_bytes, conf.wire_codec);
+        let wire = if conf.faults.has_wire_faults() {
+            let counters =
+                wire_counters.expect("wire-faulted jobs must supply the group's wire counters");
+            let plane = WirePlane::new(group, link, conf.faults.clone(), conf.retry, counters);
+            Some(Arc::new(plane))
+        } else {
+            None
+        };
+        let ws = ParamWorkspace::new_framed(
+            net,
+            conf.bucket_coalesce_bytes,
+            conf.wire_codec,
+            wire.is_some(),
+        );
         let outstanding = vec![0usize; ws.nbuckets()]; // lint: alloc-ok(exchange construction, once per job)
         let comm_allocs = Arc::new(AtomicU64::new(0));
         let driver_dead = Arc::new(AtomicBool::new(false));
@@ -159,6 +200,7 @@ impl GroupExchange {
             let allocs = comm_allocs.clone();
             let dead = driver_dead.clone();
             let probe_from = conf.alloc_probe_from;
+            let driver_wire = wire.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("comm-sg{server_group}"))
                 .spawn(move || {
@@ -172,6 +214,7 @@ impl GroupExchange {
                         &allocs,
                         probe_from,
                         start_step,
+                        driver_wire.as_deref(),
                     )
                 })
                 .expect("spawn comm driver");
@@ -185,6 +228,7 @@ impl GroupExchange {
             link,
             k: workers.max(1) as f64,
             timeline: LinkTimeline::new(),
+            wire,
             tx,
             comm,
             driver_dead,
@@ -209,15 +253,31 @@ impl GroupExchange {
     pub fn prefetch(&mut self, sg: &ServerGroup, clock: &mut VirtualClock) {
         if self.overlap {
             for b in 0..self.ws.nbuckets() {
-                let bytes = self.ws.plan().buckets[b].fetch_bytes;
-                let finish = self.timeline.flush(&self.link, clock.us, bytes);
-                self.ws.store().bufs[b].0.lock().unwrap().finish_virt_us = finish;
-                self.send(CommJob::Prefetch { bucket: b });
+                if self.wire.is_none() {
+                    // Unarmed: the historical inline timeline stamp. The
+                    // armed driver charges the shared timeline itself
+                    // (faults included) and stamps the finish in `deliver`.
+                    let bytes = self.ws.plan().buckets[b].fetch_bytes;
+                    let finish = self.timeline.flush(&self.link, clock.us, bytes);
+                    self.ws.store().bufs[b].0.lock().unwrap().finish_virt_us = finish;
+                }
+                self.send(CommJob::Prefetch { bucket: b, flush_us: clock.us });
             }
             return;
         }
         let plan = self.ws.plan();
         let store = self.ws.store();
+        if let Some(w) = &self.wire {
+            // Armed sequential: each bucket runs the full retry protocol
+            // inline, serialized on the shared timeline; the clock
+            // max-merges every bucket's delivery (or degradation) instant.
+            let op = WireOp::Prefetch;
+            for b in 0..plan.buckets.len() {
+                let fin = workspace::deliver(plan, store, sg, w, b, op, self.base, clock.us);
+                clock.merge_us(fin);
+            }
+            return;
+        }
         let mut bytes = 0usize;
         for b in 0..plan.buckets.len() {
             workspace::fill_fresh(plan, store, sg, b);
@@ -247,7 +307,21 @@ impl GroupExchange {
                     !self.driver_dead.load(Ordering::SeqCst),
                     "comm driver died before publishing a bucket epoch"
                 );
-                buf = cv.wait(buf).unwrap();
+                if self.wire.is_some() {
+                    // Bounded wait under the retry plane: every bucket's
+                    // protocol terminates (delivery or degradation after
+                    // max_attempts), so a 30s real-time stall means the
+                    // driver wedged — fail loudly instead of hanging.
+                    let dur = std::time::Duration::from_secs(30);
+                    let (guard, timed_out) = cv.wait_timeout(buf, dur).unwrap();
+                    buf = guard;
+                    assert!(
+                        !(timed_out && buf.epoch < rel + 1),
+                        "bucket epoch wait exceeded 30s under the retry plane"
+                    );
+                } else {
+                    buf = cv.wait(buf).unwrap();
+                }
             }
             clock.merge_us(buf.finish_virt_us);
             for (i, &s) in spec.slots.iter().enumerate() {
@@ -306,6 +380,18 @@ impl GroupExchange {
         }
         let plan = self.ws.plan();
         let store = self.ws.store();
+        if let Some(w) = &self.wire {
+            // Armed sequential: aggregate then run each bucket's flush
+            // through the retry protocol inline, max-merging delivery (or
+            // degradation) instants instead of the bulk transfer charge.
+            let op = WireOp::Flush { step };
+            for b in 0..plan.buckets.len() {
+                self.ws.aggregate_bucket(net, b);
+                let fin = workspace::deliver(plan, store, sg, w, b, op, self.base, clock.us);
+                clock.merge_us(fin);
+            }
+            return;
+        }
         let mut total = 0usize;
         for b in 0..plan.buckets.len() {
             self.ws.aggregate_bucket(net, b);
@@ -340,7 +426,19 @@ impl GroupExchange {
                     !self.driver_dead.load(Ordering::SeqCst),
                     "comm driver died before publishing a bucket epoch"
                 );
-                buf = cv.wait(buf).unwrap();
+                if self.wire.is_some() {
+                    // See `consume_fresh`: bounded wait so a wedged driver
+                    // under the retry plane fails loudly, never hangs.
+                    let dur = std::time::Duration::from_secs(30);
+                    let (guard, timed_out) = cv.wait_timeout(buf, dur).unwrap();
+                    buf = guard;
+                    assert!(
+                        !(timed_out && buf.epoch < rel + 2),
+                        "bucket epoch wait exceeded 30s under the retry plane"
+                    );
+                } else {
+                    buf = cv.wait(buf).unwrap();
+                }
             }
             clock.merge_us(buf.finish_virt_us);
         }
@@ -408,10 +506,15 @@ impl GradObserver for GroupExchange {
         }
         self.ws.aggregate_bucket(net, b);
         let flush_us = self.step_start_virt_us + self.sw.elapsed_us() / self.k;
-        let bytes = self.ws.plan().buckets[b].flush_bytes;
-        let finish = self.timeline.flush(&self.link, flush_us, bytes);
-        self.ws.store().bufs[b].0.lock().unwrap().finish_virt_us = finish;
-        self.send(CommJob::Flush { bucket: b, step: self.step });
+        if self.wire.is_none() {
+            // Unarmed: historical inline timeline stamp. The armed driver
+            // charges the shared timeline per attempt (faults included) and
+            // stamps the delivery finish in `deliver`.
+            let bytes = self.ws.plan().buckets[b].flush_bytes;
+            let finish = self.timeline.flush(&self.link, flush_us, bytes);
+            self.ws.store().bufs[b].0.lock().unwrap().finish_virt_us = finish;
+        }
+        self.send(CommJob::Flush { bucket: b, step: self.step, flush_us });
     }
 }
 
@@ -419,7 +522,7 @@ impl GradObserver for GroupExchange {
 mod tests {
     use super::*;
     use crate::cluster::ClusterTopology;
-    use crate::comm::ByteLedger;
+    use crate::comm::{ByteLedger, FaultPlan};
     use crate::data::{shard_index, DataSource, SyntheticDigits};
     use crate::model::layer::{Activation, LayerConf, LayerKind};
     use crate::model::partition::logical_param_name;
@@ -460,6 +563,7 @@ mod tests {
         overlap: bool,
         iters: u64,
         codec: crate::comm::Codec,
+        faults: FaultPlan,
     ) -> (Vec<Vec<(u32, u32)>>, Vec<HashMap<String, Blob>>) {
         let mut conf = JobConf::new("lockstep", digit_mlp());
         conf.updater = UpdaterConf::sgd(0.1);
@@ -467,6 +571,7 @@ mod tests {
         conf.overlap_exchange = overlap;
         conf.bucket_coalesce_bytes = 0; // per-layer buckets
         conf.wire_codec = codec;
+        conf.faults = faults;
         let ledger = Arc::new(ByteLedger::new());
         let servers: Arc<Vec<ServerGroup>> = Arc::new(
             (0..topo.nserver_groups)
@@ -498,7 +603,9 @@ mod tests {
         let mut exs: Vec<GroupExchange> = (0..groups)
             .map(|g| {
                 let link = *topo.param_link(&conf.cost);
-                GroupExchange::new(&nets[g], &conf, &servers, topo.server_group_of(g), link, 1, 0)
+                let wc = conf.faults.has_wire_faults().then(|| Arc::new(WireCounters::new()));
+                let sg_idx = topo.server_group_of(g);
+                GroupExchange::new(&nets[g], &conf, &servers, sg_idx, link, 1, 0, g, wc)
             })
             .collect();
         let mut algs: Vec<Bp> = (0..groups).map(|_| Bp::new()).collect();
@@ -580,8 +687,8 @@ mod tests {
     #[test]
     fn downpour_3_1_2_overlap_matches_sequential_bitwise() {
         let topo = ClusterTopology::downpour(3, 1, 2);
-        let seq = lockstep_run(&topo, false, 12, crate::comm::Codec::Raw);
-        let ovl = lockstep_run(&topo, true, 12, crate::comm::Codec::Raw);
+        let seq = lockstep_run(&topo, false, 12, crate::comm::Codec::Raw, FaultPlan::none());
+        let ovl = lockstep_run(&topo, true, 12, crate::comm::Codec::Raw, FaultPlan::none());
         assert_bitwise_equal(&seq, &ovl);
     }
 
@@ -592,8 +699,8 @@ mod tests {
     #[test]
     fn downpour_int8_overlap_matches_sequential_bitwise() {
         let topo = ClusterTopology::downpour(3, 1, 2);
-        let seq = lockstep_run(&topo, false, 12, crate::comm::Codec::Int8);
-        let ovl = lockstep_run(&topo, true, 12, crate::comm::Codec::Int8);
+        let seq = lockstep_run(&topo, false, 12, crate::comm::Codec::Int8, FaultPlan::none());
+        let ovl = lockstep_run(&topo, true, 12, crate::comm::Codec::Int8, FaultPlan::none());
         assert_bitwise_equal(&seq, &ovl);
     }
 
@@ -604,8 +711,8 @@ mod tests {
     #[test]
     fn hogwild_sync_mid_flush_overlap_matches_sequential_bitwise() {
         let topo = ClusterTopology::hogwild(2, 1, 3);
-        let seq = lockstep_run(&topo, false, 10, crate::comm::Codec::Raw);
-        let ovl = lockstep_run(&topo, true, 10, crate::comm::Codec::Raw);
+        let seq = lockstep_run(&topo, false, 10, crate::comm::Codec::Raw, FaultPlan::none());
+        let ovl = lockstep_run(&topo, true, 10, crate::comm::Codec::Raw, FaultPlan::none());
         assert_bitwise_equal(&seq, &ovl);
     }
 
@@ -615,8 +722,45 @@ mod tests {
     #[test]
     fn lockstep_overlap_is_deterministic() {
         let topo = ClusterTopology::downpour(3, 1, 2);
-        let a = lockstep_run(&topo, true, 6, crate::comm::Codec::Raw);
-        let b = lockstep_run(&topo, true, 6, crate::comm::Codec::Raw);
+        let a = lockstep_run(&topo, true, 6, crate::comm::Codec::Raw, FaultPlan::none());
+        let b = lockstep_run(&topo, true, 6, crate::comm::Codec::Raw, FaultPlan::none());
         assert_bitwise_equal(&a, &b);
+    }
+
+    /// Arming the retry plane with a rule that never fires (it waits for
+    /// attempt 1000 of steps the run never reaches) must leave training
+    /// bit-identical to the unarmed exchange: CRC framing, sequence
+    /// numbering, and the per-slot sized server calls are value-transparent.
+    #[test]
+    fn armed_lossless_matches_unarmed_bitwise() {
+        let topo = ClusterTopology::downpour(2, 1, 2);
+        let never = FaultPlan::none().drop_nth(0, 1_000, 1_001, 0);
+        for codec in [crate::comm::Codec::Raw, crate::comm::Codec::Int8] {
+            for overlap in [false, true] {
+                let clean = lockstep_run(&topo, overlap, 8, codec, FaultPlan::none());
+                let armed = lockstep_run(&topo, overlap, 8, codec, never.clone());
+                assert_bitwise_equal(&clean, &armed);
+            }
+        }
+    }
+
+    /// The headline robustness pin: a lossy run whose buckets all
+    /// eventually deliver (every first copy dropped, every retransmit
+    /// clean) ends bit-identical to the lossless run — retries change
+    /// virtual time and wasted bytes, never values.
+    #[test]
+    fn armed_lossy_eventually_delivered_matches_lossless_bitwise() {
+        let topo = ClusterTopology::downpour(2, 1, 2);
+        let mut lossy = FaultPlan::none();
+        for g in 0..topo.nworker_groups {
+            lossy = lossy.drop_nth(g, 0, 100, 0);
+        }
+        for codec in [crate::comm::Codec::Raw, crate::comm::Codec::Int8] {
+            for overlap in [false, true] {
+                let clean = lockstep_run(&topo, overlap, 8, codec, FaultPlan::none());
+                let faulted = lockstep_run(&topo, overlap, 8, codec, lossy.clone());
+                assert_bitwise_equal(&clean, &faulted);
+            }
+        }
     }
 }

@@ -17,7 +17,9 @@ pub mod exchange;
 pub mod workspace;
 
 use crate::cluster::ClusterTopology;
-use crate::comm::{ByteLedger, Codec, CostModel, FaultPlan, FaultRecord, VirtualClock};
+use crate::comm::{
+    ByteLedger, Codec, CostModel, FaultPlan, FaultRecord, RetryConf, VirtualClock, WireEvents,
+};
 use crate::data::DataSource;
 use crate::metrics::{Record, TrainingLog};
 use crate::model::partition::{logical_param_name, partition_net};
@@ -34,6 +36,7 @@ use std::sync::Arc;
 use self::checkpointer::Checkpointer;
 pub use self::checkpointer::CheckpointConf;
 use self::exchange::GroupExchange;
+use self::workspace::WireCounters;
 
 /// Which `TrainOneBatch` algorithm the job uses (paper §4.1.3).
 #[derive(Debug, Clone, PartialEq)]
@@ -110,6 +113,14 @@ pub struct JobConf {
     /// perfect cluster). Kills are recovered, not fatal: the group restarts
     /// from the latest checkpoint and resumes its shard stream.
     pub faults: FaultPlan,
+    /// Retry/timeout/backoff knobs for the wire protocol, active when the
+    /// fault plan schedules wire faults: each bucket flush arms a
+    /// virtual-clock deadline, lost/corrupt deliveries retransmit with
+    /// exponential backoff, and a bucket that exhausts `max_attempts`
+    /// degrades to its last-known value (bounded staleness) instead of
+    /// hanging the worker. Ignored on fault-free plans — the historical
+    /// frameless exchange runs bit-for-bit.
+    pub retry: RetryConf,
     /// Periodic asynchronous checkpointing of server group 0's params —
     /// the recovery source for worker-group restarts. Worker group 0
     /// requests a snapshot every `every_steps` steps (one channel send; the
@@ -146,6 +157,7 @@ impl JobConf {
             warmup_iters: 0,
             alloc_probe_from: None,
             faults: FaultPlan::none(),
+            retry: RetryConf::default(),
             checkpoint: None,
             backup_workers: 0,
         }
@@ -232,6 +244,11 @@ pub struct JobReport {
     /// Straggler steps hidden by backup workers (duplicate flush charged
     /// and discarded), summed over groups.
     pub backup_rescues: u64,
+    /// Wire-plane tallies under the retry protocol: drops, detected
+    /// corruptions, discarded duplicates/reorders, retransmits, staleness
+    /// adoptions, wasted bytes (scalars summed over groups) and per-group
+    /// degraded-step counts. All-zero on fault-free plans.
+    pub wire_events: WireEvents,
     /// Asynchronous checkpoints taken by the background checkpointer.
     pub checkpoints: u64,
 }
@@ -242,6 +259,9 @@ struct GroupRun {
     steady_allocs: u64,
     faults: Vec<FaultRecord>,
     backup_rescues: u64,
+    /// The group's job-lifetime wire tallies (`degraded_steps` holds this
+    /// one group's count; `run_job` absorbs them in join order).
+    wire: WireEvents,
 }
 
 /// Render a worker thread's panic payload for [`JobReport::group_failures`].
@@ -258,6 +278,16 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 /// Run a training job to completion.
 pub fn run_job(conf: &JobConf, data: Arc<dyn DataSource>) -> JobReport {
     let topo = &conf.topology;
+    // A fault rule naming a worker group the job does not have would never
+    // fire and the chaos scenario would silently test nothing — reject it
+    // before any thread spawns. Retry knobs are checked only when the plan
+    // actually arms the wire protocol.
+    if let Err(e) = conf.faults.validate(topo.nworker_groups) {
+        panic!("{e}");
+    }
+    if conf.faults.has_wire_faults() {
+        conf.retry.validate();
+    }
     let ledger = Arc::new(ByteLedger::new());
 
     // Register this job's worker groups for intra-op thread budgeting
@@ -348,6 +378,7 @@ pub fn run_job(conf: &JobConf, data: Arc<dyn DataSource>) -> JobReport {
     let mut group_failures = Vec::with_capacity(handles.len());
     let mut fault_events = Vec::new();
     let mut backup_rescues = 0u64;
+    let mut wire_events = WireEvents::default();
     for h in handles {
         // A panicking group is a per-group failure, not a job abort: its
         // message lands in the report and the healthy groups still join
@@ -359,11 +390,13 @@ pub fn run_job(conf: &JobConf, data: Arc<dyn DataSource>) -> JobReport {
                 group_failures.push(None);
                 fault_events.extend(run.faults);
                 backup_rescues += run.backup_rescues;
+                wire_events.absorb(run.wire);
             }
             Err(payload) => {
                 group_virt_ms.push(0.0);
                 steady_allocs.push(0);
                 group_failures.push(Some(panic_message(&*payload)));
+                wire_events.degraded_steps.push(0);
             }
         }
     }
@@ -408,6 +441,7 @@ pub fn run_job(conf: &JobConf, data: Arc<dyn DataSource>) -> JobReport {
         group_failures,
         fault_events,
         backup_rescues,
+        wire_events,
         checkpoints,
     }
 }
@@ -450,6 +484,11 @@ fn worker_group_loop(
     // step must not die twice on the same schedule entry.
     let mut fired: Vec<u64> = Vec::new();
     let mut start_step = 0u64;
+    // Job-lifetime wire tallies, shared with every stint's exchange (and
+    // its comm driver) so kill/restart cycles keep accumulating into one
+    // set of counters. `None` on plans without wire faults.
+    let wire_counters: Option<Arc<WireCounters>> =
+        conf.faults.has_wire_faults().then(|| Arc::new(WireCounters::new()));
 
     loop {
         let end = run_worker_stint(
@@ -469,6 +508,7 @@ fn worker_group_loop(
             &mut steady_allocs,
             &mut backup_rescues,
             &fired,
+            &wire_counters,
         );
         let step = match end {
             StintEnd::Completed => break,
@@ -523,7 +563,11 @@ fn worker_group_loop(
         });
         start_step = resume;
     }
-    GroupRun { virt_ms: clock.ms(), steady_allocs, faults, backup_rescues }
+    let wire = match wire_counters {
+        Some(c) => c.snapshot(),
+        None => WireEvents { degraded_steps: vec![0], ..WireEvents::default() },
+    };
+    GroupRun { virt_ms: clock.ms(), steady_allocs, faults, backup_rescues, wire }
 }
 
 /// One uninterrupted run of steps `[start_step, conf.iters)` on a freshly
@@ -550,6 +594,7 @@ fn run_worker_stint(
     steady_allocs: &mut u64,
     backup_rescues: &mut u64,
     fired: &[u64],
+    wire_counters: &Option<Arc<WireCounters>>,
 ) -> StintEnd {
     let mut net = group_builder.clone().build(&mut Rng::new(conf.seed));
     let sg_idx = topo.server_group_of(g);
@@ -559,7 +604,8 @@ fn run_worker_stint(
     // sum/fresh buffers resolved once — plus (overlap mode) the comm
     // driver thread that drains flushed buckets while backward continues.
     // The steady-state loop below performs zero Blob allocations.
-    let mut ex = GroupExchange::new(&net, conf, servers, sg_idx, link, k, start_step);
+    let wc = wire_counters.clone();
+    let mut ex = GroupExchange::new(&net, conf, servers, sg_idx, link, k, start_step, g, wc);
     let mut alg = conf.algorithm.instantiate();
     let sg = &servers[sg_idx];
     let warmup_target = conf.warmup_iters.min(conf.iters);

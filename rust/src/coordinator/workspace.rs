@@ -19,12 +19,16 @@
 //! bit-identical.
 
 use crate::comm::codec::{self, Codec};
-use crate::comm::Msg;
+use crate::comm::faults::{FaultPlan, RetryConf, WireEvents, WireFault};
+use crate::comm::{LinkModel, LinkTimeline, Msg};
 use crate::model::partition::{bucket_slots, logical_slot_map};
 use crate::model::NeuralNet;
-use crate::runtime::sync::{OrderedCondvar, OrderedMutex, RANK_WORKSPACE_BUCKET};
+use crate::runtime::sync::{
+    OrderedCondvar, OrderedMutex, RANK_LINK_TIMELINE, RANK_WORKSPACE_BUCKET,
+};
 use crate::server::ServerGroup;
 use crate::tensor::Blob;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// One logical parameter's routing record.
@@ -75,6 +79,14 @@ pub struct BucketBuf {
     /// largest slot so steady-state encodes never grow it. Empty under
     /// `Codec::Raw`.
     pub enc: Vec<u8>,
+    /// CRC-framed-chunk scratch for the retry protocol, reserved at
+    /// construction to the bucket's largest slot (frame header + encoded
+    /// chunk). Empty on unframed (retry-free) plans.
+    pub frame: Vec<u8>,
+    /// Last sequence number this bucket accepted (`u32::MAX` = none yet):
+    /// the receiver-side dedup that discards duplicate and reordered
+    /// frames. Only the framed protocol advances it.
+    pub last_seq: u32,
     /// Completed exchanges, counted relative to the exchange's start step
     /// `b` (0 for a fresh job; the resume step after a worker-group
     /// restart): the initial prefetch publishes epoch 1, the flush of step
@@ -105,6 +117,12 @@ pub struct ExchangePlan {
     /// Wire codec every flush/fetch of this plan encodes with (and the
     /// codec its `flush_bytes`/`fetch_bytes` were computed under).
     pub codec: Codec,
+    /// Whether the plan's wire accounting includes the retry protocol's
+    /// integrity frame ([`Msg::exchange_wire_size_framed`] per slot) and
+    /// its buckets carry frame scratch. Armed jobs (wire faults present)
+    /// frame every codec, `Raw` included; unframed plans are byte-for-byte
+    /// the historical accounting.
+    pub framed: bool,
 }
 
 /// The mutable bucket buffers, shared between the worker thread and its
@@ -202,6 +220,322 @@ pub fn apply_flush(
     cv.notify_all();
 }
 
+/// Atomic tallies of one worker group's wire-protocol events, owned by the
+/// group thread across kill/restart stints (each stint builds a fresh
+/// [`WirePlane`], but the counters accumulate for the whole job) and
+/// snapshotted into [`WireEvents`] at job end.
+pub struct WireCounters {
+    pub drops: AtomicU64,
+    pub corruptions_detected: AtomicU64,
+    pub duplicates_discarded: AtomicU64,
+    pub reorders_discarded: AtomicU64,
+    pub retransmits: AtomicU64,
+    pub staleness_adoptions: AtomicU64,
+    pub wasted_bytes: AtomicU64,
+    degraded_steps: AtomicU64,
+    /// Dedup sentinel: the step most recently marked degraded, so several
+    /// buckets degrading within one step count the step once.
+    last_degraded_step: AtomicU64,
+}
+
+impl WireCounters {
+    pub fn new() -> WireCounters {
+        WireCounters {
+            drops: AtomicU64::new(0),
+            corruptions_detected: AtomicU64::new(0),
+            duplicates_discarded: AtomicU64::new(0),
+            reorders_discarded: AtomicU64::new(0),
+            retransmits: AtomicU64::new(0),
+            staleness_adoptions: AtomicU64::new(0),
+            wasted_bytes: AtomicU64::new(0),
+            degraded_steps: AtomicU64::new(0),
+            last_degraded_step: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    /// Record that `step` degraded (a bucket exhausted its attempts),
+    /// counting each step at most once however many buckets degrade in it.
+    pub fn mark_degraded(&self, step: u64) {
+        self.staleness_adoptions.fetch_add(1, Ordering::Relaxed);
+        if self.last_degraded_step.swap(step, Ordering::Relaxed) != step {
+            self.degraded_steps.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One group's tally as a [`WireEvents`] (its `degraded_steps` holds
+    /// exactly this group's entry; `run_job` appends them in group order).
+    pub fn snapshot(&self) -> WireEvents { // lint: alloc-ok(job-end snapshot, once per group)
+        WireEvents {
+            drops: self.drops.load(Ordering::Relaxed),
+            corruptions_detected: self.corruptions_detected.load(Ordering::Relaxed),
+            duplicates_discarded: self.duplicates_discarded.load(Ordering::Relaxed),
+            reorders_discarded: self.reorders_discarded.load(Ordering::Relaxed),
+            retransmits: self.retransmits.load(Ordering::Relaxed),
+            staleness_adoptions: self.staleness_adoptions.load(Ordering::Relaxed),
+            wasted_bytes: self.wasted_bytes.load(Ordering::Relaxed),
+            degraded_steps: vec![self.degraded_steps.load(Ordering::Relaxed)],
+        }
+    }
+}
+
+impl Default for WireCounters {
+    fn default() -> WireCounters {
+        WireCounters::new()
+    }
+}
+
+/// Shared state of one worker group's unreliable-wire protocol, built per
+/// stint by the exchange when the fault plan carries wire rules: the link
+/// model, the deterministic fault stream, the retry knobs, the group's
+/// serialized wire timeline (shared worker ↔ comm driver, hence behind a
+/// rank-15 lock — above the bucket locks, below the server locks), and the
+/// job-lifetime event counters.
+pub struct WirePlane {
+    /// Worker-group index the plan's wire rules (and fault coins) key on.
+    pub group: usize,
+    pub link: LinkModel,
+    pub faults: FaultPlan,
+    pub retry: RetryConf,
+    timeline: OrderedMutex<LinkTimeline>,
+    pub counters: Arc<WireCounters>,
+}
+
+impl WirePlane {
+    pub fn new(
+        group: usize,
+        link: LinkModel,
+        faults: FaultPlan,
+        retry: RetryConf,
+        counters: Arc<WireCounters>,
+    ) -> WirePlane {
+        retry.validate();
+        WirePlane {
+            group,
+            link,
+            faults,
+            retry,
+            timeline: OrderedMutex::new(RANK_LINK_TIMELINE, "wire.timeline", LinkTimeline::new()),
+            counters,
+        }
+    }
+}
+
+/// Which framed bucket transfer [`deliver`] is running.
+#[derive(Debug, Clone, Copy)]
+pub enum WireOp {
+    /// Initial fetch of the bucket's fresh values (sequence number 0).
+    Prefetch,
+    /// Steady-state flush of `step` (sequence number `step - base + 1`).
+    Flush { step: u64 },
+}
+
+/// THE armed (retry-protocol) delivery recipe for one bucket — the framed
+/// counterpart of [`fill_fresh`]/[`apply_flush`], shared by the comm driver
+/// and the sequential exchange. Starting at virtual instant `flush_us`, it
+/// walks the retry attempts against the fault plan: every lost, corrupt,
+/// duplicate, or reordered copy is charged to the shared wire timeline AND
+/// the byte ledger (wasted bytes are honest bytes), a failed attempt
+/// retransmits at its backoff deadline, and the delivering attempt runs the
+/// exact value recipe of the unframed plane — so a lossy schedule whose
+/// buckets all eventually deliver is bit-identical to the lossless run.
+/// A bucket that exhausts `max_attempts` degrades: its epoch publishes with
+/// the fresh slots untouched (the consumer adopts the last-known values —
+/// bounded staleness; before any delivery that is the replica's initial
+/// params) and the server never sees its gradient. Every path publishes the
+/// epoch, so no consumer can hang on a dead link. Returns the bucket's
+/// virtual finish time (delivery instant, or the final deadline when
+/// degraded).
+pub fn deliver(
+    plan: &ExchangePlan,
+    store: &BucketStore,
+    sg: &ServerGroup,
+    wire: &WirePlane,
+    b: usize,
+    op: WireOp,
+    base: u64,
+    flush_us: f64,
+) -> f64 {
+    debug_assert!(plan.framed, "the retry protocol needs a framed plan");
+    let (mx, cv) = &store.bufs[b];
+    let mut buf = mx.lock().unwrap();
+    let BucketBuf { sums, fresh, residual, dec, enc, frame, last_seq, epoch, finish_virt_us } =
+        &mut *buf;
+    let (step, seq, bytes, publish) = match op {
+        WireOp::Prefetch => (base, 0u32, plan.buckets[b].fetch_bytes, 1),
+        WireOp::Flush { step } => {
+            (step, (step - base + 1) as u32, plan.buckets[b].flush_bytes, step - base + 2)
+        }
+    };
+    let c = &*wire.counters;
+    let mut send = flush_us;
+    let mut delivered = None;
+    for attempt in 0..wire.retry.max_attempts {
+        match wire.faults.wire_fault(wire.group, step, seq, attempt) {
+            Some(fault @ (WireFault::Drop | WireFault::Corrupt)) => {
+                // A wasted copy: charged to the timeline and the ledger,
+                // never applied. The sender only learns at the deadline.
+                wire.timeline.lock().unwrap().deliver(&wire.link, send, bytes, Some(fault));
+                sg.ledger.add_param(bytes);
+                c.wasted_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+                if fault == WireFault::Corrupt {
+                    // Detection is real, not assumed: frame the bucket's
+                    // first slot, flip the scheduled bit, and require the
+                    // receiver checks to reject the frame — CRC32 for a
+                    // payload/CRC flip, the sequence dedup for a flip that
+                    // lands in the seq field itself.
+                    let payload: &[f32] = match op {
+                        WireOp::Prefetch => fresh[0].data(),
+                        WireOp::Flush { .. } => sums[0].data(),
+                    };
+                    codec::frame_chunk(plan.codec, seq, payload, frame);
+                    let bits = (frame.len() * 8) as u64;
+                    let bit = wire.faults.corrupt_bit(wire.group, step, seq, attempt, bits);
+                    frame[(bit / 8) as usize] ^= 1 << (bit % 8);
+                    let rejected = match codec::frame_verify(frame) {
+                        Err(_) => true,
+                        Ok((got, _)) => got != seq,
+                    };
+                    assert!(rejected, "a flipped frame bit must never be accepted");
+                    c.corruptions_detected.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    c.drops.fetch_add(1, Ordering::Relaxed);
+                }
+                send += wire.retry.timeout_after(attempt);
+                if attempt + 1 < wire.retry.max_attempts {
+                    c.retransmits.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            fault => {
+                // This attempt delivers. A duplicate charges both copies
+                // back to back inside the timeline (`Delivery` model); a
+                // reorder charges the overtaking stale frame first, then
+                // the in-order one — each discarded copy is counted and
+                // its bytes burned on the ledger.
+                let finish = {
+                    let mut tl = wire.timeline.lock().unwrap();
+                    if fault == Some(WireFault::Reorder) {
+                        tl.deliver(&wire.link, send, bytes, fault);
+                        tl.deliver(&wire.link, send, bytes, None).1
+                    } else {
+                        tl.deliver(&wire.link, send, bytes, fault).1
+                    }
+                };
+                match fault {
+                    Some(WireFault::Duplicate) => {
+                        c.duplicates_discarded.fetch_add(1, Ordering::Relaxed);
+                        c.wasted_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+                        sg.ledger.add_param(bytes);
+                    }
+                    Some(WireFault::Reorder) => {
+                        c.reorders_discarded.fetch_add(1, Ordering::Relaxed);
+                        c.wasted_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+                        sg.ledger.add_param(bytes);
+                    }
+                    _ => {}
+                }
+                delivered = Some(finish);
+                break;
+            }
+        }
+    }
+    let finish = match delivered {
+        Some(finish) => {
+            // Receiver-side dedup: the accepted frame's sequence number
+            // must advance the bucket's last one (the driver is FIFO, so
+            // an in-order frame always does).
+            assert!(
+                *last_seq == u32::MAX || seq > *last_seq,
+                "bucket {b} accepted a stale sequence number {seq}"
+            );
+            *last_seq = seq;
+            for (i, &s) in plan.buckets[b].slots.iter().enumerate() {
+                let info = &plan.slots[s];
+                let elems = info.byte_size / 4;
+                let down = Msg::HEADER + plan.codec.framed_len(elems);
+                match op {
+                    WireOp::Prefetch => {
+                        sg.get_into_sized(&info.logical, &mut fresh[i], down);
+                    }
+                    WireOp::Flush { step } => {
+                        let up = Msg::HEADER + info.logical.len() + plan.codec.framed_len(elems);
+                        match plan.codec {
+                            Codec::Raw => {
+                                // Raw decode is the identity: verify the
+                                // gradient frame, then hand the sums to the
+                                // server bit-exact.
+                                codec::frame_chunk(Codec::Raw, seq, sums[i].data(), frame);
+                                codec::frame_verify(frame)
+                                    .expect("clean raw gradient frame must verify");
+                                sg.update_into_sized(
+                                    &info.logical,
+                                    &sums[i],
+                                    step,
+                                    &mut fresh[i],
+                                    up,
+                                    down,
+                                );
+                            }
+                            coded => {
+                                // The unframed error-feedback recipe, with
+                                // the compensated chunk framed + verified
+                                // (re-encoding `sums` reproduces `enc`'s
+                                // bytes — encoding is deterministic).
+                                codec::feedback_encode(
+                                    coded,
+                                    sums[i].data_mut(),
+                                    residual[i].data_mut(),
+                                    enc,
+                                    dec[i].data_mut(),
+                                );
+                                codec::frame_chunk(coded, seq, sums[i].data(), frame);
+                                codec::frame_verify(frame)
+                                    .expect("clean gradient frame must verify");
+                                sg.update_into_sized(
+                                    &info.logical,
+                                    &dec[i],
+                                    step,
+                                    &mut fresh[i],
+                                    up,
+                                    down,
+                                );
+                            }
+                        }
+                    }
+                }
+                // The fresh value comes back framed: verify, and (under a
+                // quantizing codec) adopt what the frame's chunk decodes
+                // to — the unframed plane's encode/decode roundtrip.
+                codec::frame_chunk(plan.codec, seq, fresh[i].data(), frame);
+                match plan.codec {
+                    Codec::Raw => {
+                        codec::frame_verify(frame).expect("clean raw value frame must verify");
+                    }
+                    coded => {
+                        let (_, chunk) =
+                            codec::frame_verify(frame).expect("clean value frame must verify");
+                        coded
+                            .decode_into(chunk, fresh[i].data_mut())
+                            .expect("self-encoded value chunk must decode");
+                    }
+                }
+            }
+            finish
+        }
+        None => {
+            // Exhausted: bounded staleness. Fresh slots keep their last
+            // delivered values (initial params before any delivery), the
+            // server never sees this bucket's gradient, and the bucket
+            // finishes at its final deadline.
+            c.mark_degraded(step);
+            send
+        }
+    };
+    *epoch = publish;
+    *finish_virt_us = finish;
+    cv.notify_all();
+    finish
+}
+
 /// Persistent parameter-plane state for one worker group's replica net.
 /// Built once per group thread; every per-step method is Blob-allocation-
 /// free once the slots are sized.
@@ -219,7 +553,23 @@ impl ParamWorkspace {
     /// the flush-bucket encoding — residual slots and encode/decode
     /// scratch are sized here, so compression adds zero steady-state Blob
     /// allocations.
-    pub fn new(net: &NeuralNet, coalesce_bytes: usize, wire_codec: Codec) -> ParamWorkspace { // lint: alloc-ok(plan construction, once per job)
+    pub fn new(net: &NeuralNet, coalesce_bytes: usize, wire_codec: Codec) -> ParamWorkspace {
+        ParamWorkspace::new_framed(net, coalesce_bytes, wire_codec, false)
+    }
+
+    /// [`ParamWorkspace::new`] with the retry protocol's framing selected:
+    /// `framed` plans account every flush/fetch at the CRC-framed chunk
+    /// sizes ([`Msg::exchange_wire_size_framed`]; `Raw` included — integrity
+    /// needs the frame), carry per-bucket frame scratch sized to the largest
+    /// slot, and pre-seed the fresh slots with the replica's initial params
+    /// (the degraded path's last-known values before any delivery). Unframed
+    /// plans are byte-for-byte the historical construction.
+    pub fn new_framed( // lint: alloc-ok(plan construction, once per job)
+        net: &NeuralNet,
+        coalesce_bytes: usize,
+        wire_codec: Codec,
+        framed: bool,
+    ) -> ParamWorkspace {
         let params = net.params();
         let names: Vec<&str> = params.iter().map(|p| p.name.as_str()).collect();
         let (logicals, param_slot) = logical_slot_map(&names);
@@ -263,8 +613,17 @@ impl ParamWorkspace {
             for (pos, &s) in spec.slots.iter().enumerate() {
                 slot_bucket[s] = b;
                 slot_pos[s] = pos;
-                spec.flush_bytes += Msg::exchange_wire_size_coded(wire_codec, slots[s].byte_size);
-                spec.fetch_bytes += wire_codec.wire_bytes(slots[s].byte_size) * slots[s].replicas;
+                if framed {
+                    let framed_len = wire_codec.framed_len(slots[s].byte_size / 4);
+                    spec.flush_bytes +=
+                        Msg::exchange_wire_size_framed(wire_codec, slots[s].byte_size);
+                    spec.fetch_bytes += framed_len * slots[s].replicas;
+                } else {
+                    spec.flush_bytes +=
+                        Msg::exchange_wire_size_coded(wire_codec, slots[s].byte_size);
+                    spec.fetch_bytes +=
+                        wire_codec.wire_bytes(slots[s].byte_size) * slots[s].replicas;
+                }
             }
             buckets.push(spec);
         }
@@ -306,15 +665,34 @@ impl ParamWorkspace {
                 }
                 let (mut residual, mut dec) = (Vec::new(), Vec::new());
                 let mut enc = Vec::new();
+                let max_elems =
+                    spec.slots.iter().map(|&s| slots[s].byte_size / 4).max().unwrap_or(0);
                 if wire_codec != Codec::Raw {
                     residual = spec.slots.iter().map(|&s| Blob::zeros(shapes[s])).collect();
                     dec = spec.slots.iter().map(|&s| Blob::zeros(shapes[s])).collect();
-                    let max_elems =
-                        spec.slots.iter().map(|&s| slots[s].byte_size / 4).max().unwrap_or(0);
                     enc.reserve(wire_codec.encoded_len(max_elems));
                 }
-                let buf =
-                    BucketBuf { sums, fresh, residual, dec, enc, epoch: 0, finish_virt_us: 0.0 };
+                let mut frame = Vec::new();
+                if framed {
+                    frame.reserve(codec::FRAME_HEADER + wire_codec.encoded_len(max_elems));
+                    // Degraded buckets adopt their last-known fresh values;
+                    // before any delivery that is the replica's initial
+                    // params (same seed as the server registration).
+                    for (i, &s) in spec.slots.iter().enumerate() {
+                        fresh[i].copy_from(&params[slots[s].params[0]].data);
+                    }
+                }
+                let buf = BucketBuf {
+                    sums,
+                    fresh,
+                    residual,
+                    dec,
+                    enc,
+                    frame,
+                    last_seq: u32::MAX,
+                    epoch: 0,
+                    finish_virt_us: 0.0,
+                };
                 (
                     OrderedMutex::new(RANK_WORKSPACE_BUCKET, "workspace.bucket", buf),
                     OrderedCondvar::new(),
@@ -330,6 +708,7 @@ impl ParamWorkspace {
                 node_actions,
                 buckets,
                 codec: wire_codec,
+                framed,
             }),
             store: Arc::new(BucketStore { bufs }),
         }
@@ -559,5 +938,68 @@ mod tests {
         let raw = ParamWorkspace::new(&net, usize::MAX, Codec::Raw);
         let buf = raw.store().bufs[0].0.lock().unwrap();
         assert!(buf.residual.is_empty() && buf.dec.is_empty() && buf.enc.capacity() == 0);
+    }
+
+    /// Framed (retry-protocol) plans account every slot at the CRC-framed
+    /// chunk sizes — `Raw` included — carry frame scratch sized to the
+    /// largest slot, and pre-seed the fresh slots with the replica's
+    /// initial params (the degraded path's last-known values). Unframed
+    /// plans carry no frame scratch at all.
+    #[test]
+    fn framed_bucket_wire_bytes_and_scratch() {
+        let net = partitioned_mlp(2);
+        for wire_codec in [Codec::Raw, Codec::Int8] {
+            let ws = ParamWorkspace::new_framed(&net, usize::MAX, wire_codec, true);
+            assert!(ws.plan().framed);
+            let spec = &ws.plan().buckets[0];
+            let want_flush: usize = ws
+                .slots()
+                .iter()
+                .map(|s| Msg::exchange_wire_size_framed(wire_codec, s.byte_size))
+                .sum();
+            let want_fetch: usize = ws
+                .slots()
+                .iter()
+                .map(|s| wire_codec.framed_len(s.byte_size / 4) * s.replicas)
+                .sum();
+            assert_eq!(spec.flush_bytes, want_flush, "{} framed flush", wire_codec.name());
+            assert_eq!(spec.fetch_bytes, want_fetch, "{} framed fetch", wire_codec.name());
+            let buf = ws.store().bufs[0].0.lock().unwrap();
+            let max_elems = ws.slots().iter().map(|s| s.byte_size / 4).max().unwrap();
+            assert!(
+                buf.frame.capacity() >= codec::FRAME_HEADER + wire_codec.encoded_len(max_elems),
+                "{} frame scratch",
+                wire_codec.name()
+            );
+            assert_eq!(buf.last_seq, u32::MAX);
+            // Fresh slots start at the replica's initial params, bitwise.
+            let params = net.params();
+            for (i, &s) in spec.slots.iter().enumerate() {
+                let init = &params[ws.slots()[s].params[0]].data;
+                for (x, y) in buf.fresh[i].data().iter().zip(init.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "fresh slot {i} not pre-seeded");
+                }
+            }
+        }
+        let unframed = ParamWorkspace::new(&net, usize::MAX, Codec::Raw);
+        assert!(!unframed.plan().framed);
+        let buf = unframed.store().bufs[0].0.lock().unwrap();
+        assert_eq!(buf.frame.capacity(), 0, "unframed plans carry no frame scratch");
+    }
+
+    /// `WireCounters::mark_degraded` counts each degraded step once no
+    /// matter how many buckets of that step degrade, and the snapshot
+    /// carries the group's tally as the single `degraded_steps` entry.
+    #[test]
+    fn wire_counters_dedup_degraded_steps() {
+        let c = WireCounters::new();
+        c.mark_degraded(3);
+        c.mark_degraded(3);
+        c.mark_degraded(7);
+        let snap = c.snapshot();
+        assert_eq!(snap.staleness_adoptions, 3);
+        assert_eq!(snap.degraded_steps, vec![2]);
+        assert!(!snap.is_clean());
+        assert!(WireCounters::new().snapshot().drops == 0);
     }
 }

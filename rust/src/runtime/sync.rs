@@ -21,6 +21,7 @@
 //! | rank | const                   | lock                                      |
 //! |------|-------------------------|-------------------------------------------|
 //! | 10   | `RANK_WORKSPACE_BUCKET` | `coordinator::workspace` bucket buffers   |
+//! | 15   | `RANK_LINK_TIMELINE`    | shared wire timeline of the retry plane   |
 //! | 20   | `RANK_SERVER_ROUTE`     | `server` shard routing table              |
 //! | 30   | `RANK_SERVER_SHARD`     | `server` parameter shards (keyed)         |
 //! | 40   | `RANK_CKPT_CHANNEL`     | checkpointer request channel slot         |
@@ -53,6 +54,7 @@ use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Condvar, LockResult, Mutex, MutexGuard, OnceLock, PoisonError, TryLockError};
 
 pub const RANK_WORKSPACE_BUCKET: u16 = 10;
+pub const RANK_LINK_TIMELINE: u16 = 15;
 pub const RANK_SERVER_ROUTE: u16 = 20;
 pub const RANK_SERVER_SHARD: u16 = 30;
 pub const RANK_CKPT_CHANNEL: u16 = 40;
@@ -309,6 +311,41 @@ impl OrderedCondvar {
             Err(PoisonError::new(guard))
         } else {
             Ok(guard)
+        }
+    }
+
+    /// [`OrderedCondvar::wait`] with a real-time upper bound: the second
+    /// tuple field reports whether the sleep timed out. Used by the armed
+    /// exchange to bound a worker's per-bucket wait, so a wedged comm
+    /// driver can never hang the forward pass silently.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: OrderedMutexGuard<'a, T>,
+        dur: std::time::Duration,
+    ) -> LockResult<(OrderedMutexGuard<'a, T>, bool)> {
+        let meta = guard.meta;
+        let tracked = guard.tracked;
+        let inner = guard.inner.take().expect("guard holds the lock until dropped or waited");
+        drop(guard); // inner is None: releases nothing, pops nothing
+        if tracked {
+            sanitizer::on_release(meta);
+        }
+        let (inner, timed_out, poisoned) = match self.inner.wait_timeout(inner, dur) {
+            Ok((g, t)) => (g, t.timed_out(), false),
+            Err(p) => {
+                let (g, t) = p.into_inner();
+                (g, t.timed_out(), true)
+            }
+        };
+        if tracked {
+            sanitizer::before_acquire(meta);
+            sanitizer::on_acquired(meta);
+        }
+        let guard = OrderedMutexGuard { inner: Some(inner), meta, tracked };
+        if poisoned {
+            Err(PoisonError::new((guard, timed_out)))
+        } else {
+            Ok((guard, timed_out))
         }
     }
 
@@ -638,6 +675,36 @@ mod tests {
                 cv.notify_all();
                 break;
             }
+        });
+    }
+
+    #[test]
+    fn condvar_wait_timeout_reports_expiry_and_wakeups() {
+        let _g = override_guard(Mode::On);
+        let gate = OrderedMutex::new(40, "test.cv.timeout", false);
+        let cv = OrderedCondvar::new();
+        // Nobody notifies: the bounded wait must come back with the lock
+        // reacquired and the timeout flagged.
+        let g = gate.lock().unwrap();
+        let (g, timed_out) = cv.wait_timeout(g, std::time::Duration::from_millis(5)).unwrap();
+        assert!(timed_out);
+        assert!(!*g);
+        drop(g);
+        // A notified wait returns well before a generous deadline.
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let mut ready = gate.lock().unwrap();
+                while !*ready {
+                    let (g, timed_out) = cv
+                        .wait_timeout(ready, std::time::Duration::from_secs(30))
+                        .unwrap();
+                    ready = g;
+                    assert!(!timed_out, "the notifier should beat a 30 s deadline");
+                }
+            });
+            let mut ready = gate.lock().unwrap();
+            *ready = true;
+            cv.notify_all();
         });
     }
 
